@@ -1,0 +1,61 @@
+//! Micro-bench P1: AirComp aggregation throughput — the L1 Pallas
+//! reduction executed through PJRT from the coordinator hot path, at the
+//! paper's scale (K = 100 × d = 8070) — plus the Rust-side scalar
+//! reference for the speedup context.
+
+mod bench_common;
+
+use bench_common::require_artifacts;
+use paota::benchlib::{section, Bench};
+use paota::runtime::{Engine, ModelRuntime};
+use paota::util::Rng;
+
+fn main() {
+    require_artifacts();
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &ModelRuntime::default_dir()).unwrap();
+    let m = rt.manifest().clone();
+
+    let mut rng = Rng::new(5);
+    let mut stack = vec![0.0f32; m.clients * m.dim];
+    rng.fill_normal(&mut stack, 0.5);
+    let mut coef = vec![0.0f32; m.clients];
+    for (i, c) in coef.iter_mut().enumerate() {
+        if i % 3 != 0 {
+            *c = rng.f32() + 0.1;
+        }
+    }
+    let noise = vec![0.0f32; m.dim];
+    let bytes = stack.len() * 4 + noise.len() * 4;
+
+    section(&format!(
+        "AirComp aggregation (K = {}, d = {}, {:.1} MiB stack)",
+        m.clients,
+        m.dim,
+        (stack.len() * 4) as f64 / (1 << 20) as f64
+    ));
+    let b = Bench::new("aircomp");
+    b.iter_bytes("pjrt_pallas_kernel", bytes, || {
+        rt.aggregate(&stack, &coef, &noise).unwrap();
+    });
+
+    // Rust scalar reference (what the kernel replaces).
+    b.iter_bytes("rust_scalar_reference", bytes, || {
+        let sigma: f32 = coef.iter().sum();
+        let mut out = vec![0.0f32; m.dim];
+        for k in 0..m.clients {
+            let c = coef[k];
+            if c == 0.0 {
+                continue;
+            }
+            let row = &stack[k * m.dim..(k + 1) * m.dim];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += c * v;
+            }
+        }
+        for (o, &n) in out.iter_mut().zip(&noise) {
+            *o = (*o + n) / sigma;
+        }
+        std::hint::black_box(&out);
+    });
+}

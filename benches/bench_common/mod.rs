@@ -1,0 +1,35 @@
+#![allow(dead_code)] // shared across several bench binaries, each using a subset
+//! Shared setup for the paper-artifact benches: a reduced-rounds config
+//! (benches must terminate in seconds, not minutes) and artifact guards.
+//!
+//! Set `PAOTA_BENCH_ROUNDS` to raise fidelity toward the paper's full
+//! round counts; the experiment CLI (`repro fig3|fig4|table1`) is the
+//! full-fidelity path recorded in EXPERIMENTS.md.
+
+use paota::config::Config;
+use paota::runtime::ModelRuntime;
+
+/// Rounds per algorithm in bench mode.
+pub fn bench_rounds() -> usize {
+    std::env::var("PAOTA_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12)
+}
+
+/// The paper-default config at bench fidelity.
+pub fn bench_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.rounds = bench_rounds();
+    cfg.eval_every = 2;
+    cfg
+}
+
+/// Skip (process-exit 0, loudly) when artifacts are missing so `cargo
+/// bench` works in a fresh checkout.
+pub fn require_artifacts() {
+    if !ModelRuntime::default_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP bench: no artifacts (run `make artifacts`)");
+        std::process::exit(0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Micro-bench P3: end-to-end simulated-round rate for each algorithm —
+//! the whole coordinator loop (local training for every participant,
+//! channel draws, power control, AirComp aggregation, eval) per round.
+
+mod bench_common;
+
+use bench_common::require_artifacts;
+use paota::benchlib::{section, Bench};
+use paota::config::{Algorithm, Config};
+use paota::fl::{self, TrainContext};
+use paota::runtime::Engine;
+
+fn main() {
+    require_artifacts();
+    let mut base = Config::default();
+    base.rounds = 4;
+    base.eval_every = 4; // eval once per run: measures the training loop
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+
+    section(&format!(
+        "end-to-end rounds (K = {}, ~{} participants/round)",
+        base.partition.clients,
+        ctx.sync_participants(&base)
+    ));
+    let b = Bench::new("e2e_round");
+    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        let m = b.iter(&format!("{:?}_4rounds", algo), || {
+            fl::run_with_context(&ctx, &cfg).unwrap();
+        });
+        println!(
+            "{:<44}   per round: {}",
+            "",
+            paota::util::timer::fmt_duration(m.mean / base.rounds as u32)
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench for paper Fig. 3 (E1/E2): regenerates the loss-gap series
+//! `E[F(w^r)] − F(w*)` for PAOTA / Local SGD / COTAF at both noise levels
+//! and prints them in the paper's layout, plus the wall-time cost of one
+//! full comparison sweep.
+//!
+//! Shape checks (the reproduction claim, not absolute numbers):
+//!   * at −174 dBm/Hz PAOTA's gap tracks Local SGD closely;
+//!   * at −74 dBm/Hz PAOTA's final gap beats COTAF's (robustness).
+
+mod bench_common;
+
+use bench_common::{bench_config, require_artifacts};
+use paota::config::Algorithm;
+use paota::fl::{self, centralized, TrainContext};
+use paota::metrics::Curve;
+use paota::runtime::Engine;
+use paota::util::Stopwatch;
+
+fn main() {
+    require_artifacts();
+    let mut base = bench_config();
+    base.rounds = bench_common::bench_rounds().max(16);
+
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+    let f_star = centralized::estimate_f_star(&ctx, &base, 120).unwrap() as f64;
+    println!("# F(w*) = {f_star:.4} (120 centralized rounds)");
+
+    for n0 in [-174.0, -74.0] {
+        println!("\n=== Fig.3 @ N0 = {n0} dBm/Hz, {} rounds ===", base.rounds);
+        let mut sw = Stopwatch::start();
+        let mut finals = Vec::new();
+        println!("{:<10} {}", "series", "gap per eval round");
+        for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+            let mut cfg = base.clone();
+            cfg.algorithm = algo;
+            cfg.channel.n0_dbm_per_hz = n0;
+            let run = fl::run_with_context(&ctx, &cfg).unwrap();
+            let curve = Curve::loss_gap(&format!("{algo:?}"), &run, f_star);
+            let series: Vec<String> =
+                curve.points.iter().map(|p| format!("{:.3}", p.2)).collect();
+            println!("{:<10} {}", format!("{algo:?}"), series.join(" "));
+            finals.push((algo, curve.last().unwrap_or(f64::NAN)));
+        }
+        println!("sweep wall time: {:?}", sw.lap());
+        for (algo, gap) in &finals {
+            println!("  final gap {algo:?}: {gap:.4}");
+        }
+        // Shape assertions (soft — printed, not panicking, per bench role).
+        let get = |a: Algorithm| finals.iter().find(|(x, _)| *x == a).unwrap().1;
+        if n0 == -74.0 {
+            let ok = get(Algorithm::Paota) <= get(Algorithm::Cotaf) * 1.25;
+            println!(
+                "  shape[PAOTA robust vs COTAF at -74]: {}",
+                if ok { "HOLDS" } else { "VIOLATED (short bench run?)" }
+            );
+        } else {
+            let ok = (get(Algorithm::Paota) - get(Algorithm::LocalSgd)).abs() < 0.5;
+            println!(
+                "  shape[PAOTA ≈ LocalSGD at -174]: {}",
+                if ok { "HOLDS" } else { "VIOLATED (short bench run?)" }
+            );
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench for paper Fig. 4 (E3/E4): test accuracy vs communication rounds
+//! (4a) and vs training time (4b) for the three algorithms, printed as
+//! the paper's two series, with the expected shape checks:
+//!   * per ROUND Local SGD ≥ PAOTA early (fresh, lossless updates);
+//!   * per TIME PAOTA crosses first (ΔT-bounded rounds vs max-latency).
+
+mod bench_common;
+
+use bench_common::{bench_config, require_artifacts};
+use paota::config::Algorithm;
+use paota::fl::{self, TrainContext};
+use paota::metrics::Curve;
+use paota::runtime::Engine;
+use paota::util::Stopwatch;
+
+fn main() {
+    require_artifacts();
+    let mut base = bench_config();
+    base.rounds = bench_common::bench_rounds().max(16);
+
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+
+    let mut sw = Stopwatch::start();
+    let mut curves = Vec::new();
+    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        let run = fl::run_with_context(&ctx, &cfg).unwrap();
+        curves.push((algo, Curve::accuracy(&format!("{algo:?}"), &run)));
+    }
+    println!("# 3-algorithm sweep: {:?} ({} rounds each)\n", sw.lap(), base.rounds);
+
+    println!("=== Fig.4a accuracy vs round ===");
+    for (_, c) in &curves {
+        let s: Vec<String> = c
+            .points
+            .iter()
+            .map(|(r, _, v)| format!("{r}:{:.3}", v))
+            .collect();
+        println!("{:<10} {}", c.name, s.join(" "));
+    }
+    println!("\n=== Fig.4b accuracy vs virtual time (s) ===");
+    for (_, c) in &curves {
+        let s: Vec<String> = c
+            .points
+            .iter()
+            .map(|(_, t, v)| format!("{t:.0}s:{:.3}", v))
+            .collect();
+        println!("{:<10} {}", c.name, s.join(" "));
+    }
+
+    // Shape check: time to the best common accuracy.
+    let common = curves
+        .iter()
+        .map(|(_, c)| c.points.iter().map(|p| p.2).fold(0.0, f64::max))
+        .fold(f64::INFINITY, f64::min)
+        * 0.95;
+    println!("\n=== time to {:.1}% (best common accuracy) ===", common * 100.0);
+    for (_, c) in &curves {
+        let t = c.points.iter().find(|p| p.2 >= common).map(|p| p.1);
+        println!(
+            "{:<10} {}",
+            c.name,
+            t.map_or("not reached".into(), |t| format!("{t:.0}s"))
+        );
+    }
+}

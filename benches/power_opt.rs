@@ -1,0 +1,71 @@
+//! Micro-bench P-power/A2: the Dinkelbach power-control solve.
+//!
+//! * latency vs active-set size K (the per-round coordinator cost),
+//! * PCD vs paper-faithful PLA-MIP: objective agreement and latency gap
+//!   (ablation A2 of DESIGN.md §5).
+
+use paota::benchlib::{section, Bench};
+use paota::config::SolverKind;
+use paota::power::{
+    solve_power_control, BoundConstants, ClientFactors, PowerSolverConfig,
+};
+use paota::util::Rng;
+
+fn consts() -> BoundConstants {
+    BoundConstants {
+        l_smooth: 10.0,
+        epsilon2: 1.0,
+        k_total: 100,
+        dim: 8070,
+        noise_power: 7.96e-14,
+        omega: 3.0,
+    }
+}
+
+fn factors(n: usize, seed: u64) -> Vec<ClientFactors> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| ClientFactors {
+            stale_rounds: rng.index(4),
+            cosine: rng.uniform(-1.0, 1.0),
+            p_cap: rng.uniform(0.05, 0.6),
+        })
+        .collect()
+}
+
+fn main() {
+    section("power-control solve latency vs active-set size (PCD)");
+    let b = Bench::new("power_opt");
+    for k in [5, 10, 20, 40, 60, 80, 100] {
+        let f = factors(k, k as u64);
+        let cfg = PowerSolverConfig::default();
+        let mut rng = Rng::new(99);
+        b.iter(&format!("pcd_k{k}"), || {
+            solve_power_control(&f, &consts(), &cfg, &mut rng).unwrap();
+        });
+    }
+
+    section("PCD vs PLA-MIP (ablation A2): latency + objective agreement");
+    for k in [3, 5, 8, 10] {
+        let f = factors(k, 1000 + k as u64);
+        let pcd_cfg = PowerSolverConfig::default();
+        let mip_cfg = PowerSolverConfig {
+            solver: SolverKind::PlaMip,
+            ..PowerSolverConfig::default()
+        };
+        let mut rng = Rng::new(7);
+        b.iter(&format!("pcd_small_k{k}"), || {
+            solve_power_control(&f, &consts(), &pcd_cfg, &mut rng).unwrap();
+        });
+        b.iter(&format!("pla_mip_k{k}"), || {
+            solve_power_control(&f, &consts(), &mip_cfg, &mut rng).unwrap();
+        });
+        let a = solve_power_control(&f, &consts(), &pcd_cfg, &mut rng).unwrap();
+        let m = solve_power_control(&f, &consts(), &mip_cfg, &mut rng).unwrap();
+        let rel = (a.ratio - m.ratio).abs() / a.ratio.max(1e-12) * 100.0;
+        println!(
+            "  k={k}: ratio PCD {:.6} vs MIP {:.6} ({rel:.3}% apart)",
+            a.ratio, m.ratio
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Micro-bench P2: per-artifact PJRT execution latency — local_train
+//! (the dominant per-round cost: one per participant), evaluate, and
+//! grad_probe.
+
+mod bench_common;
+
+use bench_common::require_artifacts;
+use paota::benchlib::{section, Bench};
+use paota::runtime::{Engine, ModelRuntime};
+use paota::util::Rng;
+
+fn main() {
+    require_artifacts();
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &ModelRuntime::default_dir()).unwrap();
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(3);
+
+    let mut w = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut w, 0.05);
+
+    let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    rng.fill_normal(&mut xs, 0.5);
+    let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    for r in 0..(m.local_steps * m.batch) {
+        ys[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+
+    let mut ex = vec![0.0f32; m.eval_size * m.d_in];
+    rng.fill_normal(&mut ex, 0.5);
+    let mut ey = vec![0.0f32; m.eval_size * m.classes];
+    for r in 0..m.eval_size {
+        ey[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+
+    let mut px = vec![0.0f32; m.probe_batch * m.d_in];
+    rng.fill_normal(&mut px, 0.5);
+    let mut py = vec![0.0f32; m.probe_batch * m.classes];
+    for r in 0..m.probe_batch {
+        py[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+
+    section(&format!(
+        "AOT artifact execution (dim = {}, M = {}, B = {}, eval = {})",
+        m.dim, m.local_steps, m.batch, m.eval_size
+    ));
+    let b = Bench::new("runtime_exec");
+    b.iter("local_train(M=5,B=32)", || {
+        rt.local_train(&w, &xs, &ys, 0.1).unwrap();
+    });
+    b.iter(&format!("evaluate(E={})", m.eval_size), || {
+        rt.evaluate(&w, &ex, &ey).unwrap();
+    });
+    b.iter(&format!("grad_probe(B={})", m.probe_batch), || {
+        rt.grad_probe(&w, &px, &py).unwrap();
+    });
+}

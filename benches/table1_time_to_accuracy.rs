@@ -1,0 +1,78 @@
+//! Bench for paper Table I (E5): rounds & virtual time to target test
+//! accuracies for PAOTA / Local SGD / COTAF, printed in the paper's row
+//! layout. Bench fidelity uses reduced targets scaled to the short run's
+//! reachable accuracy; `repro table1` is the full-fidelity path.
+
+mod bench_common;
+
+use bench_common::{bench_config, require_artifacts};
+use paota::config::Algorithm;
+use paota::fl::{self, TrainContext};
+use paota::metrics::{format_table1, time_to_accuracy};
+use paota::runtime::Engine;
+use paota::util::Stopwatch;
+
+fn main() {
+    require_artifacts();
+    let mut base = bench_config();
+    base.rounds = bench_common::bench_rounds().max(20);
+    base.eval_every = 1;
+
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+
+    let mut sw = Stopwatch::start();
+    let mut runs = Vec::new();
+    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        runs.push((algo, fl::run_with_context(&ctx, &cfg).unwrap()));
+    }
+    let sweep = sw.lap();
+
+    // Adaptive targets: up to the best accuracy any algorithm reached.
+    let best = runs
+        .iter()
+        .filter_map(|(_, r)| r.best_accuracy())
+        .fold(0.0f32, f32::max) as f64;
+    let targets: Vec<f64> = [0.55, 0.7, 0.85, 1.0]
+        .iter()
+        .map(|f| (f * best * 100.0).round() / 100.0)
+        .collect();
+
+    let rows: Vec<(String, Vec<_>)> = runs
+        .iter()
+        .map(|(algo, run)| {
+            (
+                format!("{algo:?}"),
+                time_to_accuracy(&run.records, &targets),
+            )
+        })
+        .collect();
+
+    println!(
+        "# Table I at bench fidelity ({} rounds; sweep took {:?})",
+        base.rounds, sweep
+    );
+    print!("{}", format_table1(&rows, &targets));
+
+    // The paper's headline: PAOTA needs more rounds but less time.
+    let find = |a: Algorithm| rows.iter().find(|(n, _)| n == &format!("{a:?}")).unwrap();
+    let p = &find(Algorithm::Paota).1;
+    let s = &find(Algorithm::LocalSgd).1;
+    for (pt, st) in p.iter().zip(s.iter()) {
+        if let (Some(ptime), Some(stime)) = (pt.time_s, st.time_s) {
+            println!(
+                "target {:.0}%: PAOTA {:.0}s vs LocalSGD {:.0}s → {}",
+                pt.target * 100.0,
+                ptime,
+                stime,
+                if ptime <= stime {
+                    format!("PAOTA saves {:.0}%", (1.0 - ptime / stime) * 100.0)
+                } else {
+                    "LocalSGD faster here (short bench run)".into()
+                }
+            );
+        }
+    }
+}

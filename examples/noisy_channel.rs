@@ -1,0 +1,52 @@
+//! Channel-robustness sweep: PAOTA vs COTAF as the noise PSD rises from
+//! the paper's quiet default (−174 dBm/Hz) to the loud regime (−74) and
+//! beyond — the Fig. 3b story.
+//!
+//! ```bash
+//! cargo run --release --offline --example noisy_channel
+//! ```
+//!
+//! COTAF's time-varying precoder normalizes by the instantaneous update
+//! norm, so as updates shrink the effective SNR shrinks with them; PAOTA
+//! transmits full-scale models with noise-aware power control and holds
+//! its accuracy longer.
+
+use anyhow::Result;
+use paota::config::{Algorithm, Config};
+use paota::fl::{self, TrainContext};
+use paota::runtime::Engine;
+
+fn main() -> Result<()> {
+    let mut base = Config::default();
+    base.rounds = 100;
+    base.eval_every = 5;
+
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, &base)?;
+
+    println!("Noise sweep ({} rounds each):\n", base.rounds);
+    println!("{:>12} | {:>10} | {:>10}", "N0 (dBm/Hz)", "PAOTA", "COTAF");
+    println!("{:->12}-+-{:->10}-+-{:->10}", "", "", "");
+
+    for n0 in [-174.0, -74.0, -44.0] {
+        let mut row = Vec::new();
+        for algo in [Algorithm::Paota, Algorithm::Cotaf] {
+            let mut cfg = base.clone();
+            cfg.algorithm = algo;
+            cfg.channel.n0_dbm_per_hz = n0;
+            let run = fl::run_with_context(&ctx, &cfg)?;
+            row.push(run.final_accuracy().unwrap_or(0.0));
+        }
+        println!(
+            "{n0:>12} | {:>9.2}% | {:>9.2}%",
+            row[0] * 100.0,
+            row[1] * 100.0
+        );
+    }
+
+    println!(
+        "\nExpect: both ≈ equal at −174 (noise ≈ 0); PAOTA degrades more \
+         gracefully as N0 rises (noise-aware power control vs fixed precoder)."
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT compile path: lower every L2 entry point to HLO TEXT artifacts.
+
+Run once by `make artifacts`; python never runs again after this.  The Rust
+runtime (`rust/src/runtime/`) loads the text with
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes from the coordinator hot path.
+
+HLO *text* (NOT `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  Lowered with
+`return_tuple=True`, so every artifact returns a tuple the Rust side
+unpacks with `to_tuple()`.
+
+Also writes `manifest.txt` — a `key=value` description of every artifact's
+geometry that the Rust config loader parses (single source of truth for
+shapes across the language boundary).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_all(out_dir: str, *, d_in: int, hidden: int, classes: int,
+              local_steps: int, batch: int, clients: int, eval_size: int,
+              probe_batch: int) -> dict:
+    dims = M.ModelDims(d_in=d_in, hidden=hidden, classes=classes)
+    d = dims.dim
+
+    # Wrap entry points so `dims` is baked in (static geometry per artifact).
+    def local_train(w, xs, ys, lr):
+        return M.local_train(w, xs, ys, lr, dims)
+
+    def evaluate(w, x, y):
+        return M.evaluate(w, x, y, dims)
+
+    def aggregate(w_stack, coef, noise):
+        return (M.aggregate(w_stack, coef, noise),)
+
+    def grad_probe(w, x, y):
+        return (M.grad_probe(w, x, y, dims),)
+
+    entries = {
+        "local_train": (local_train, (
+            f32(d), f32(local_steps, batch, d_in),
+            f32(local_steps, batch, classes), f32(),
+        )),
+        "evaluate": (evaluate, (f32(d), f32(eval_size, d_in),
+                                f32(eval_size, classes))),
+        "aggregate": (aggregate, (f32(clients, d), f32(clients), f32(d))),
+        "grad_probe": (grad_probe, (f32(d), f32(probe_batch, d_in),
+                                    f32(probe_batch, classes))),
+    }
+
+    sizes = {}
+    for name, (fn, args) in entries.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sizes[name] = len(text)
+        print(f"  {name:12s} -> {path} ({len(text)} chars)")
+    return sizes
+
+
+def write_manifest(out_dir: str, cfg: dict) -> None:
+    path = os.path.join(out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write("# PAOTA AOT artifact manifest (parsed by rust/src/runtime/artifacts.rs)\n")
+        for k, v in cfg.items():
+            f.write(f"{k}={v}\n")
+    print(f"  manifest     -> {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d-in", type=int, default=784)
+    ap.add_argument("--hidden", type=int, default=10)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=5,
+                    help="M local SGD steps per round (paper: M=5)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--clients", type=int, default=100,
+                    help="K clients (paper: 100); aggregate artifact rows")
+    ap.add_argument("--eval-size", type=int, default=2000)
+    ap.add_argument("--probe-batch", type=int, default=256)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    dims = M.ModelDims(args.d_in, args.hidden, args.classes)
+    print(f"lowering PAOTA artifacts (dim={dims.dim}) -> {args.out_dir}")
+    lower_all(
+        args.out_dir,
+        d_in=args.d_in, hidden=args.hidden, classes=args.classes,
+        local_steps=args.local_steps, batch=args.batch,
+        clients=args.clients, eval_size=args.eval_size,
+        probe_batch=args.probe_batch,
+    )
+    write_manifest(args.out_dir, {
+        "d_in": args.d_in,
+        "hidden": args.hidden,
+        "classes": args.classes,
+        "dim": dims.dim,
+        "local_steps": args.local_steps,
+        "batch": args.batch,
+        "clients": args.clients,
+        "eval_size": args.eval_size,
+        "probe_batch": args.probe_batch,
+    })
+
+
+if __name__ == "__main__":
+    main()

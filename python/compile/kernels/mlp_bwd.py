@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused, hand-derived 3-layer MLP backward pass.
+
+Consumes the activations stashed by `mlp_fwd` plus the loss gradient at the
+logits (`dlogits = (softmax(z) - y) / B` for mean softmax-CE, computed in
+L2) and produces all six parameter gradients in one fused program:
+
+    dW3 = h2ᵀ·dlogits            db3 = Σ_b dlogits
+    dh2 = dlogits·W3ᵀ ⊙ 1[h2>0]
+    dW2 = h1ᵀ·dh2                db2 = Σ_b dh2
+    dh1 = dh2·W2ᵀ   ⊙ 1[h1>0]
+    dW1 = xᵀ·dh1                 db1 = Σ_b dh1
+
+TPU mapping: the grid tiles the batch; each grid step computes its tile's
+contribution to every gradient and *accumulates* into the VMEM-resident
+output blocks (constant index maps).  On real TPU hardware this is the
+canonical "revisited output block stays in VMEM across grid steps"
+reduction schedule; `@pl.when(step == 0)` zero-initializes.
+
+ReLU masks are recomputed from the stashed post-activation values
+(`h > 0`), which is exact because ReLU's derivative depends only on the
+sign of its output.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bwd_kernel(x_ref, h1_ref, h2_ref, dlogits_ref, w2_ref, w3_ref,
+                dw1_ref, db1_ref, dw2_ref, db2_ref, dw3_ref, db3_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        db1_ref[...] = jnp.zeros_like(db1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+        db2_ref[...] = jnp.zeros_like(db2_ref)
+        dw3_ref[...] = jnp.zeros_like(dw3_ref)
+        db3_ref[...] = jnp.zeros_like(db3_ref)
+
+    x = x_ref[...]
+    h1 = h1_ref[...]
+    h2 = h2_ref[...]
+    dz3 = dlogits_ref[...]
+
+    # Output layer.
+    dw3_ref[...] += jnp.dot(h2.T, dz3, preferred_element_type=jnp.float32)
+    db3_ref[...] += jnp.sum(dz3, axis=0)
+    # Hidden layer 2 (ReLU mask from stashed post-activations).
+    dh2 = jnp.dot(dz3, w3_ref[...].T, preferred_element_type=jnp.float32)
+    dz2 = dh2 * (h2 > 0.0).astype(jnp.float32)
+    dw2_ref[...] += jnp.dot(h1.T, dz2, preferred_element_type=jnp.float32)
+    db2_ref[...] += jnp.sum(dz2, axis=0)
+    # Hidden layer 1.
+    dh1 = jnp.dot(dz2, w2_ref[...].T, preferred_element_type=jnp.float32)
+    dz1 = dh1 * (h1 > 0.0).astype(jnp.float32)
+    dw1_ref[...] += jnp.dot(x.T, dz1, preferred_element_type=jnp.float32)
+    db1_ref[...] += jnp.sum(dz1, axis=0)
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def mlp_bwd(x, h1, h2, dlogits, w2, w3, *, block_b: int | None = None):
+    """Fused MLP backward; returns (dw1, db1, dw2, db2, dw3, db3)."""
+    from .mlp_fwd import _pick_batch_block
+
+    batch, d_in = x.shape
+    h = h1.shape[1]
+    c = dlogits.shape[1]
+    bb = block_b or _pick_batch_block(batch)
+    if batch % bb != 0:
+        raise ValueError(f"batch {batch} not divisible by block {bb}")
+    grid = (batch // bb,)
+
+    def batch_tile(cols):
+        return pl.BlockSpec((bb, cols), lambda i: (i, 0))
+
+    def resident(shape):
+        if len(shape) == 1:
+            return pl.BlockSpec(shape, lambda i: (0,))
+        return pl.BlockSpec(shape, lambda i: (0, 0))
+
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            batch_tile(d_in), batch_tile(h), batch_tile(h), batch_tile(c),
+            resident((h, h)), resident((h, c)),
+        ],
+        out_specs=[
+            resident((d_in, h)), resident((h,)),
+            resident((h, h)), resident((h,)),
+            resident((h, c)), resident((c,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, h), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h, h), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h, c), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, h1, h2, dlogits, w2, w3)

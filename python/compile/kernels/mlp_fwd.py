@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused 3-layer MLP forward pass.
+
+The paper's learning workload (Sec. IV-A) is a 784-H-H-C multi-layer
+perceptron (H = 10 hidden nodes, C = 10 classes) trained with softmax
+cross-entropy.  This kernel fuses the whole forward pass — three matmuls,
+bias adds, and two ReLUs — into a single Pallas program so the activations
+never round-trip through HBM between layers.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid is over the batch dimension; each grid step owns a `BB × IN` tile
+    of the input in VMEM,
+  * the weights (784×10 ≈ 31 KB f32 for the paper's model) are small enough
+    to be fully VMEM-resident per grid step — `BlockSpec`s below pin them
+    with a constant index map,
+  * the three matmuls hit the MXU with `preferred_element_type=float32`
+    so accumulation stays in f32 regardless of input dtype.
+
+The kernel also emits the post-ReLU activations `h1`, `h2`; the hand-derived
+backward kernel (`mlp_bwd.py`) consumes them, which is the standard
+"STASH the forward activations" schedule of pipeline-style training.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path (the numbers are
+identical; only the schedule differs).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                h1_ref, h2_ref, logits_ref):
+    """One grid step: a `BB × IN` input tile through all three layers."""
+    x = x_ref[...]
+    # Layer 1: IN -> H, MXU matmul + VPU bias/ReLU.
+    z1 = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h1 = jnp.maximum(z1 + b1_ref[...], 0.0)
+    h1_ref[...] = h1
+    # Layer 2: H -> H.
+    z2 = jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)
+    h2 = jnp.maximum(z2 + b2_ref[...], 0.0)
+    h2_ref[...] = h2
+    # Output layer: H -> C (logits; loss/softmax live in L2).
+    z3 = jnp.dot(h2, w3_ref[...], preferred_element_type=jnp.float32)
+    logits_ref[...] = z3 + b3_ref[...]
+
+
+def _pick_batch_block(batch: int, max_block: int = 128) -> int:
+    """Largest divisor of `batch` that is ≤ `max_block` (default 128).
+
+    128 is the MXU systolic-array edge; a small batch falls back to a
+    single tile (grid of 1), which is still the whole-array VMEM schedule.
+    General divisors (not just powers of two) keep the grid short for
+    batch sizes like 2000 (eval set -> 125-wide tiles, 16 grid steps).
+    """
+    for bb in range(min(batch, max_block), 0, -1):
+        if batch % bb == 0:
+            return bb
+    return batch
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def mlp_fwd(x, w1, b1, w2, b2, w3, b3, *, block_b: int | None = None):
+    """Fused MLP forward.
+
+    Args:
+      x:  f32[B, IN] input batch.
+      w1: f32[IN, H], b1: f32[H] — first hidden layer.
+      w2: f32[H, H],  b2: f32[H] — second hidden layer.
+      w3: f32[H, C],  b3: f32[C] — output layer.
+      block_b: batch tile size (defaults to the largest divisor ≤ 128).
+
+    Returns:
+      (h1 f32[B,H], h2 f32[B,H], logits f32[B,C]) — post-ReLU activations
+      are returned for the backward kernel.
+    """
+    batch, d_in = x.shape
+    h = w1.shape[1]
+    c = w3.shape[1]
+    bb = block_b or _pick_batch_block(batch)
+    if batch % bb != 0:
+        raise ValueError(f"batch {batch} not divisible by block {bb}")
+    grid = (batch // bb,)
+
+    # Input/outputs tile over batch; weights are VMEM-resident (constant
+    # index map -> the same block every grid step).
+    def batch_tile(cols):
+        return pl.BlockSpec((bb, cols), lambda i: (i, 0))
+
+    def resident(shape):
+        if len(shape) == 1:
+            return pl.BlockSpec(shape, lambda i: (0,))
+        return pl.BlockSpec(shape, lambda i: (0, 0))
+
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            batch_tile(d_in),
+            resident((d_in, h)), resident((h,)),
+            resident((h, h)), resident((h,)),
+            resident((h, c)), resident((c,)),
+        ],
+        out_specs=[batch_tile(h), batch_tile(h), batch_tile(c)],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, h), jnp.float32),
+            jax.ShapeDtypeStruct((batch, h), jnp.float32),
+            jax.ShapeDtypeStruct((batch, c), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w1, b1, w2, b2, w3, b3)

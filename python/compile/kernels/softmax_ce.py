@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: fused softmax cross-entropy loss + logits gradient.
+
+Closes the training hot path entirely in Pallas: `mlp_fwd` produces
+logits, this kernel turns them into the per-row CE loss and
+`d(mean CE)/d(logits) = (softmax − y)/B` in one pass (one max, one exp,
+one sum — the classic three-pass-fused softmax), and `mlp_bwd` consumes
+the gradient.
+
+TPU mapping: grid over batch tiles; each `BB × C` tile is reduced along
+the class axis entirely in VMEM registers (C = 10 for the paper's model —
+a single VPU lane group), so the kernel is bandwidth-bound on the logits
+stream, which is the roofline for this op.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .mlp_fwd import _pick_batch_block
+
+
+def _softmax_ce_kernel(batch_f32_ref, logits_ref, y_ref, loss_ref, dlogits_ref):
+    logits = logits_ref[...]
+    y = y_ref[...]
+    inv_b = 1.0 / batch_f32_ref[0]
+    # Stabilized log-softmax (single max/exp/sum pass per row).
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    ex = jnp.exp(shifted)
+    denom = jnp.sum(ex, axis=-1, keepdims=True)
+    logp = shifted - jnp.log(denom)
+    # Per-row CE loss.
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+    # d(mean CE)/dlogits = (softmax − y)/B.
+    dlogits_ref[...] = (ex / denom - y) * inv_b
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def softmax_ce(logits, y_onehot, *, block_b: int | None = None):
+    """Fused softmax-CE.
+
+    Args:
+      logits:   f32[B, C].
+      y_onehot: f32[B, C].
+      block_b:  batch tile (defaults to largest divisor ≤ 128).
+
+    Returns:
+      (loss f32[B] per-row CE, dlogits f32[B, C] gradient of the MEAN loss).
+    """
+    batch, classes = logits.shape
+    bb = block_b or _pick_batch_block(batch)
+    if batch % bb != 0:
+        raise ValueError(f"batch {batch} not divisible by block {bb}")
+    grid = (batch // bb,)
+    batch_f32 = jnp.full((1,), batch, dtype=jnp.float32)
+
+    return pl.pallas_call(
+        _softmax_ce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # batch size (resident)
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch, classes), jnp.float32),
+        ],
+        interpret=True,
+    )(batch_f32, logits, y_onehot)

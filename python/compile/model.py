@@ -1,0 +1,147 @@
+"""L2: the PAOTA learning workload as JAX functions over a FLAT parameter
+vector, calling the L1 Pallas kernels.
+
+Everything the Rust coordinator executes per round is defined here and
+AOT-lowered once by `aot.py`:
+
+  * `local_train`  — M-step local SGD (paper eq. (3)/(4), Algorithm 1
+    lines 5–7) over M pre-batched minibatches, via `lax.scan`.
+  * `evaluate`     — test-set loss + correct count for the accuracy curves.
+  * `aggregate`    — AirComp superposition + normalization (eq. (6)+(8)),
+    a thin wrapper over the `aircomp` Pallas kernel.
+  * `grad_probe`   — one full-batch gradient (diagnostics, F(w*) probing).
+
+The FLAT convention: the model lives as `f32[DIM]` everywhere outside this
+file; `unflatten`/`flatten` are pure reshape/slice ops that XLA folds away.
+This keeps the Rust side allocation-free (AirComp, staleness bookkeeping
+and cosine similarity are plain vector ops over `&[f32]`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aircomp import aircomp_aggregate
+from .kernels.mlp_bwd import mlp_bwd
+from .kernels.mlp_fwd import mlp_fwd
+from .kernels.softmax_ce import softmax_ce
+
+# ---------------------------------------------------------------------------
+# Model geometry (the paper's MLP: 784 -> 10 -> 10 -> 10).
+# aot.py overrides these via ModelDims for other configurations.
+# ---------------------------------------------------------------------------
+
+
+class ModelDims:
+    """Static geometry of the MLP; single source of truth for shapes."""
+
+    def __init__(self, d_in: int = 784, hidden: int = 10, classes: int = 10):
+        self.d_in = d_in
+        self.hidden = hidden
+        self.classes = classes
+
+    @property
+    def sizes(self):
+        i, h, c = self.d_in, self.hidden, self.classes
+        return [i * h, h, h * h, h, h * c, c]
+
+    @property
+    def dim(self) -> int:
+        """Total flat parameter count (8070 for the paper's model)."""
+        return sum(self.sizes)
+
+    @property
+    def shapes(self):
+        i, h, c = self.d_in, self.hidden, self.classes
+        return [(i, h), (h,), (h, h), (h,), (h, c), (c,)]
+
+
+DIMS = ModelDims()
+
+
+def unflatten(w_flat, dims: ModelDims = DIMS):
+    """Split f32[dim] into (w1, b1, w2, b2, w3, b3)."""
+    out, off = [], 0
+    for size, shape in zip(dims.sizes, dims.shapes):
+        out.append(jax.lax.dynamic_slice(w_flat, (off,), (size,)).reshape(shape))
+        off += size
+    return tuple(out)
+
+
+def flatten(params):
+    """Inverse of `unflatten`."""
+    return jnp.concatenate([p.reshape(-1) for p in params])
+
+
+# ---------------------------------------------------------------------------
+# Loss / gradient (pallas fwd + hand-derived pallas bwd).
+# ---------------------------------------------------------------------------
+
+
+def _loss_and_grad_flat(w_flat, x, y_onehot, dims: ModelDims = DIMS):
+    """Mean softmax-CE loss and flat gradient for one minibatch.
+
+    Fully fused L1 path: pallas fwd -> pallas softmax-CE (loss + dlogits)
+    -> hand-derived pallas bwd.
+    """
+    w1, b1, w2, b2, w3, b3 = unflatten(w_flat, dims)
+    h1, h2, logits = mlp_fwd(x, w1, b1, w2, b2, w3, b3)
+    loss_rows, dlogits = softmax_ce(logits, y_onehot)
+    loss = jnp.mean(loss_rows)
+    grads = mlp_bwd(x, h1, h2, dlogits, w2, w3)
+    return loss, flatten(grads)
+
+
+def local_train(w_flat, xs, ys, lr, dims: ModelDims = DIMS):
+    """M local SGD steps (paper eq. (3)): w ← w − η·∇F_k(w; D_k^τ).
+
+    Args:
+      w_flat: f32[dim] model received from the PS (possibly stale base).
+      xs:     f32[M, B, d_in] the client's M pre-sampled minibatches.
+      ys:     f32[M, B, classes] one-hot labels.
+      lr:     f32[] learning rate η (runtime input, no recompile to sweep).
+
+    Returns:
+      (w' f32[dim], mean f32[] of the M minibatch losses).
+    """
+
+    def step(w, xy):
+        x, y = xy
+        loss, g = _loss_and_grad_flat(w, x, y, dims)
+        return w - lr * g, loss
+
+    w_out, losses = jax.lax.scan(step, w_flat, (xs, ys))
+    return w_out, jnp.mean(losses)
+
+
+def evaluate(w_flat, x, y_onehot, dims: ModelDims = DIMS):
+    """Test-set metrics: (mean loss f32[], correct count f32[]).
+
+    The eval batch uses coarse Pallas blocks (≤2000 rows per grid step —
+    ~6.3 MB of VMEM per input tile, still comfortably within a v4 core):
+    eval runs once per round, and §Perf measured the short grid to be the
+    dominant win through the CPU PJRT path.
+    """
+    from .kernels.mlp_fwd import _pick_batch_block
+
+    w1, b1, w2, b2, w3, b3 = unflatten(w_flat, dims)
+    bb = _pick_batch_block(x.shape[0], max_block=2000)
+    _, _, logits = mlp_fwd(x, w1, b1, w2, b2, w3, b3, block_b=bb)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1))
+        .astype(jnp.float32)
+    )
+    return loss, correct
+
+
+def aggregate(w_stack, coef, noise):
+    """AirComp global update (eq. (6)+(8)); see kernels/aircomp.py."""
+    return aircomp_aggregate(w_stack, coef, noise)
+
+
+def grad_probe(w_flat, x, y_onehot, dims: ModelDims = DIMS):
+    """One full-batch flat gradient (diagnostics / F(w*) line probes)."""
+    _, g = _loss_and_grad_flat(w_flat, x, y_onehot, dims)
+    return g

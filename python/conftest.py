@@ -1,0 +1,8 @@
+"""pytest root: make the `compile` package importable and pin JAX to CPU."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,304 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; assert_allclose is the signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.aircomp import aircomp_aggregate, _pick_d_block
+from compile.kernels.mlp_bwd import mlp_bwd
+from compile.kernels.mlp_fwd import mlp_fwd, _pick_batch_block
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_mlp_inputs(rng, batch, d_in, hidden, classes, scale=0.5):
+    x = rng.standard_normal((batch, d_in)).astype(np.float32)
+    w1 = (scale * rng.standard_normal((d_in, hidden))).astype(np.float32)
+    b1 = (scale * rng.standard_normal(hidden)).astype(np.float32)
+    w2 = (scale * rng.standard_normal((hidden, hidden))).astype(np.float32)
+    b2 = (scale * rng.standard_normal(hidden)).astype(np.float32)
+    w3 = (scale * rng.standard_normal((hidden, classes))).astype(np.float32)
+    b3 = (scale * rng.standard_normal(classes)).astype(np.float32)
+    return x, w1, b1, w2, b2, w3, b3
+
+
+# ---------------------------------------------------------------------------
+# mlp_fwd
+# ---------------------------------------------------------------------------
+
+
+class TestMlpFwd:
+    def test_paper_shape(self):
+        rng = np.random.default_rng(0)
+        args = make_mlp_inputs(rng, 32, 784, 10, 10)
+        h1, h2, logits = mlp_fwd(*args)
+        r1, r2, rl = ref.mlp_fwd_ref(*args)
+        # 784-long contraction: accumulation order differs (MXU-style dot
+        # vs jnp @), so allow a few ULPs of slack.
+        assert_allclose(h1, r1, rtol=1e-4, atol=1e-4)
+        assert_allclose(h2, r2, rtol=1e-4, atol=1e-4)
+        assert_allclose(logits, rl, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+        d_in=st.sampled_from([3, 16, 784]),
+        hidden=st.sampled_from([4, 10, 32]),
+        classes=st.sampled_from([2, 10]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, batch, d_in, hidden, classes, seed):
+        rng = np.random.default_rng(seed)
+        args = make_mlp_inputs(rng, batch, d_in, hidden, classes)
+        got = mlp_fwd(*args)
+        want = ref.mlp_fwd_ref(*args)
+        for g, w in zip(got, want):
+            assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+    def test_explicit_block_sizes_agree(self):
+        rng = np.random.default_rng(7)
+        args = make_mlp_inputs(rng, 64, 32, 8, 10)
+        base = mlp_fwd(*args, block_b=64)
+        for bb in (1, 2, 4, 8, 16, 32):
+            got = mlp_fwd(*args, block_b=bb)
+            for g, w in zip(got, base):
+                assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+    def test_relu_boundary_exact_zero(self):
+        # Activations exactly at 0 must behave identically to the oracle.
+        x = np.zeros((4, 6), dtype=np.float32)
+        w1 = np.zeros((6, 5), dtype=np.float32)
+        b1 = np.zeros(5, dtype=np.float32)
+        w2 = np.eye(5, dtype=np.float32)
+        b2 = np.zeros(5, dtype=np.float32)
+        w3 = np.ones((5, 3), dtype=np.float32)
+        b3 = np.full(3, -1.0, dtype=np.float32)
+        got = mlp_fwd(x, w1, b1, w2, b2, w3, b3)
+        want = ref.mlp_fwd_ref(x, w1, b1, w2, b2, w3, b3)
+        for g, w in zip(got, want):
+            assert_allclose(g, w)
+
+    def test_bad_block_raises(self):
+        rng = np.random.default_rng(1)
+        args = make_mlp_inputs(rng, 6, 4, 4, 3)
+        with pytest.raises(ValueError):
+            mlp_fwd(*args, block_b=4)
+
+    def test_pick_batch_block(self):
+        assert _pick_batch_block(256) == 128
+        assert _pick_batch_block(32) == 32
+        assert _pick_batch_block(48) == 48
+        assert _pick_batch_block(2000) == 125
+        assert _pick_batch_block(2000, max_block=1000) == 1000
+        assert _pick_batch_block(7) == 7
+
+
+# ---------------------------------------------------------------------------
+# mlp_bwd
+# ---------------------------------------------------------------------------
+
+
+def bwd_case(rng, batch, d_in, hidden, classes):
+    args = make_mlp_inputs(rng, batch, d_in, hidden, classes)
+    x, w1, b1, w2, b2, w3, b3 = args
+    h1, h2, logits = ref.mlp_fwd_ref(*args)
+    y = np.eye(classes, dtype=np.float32)[rng.integers(0, classes, batch)]
+    logp = np.asarray(logits - jax.nn.logsumexp(logits, axis=-1, keepdims=True))
+    dlogits = ((np.exp(logp) - y) / batch).astype(np.float32)
+    return args, np.asarray(h1), np.asarray(h2), dlogits, y
+
+
+class TestMlpBwd:
+    def test_matches_ref_paper_shape(self):
+        rng = np.random.default_rng(3)
+        (x, w1, b1, w2, b2, w3, b3), h1, h2, dl, _ = bwd_case(rng, 32, 784, 10, 10)
+        got = mlp_bwd(x, h1, h2, dl, w2, w3)
+        want = ref.mlp_bwd_ref(x, h1, h2, dl, w2, w3)
+        for g, w in zip(got, want):
+            assert_allclose(g, w, rtol=1e-4, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 4, 8, 32]),
+        d_in=st.sampled_from([5, 16, 64]),
+        hidden=st.sampled_from([4, 10]),
+        classes=st.sampled_from([3, 10]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, batch, d_in, hidden, classes, seed):
+        rng = np.random.default_rng(seed)
+        (x, w1, b1, w2, b2, w3, b3), h1, h2, dl, _ = bwd_case(
+            rng, batch, d_in, hidden, classes)
+        got = mlp_bwd(x, h1, h2, dl, w2, w3)
+        want = ref.mlp_bwd_ref(x, h1, h2, dl, w2, w3)
+        for g, w in zip(got, want):
+            assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+    def test_grad_accumulation_across_blocks(self):
+        # Multi-block grid must accumulate, not overwrite: compare 1-block
+        # vs many-block execution of the same batch.
+        rng = np.random.default_rng(11)
+        (x, w1, b1, w2, b2, w3, b3), h1, h2, dl, _ = bwd_case(rng, 32, 16, 8, 5)
+        one = mlp_bwd(x, h1, h2, dl, w2, w3, block_b=32)
+        many = mlp_bwd(x, h1, h2, dl, w2, w3, block_b=4)
+        for a, b in zip(one, many):
+            assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_matches_jax_autograd(self):
+        # The hand-derived backward is the real contract: it must equal
+        # jax.grad of the reference end-to-end loss.
+        rng = np.random.default_rng(5)
+        args = make_mlp_inputs(rng, 16, 20, 10, 10)
+        x, w1, b1, w2, b2, w3, b3 = args
+        y = np.eye(10, dtype=np.float32)[rng.integers(0, 10, 16)]
+        h1, h2, logits = ref.mlp_fwd_ref(*args)
+        logp = np.asarray(logits - jax.nn.logsumexp(logits, -1, keepdims=True))
+        dlogits = ((np.exp(logp) - y) / 16).astype(np.float32)
+        got = mlp_bwd(x, np.asarray(h1), np.asarray(h2), dlogits, w2, w3)
+        want = jax.grad(ref.loss_ref)((w1, b1, w2, b2, w3, b3), x, y)
+        for g, w in zip(got, want):
+            assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# aircomp
+# ---------------------------------------------------------------------------
+
+
+class TestAircomp:
+    def test_paper_scale(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((100, 8070)).astype(np.float32)
+        coef = np.abs(rng.standard_normal(100)).astype(np.float32)
+        coef[::3] = 0.0  # non-participants
+        noise = (1e-3 * rng.standard_normal(8070)).astype(np.float32)
+        got = aircomp_aggregate(w, coef, noise)
+        want = ref.aircomp_ref(w, coef, noise)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, 40),
+        d=st.sampled_from([1, 7, 64, 256, 1000]),
+        seed=st.integers(0, 2**31 - 1),
+        zero_frac=st.sampled_from([0.0, 0.5, 1.0]),
+    )
+    def test_matches_ref_sweep(self, k, d, seed, zero_frac):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((k, d)).astype(np.float32)
+        coef = np.abs(rng.standard_normal(k)).astype(np.float32)
+        nz = int(zero_frac * k)
+        if nz:
+            coef[rng.choice(k, nz, replace=False)] = 0.0
+        noise = (0.01 * rng.standard_normal(d)).astype(np.float32)
+        got = aircomp_aggregate(w, coef, noise)
+        want = ref.aircomp_ref(w, coef, noise)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+    def test_all_zero_coef_total(self):
+        # ς = 0 corner: kernel must be total (returns the noise vector).
+        w = np.ones((4, 8), dtype=np.float32)
+        coef = np.zeros(4, dtype=np.float32)
+        noise = np.arange(8, dtype=np.float32)
+        got = aircomp_aggregate(w, coef, noise)
+        assert_allclose(got, noise)
+
+    def test_single_participant_is_identity_plus_noise(self):
+        rng = np.random.default_rng(9)
+        w = rng.standard_normal((5, 16)).astype(np.float32)
+        coef = np.zeros(5, dtype=np.float32)
+        coef[2] = 3.5
+        noise = (0.1 * rng.standard_normal(16)).astype(np.float32)
+        got = aircomp_aggregate(w, coef, noise)
+        assert_allclose(got, w[2] + noise / 3.5, rtol=1e-5, atol=1e-6)
+
+    def test_weights_normalize(self):
+        # With zero noise the aggregate is a convex combination: constant
+        # stacks must aggregate to that constant.
+        w = np.full((7, 32), 2.5, dtype=np.float32)
+        coef = np.abs(np.random.default_rng(2).standard_normal(7)).astype(np.float32)
+        got = aircomp_aggregate(w, coef, np.zeros(32, dtype=np.float32))
+        assert_allclose(got, np.full(32, 2.5, dtype=np.float32), rtol=1e-5)
+
+    def test_block_choice_invariance(self):
+        rng = np.random.default_rng(21)
+        w = rng.standard_normal((8, 64)).astype(np.float32)
+        coef = np.abs(rng.standard_normal(8)).astype(np.float32)
+        noise = rng.standard_normal(64).astype(np.float32) * 0.01
+        base = aircomp_aggregate(w, coef, noise, block_d=64)
+        for blk in (1, 2, 4, 8, 16, 32):
+            got = aircomp_aggregate(w, coef, noise, block_d=blk)
+            assert_allclose(got, base, rtol=1e-5, atol=1e-6)
+
+    def test_pick_d_block(self):
+        assert _pick_d_block(8070) == 8070  # paper model: single grid step
+        assert _pick_d_block(8070, max_block=2048) == 1614
+        assert _pick_d_block(8192) == 8192
+        assert _pick_d_block(7) == 7
+        assert 8070 % _pick_d_block(8070) == 0
+
+
+# ---------------------------------------------------------------------------
+# softmax_ce
+# ---------------------------------------------------------------------------
+
+from compile.kernels.softmax_ce import softmax_ce
+
+
+class TestSoftmaxCe:
+    def test_matches_ref_paper_shape(self):
+        rng = np.random.default_rng(0)
+        logits = rng.standard_normal((32, 10)).astype(np.float32) * 3.0
+        y = np.eye(10, dtype=np.float32)[rng.integers(0, 10, 32)]
+        loss, dl = softmax_ce(logits, y)
+        rl, rdl = ref.softmax_ce_grad_ref(logits, y)
+        assert_allclose(loss, rl, rtol=1e-5, atol=1e-6)
+        assert_allclose(dl, rdl, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 2, 8, 32, 64]),
+        classes=st.sampled_from([2, 3, 10, 17]),
+        scale=st.sampled_from([0.1, 1.0, 30.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, batch, classes, scale, seed):
+        rng = np.random.default_rng(seed)
+        logits = (scale * rng.standard_normal((batch, classes))).astype(np.float32)
+        y = np.eye(classes, dtype=np.float32)[rng.integers(0, classes, batch)]
+        loss, dl = softmax_ce(logits, y)
+        rl, rdl = ref.softmax_ce_grad_ref(logits, y)
+        assert_allclose(loss, rl, rtol=1e-4, atol=1e-5)
+        assert_allclose(dl, rdl, rtol=1e-4, atol=1e-6)
+
+    def test_extreme_logits_stable(self):
+        # Large logits must not overflow (stabilized by the row max).
+        logits = np.array([[1000.0, 0.0], [-1000.0, 0.0]], dtype=np.float32)
+        y = np.array([[1.0, 0.0], [0.0, 1.0]], dtype=np.float32)
+        loss, dl = softmax_ce(logits, y)
+        assert np.all(np.isfinite(loss))
+        assert np.all(np.isfinite(dl))
+        assert_allclose(loss[0], 0.0, atol=1e-6)  # confident & correct
+
+    def test_grad_sums_to_zero_per_row(self):
+        # Softmax gradient rows sum to zero (probabilities sum to one).
+        rng = np.random.default_rng(4)
+        logits = rng.standard_normal((16, 10)).astype(np.float32)
+        y = np.eye(10, dtype=np.float32)[rng.integers(0, 10, 16)]
+        _, dl = softmax_ce(logits, y)
+        assert_allclose(np.sum(dl, axis=-1), np.zeros(16), atol=1e-7)
+
+    def test_matches_jax_grad(self):
+        rng = np.random.default_rng(5)
+        logits = rng.standard_normal((8, 5)).astype(np.float32)
+        y = np.eye(5, dtype=np.float32)[rng.integers(0, 5, 8)]
+        _, dl = softmax_ce(logits, y)
+        want = jax.grad(lambda l: ref.softmax_ce_ref(l, y))(logits)
+        assert_allclose(dl, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,156 @@
+"""L2 model correctness: flat-param plumbing, local SGD semantics, eval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = M.ModelDims(d_in=12, hidden=6, classes=4)
+
+
+def rand_params(rng, dims=DIMS, scale=0.4):
+    return [
+        (scale * rng.standard_normal(s)).astype(np.float32)
+        for s in dims.shapes
+    ]
+
+
+def rand_flat(rng, dims=DIMS):
+    return np.concatenate([p.reshape(-1) for p in rand_params(rng, dims)])
+
+
+def onehot(rng, n, classes):
+    return np.eye(classes, dtype=np.float32)[rng.integers(0, classes, n)]
+
+
+class TestFlattenUnflatten:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        w = rand_flat(rng)
+        params = M.unflatten(jnp.asarray(w), DIMS)
+        back = M.flatten(params)
+        assert_allclose(back, w)
+
+    def test_shapes(self):
+        rng = np.random.default_rng(1)
+        params = M.unflatten(jnp.asarray(rand_flat(rng)), DIMS)
+        assert [p.shape for p in params] == DIMS.shapes
+
+    def test_paper_dim_is_8070(self):
+        assert M.ModelDims().dim == 8070
+
+    @settings(max_examples=10, deadline=None)
+    @given(d_in=st.integers(2, 40), hidden=st.integers(2, 16),
+           classes=st.integers(2, 12), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_sweep(self, d_in, hidden, classes, seed):
+        dims = M.ModelDims(d_in, hidden, classes)
+        rng = np.random.default_rng(seed)
+        w = rand_flat(rng, dims)
+        assert_allclose(M.flatten(M.unflatten(jnp.asarray(w), dims)), w)
+
+
+class TestLossGrad:
+    def test_grad_matches_autograd(self):
+        rng = np.random.default_rng(2)
+        params = rand_params(rng)
+        w = np.concatenate([p.reshape(-1) for p in params])
+        x = rng.standard_normal((8, DIMS.d_in)).astype(np.float32)
+        y = onehot(rng, 8, DIMS.classes)
+        loss, g = M._loss_and_grad_flat(jnp.asarray(w), x, y, DIMS)
+        want_loss = ref.loss_ref(tuple(params), x, y)
+        want_g = jax.grad(ref.loss_ref)(tuple(params), x, y)
+        assert_allclose(loss, want_loss, rtol=1e-5)
+        assert_allclose(g, np.concatenate([np.asarray(t).reshape(-1)
+                                           for t in want_g]),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_grad_probe_equals_loss_grad(self):
+        rng = np.random.default_rng(3)
+        w = rand_flat(rng)
+        x = rng.standard_normal((8, DIMS.d_in)).astype(np.float32)
+        y = onehot(rng, 8, DIMS.classes)
+        _, g = M._loss_and_grad_flat(jnp.asarray(w), x, y, DIMS)
+        assert_allclose(M.grad_probe(jnp.asarray(w), x, y, DIMS), g)
+
+
+class TestLocalTrain:
+    def test_m_steps_equal_manual_loop(self):
+        # local_train's scan must equal M explicit SGD steps (paper eq. 3).
+        rng = np.random.default_rng(4)
+        w = rand_flat(rng)
+        m, b, lr = 5, 8, 0.05
+        xs = rng.standard_normal((m, b, DIMS.d_in)).astype(np.float32)
+        ys = np.stack([onehot(rng, b, DIMS.classes) for _ in range(m)])
+        got_w, got_loss = M.local_train(jnp.asarray(w), xs, ys,
+                                        jnp.float32(lr), DIMS)
+        w_manual = jnp.asarray(w)
+        losses = []
+        for t in range(m):
+            loss, g = M._loss_and_grad_flat(w_manual, xs[t], ys[t], DIMS)
+            losses.append(loss)
+            w_manual = w_manual - lr * g
+        assert_allclose(got_w, w_manual, rtol=1e-5, atol=1e-6)
+        assert_allclose(got_loss, np.mean(losses), rtol=1e-5)
+
+    def test_zero_lr_is_identity(self):
+        rng = np.random.default_rng(5)
+        w = rand_flat(rng)
+        xs = rng.standard_normal((3, 4, DIMS.d_in)).astype(np.float32)
+        ys = np.stack([onehot(rng, 4, DIMS.classes) for _ in range(3)])
+        got_w, _ = M.local_train(jnp.asarray(w), xs, ys, jnp.float32(0.0), DIMS)
+        assert_allclose(got_w, w)
+
+    def test_training_reduces_loss(self):
+        # A few local rounds on a fixed batch must reduce the loss.
+        rng = np.random.default_rng(6)
+        w = jnp.asarray(rand_flat(rng))
+        x = rng.standard_normal((16, DIMS.d_in)).astype(np.float32)
+        y = onehot(rng, 16, DIMS.classes)
+        xs = np.broadcast_to(x, (5, 16, DIMS.d_in))
+        ys = np.broadcast_to(y, (5, 16, DIMS.classes))
+        loss0, _ = M.evaluate(w, x, y, DIMS)
+        for _ in range(10):
+            w, _ = M.local_train(w, xs, ys, jnp.float32(0.1), DIMS)
+        loss1, _ = M.evaluate(w, x, y, DIMS)
+        assert float(loss1) < float(loss0)
+
+
+class TestEvaluate:
+    def test_loss_matches_ref(self):
+        rng = np.random.default_rng(7)
+        params = rand_params(rng)
+        w = np.concatenate([p.reshape(-1) for p in params])
+        x = rng.standard_normal((25, DIMS.d_in)).astype(np.float32)
+        y = onehot(rng, 25, DIMS.classes)
+        loss, _ = M.evaluate(jnp.asarray(w), x, y, DIMS)
+        assert_allclose(loss, ref.loss_ref(tuple(params), x, y), rtol=1e-5)
+
+    def test_correct_count_bounds_and_exactness(self):
+        rng = np.random.default_rng(8)
+        w = rand_flat(rng)
+        x = rng.standard_normal((25, DIMS.d_in)).astype(np.float32)
+        y = onehot(rng, 25, DIMS.classes)
+        _, correct = M.evaluate(jnp.asarray(w), x, y, DIMS)
+        assert 0.0 <= float(correct) <= 25.0
+        # Cross-check against a numpy argmax of the reference logits.
+        params = M.unflatten(jnp.asarray(w), DIMS)
+        _, _, logits = ref.mlp_fwd_ref(x, *params)
+        want = np.sum(np.argmax(np.asarray(logits), -1) == np.argmax(y, -1))
+        assert float(correct) == want
+
+
+class TestAggregate:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(9)
+        w = rng.standard_normal((10, DIMS.dim)).astype(np.float32)
+        coef = np.abs(rng.standard_normal(10)).astype(np.float32)
+        noise = (0.01 * rng.standard_normal(DIMS.dim)).astype(np.float32)
+        got = M.aggregate(w, coef, noise)
+        assert_allclose(got, ref.aircomp_ref(w, coef, noise),
+                        rtol=1e-4, atol=1e-5)

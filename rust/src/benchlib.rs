@@ -1,0 +1,133 @@
+//! Mini benchmark harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::new`] and register closures with [`Bench::iter`]. Each gets a
+//! warmup phase, then timed batches until a minimum measurement window is
+//! reached; mean, standard deviation, and throughput are reported in a
+//! criterion-like format:
+//!
+//! ```text
+//! aircomp/aggregate_k100      time: [1.234 ms ± 0.056 ms]  (812.3 MiB/s)
+//! ```
+//!
+//! `PAOTA_BENCH_FAST=1` shrinks the measurement window for smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group.
+pub struct Bench {
+    group: String,
+    /// Minimum measurement window per benchmark.
+    window: Duration,
+    /// Warmup window.
+    warmup: Duration,
+}
+
+/// A single measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub iters: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let fast = std::env::var("PAOTA_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            window: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+        }
+    }
+
+    /// Time `f` repeatedly; print and return the measurement.
+    pub fn iter<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        // Pick a batch size aiming at ~10 batches per window.
+        let per_iter = start.elapsed() / warm_iters.max(1) as u32;
+        let batch = ((self.window.as_secs_f64() / 10.0 / per_iter.as_secs_f64().max(1e-9))
+            .ceil() as u64)
+            .max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let meas_start = Instant::now();
+        let mut total_iters = 0u64;
+        while meas_start.elapsed() < self.window || samples.len() < 3 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / samples.len() as f64;
+        let m = Measurement {
+            name: format!("{}/{name}", self.group),
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            iters: total_iters,
+        };
+        println!(
+            "{:<44} time: [{} ± {}]  ({} iters)",
+            m.name,
+            crate::util::timer::fmt_duration(m.mean),
+            crate::util::timer::fmt_duration(m.std_dev),
+            m.iters
+        );
+        m
+    }
+
+    /// Like [`Bench::iter`] but also reports throughput for `bytes` moved
+    /// per iteration.
+    pub fn iter_bytes<F: FnMut()>(&self, name: &str, bytes: usize, f: F) -> Measurement {
+        let m = self.iter(name, f);
+        let gbps = bytes as f64 / m.mean.as_secs_f64() / 1e9;
+        println!("{:<44}   throughput: {gbps:.2} GB/s", "");
+        m
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("PAOTA_BENCH_FAST", "1");
+        let b = Bench::new("test");
+        let mut x = 0u64;
+        let m = b.iter("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(m.mean < Duration::from_micros(100));
+        assert!(m.iters > 0);
+    }
+}

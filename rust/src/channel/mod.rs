@@ -1,0 +1,239 @@
+//! Wireless MAC channel simulator (paper §II-C, §IV-A).
+//!
+//! Models exactly what the paper assumes:
+//! * error-free downlink broadcast;
+//! * uplink wireless multiple-access channel with **AirComp**: perfect CSI
+//!   at transmitters and PS, channel-inversion pre-processing
+//!   `φ_k = b_k p_k h_kᴴ/|h_k|²` (eq. (5)), so the received superposition
+//!   is `Σ_k b_k p_k w_k + n` (eq. (6));
+//! * i.i.d. Rayleigh block fading per round (`h_k ~ CN(0,1)`, so
+//!   `|h_k|² ~ Exp(1)`), independent across rounds;
+//! * AWGN with `σ_n² = B·N₀` (paper: B = 20 MHz,
+//!   N₀ ∈ {−174, −74} dBm/Hz).
+//!
+//! The fading realization enters through the transmit-power constraint
+//! (eq. (7)): inverting a deep fade costs power, so the usable transmit
+//! coefficient is capped at `|h_k|·√(P_max)/‖w_k‖` — see
+//! [`Mac::effective_power_cap`].
+
+use crate::util::Rng;
+
+/// Convert a dBm value to watts.
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) / 1000.0
+}
+
+/// Convert watts to dBm.
+pub fn watts_to_dbm(w: f64) -> f64 {
+    10.0 * (w * 1000.0).log10()
+}
+
+/// Static channel parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelConfig {
+    /// Uplink bandwidth in Hz (paper: 20 MHz).
+    pub bandwidth_hz: f64,
+    /// Noise power spectral density in dBm/Hz (paper: −174 or −74).
+    pub n0_dbm_per_hz: f64,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            bandwidth_hz: 20e6,
+            n0_dbm_per_hz: -174.0,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// AWGN power `σ_n² = B·N₀` in watts.
+    pub fn noise_power(&self) -> f64 {
+        self.bandwidth_hz * dbm_to_watts(self.n0_dbm_per_hz)
+    }
+}
+
+/// Per-round state of the MAC uplink.
+#[derive(Debug, Clone)]
+pub struct Mac {
+    cfg: ChannelConfig,
+}
+
+impl Mac {
+    pub fn new(cfg: ChannelConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &ChannelConfig {
+        &self.cfg
+    }
+
+    /// Draw one round of i.i.d. Rayleigh fading power gains `|h_k|²`
+    /// (Exp(1), unit mean — `h_k ~ CN(0,1)`).
+    pub fn draw_fading_gains(&self, rng: &mut Rng, k: usize) -> Vec<f64> {
+        (0..k).map(|_| rng.exponential(1.0)).collect()
+    }
+
+    /// Effective transmit-coefficient cap for client `k` this round.
+    ///
+    /// Channel inversion (eq. (5)) spends `p_k²‖w‖²/|h_k|²` watts of
+    /// instantaneous signal power (eq. (7)): the largest usable `p_k` is
+    /// `|h_k|·√P_max/‖w‖`. Capped additionally at `p_max` itself so a
+    /// lucky fade never *raises* the nominal budget.
+    pub fn effective_power_cap(&self, p_max: f64, gain2: f64, w_norm: f64) -> f64 {
+        if w_norm <= 0.0 {
+            return p_max;
+        }
+        let cap = gain2.sqrt() * p_max.sqrt() / w_norm;
+        cap.min(p_max)
+    }
+
+    /// Draw the raw received AWGN vector `n` of eq. (6): i.i.d.
+    /// `N(0, σ_n²)` per entry.
+    ///
+    /// This is what the aggregation kernel consumes — the kernel itself
+    /// performs the PS normalization `(…+n)/ς` of eq. (8), so the noise
+    /// handed to it must be *pre*-normalization. (Dividing here too would
+    /// silently attenuate the channel by another factor of ς — covered by
+    /// the `paota_more_noise_worse_or_equal` integration test.)
+    pub fn channel_noise(&self, rng: &mut Rng, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        let std = self.cfg.noise_power().sqrt();
+        rng.fill_normal(&mut out, std as f32);
+        out
+    }
+
+    /// Draw the post-normalization AWGN vector `ñ = n/ς` (eq. (8)):
+    /// i.i.d. `N(0, σ_n²)` scaled by `1/ς` with `ς = Σ_k b_k p_k`.
+    ///
+    /// For consumers that do NOT normalize again (diagnostics, direct
+    /// model perturbation). Returns zeros when `ς = 0` (no participants —
+    /// the coordinator skips aggregation in that case anyway).
+    pub fn equivalent_noise(&self, rng: &mut Rng, dim: usize, sigma_sum: f64) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        if sigma_sum <= 0.0 {
+            return out;
+        }
+        let std = self.cfg.noise_power().sqrt() / sigma_sum;
+        rng.fill_normal(&mut out, std as f32);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert, prop_close};
+
+    #[test]
+    fn dbm_conversions_roundtrip() {
+        assert!((dbm_to_watts(0.0) - 1e-3).abs() < 1e-12);
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-9);
+        for dbm in [-174.0, -74.0, 0.0, 15.0] {
+            assert!((watts_to_dbm(dbm_to_watts(dbm)) - dbm).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn paper_noise_powers() {
+        // B = 20 MHz, N0 = -174 dBm/Hz -> σ² ≈ 7.96e-14 W.
+        let quiet = ChannelConfig {
+            bandwidth_hz: 20e6,
+            n0_dbm_per_hz: -174.0,
+        };
+        assert!((quiet.noise_power() - 7.96e-14).abs() < 1e-15);
+        // N0 = -74 dBm/Hz -> 1e10 times more noise.
+        let loud = ChannelConfig {
+            bandwidth_hz: 20e6,
+            n0_dbm_per_hz: -74.0,
+        };
+        let ratio = loud.noise_power() / quiet.noise_power();
+        assert!((ratio - 1e10).abs() / 1e10 < 1e-9);
+    }
+
+    #[test]
+    fn fading_gains_exp1_moments() {
+        let mac = Mac::new(ChannelConfig::default());
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let gains = mac.draw_fading_gains(&mut rng, n);
+        let mean: f64 = gains.iter().sum::<f64>() / n as f64;
+        let var: f64 =
+            gains.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}"); // Exp(1): var = 1
+        assert!(gains.iter().all(|&g| g >= 0.0));
+    }
+
+    #[test]
+    fn effective_cap_properties() {
+        let mac = Mac::new(ChannelConfig::default());
+        check("power cap ≤ p_max and monotone in gain", 100, |g| {
+            let p_max = g.f64_in(0.1..20.0);
+            let gain = g.f64_in(0.0..5.0);
+            let wn = g.f64_in(0.1..50.0);
+            let cap = mac.effective_power_cap(p_max, gain, wn);
+            prop_assert(cap <= p_max + 1e-12, "cap exceeds p_max")?;
+            prop_assert(cap >= 0.0, "negative cap")?;
+            let cap2 = mac.effective_power_cap(p_max, gain * 2.0, wn);
+            prop_assert(cap2 >= cap - 1e-12, "not monotone in gain")
+        });
+    }
+
+    #[test]
+    fn effective_cap_zero_norm_is_pmax() {
+        let mac = Mac::new(ChannelConfig::default());
+        assert_eq!(mac.effective_power_cap(15.0, 0.5, 0.0), 15.0);
+    }
+
+    #[test]
+    fn equivalent_noise_scaling() {
+        let cfg = ChannelConfig {
+            bandwidth_hz: 20e6,
+            n0_dbm_per_hz: -74.0,
+        };
+        let mac = Mac::new(cfg);
+        let mut rng = Rng::new(2);
+        let dim = 50_000;
+        let sigma_sum = 100.0;
+        let v = mac.equivalent_noise(&mut rng, dim, sigma_sum);
+        let want_std = cfg.noise_power().sqrt() / sigma_sum;
+        let emp_var: f64 =
+            v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / dim as f64;
+        prop_close(emp_var.sqrt(), want_std, 0.02, "noise std").unwrap();
+    }
+
+    #[test]
+    fn channel_noise_has_sigma_n_std() {
+        let cfg = ChannelConfig {
+            bandwidth_hz: 20e6,
+            n0_dbm_per_hz: -74.0,
+        };
+        let mac = Mac::new(cfg);
+        let mut rng = Rng::new(7);
+        let dim = 50_000;
+        let v = mac.channel_noise(&mut rng, dim);
+        let emp_var: f64 =
+            v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / dim as f64;
+        prop_close(emp_var.sqrt(), cfg.noise_power().sqrt(), 0.02, "raw noise std")
+            .unwrap();
+    }
+
+    #[test]
+    fn equivalent_noise_zero_participants_is_zero() {
+        let mac = Mac::new(ChannelConfig::default());
+        let mut rng = Rng::new(3);
+        let v = mac.equivalent_noise(&mut rng, 100, 0.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quiet_channel_noise_is_negligible_vs_model_scale() {
+        // At the paper's default (-174 dBm/Hz) the per-entry noise after
+        // normalization by ς ~ 100 W is ~1e-9 — the "close to ideal" regime
+        // of Fig. 3a.
+        let mac = Mac::new(ChannelConfig::default());
+        let std = mac.config().noise_power().sqrt() / 100.0;
+        assert!(std < 1e-8, "std={std}");
+    }
+}

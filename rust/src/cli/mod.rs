@@ -1,0 +1,211 @@
+//! Hand-rolled CLI layer (offline build: no clap).
+//!
+//! Grammar: `repro <subcommand> [--key value | --key=value]...`
+//! Every `--key value` pair is routed to [`crate::config::Config::set`],
+//! plus a few harness-level flags (`--config <file>`, `--out <dir>`,
+//! `--log-level <l>`, `--f-star-rounds <n>`).
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: Command,
+    pub config: Config,
+    /// Output directory for CSVs (default `results/`).
+    pub out_dir: std::path::PathBuf,
+    /// Rounds used to estimate F(w*) for the fig3 gap curves.
+    pub f_star_rounds: usize,
+}
+
+/// Subcommands (one per experiment in DESIGN.md §5 + `run`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    /// Run one algorithm and print per-round telemetry.
+    Run,
+    /// Fig. 3: loss-gap curves, PAOTA vs Local SGD vs COTAF.
+    Fig3,
+    /// Fig. 4: test accuracy vs rounds and vs time.
+    Fig4,
+    /// Table I: rounds & time to target accuracies.
+    Table1,
+    /// Ablations: `beta`, `dt`, `omega`, `latency`.
+    Ablation(String),
+    /// Print the effective config and exit.
+    ShowConfig,
+    /// Print help.
+    Help,
+}
+
+pub const HELP: &str = "\
+repro — PAOTA reproduction driver (semi-async FEEL via AirComp)
+
+USAGE:
+    repro <COMMAND> [--key value]...
+
+COMMANDS:
+    run           run one algorithm (--algo paota|local_sgd|cotaf|centralized|fedasync)
+    fig3          loss-gap curves E[F(w)]-F(w*)  (paper Fig. 3; use --n0 -74 for 3b)
+    fig4          test accuracy vs rounds & time (paper Fig. 4)
+    table1        time/rounds to target accuracy (paper Table I)
+    ablation X    X ∈ beta | dt | omega | latency | solver
+    show-config   print the effective configuration
+    help          this text
+
+HARNESS FLAGS:
+    --config FILE        apply `key = value` lines before CLI overrides
+    --out DIR            CSV output directory (default: results)
+    --log-level L        debug|info|warn|error (or PAOTA_LOG env)
+    --f-star-rounds N    centralized rounds for the F(w*) estimate (default 400)
+
+CONFIG KEYS (defaults = paper §IV-A):
+    seed rounds algo delta_t latency_lo latency_hi latency_kind
+    latency_slow latency_slow_frac participants lr
+    p_max power_cap_mode omega fedasync_gamma force_beta
+    solver mip_max_k pla_segments mip_max_nodes
+    dinkelbach_eps dinkelbach_iters l_smooth epsilon2
+    bandwidth_hz n0 clients max_classes test_size sizes
+    pixel_noise label_noise jitter eval_every artifacts_dir
+";
+
+/// Parse `args` (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let mut cli = Cli {
+        command: Command::Help,
+        config: Config::default(),
+        out_dir: "results".into(),
+        f_star_rounds: 400,
+    };
+
+    let mut it = args.iter().peekable();
+    let Some(cmd) = it.next() else {
+        return Ok(cli);
+    };
+    cli.command = match cmd.as_str() {
+        "run" => Command::Run,
+        "fig3" => Command::Fig3,
+        "fig4" => Command::Fig4,
+        "table1" => Command::Table1,
+        "ablation" => {
+            let Some(which) = it.next() else {
+                bail!("ablation requires an argument (beta|dt|omega|latency|solver)");
+            };
+            Command::Ablation(which.clone())
+        }
+        "show-config" => Command::ShowConfig,
+        "help" | "--help" | "-h" => Command::Help,
+        other => bail!("unknown command {other:?} (try `repro help`)"),
+    };
+
+    // Flags: --key value or --key=value.
+    let mut pending: Vec<(String, String)> = Vec::new();
+    let mut config_file: Option<String> = None;
+    while let Some(arg) = it.next() {
+        let Some(stripped) = arg.strip_prefix("--") else {
+            bail!("unexpected positional argument {arg:?}");
+        };
+        let (key, value) = if let Some((k, v)) = stripped.split_once('=') {
+            (k.to_string(), v.to_string())
+        } else {
+            let Some(v) = it.next() else {
+                bail!("flag --{stripped} needs a value");
+            };
+            (stripped.to_string(), v.clone())
+        };
+        match key.as_str() {
+            "config" => config_file = Some(value),
+            "out" => cli.out_dir = value.into(),
+            "log-level" | "log_level" => {
+                let Some(l) = crate::util::log::Level::parse(&value) else {
+                    bail!("bad log level {value:?}");
+                };
+                crate::util::log::set_level(l);
+            }
+            "f-star-rounds" | "f_star_rounds" => {
+                cli.f_star_rounds = value.parse()?;
+            }
+            _ => pending.push((key, value)),
+        }
+    }
+
+    // File first, then CLI overrides (CLI wins).
+    if let Some(path) = config_file {
+        cli.config.apply_file(std::path::Path::new(&path))?;
+    }
+    for (k, v) in pending {
+        cli.config.set(&k, &v)?;
+    }
+    cli.config.validate()?;
+    Ok(cli)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_run_with_flags() {
+        let cli = parse(&args(&["run", "--algo", "cotaf", "--rounds=10", "--n0", "-74"])).unwrap();
+        assert_eq!(cli.command, Command::Run);
+        assert_eq!(cli.config.algorithm, Algorithm::Cotaf);
+        assert_eq!(cli.config.rounds, 10);
+        assert_eq!(cli.config.channel.n0_dbm_per_hz, -74.0);
+    }
+
+    #[test]
+    fn parse_ablation_arg() {
+        let cli = parse(&args(&["ablation", "beta"])).unwrap();
+        assert_eq!(cli.command, Command::Ablation("beta".into()));
+        assert!(parse(&args(&["ablation"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(parse(&[]).unwrap().command, Command::Help);
+    }
+
+    #[test]
+    fn unknown_command_and_flags_error() {
+        assert!(parse(&args(&["frobnicate"])).is_err());
+        assert!(parse(&args(&["run", "--no-such", "1"])).is_err());
+        assert!(parse(&args(&["run", "stray"])).is_err());
+        assert!(parse(&args(&["run", "--rounds"])).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_config_file() {
+        let dir = std::env::temp_dir().join("paota_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("base.cfg");
+        std::fs::write(&path, "rounds = 7\nlr = 0.2\n").unwrap();
+        let cli = parse(&args(&[
+            "run",
+            "--config",
+            path.to_str().unwrap(),
+            "--rounds",
+            "99",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.rounds, 99); // CLI wins
+        assert_eq!(cli.config.lr, 0.2); // file survives
+    }
+
+    #[test]
+    fn out_dir_and_fstar_flags() {
+        let cli = parse(&args(&["fig3", "--out", "/tmp/x", "--f-star-rounds", "50"])).unwrap();
+        assert_eq!(cli.out_dir, std::path::PathBuf::from("/tmp/x"));
+        assert_eq!(cli.f_star_rounds, 50);
+    }
+
+    #[test]
+    fn validation_runs_at_parse_time() {
+        assert!(parse(&args(&["run", "--rounds", "0"])).is_err());
+    }
+}

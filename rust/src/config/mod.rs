@@ -1,0 +1,446 @@
+//! Experiment configuration: one struct, defaulting to the paper's §IV-A
+//! setting, overridable from a `key = value` config file and/or CLI flags
+//! (`--key value` / `--key=value`). Offline build — no serde/clap — so the
+//! parser is hand-rolled and unit-tested here.
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::ChannelConfig;
+use crate::data::{PartitionConfig, SynthConfig};
+
+/// Which training algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's semi-asynchronous periodic-aggregation AirComp scheme.
+    Paota,
+    /// Ideal synchronous Local SGD (lossless uplink) — baseline (1).
+    LocalSgd,
+    /// Synchronous AirComp with time-varying precoding — baseline (2).
+    Cotaf,
+    /// Centralized SGD on pooled data (the `F(w*)` estimator).
+    Centralized,
+    /// Fully-asynchronous FL (extension; per-arrival staleness-discounted
+    /// mixing, no AirComp) — see `fl::fedasync`.
+    FedAsync,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "paota" => Algorithm::Paota,
+            "local_sgd" | "localsgd" | "fedavg" => Algorithm::LocalSgd,
+            "cotaf" => Algorithm::Cotaf,
+            "centralized" | "central" => Algorithm::Centralized,
+            "fedasync" | "fed_async" | "async" => Algorithm::FedAsync,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Paota => "paota",
+            Algorithm::LocalSgd => "local_sgd",
+            Algorithm::Cotaf => "cotaf",
+            Algorithm::Centralized => "centralized",
+            Algorithm::FedAsync => "fedasync",
+        }
+    }
+}
+
+/// Inner solver for the Dinkelbach subproblem P3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Projected coordinate descent (scales to K = 100; default).
+    Pcd,
+    /// Paper-faithful piecewise-linear-approximation 0-1 MIP.
+    PlaMip,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pcd" => SolverKind::Pcd,
+            "mip" | "pla_mip" | "plamip" => SolverKind::PlaMip,
+            other => bail!("unknown solver {other:?}"),
+        })
+    }
+}
+
+/// Power-cap derivation mode (see `Config::power_cap_mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerCapMode {
+    /// p_cap = P_max (the paper's eq. (25) usage).
+    Paper,
+    /// p_cap = min(P_max, |h|·√P_max/‖w‖) — channel-inversion energy.
+    Inversion,
+}
+
+impl PowerCapMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "paper" => PowerCapMode::Paper,
+            "inversion" => PowerCapMode::Inversion,
+            other => bail!("unknown power cap mode {other:?}"),
+        })
+    }
+}
+
+/// Latency-model selector (ablation A-latency; paper = Uniform).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatencyKind {
+    Uniform,
+    Homogeneous,
+    Bimodal,
+}
+
+impl LatencyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "uniform" => LatencyKind::Uniform,
+            "homogeneous" | "constant" => LatencyKind::Homogeneous,
+            "bimodal" => LatencyKind::Bimodal,
+            other => bail!("unknown latency model {other:?}"),
+        })
+    }
+}
+
+/// Full experiment configuration. Field defaults reproduce the paper.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Master seed; all streams derive from it.
+    pub seed: u64,
+    /// Algorithm to run.
+    pub algorithm: Algorithm,
+    /// Global rounds R.
+    pub rounds: usize,
+    /// Aggregation period ΔT in seconds (paper: 8).
+    pub delta_t: f64,
+    /// Per-round client compute latency ~ U(lo, hi) seconds (paper: 5–15).
+    pub latency_lo: f64,
+    pub latency_hi: f64,
+    /// Latency model selector: "uniform" (paper), "homogeneous",
+    /// "bimodal" (severe stragglers; see `latency_slow*`).
+    pub latency_kind: LatencyKind,
+    /// Bimodal ablation: slow-device latency and draw fraction.
+    pub latency_slow: f64,
+    pub latency_slow_frac: f64,
+    /// Participants per round for the synchronous baselines ("equal number
+    /// of participating clients" fairness rule, §IV-B). 0 = all clients.
+    pub participants: usize,
+    /// Learning rate η.
+    pub lr: f32,
+    /// Per-client max transmit power P_max in watts (paper: 15).
+    pub p_max: f64,
+    /// How the per-round power cap is derived (DESIGN.md §4.3):
+    /// `paper` — p_cap = P_max directly, as eq. (25) uses it (default);
+    /// `inversion` — channel-inversion energy coupling
+    ///   p_cap = min(P_max, |h|·√P_max/‖w‖), a stricter reading of eq. (7).
+    pub power_cap_mode: PowerCapMode,
+    /// Staleness bound Ω in eq. (25) (paper: 3).
+    pub omega: f64,
+    /// FedAsync extension: base mixing rate γ₀ (staleness-discounted; 0.1 default — per-arrival mixing needs γ ≪ 1 at K = 100).
+    pub fedasync_gamma: f64,
+    /// Force β to a fixed value instead of solving P2 (ablation A1):
+    /// `None` = optimize; `Some(1.0)` = staleness-only weighting;
+    /// `Some(0.0)` = similarity-only weighting.
+    pub force_beta: Option<f64>,
+    /// Trade-off solver for P3.
+    pub solver: SolverKind,
+    /// Max active-set size routed to the MIP solver before PCD fallback.
+    pub mip_max_k: usize,
+    /// PLA segment count ϱ.
+    pub pla_segments: usize,
+    /// B&B node budget.
+    pub mip_max_nodes: usize,
+    /// Dinkelbach tolerance ε and iteration cap.
+    pub dinkelbach_eps: f64,
+    pub dinkelbach_iters: usize,
+    /// Smoothness constant L used in the bound (paper: 10).
+    pub l_smooth: f64,
+    /// Staleness-drift bound ε² of Assumption 3 (scales term (d)).
+    pub epsilon2: f64,
+    /// Channel.
+    pub channel: ChannelConfig,
+    /// Dataset generation.
+    pub synth: SynthConfig,
+    /// Partition (K clients etc.).
+    pub partition: PartitionConfig,
+    /// Evaluate every `eval_every` rounds (1 = every round).
+    pub eval_every: usize,
+    /// Where AOT artifacts live.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            algorithm: Algorithm::Paota,
+            rounds: 60,
+            delta_t: 8.0,
+            latency_lo: 5.0,
+            latency_hi: 15.0,
+            latency_kind: LatencyKind::Uniform,
+            latency_slow: 30.0,
+            latency_slow_frac: 0.2,
+            participants: 0,
+            lr: 0.2,
+            p_max: 15.0,
+            power_cap_mode: PowerCapMode::Paper,
+            omega: 3.0,
+            fedasync_gamma: 0.1,
+            force_beta: None,
+            solver: SolverKind::Pcd,
+            mip_max_k: 12,
+            pla_segments: 6,
+            mip_max_nodes: 4000,
+            dinkelbach_eps: 1e-6,
+            dinkelbach_iters: 25,
+            l_smooth: 10.0,
+            epsilon2: 1.0,
+            channel: ChannelConfig::default(),
+            synth: SynthConfig::default(),
+            partition: PartitionConfig::default(),
+            eval_every: 1,
+            artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
+        }
+    }
+}
+
+impl Config {
+    /// Apply one `key = value` override. Keys use dotted/flat names; see
+    /// the match arms (also the `--help` text in the CLI).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(key: &str, v: &str) -> Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad value for {key}: {e}"))
+        }
+        match key {
+            "seed" => self.seed = p(key, value)?,
+            "algorithm" | "algo" => self.algorithm = Algorithm::parse(value)?,
+            "rounds" => self.rounds = p(key, value)?,
+            "delta_t" => self.delta_t = p(key, value)?,
+            "latency_lo" => self.latency_lo = p(key, value)?,
+            "latency_hi" => self.latency_hi = p(key, value)?,
+            "latency_kind" | "latency_model" => self.latency_kind = LatencyKind::parse(value)?,
+            "latency_slow" => self.latency_slow = p(key, value)?,
+            "latency_slow_frac" => self.latency_slow_frac = p(key, value)?,
+            "force_beta" => {
+                self.force_beta = if value.eq_ignore_ascii_case("none") {
+                    None
+                } else {
+                    let b: f64 = p(key, value)?;
+                    if !(0.0..=1.0).contains(&b) {
+                        bail!("force_beta must be in [0,1] or 'none'");
+                    }
+                    Some(b)
+                }
+            }
+            "participants" => self.participants = p(key, value)?,
+            "lr" => self.lr = p(key, value)?,
+            "p_max" => self.p_max = p(key, value)?,
+            "power_cap_mode" => self.power_cap_mode = PowerCapMode::parse(value)?,
+            "omega" => self.omega = p(key, value)?,
+            "fedasync_gamma" => self.fedasync_gamma = p(key, value)?,
+            "solver" => self.solver = SolverKind::parse(value)?,
+            "mip_max_k" => self.mip_max_k = p(key, value)?,
+            "pla_segments" => self.pla_segments = p(key, value)?,
+            "mip_max_nodes" => self.mip_max_nodes = p(key, value)?,
+            "dinkelbach_eps" => self.dinkelbach_eps = p(key, value)?,
+            "dinkelbach_iters" => self.dinkelbach_iters = p(key, value)?,
+            "l_smooth" => self.l_smooth = p(key, value)?,
+            "epsilon2" => self.epsilon2 = p(key, value)?,
+            "bandwidth_hz" => self.channel.bandwidth_hz = p(key, value)?,
+            "n0" | "n0_dbm_per_hz" => self.channel.n0_dbm_per_hz = p(key, value)?,
+            "clients" => self.partition.clients = p(key, value)?,
+            "max_classes" => self.partition.max_classes = p(key, value)?,
+            "test_size" => self.partition.test_size = p(key, value)?,
+            "sizes" => {
+                self.partition.sizes = value
+                    .split(',')
+                    .map(|s| p::<usize>(key, s.trim()))
+                    .collect::<Result<_>>()?;
+                if self.partition.sizes.is_empty() {
+                    bail!("sizes must be non-empty");
+                }
+            }
+            "pixel_noise" => self.synth.pixel_noise = p(key, value)?,
+            "label_noise" => self.synth.label_noise = p(key, value)?,
+            "jitter" => self.synth.jitter = p(key, value)?,
+            "eval_every" => self.eval_every = p(key, value)?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments.
+    pub fn apply_file(&mut self, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{}:{}: missing '='", path.display(), lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.latency_lo > self.latency_hi {
+            bail!("latency_lo > latency_hi");
+        }
+        if self.delta_t <= 0.0 {
+            bail!("delta_t must be positive");
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be ≥ 1");
+        }
+        if self.partition.clients == 0 {
+            bail!("clients must be ≥ 1");
+        }
+        if self.participants > self.partition.clients {
+            bail!("participants exceeds client count");
+        }
+        if !(0.0..=1.0).contains(&self.synth.label_noise) {
+            bail!("label_noise must be in [0,1]");
+        }
+        if self.p_max <= 0.0 {
+            bail!("p_max must be positive");
+        }
+        Ok(())
+    }
+
+    /// The configured latency model.
+    pub fn latency(&self) -> crate::sim::LatencyModel {
+        match self.latency_kind {
+            LatencyKind::Uniform => crate::sim::LatencyModel::Uniform {
+                lo: self.latency_lo,
+                hi: self.latency_hi,
+            },
+            LatencyKind::Homogeneous => crate::sim::LatencyModel::Homogeneous {
+                value: (self.latency_lo + self.latency_hi) / 2.0,
+            },
+            LatencyKind::Bimodal => crate::sim::LatencyModel::Bimodal {
+                fast: self.latency_lo,
+                slow: self.latency_slow,
+                slow_frac: self.latency_slow_frac,
+            },
+        }
+    }
+
+    /// Expected PAOTA participants per round: clients whose latency draw
+    /// lands within one ΔT window (used for the fairness rule when
+    /// `participants == 0`).
+    pub fn expected_participation(&self) -> f64 {
+        let span = self.latency_hi - self.latency_lo;
+        if span <= 0.0 {
+            return if self.delta_t >= self.latency_lo {
+                self.partition.clients as f64
+            } else {
+                0.0
+            };
+        }
+        let frac = ((self.delta_t - self.latency_lo) / span).clamp(0.0, 1.0);
+        frac * self.partition.clients as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.delta_t, 8.0);
+        assert_eq!(c.latency_lo, 5.0);
+        assert_eq!(c.latency_hi, 15.0);
+        assert_eq!(c.p_max, 15.0);
+        assert_eq!(c.omega, 3.0);
+        assert_eq!(c.l_smooth, 10.0);
+        assert_eq!(c.partition.clients, 100);
+        assert_eq!(c.partition.max_classes, 5);
+        assert_eq!(c.partition.sizes, vec![300, 600, 900, 1200, 1500]);
+        assert_eq!(c.channel.bandwidth_hz, 20e6);
+        assert_eq!(c.channel.n0_dbm_per_hz, -174.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn set_simple_keys() {
+        let mut c = Config::default();
+        c.set("rounds", "120").unwrap();
+        c.set("algo", "cotaf").unwrap();
+        c.set("n0", "-74").unwrap();
+        c.set("lr", "0.1").unwrap();
+        assert_eq!(c.rounds, 120);
+        assert_eq!(c.algorithm, Algorithm::Cotaf);
+        assert_eq!(c.channel.n0_dbm_per_hz, -74.0);
+        assert_eq!(c.lr, 0.1);
+    }
+
+    #[test]
+    fn set_sizes_list() {
+        let mut c = Config::default();
+        c.set("sizes", "100, 200,300").unwrap();
+        assert_eq!(c.partition.sizes, vec![100, 200, 300]);
+        assert!(c.set("sizes", "").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_value() {
+        let mut c = Config::default();
+        assert!(c.set("no_such_key", "1").is_err());
+        assert!(c.set("rounds", "abc").is_err());
+        assert!(c.set("algorithm", "nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        let mut c = Config::default();
+        c.latency_lo = 20.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.participants = 1000;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.rounds = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn apply_file_roundtrip() {
+        let dir = std::env::temp_dir().join("paota_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.cfg");
+        std::fs::write(&path, "# paper fig3b\nn0 = -74\nrounds=30\nalgo = paota\n").unwrap();
+        let mut c = Config::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.channel.n0_dbm_per_hz, -74.0);
+        assert_eq!(c.rounds, 30);
+    }
+
+    #[test]
+    fn expected_participation_paper_setting() {
+        // ΔT = 8, latency U(5,15): P(ℓ ≤ 8) = 0.3 → 30 clients.
+        let c = Config::default();
+        assert!((c.expected_participation() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn algorithm_parse_aliases() {
+        assert_eq!(Algorithm::parse("FedAvg").unwrap(), Algorithm::LocalSgd);
+        assert_eq!(Algorithm::parse("central").unwrap(), Algorithm::Centralized);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dataset substrate: synthetic MNIST-like digits + the paper's non-IID
+//! partition.
+//!
+//! The build environment has no network, so MNIST itself is unavailable;
+//! per DESIGN.md §4.1 we generate a deterministic 10-class, 784-dim (28×28)
+//! dataset in the same learning regime (an MLP of the paper's size reaches
+//! ~85% test accuracy) and apply the paper's heterogeneity *exactly*:
+//! every client holds at most 5 of the 10 classes and a sample count drawn
+//! from {300, 600, 900, 1200, 1500} (§IV-A).
+//!
+//! Generator: per class, a smooth prototype "glyph" (random strokes on the
+//! 28×28 grid, box-blurred); a sample is the prototype under a small random
+//! translation plus pixel noise, clipped to [0,1], with a configurable
+//! label-noise rate. Translation + pixel noise give intra-class variance;
+//! stroke overlap between classes gives inter-class confusion — the two
+//! knobs that set the accuracy ceiling.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{ClientData, Partition, PartitionConfig};
+pub use synth::{Dataset, SynthConfig};

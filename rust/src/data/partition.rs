@@ -1,0 +1,219 @@
+//! The paper's non-IID partition (§IV-A): each of the K clients holds at
+//! most `max_classes` (5) of the 10 classes, with a sample count drawn
+//! uniformly from `sizes` ({300, 600, 900, 1200, 1500}); a balanced global
+//! test set is held out at the PS for the accuracy curves.
+
+use crate::util::Rng;
+
+use super::synth::{Dataset, Prototypes, SynthConfig};
+
+/// Partition parameters (defaults = the paper's setting).
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// Number of clients K (paper: 100).
+    pub clients: usize,
+    /// Candidate local dataset sizes (paper: {300..1500} step 300).
+    pub sizes: Vec<usize>,
+    /// Max distinct classes per client (paper: 5).
+    pub max_classes: usize,
+    /// Test-set size (balanced across classes).
+    pub test_size: usize,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        Self {
+            clients: 100,
+            sizes: vec![300, 600, 900, 1200, 1500],
+            max_classes: 5,
+            test_size: 2000,
+        }
+    }
+}
+
+/// One client's local shard.
+#[derive(Debug, Clone)]
+pub struct ClientData {
+    pub data: Dataset,
+    /// The classes this client was assigned (≤ max_classes).
+    pub classes: Vec<usize>,
+}
+
+impl ClientData {
+    /// Sample `m` minibatches of size `b` with replacement, returning flat
+    /// `[m*b*dim]` features and `[m*b*classes]` one-hot labels — exactly
+    /// the `local_train` artifact's input layout.
+    pub fn sample_batches(&self, m: usize, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let d = &self.data;
+        let mut xs = Vec::with_capacity(m * b * d.dim);
+        let mut ys = vec![0.0f32; m * b * d.classes];
+        for row in 0..(m * b) {
+            let i = rng.index(d.len());
+            xs.extend_from_slice(d.row(i));
+            ys[row * d.classes + d.y[i] as usize] = 1.0;
+        }
+        (xs, ys)
+    }
+}
+
+/// The full federated data layout: K client shards + a global test set.
+pub struct Partition {
+    pub clients: Vec<ClientData>,
+    pub test: Dataset,
+}
+
+impl Partition {
+    /// Generate synthetic data and split it per the paper's recipe.
+    pub fn generate(synth: SynthConfig, cfg: &PartitionConfig, rng: &mut Rng) -> Self {
+        let protos = Prototypes::generate(synth, rng);
+        let n_classes = synth.classes;
+        assert!(cfg.max_classes >= 1 && cfg.max_classes <= n_classes);
+
+        let mut clients = Vec::with_capacity(cfg.clients);
+        for _ in 0..cfg.clients {
+            let n = cfg.sizes[rng.index(cfg.sizes.len())];
+            let k = 1 + rng.index(cfg.max_classes); // 1..=max_classes
+            let classes = rng.choose_indices(n_classes, k);
+            let mut weights = vec![0.0f64; n_classes];
+            for &c in &classes {
+                weights[c] = 1.0;
+            }
+            let data = protos.dataset(n, Some(&weights), rng);
+            clients.push(ClientData { data, classes });
+        }
+
+        // Balanced test set with no label noise (ground-truth metric).
+        let mut test_x = Vec::with_capacity(cfg.test_size * synth.dim());
+        let mut test_y = Vec::with_capacity(cfg.test_size);
+        for i in 0..cfg.test_size {
+            let c = i % n_classes;
+            test_x.extend_from_slice(&protos.sample(c, rng));
+            test_y.push(c as u8);
+        }
+        let test = Dataset {
+            x: test_x,
+            y: test_y,
+            dim: synth.dim(),
+            classes: n_classes,
+        };
+
+        Self { clients, test }
+    }
+
+    /// Total training samples across clients (the paper's `D`).
+    pub fn total_samples(&self) -> usize {
+        self.clients.iter().map(|c| c.data.len()).sum()
+    }
+
+    /// Pool all client shards into one centralized dataset (for the
+    /// `F(w*)` estimator).
+    pub fn pooled(&self) -> Dataset {
+        let dim = self.test.dim;
+        let classes = self.test.classes;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in &self.clients {
+            x.extend_from_slice(&c.data.x);
+            y.extend_from_slice(&c.data.y);
+        }
+        Dataset { x, y, dim, classes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert};
+
+    fn tiny_synth() -> SynthConfig {
+        SynthConfig {
+            side: 10,
+            classes: 6,
+            strokes: 3,
+            blur_passes: 1,
+            jitter: 1,
+            pixel_noise: 0.2,
+            label_noise: 0.0,
+        }
+    }
+
+    fn tiny_cfg() -> PartitionConfig {
+        PartitionConfig {
+            clients: 12,
+            sizes: vec![30, 60, 90],
+            max_classes: 3,
+            test_size: 60,
+        }
+    }
+
+    #[test]
+    fn partition_shapes() {
+        let mut rng = Rng::new(1);
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+        assert_eq!(p.clients.len(), 12);
+        assert_eq!(p.test.len(), 60);
+        for c in &p.clients {
+            assert!([30, 60, 90].contains(&c.data.len()));
+            assert!(!c.classes.is_empty() && c.classes.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn label_skew_respected() {
+        check("clients only hold assigned classes", 10, |g| {
+            let mut rng = Rng::new(g.rng().next_u64());
+            let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+            for c in &p.clients {
+                for &label in &c.data.y {
+                    prop_assert(
+                        c.classes.contains(&(label as usize)),
+                        &format!("label {label} outside classes {:?}", c.classes),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn test_set_balanced() {
+        let mut rng = Rng::new(2);
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+        let counts = p.test.class_counts();
+        for &c in &counts {
+            assert_eq!(c, 10); // 60 / 6 classes
+        }
+    }
+
+    #[test]
+    fn conservation_pooled_equals_sum() {
+        let mut rng = Rng::new(3);
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+        let pooled = p.pooled();
+        assert_eq!(pooled.len(), p.total_samples());
+        assert_eq!(pooled.x.len(), pooled.len() * pooled.dim);
+    }
+
+    #[test]
+    fn sample_batches_layout() {
+        let mut rng = Rng::new(4);
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+        let (m, b) = (3, 8);
+        let (xs, ys) = p.clients[0].sample_batches(m, b, &mut rng);
+        let d = &p.clients[0].data;
+        assert_eq!(xs.len(), m * b * d.dim);
+        assert_eq!(ys.len(), m * b * d.classes);
+        for row in 0..(m * b) {
+            let one: f32 = ys[row * d.classes..(row + 1) * d.classes].iter().sum();
+            assert_eq!(one, 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p1 = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(7));
+        let p2 = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(7));
+        assert_eq!(p1.clients[3].data.y, p2.clients[3].data.y);
+        assert_eq!(p1.test.x, p2.test.x);
+    }
+}

@@ -1,0 +1,356 @@
+//! Synthetic 28×28 "digits": deterministic, MNIST-shaped, tunable
+//! difficulty. See the module docs in `data/mod.rs` for the rationale.
+
+use crate::util::Rng;
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    /// Image side (28 → 784 features).
+    pub side: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Strokes per class prototype.
+    pub strokes: usize,
+    /// Box-blur passes over the prototype (smoothness).
+    pub blur_passes: usize,
+    /// Max |translation| in pixels applied per sample.
+    pub jitter: i32,
+    /// Per-pixel Gaussian noise std.
+    pub pixel_noise: f32,
+    /// Probability a sample's label is re-drawn uniformly (paper-regime
+    /// imperfection; keeps the accuracy ceiling below 100%).
+    pub label_noise: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            side: 28,
+            classes: 10,
+            strokes: 4,
+            blur_passes: 2,
+            jitter: 3,
+            pixel_noise: 0.58,
+            label_noise: 0.05,
+        }
+    }
+}
+
+impl SynthConfig {
+    pub fn dim(&self) -> usize {
+        self.side * self.side
+    }
+}
+
+/// A labeled dataset with row-major flat features.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n × dim` features in `[0,1]`.
+    pub x: Vec<f32>,
+    /// `n` labels in `[0, classes)`.
+    pub y: Vec<u8>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// One-hot encode labels into a flat `n × classes` f32 buffer.
+    pub fn one_hot(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len() * self.classes];
+        for (i, &c) in self.y.iter().enumerate() {
+            out[i * self.classes + c as usize] = 1.0;
+        }
+        out
+    }
+
+    /// Per-class sample counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &c in &self.y {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// The class prototypes (shared between train and test generation).
+pub struct Prototypes {
+    protos: Vec<Vec<f32>>,
+    cfg: SynthConfig,
+}
+
+impl Prototypes {
+    /// Build the per-class glyphs deterministically from `rng`.
+    pub fn generate(cfg: SynthConfig, rng: &mut Rng) -> Self {
+        let protos = (0..cfg.classes)
+            .map(|_| Self::make_glyph(&cfg, rng))
+            .collect();
+        Self { protos, cfg }
+    }
+
+    fn make_glyph(cfg: &SynthConfig, rng: &mut Rng) -> Vec<f32> {
+        let s = cfg.side;
+        let mut img = vec![0.0f32; s * s];
+        // Random strokes: straight segments with thickness 1–2.
+        for _ in 0..cfg.strokes {
+            let (x0, y0) = (rng.index(s) as f64, rng.index(s) as f64);
+            let (x1, y1) = (rng.index(s) as f64, rng.index(s) as f64);
+            let steps = 2 * s;
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let x = x0 + (x1 - x0) * f;
+                let y = y0 + (y1 - y0) * f;
+                for dy in -1..=1i64 {
+                    for dx in -1..=1i64 {
+                        let xi = x.round() as i64 + dx;
+                        let yi = y.round() as i64 + dy;
+                        if (0..s as i64).contains(&xi) && (0..s as i64).contains(&yi) {
+                            let w = if dx == 0 && dy == 0 { 1.0 } else { 0.45 };
+                            let idx = (yi as usize) * s + xi as usize;
+                            img[idx] = (img[idx] + w as f32).min(1.0);
+                        }
+                    }
+                }
+            }
+        }
+        // Box blur for smooth gradients.
+        for _ in 0..cfg.blur_passes {
+            let src = img.clone();
+            for y in 0..s {
+                for x in 0..s {
+                    let mut sum = 0.0f32;
+                    let mut n = 0.0f32;
+                    for dy in -1..=1i64 {
+                        for dx in -1..=1i64 {
+                            let xi = x as i64 + dx;
+                            let yi = y as i64 + dy;
+                            if (0..s as i64).contains(&xi) && (0..s as i64).contains(&yi) {
+                                sum += src[(yi as usize) * s + xi as usize];
+                                n += 1.0;
+                            }
+                        }
+                    }
+                    img[y * s + x] = sum / n;
+                }
+            }
+        }
+        img
+    }
+
+    /// Draw one sample of class `c`: translated prototype + pixel noise,
+    /// clipped to [0,1].
+    pub fn sample(&self, c: usize, rng: &mut Rng) -> Vec<f32> {
+        let s = self.cfg.side;
+        let j = self.cfg.jitter;
+        let dx = rng.index((2 * j + 1) as usize) as i64 - j as i64;
+        let dy = rng.index((2 * j + 1) as usize) as i64 - j as i64;
+        let proto = &self.protos[c];
+        let mut out = vec![0.0f32; s * s];
+        for y in 0..s as i64 {
+            for x in 0..s as i64 {
+                let sx = x - dx;
+                let sy = y - dy;
+                let base = if (0..s as i64).contains(&sx) && (0..s as i64).contains(&sy) {
+                    proto[(sy as usize) * s + sx as usize]
+                } else {
+                    0.0
+                };
+                let v = base + (rng.normal() as f32) * self.cfg.pixel_noise;
+                out[(y as usize) * s + x as usize] = v.clamp(0.0, 1.0);
+            }
+        }
+        out
+    }
+
+    /// Generate `n` samples with (approximately) the given class weights
+    /// (`None` = uniform), applying label noise.
+    pub fn dataset(&self, n: usize, class_weights: Option<&[f64]>, rng: &mut Rng) -> Dataset {
+        let cfg = &self.cfg;
+        let mut x = Vec::with_capacity(n * cfg.dim());
+        let mut y = Vec::with_capacity(n);
+        // Cumulative weights for class draw.
+        let weights: Vec<f64> = match class_weights {
+            Some(w) => {
+                assert_eq!(w.len(), cfg.classes);
+                w.to_vec()
+            }
+            None => vec![1.0; cfg.classes],
+        };
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero class weights");
+        for _ in 0..n {
+            // Draw true class by weight.
+            let mut t = rng.f64() * total;
+            let mut c = 0;
+            for (i, &w) in weights.iter().enumerate() {
+                if t < w {
+                    c = i;
+                    break;
+                }
+                t -= w;
+                c = i;
+            }
+            x.extend_from_slice(&self.sample(c, rng));
+            // Label noise.
+            let label = if rng.f64() < cfg.label_noise {
+                rng.index(cfg.classes) as u8
+            } else {
+                c as u8
+            };
+            y.push(label);
+        }
+        Dataset {
+            x,
+            y,
+            dim: cfg.dim(),
+            classes: cfg.classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert};
+
+    fn small_cfg() -> SynthConfig {
+        SynthConfig {
+            side: 12,
+            classes: 4,
+            strokes: 3,
+            blur_passes: 1,
+            jitter: 1,
+            pixel_noise: 0.2,
+            label_noise: 0.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let p1 = Prototypes::generate(cfg, &mut r1);
+        let p2 = Prototypes::generate(cfg, &mut r2);
+        let d1 = p1.dataset(20, None, &mut r1);
+        let d2 = p2.dataset(20, None, &mut r2);
+        assert_eq!(d1.x, d2.x);
+        assert_eq!(d1.y, d2.y);
+    }
+
+    #[test]
+    fn samples_in_unit_range() {
+        check("pixels stay in [0,1]", 20, |g| {
+            let cfg = small_cfg();
+            let mut rng = Rng::new(g.rng().next_u64());
+            let protos = Prototypes::generate(cfg, &mut rng);
+            let d = protos.dataset(5, None, &mut rng);
+            prop_assert(
+                d.x.iter().all(|&v| (0.0..=1.0).contains(&v)),
+                "pixel out of range",
+            )
+        });
+    }
+
+    #[test]
+    fn class_weights_respected() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(3);
+        let protos = Prototypes::generate(cfg, &mut rng);
+        // Only classes 1 and 3.
+        let d = protos.dataset(400, Some(&[0.0, 1.0, 0.0, 1.0]), &mut rng);
+        let counts = d.class_counts();
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[2], 0);
+        assert!(counts[1] > 100 && counts[3] > 100, "{counts:?}");
+    }
+
+    #[test]
+    fn one_hot_shape_and_content() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(4);
+        let protos = Prototypes::generate(cfg, &mut rng);
+        let d = protos.dataset(7, None, &mut rng);
+        let oh = d.one_hot();
+        assert_eq!(oh.len(), 7 * cfg.classes);
+        for i in 0..7 {
+            let row = &oh[i * cfg.classes..(i + 1) * cfg.classes];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[d.y[i] as usize], 1.0);
+        }
+    }
+
+    #[test]
+    fn label_noise_rate() {
+        let mut cfg = small_cfg();
+        cfg.label_noise = 0.5;
+        let mut rng = Rng::new(5);
+        let protos = Prototypes::generate(cfg, &mut rng);
+        // Single-class weights: true class always 0, so any other label is
+        // noise (noise redraw hits 0 itself 1/4 of the time).
+        let d = protos.dataset(2000, Some(&[1.0, 0.0, 0.0, 0.0]), &mut rng);
+        let flipped = d.y.iter().filter(|&&c| c != 0).count() as f64 / 2000.0;
+        // Expected: 0.5 * 3/4 = 0.375.
+        assert!((flipped - 0.375).abs() < 0.05, "flipped={flipped}");
+    }
+
+    #[test]
+    fn prototypes_differ_between_classes() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(6);
+        let protos = Prototypes::generate(cfg, &mut rng);
+        let diff: f32 = protos.protos[0]
+            .iter()
+            .zip(&protos.protos[1])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0, "prototypes nearly identical: diff={diff}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_nearest_prototype() {
+        // Sanity that the task is learnable: nearest-prototype classifier
+        // on noiseless labels should beat chance by a wide margin.
+        let cfg = SynthConfig {
+            label_noise: 0.0,
+            ..SynthConfig::default()
+        };
+        let mut rng = Rng::new(7);
+        let protos = Prototypes::generate(cfg, &mut rng);
+        let d = protos.dataset(300, None, &mut rng);
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let row = d.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, p) in protos.protos.iter().enumerate() {
+                let dist: f64 = row
+                    .iter()
+                    .zip(p)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.len() as f64;
+        assert!(acc > 0.5, "nearest-prototype accuracy only {acc}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Experiment harness — one function per paper artifact (DESIGN.md §5).
+//!
+//! Each regenerates the corresponding figure/table: runs every algorithm
+//! on the *same* partition/probe/test data, prints the series or rows the
+//! paper reports, and writes CSVs under the chosen output directory.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, Config};
+use crate::fl::{self, centralized, RunResult, TrainContext};
+use crate::metrics::{
+    format_table1, time_to_accuracy, write_curves_csv, write_records_csv, Curve,
+};
+use crate::runtime::Engine;
+
+/// The three compared algorithms, in the paper's order.
+pub const COMPARED: [Algorithm; 3] = [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf];
+
+/// Pretty label for plots/tables.
+pub fn label(algo: Algorithm) -> &'static str {
+    match algo {
+        Algorithm::Paota => "PAOTA",
+        Algorithm::LocalSgd => "Local SGD",
+        Algorithm::Cotaf => "COTAF",
+        Algorithm::Centralized => "Centralized",
+        Algorithm::FedAsync => "FedAsync",
+    }
+}
+
+/// Run all compared algorithms on one shared context.
+pub fn run_compared(ctx: &TrainContext, base: &Config) -> Result<Vec<(Algorithm, RunResult)>> {
+    COMPARED
+        .iter()
+        .map(|&algo| {
+            let mut cfg = base.clone();
+            cfg.algorithm = algo;
+            crate::info!("running {} ({} rounds)...", label(algo), cfg.rounds);
+            Ok((algo, fl::run_with_context(ctx, &cfg)?))
+        })
+        .collect()
+}
+
+/// **Fig. 3** — train-loss gap `E[F(w^r)] − F(w*)` vs rounds, at the
+/// config's noise level (run once with `--n0 -174` and once with
+/// `--n0 -74` to reproduce 3a/3b).
+pub fn fig3(base: &Config, out_dir: &Path, f_star_rounds: usize) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, base)?;
+
+    crate::info!("estimating F(w*) ({f_star_rounds} centralized rounds)...");
+    let f_star = centralized::estimate_f_star(&ctx, base, f_star_rounds)? as f64;
+    println!("# F(w*) estimate = {f_star:.6}");
+
+    let runs = run_compared(&ctx, base)?;
+    let curves: Vec<Curve> = runs
+        .iter()
+        .map(|(algo, run)| Curve::loss_gap(label(*algo), run, f_star))
+        .collect();
+
+    println!(
+        "# Fig.3 loss gap — N0 = {} dBm/Hz, B = {} MHz",
+        base.channel.n0_dbm_per_hz,
+        base.channel.bandwidth_hz / 1e6
+    );
+    println!("round,{}", curves.iter().map(|c| c.name.clone()).collect::<Vec<_>>().join(","));
+    let rounds: Vec<usize> = curves[0].points.iter().map(|p| p.0).collect();
+    for (idx, r) in rounds.iter().enumerate() {
+        let row: Vec<String> = curves
+            .iter()
+            .map(|c| {
+                c.points
+                    .get(idx)
+                    .map(|p| format!("{:.6}", p.2))
+                    .unwrap_or_default()
+            })
+            .collect();
+        println!("{r},{}", row.join(","));
+    }
+
+    let tag = format!("fig3_n0_{}", base.channel.n0_dbm_per_hz.abs() as i64);
+    write_curves_csv(&out_dir.join(format!("{tag}.csv")), &curves)?;
+    for (algo, run) in &runs {
+        write_records_csv(
+            &out_dir.join(format!("{tag}_{}.csv", algo.name())),
+            run,
+        )?;
+    }
+    println!("# wrote {}/{tag}.csv", out_dir.display());
+    Ok(())
+}
+
+/// **Fig. 4** — test accuracy vs communication rounds (4a) and vs
+/// training time (4b).
+pub fn fig4(base: &Config, out_dir: &Path) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, base)?;
+    let runs = run_compared(&ctx, base)?;
+
+    let curves: Vec<Curve> = runs
+        .iter()
+        .map(|(algo, run)| Curve::accuracy(label(*algo), run))
+        .collect();
+
+    println!("# Fig.4 test accuracy (a: vs rounds, b: vs time)");
+    println!("series,round,time_s,accuracy");
+    for c in &curves {
+        for (r, t, v) in &c.points {
+            println!("{},{r},{t:.1},{v:.4}", c.name);
+        }
+    }
+    for (algo, run) in &runs {
+        println!(
+            "# {} final accuracy: {:.1}%",
+            label(*algo),
+            run.final_accuracy().unwrap_or(f32::NAN) * 100.0
+        );
+    }
+
+    write_curves_csv(&out_dir.join("fig4_accuracy.csv"), &curves)?;
+    for (algo, run) in &runs {
+        write_records_csv(&out_dir.join(format!("fig4_{}.csv", algo.name())), run)?;
+    }
+    println!("# wrote {}/fig4_accuracy.csv", out_dir.display());
+    Ok(())
+}
+
+/// **Table I** — rounds & virtual time to target accuracies.
+pub fn table1(base: &Config, out_dir: &Path, targets: &[f64]) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, base)?;
+    let runs = run_compared(&ctx, base)?;
+
+    let rows: Vec<(String, Vec<crate::metrics::TimeToAccuracy>)> = runs
+        .iter()
+        .map(|(algo, run)| {
+            (
+                label(*algo).to_string(),
+                time_to_accuracy(&run.records, targets),
+            )
+        })
+        .collect();
+
+    println!("# Table I — convergence time (targets as in the paper)");
+    print!("{}", format_table1(&rows, targets));
+
+    // CSV.
+    let mut csv = String::from("algorithm,target,rounds,time_s\n");
+    for (name, ttas) in &rows {
+        for t in ttas {
+            csv.push_str(&format!(
+                "{name},{:.2},{},{}\n",
+                t.target,
+                t.rounds.map_or(String::new(), |r| r.to_string()),
+                t.time_s.map_or(String::new(), |s| format!("{s:.1}")),
+            ));
+        }
+    }
+    std::fs::create_dir_all(out_dir).ok();
+    std::fs::write(out_dir.join("table1.csv"), csv)?;
+    println!("# wrote {}/table1.csv", out_dir.display());
+    Ok(())
+}
+
+/// Ablations (DESIGN.md A1–A4): each sweeps one knob of PAOTA and prints
+/// final accuracy + time-to-70%.
+pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, base)?;
+
+    let variants: Vec<(String, Config)> = match which {
+        "beta" => vec![
+            ("optimized".into(), base.clone()),
+            ("staleness_only(beta=1)".into(), {
+                let mut c = base.clone();
+                c.force_beta = Some(1.0);
+                c
+            }),
+            ("similarity_only(beta=0)".into(), {
+                let mut c = base.clone();
+                c.force_beta = Some(0.0);
+                c
+            }),
+        ],
+        "dt" => [4.0, 6.0, 8.0, 12.0]
+            .iter()
+            .map(|&dt| {
+                let mut c = base.clone();
+                c.delta_t = dt;
+                (format!("dt={dt}"), c)
+            })
+            .collect(),
+        "omega" => [1.0, 3.0, 10.0]
+            .iter()
+            .map(|&om| {
+                let mut c = base.clone();
+                c.omega = om;
+                (format!("omega={om}"), c)
+            })
+            .collect(),
+        "latency" => vec![
+            ("uniform(5,15)".into(), base.clone()),
+            ("homogeneous(10)".into(), {
+                let mut c = base.clone();
+                c.latency_kind = crate::config::LatencyKind::Homogeneous;
+                c
+            }),
+            ("bimodal(20% slow)".into(), {
+                let mut c = base.clone();
+                c.latency_kind = crate::config::LatencyKind::Bimodal;
+                c
+            }),
+        ],
+        "solver" => vec![
+            ("pcd".into(), base.clone()),
+            ("pla_mip".into(), {
+                let mut c = base.clone();
+                c.solver = crate::config::SolverKind::PlaMip;
+                c
+            }),
+        ],
+        other => anyhow::bail!("unknown ablation {other:?} (beta|dt|omega|latency|solver)"),
+    };
+
+    println!("# Ablation `{which}` — PAOTA variants");
+    println!("variant,final_acc,best_acc,time_to_70%_s,mean_staleness");
+    let mut curves = Vec::new();
+    for (name, mut cfg) in variants {
+        cfg.algorithm = Algorithm::Paota;
+        crate::info!("ablation {which}: {name}");
+        let run = fl::run_with_context(&ctx, &cfg)?;
+        let tta = time_to_accuracy(&run.records, &[0.7]);
+        let mean_stale: f64 = run
+            .records
+            .iter()
+            .map(|r| r.mean_staleness)
+            .sum::<f64>()
+            / run.records.len().max(1) as f64;
+        println!(
+            "{name},{:.4},{:.4},{},{:.3}",
+            run.final_accuracy().unwrap_or(f32::NAN),
+            run.best_accuracy().unwrap_or(f32::NAN),
+            tta[0].time_s.map_or("-".into(), |t| format!("{t:.1}")),
+            mean_stale
+        );
+        curves.push(Curve::accuracy(&name, &run));
+    }
+    write_curves_csv(&out_dir.join(format!("ablation_{which}.csv")), &curves)?;
+    println!("# wrote {}/ablation_{which}.csv", out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Centralized SGD on the pooled client data.
+//!
+//! Not a paper baseline per se — it estimates `F(w*)`, the optimal global
+//! loss the Fig. 3 curves subtract (`E[F(w^r)] − F(w*)`). The model, step
+//! count and batch geometry are identical to the federated runs (the same
+//! `local_train` artifact), only the sampling pool differs: all data,
+//! centrally.
+//!
+//! Virtual timing: one "round" is one M-step pass; time advances by the
+//! mean latency (a centralized node has no stragglers). The timing is not
+//! used by the gap metric, only recorded for completeness.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::sim::VirtualClock;
+use crate::util::Rng;
+
+use super::{RoundRecord, RunResult, TrainContext};
+
+pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
+    let m = ctx.rt.manifest().clone();
+    let pooled = ctx.partition.pooled();
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xce27);
+
+    let mut w = ctx.init_weights();
+    let mut clock = VirtualClock::new();
+    let mean_latency = (cfg.latency_lo + cfg.latency_hi) / 2.0;
+
+    let mut records = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        // Sample M minibatches from the pooled data.
+        let mut xs = Vec::with_capacity(m.local_steps * m.batch * pooled.dim);
+        let mut ys = vec![0.0f32; m.local_steps * m.batch * pooled.classes];
+        for row in 0..(m.local_steps * m.batch) {
+            let i = batch_rng.index(pooled.len());
+            xs.extend_from_slice(pooled.row(i));
+            ys[row * pooled.classes + pooled.y[i] as usize] = 1.0;
+        }
+        let out = ctx.rt.local_train(&w, &xs, &ys, cfg.lr)?;
+        w = out.weights;
+        clock.advance(mean_latency);
+
+        let eval = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(ctx.evaluate(&w)?)
+        } else {
+            None
+        };
+        let probe_loss = if eval.is_some() {
+            Some(ctx.probe_loss(&w)?)
+        } else {
+            None
+        };
+        records.push(RoundRecord {
+            round,
+            sim_time: clock.now(),
+            train_loss: out.loss,
+            probe_loss,
+            eval,
+            participants: 1,
+            mean_staleness: 0.0,
+            mean_power: 0.0,
+        });
+    }
+
+    Ok(RunResult {
+        algorithm: crate::config::Algorithm::Centralized,
+        records,
+        final_weights: w,
+    })
+}
+
+/// Estimate `F(w*)`: run centralized SGD for `rounds` and return the
+/// minimum probe loss seen (the paper's optimum reference for Fig. 3).
+pub fn estimate_f_star(ctx: &TrainContext, cfg: &Config, rounds: usize) -> Result<f32> {
+    let mut c = cfg.clone();
+    c.algorithm = crate::config::Algorithm::Centralized;
+    c.rounds = rounds;
+    c.eval_every = 5.min(rounds).max(1);
+    let run = run(ctx, &c)?;
+    let best = run
+        .records
+        .iter()
+        .filter_map(|r| r.probe_loss)
+        .fold(f32::INFINITY, f32::min);
+    Ok(best)
+}

@@ -1,0 +1,274 @@
+//! Federated-learning trainers: PAOTA (the paper's contribution) and the
+//! baselines it is evaluated against, all driving the same AOT-compiled
+//! learning workload through [`crate::runtime::ModelRuntime`].
+//!
+//! * [`paota`]       — semi-asynchronous periodic aggregation via AirComp
+//!   with per-round power control (Algorithm 1).
+//! * [`local_sgd`]   — ideal synchronous Local SGD / FedAvg (baseline 1).
+//! * [`cotaf`]       — synchronous AirComp with time-varying precoding
+//!   (baseline 2, Sery & Cohen).
+//! * [`centralized`] — pooled-data SGD; provides the `F(w*)` estimate for
+//!   the Fig. 3 loss-gap curves.
+//!
+//! All trainers share [`TrainContext`] (runtime + data + probes) and emit
+//! the same [`RoundRecord`] stream so the experiment harness can overlay
+//! them directly.
+
+pub mod centralized;
+pub mod cotaf;
+pub mod fedasync;
+pub mod local_sgd;
+pub mod paota;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::config::{Algorithm, Config};
+use crate::data::Partition;
+use crate::runtime::{Engine, EvalOut, ModelRuntime};
+use crate::util::Rng;
+
+/// One global round's telemetry (shared across all algorithms).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// Global round index r (0-based).
+    pub round: usize,
+    /// Virtual time at the end of this round (seconds).
+    pub sim_time: f64,
+    /// Mean local training loss reported by this round's participants.
+    pub train_loss: f32,
+    /// Global objective `F(w)` estimated on the fixed train probe.
+    pub probe_loss: Option<f32>,
+    /// Test-set evaluation (loss + accuracy), if run this round.
+    pub eval: Option<EvalOut>,
+    /// Number of uploading clients.
+    pub participants: usize,
+    /// Mean staleness s_k of this round's uploads (PAOTA; 0 for sync).
+    pub mean_staleness: f64,
+    /// Mean transmit power of the uploads (watts; p_max-weighted schemes).
+    pub mean_power: f64,
+}
+
+/// A complete training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub algorithm: Algorithm,
+    pub records: Vec<RoundRecord>,
+    pub final_weights: Vec<f32>,
+}
+
+impl RunResult {
+    /// Final test accuracy (last evaluated round).
+    pub fn final_accuracy(&self) -> Option<f32> {
+        self.records.iter().rev().find_map(|r| r.eval.map(|e| e.accuracy))
+    }
+
+    /// Best test accuracy across the run.
+    pub fn best_accuracy(&self) -> Option<f32> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval.map(|e| e.accuracy))
+            .fold(None, |acc, a| Some(acc.map_or(a, |b: f32| b.max(a))))
+    }
+}
+
+/// Everything a trainer needs: the compiled runtime, the partitioned data,
+/// flattened eval tensors, and a fixed train-loss probe.
+pub struct TrainContext {
+    pub rt: ModelRuntime,
+    pub partition: Partition,
+    /// Parallel local-training pool (§Perf): participants' independent
+    /// `local_train` executions fan out over per-thread PJRT engines.
+    /// `None` when `PAOTA_WORKERS=1` or spawning failed (sequential path).
+    pub pool: Option<crate::runtime::TrainPool>,
+    /// Seed the model init derives from (the config's master seed).
+    pub init_seed: u64,
+    /// Test features/one-hot labels, flattened to the eval artifact shape.
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<f32>,
+    /// Fixed subsample of pooled TRAINING data (same eval shape): the
+    /// estimator of the global objective `F(w)` used by the Fig. 3 curves.
+    pub probe_x: Vec<f32>,
+    pub probe_y: Vec<f32>,
+}
+
+impl TrainContext {
+    /// Build data + runtime from a config. `engine` outlives the context.
+    pub fn build(engine: &Engine, cfg: &Config) -> Result<Self> {
+        cfg.validate()?;
+        let rt = ModelRuntime::load(engine, &cfg.artifacts_dir)
+            .context("loading AOT artifacts (run `make artifacts`)")?;
+        let m = rt.manifest().clone();
+        if m.d_in != cfg.synth.dim() {
+            bail!(
+                "artifact d_in = {} but synth dim = {} — re-run `make artifacts`",
+                m.d_in,
+                cfg.synth.dim()
+            );
+        }
+        if m.clients != cfg.partition.clients {
+            bail!(
+                "aggregate artifact is compiled for K = {} clients, config wants {}",
+                m.clients,
+                cfg.partition.clients
+            );
+        }
+        if m.eval_size != cfg.partition.test_size {
+            bail!(
+                "evaluate artifact is compiled for eval_size = {}, config test_size = {}",
+                m.eval_size,
+                cfg.partition.test_size
+            );
+        }
+
+        let mut rng = Rng::with_stream(cfg.seed, 0xda7a);
+        let partition = Partition::generate(cfg.synth, &cfg.partition, &mut rng);
+
+        let test_x = partition.test.x.clone();
+        let test_y = partition.test.one_hot();
+
+        // Train probe: deterministic subsample of the pooled shards.
+        let pooled = partition.pooled();
+        let mut probe_rng = Rng::with_stream(cfg.seed, 0x9806e);
+        let dim = pooled.dim;
+        let classes = pooled.classes;
+        let mut probe_x = Vec::with_capacity(m.eval_size * dim);
+        let mut probe_y = vec![0.0f32; m.eval_size * classes];
+        for row in 0..m.eval_size {
+            let i = probe_rng.index(pooled.len());
+            probe_x.extend_from_slice(pooled.row(i));
+            probe_y[row * classes + pooled.y[i] as usize] = 1.0;
+        }
+
+        let workers = crate::runtime::TrainPool::default_workers();
+        let pool = if workers > 1 {
+            match crate::runtime::TrainPool::new(&cfg.artifacts_dir, workers) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    crate::warn_!("train pool unavailable, running sequentially: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        Ok(Self {
+            rt,
+            partition,
+            pool,
+            init_seed: cfg.seed,
+            test_x,
+            test_y,
+            probe_x,
+            probe_y,
+        })
+    }
+
+    /// Model dimension d.
+    pub fn dim(&self) -> usize {
+        self.rt.manifest().dim
+    }
+
+    /// Client count K.
+    pub fn clients(&self) -> usize {
+        self.partition.clients.len()
+    }
+
+    /// He-initialized global model, deterministic in the config seed.
+    ///
+    /// Zero init would leave the ReLU hidden layers dead (zero
+    /// activations → zero gradients for every layer but the output bias),
+    /// so weights get `N(0, √(2/fan_in))` and biases zero — the same
+    /// init for every algorithm in a comparison (seed-derived).
+    pub fn init_weights(&self) -> Vec<f32> {
+        let m = self.rt.manifest();
+        let mut rng = Rng::with_stream(self.init_seed, 0x1d17);
+        let mut w = vec![0.0f32; m.dim];
+        let mut off = 0;
+        // [W1, b1, W2, b2, W3, b3] — the flat layout of model.py.
+        let layers = [
+            (m.d_in * m.hidden, m.d_in),
+            (m.hidden, 0), // b1
+            (m.hidden * m.hidden, m.hidden),
+            (m.hidden, 0), // b2
+            (m.hidden * m.classes, m.hidden),
+            (m.classes, 0), // b3
+        ];
+        for (size, fan_in) in layers {
+            if fan_in > 0 {
+                let std = (2.0 / fan_in as f64).sqrt() as f32;
+                rng.fill_normal(&mut w[off..off + size], std);
+            }
+            off += size;
+        }
+        w
+    }
+
+    /// Evaluate on the test set.
+    pub fn evaluate(&self, w: &[f32]) -> Result<EvalOut> {
+        self.rt.evaluate(w, &self.test_x, &self.test_y)
+    }
+
+    /// Estimate the global objective `F(w)` on the train probe.
+    pub fn probe_loss(&self, w: &[f32]) -> Result<f32> {
+        Ok(self.rt.evaluate(w, &self.probe_x, &self.probe_y)?.loss)
+    }
+
+    /// Run many independent local-training jobs `(w, xs, ys)`, in parallel
+    /// over the pool when available, sequentially otherwise. Results are
+    /// in submission order and bit-identical across both paths.
+    pub fn train_many(
+        &self,
+        jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+        lr: f32,
+    ) -> Result<Vec<crate::runtime::TrainOut>> {
+        match (&self.pool, jobs.len()) {
+            (Some(pool), n) if n > 1 => pool.run_batch(jobs, lr),
+            _ => jobs
+                .into_iter()
+                .map(|(w, xs, ys)| self.rt.local_train(&w, &xs, &ys, lr))
+                .collect(),
+        }
+    }
+
+    /// The synchronous baselines' per-round participant count, applying
+    /// the paper's "equal participation" fairness rule when the config
+    /// leaves it at 0: match PAOTA's expected per-round upload count
+    /// (K / E[rounds-per-upload] under the latency model).
+    pub fn sync_participants(&self, cfg: &Config) -> usize {
+        if cfg.participants > 0 {
+            return cfg.participants.min(self.clients());
+        }
+        // A client uploads every ceil(ℓ/ΔT) rounds; E over U(lo,hi).
+        let (lo, hi) = (cfg.latency_lo, cfg.latency_hi);
+        let dt = cfg.delta_t;
+        let mut acc = 0.0;
+        let steps = 1000;
+        for i in 0..steps {
+            let l = lo + (hi - lo) * (i as f64 + 0.5) / steps as f64;
+            acc += (l / dt).ceil();
+        }
+        let mean_rounds = acc / steps as f64;
+        ((self.clients() as f64 / mean_rounds).round() as usize)
+            .clamp(1, self.clients())
+    }
+}
+
+/// Run the algorithm selected by the config.
+pub fn run(cfg: &Config) -> Result<RunResult> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, cfg)?;
+    run_with_context(&ctx, cfg)
+}
+
+/// Run against a pre-built context (lets the harness reuse data+runtime
+/// across algorithm sweeps — same partition, same probe, same test set).
+pub fn run_with_context(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
+    match cfg.algorithm {
+        Algorithm::Paota => paota::run(ctx, cfg),
+        Algorithm::LocalSgd => local_sgd::run(ctx, cfg),
+        Algorithm::Cotaf => cotaf::run(ctx, cfg),
+        Algorithm::Centralized => centralized::run(ctx, cfg),
+        Algorithm::FedAsync => fedasync::run(ctx, cfg),
+    }
+}

@@ -1,0 +1,35 @@
+//! # PAOTA — Semi-Asynchronous Federated Edge Learning via AirComp
+//!
+//! A production-grade reproduction of *"Semi-Asynchronous Federated Edge
+//! Learning for Over-the-air Computation"* (Kou, Ji, Zhong, Zhang; 2023) as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   time-triggered, semi-asynchronous FL server with over-the-air (AirComp)
+//!   aggregation, per-round uplink power-control optimization (Dinkelbach
+//!   fractional programming over the convergence bound of Theorem 1), a
+//!   discrete-event device simulator and a wireless MAC channel simulator,
+//!   plus the paper's baselines (ideal Local SGD, COTAF).
+//! * **L2/L1 (build time)** — the learning workload (MLP fwd/bwd, local SGD,
+//!   AirComp reduction) authored in JAX + Pallas and AOT-lowered to HLO-text
+//!   artifacts which [`runtime`] loads through PJRT. Python never runs at
+//!   request time.
+//!
+//! Start at [`fl`] for the training loops, [`power`] for the paper's power
+//! control, and `examples/quickstart.rs` for a minimal end-to-end run.
+
+pub mod runtime;
+pub mod util;
+pub mod linalg;
+pub mod optim;
+pub mod testing;
+pub mod channel;
+pub mod config;
+pub mod data;
+pub mod power;
+pub mod sim;
+pub mod fl;
+pub mod metrics;
+pub mod cli;
+pub mod experiments;
+pub mod benchlib;

@@ -1,0 +1,476 @@
+//! Dense row-major f64 matrix + the three factorizations the optimizer uses.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Self::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// Rank-1 outer product `a·bᵀ`.
+    pub fn outer(a: &[f64], b: &[f64]) -> Self {
+        let mut m = Self::zeros(a.len(), b.len());
+        for i in 0..a.len() {
+            for j in 0..b.len() {
+                m[(i, j)] = a[i] * b[j];
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| (0..self.cols).map(|j| self[(i, j)] * v[j]).sum())
+            .collect()
+    }
+
+    /// Quadratic form `xᵀ A x`.
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        let ax = self.matvec(x);
+        x.iter().zip(&ax).map(|(a, b)| a * b).sum()
+    }
+
+    /// Sum with `alpha`-scaled other: `self + alpha·other`.
+    pub fn add_scaled(&self, other: &Matrix, alpha: f64) -> Matrix {
+        assert!(self.rows == other.rows && self.cols == other.cols);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + alpha * b)
+            .collect();
+        Matrix::from_rows(self.rows, self.cols, data)
+    }
+
+    /// Max |a_ij − b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Inverse via LU with partial pivoting. Errors on singularity.
+    pub fn inverse(&self) -> Result<Matrix> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut inv = Matrix::zeros(n, n);
+        let lu = LuFactors::new(self)?;
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.iter_mut().for_each(|v| *v = 0.0);
+            e[j] = 1.0;
+            let col = lu.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        Ok(inv)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization `A = L·Lᵀ` (lower-triangular `L`).
+///
+/// The Dinkelbach transform needs the nonsingular `M₁` with `G = M₁ᵀM₁`;
+/// that is `M₁ = Lᵀ`. Errors when `A` is not (numerically) positive
+/// definite — the caller regularizes with `+εI` as the paper's `G` is only
+/// guaranteed positive *semi*-definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// LU factorization with partial pivoting (Doolittle).
+struct LuFactors {
+    n: usize,
+    lu: Matrix,
+    piv: Vec<usize>,
+}
+
+impl LuFactors {
+    fn new(a: &Matrix) -> Result<Self> {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // Pivot.
+            let mut pivot = col;
+            let mut max = lu[(col, col)].abs();
+            for r in col + 1..n {
+                if lu[(r, col)].abs() > max {
+                    max = lu[(r, col)].abs();
+                    pivot = r;
+                }
+            }
+            if max < 1e-14 {
+                bail!("singular matrix at column {col}");
+            }
+            if pivot != col {
+                for j in 0..n {
+                    let tmp = lu[(col, j)];
+                    lu[(col, j)] = lu[(pivot, j)];
+                    lu[(pivot, j)] = tmp;
+                }
+                piv.swap(col, pivot);
+            }
+            // Eliminate.
+            for r in col + 1..n {
+                let f = lu[(r, col)] / lu[(col, col)];
+                lu[(r, col)] = f;
+                for j in col + 1..n {
+                    let v = lu[(col, j)];
+                    lu[(r, j)] -= f * v;
+                }
+            }
+        }
+        Ok(Self { n, lu, piv })
+    }
+
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        // Apply permutation, then forward/back substitution.
+        let mut y: Vec<f64> = (0..n).map(|i| b[self.piv[i]]).collect();
+        for i in 1..n {
+            for j in 0..i {
+                y[i] -= self.lu[(i, j)] * y[j];
+            }
+        }
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                y[i] -= self.lu[(i, j)] * y[j];
+            }
+            y[i] /= self.lu[(i, i)];
+        }
+        y
+    }
+}
+
+/// Solve `A x = b` by LU with partial pivoting.
+pub fn lu_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    Ok(LuFactors::new(a)?.solve(b))
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Returns `(eigenvalues, V)` with `A = V·diag(λ)·Vᵀ` and orthonormal
+/// columns in `V` — i.e. `M₂ = V` satisfies `M₂ᵀAM₂ = diag(λ)` (eq. (29)).
+pub fn jacobi_eigen(a: &Matrix, max_sweeps: usize) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| m[(i, i)]).collect();
+    (eig, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert, prop_close};
+    use crate::util::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Matrix {
+        // AᵀA + n·I is SPD.
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+            }
+        }
+        let mut spd = a.t().matmul(&a);
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        spd
+    }
+
+    fn random_symmetric(rng: &mut Rng, n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_matvec_agree() {
+        let a = Matrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = vec![1.0, 0.5, -1.0];
+        let got = a.matvec(&x);
+        assert_eq!(got, vec![1.0 + 1.0 - 3.0, 4.0 + 2.5 - 6.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn quad_form_matches_manual() {
+        let a = Matrix::from_rows(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = vec![1.0, -1.0];
+        // xᵀAx = 2 - 1 - 1 + 3 = 3.
+        assert!((a.quad_form(&x) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        check("cholesky LLᵀ = A", 40, |g| {
+            let n = g.usize_in(1..9);
+            let a = random_spd(g.rng(), n);
+            let l = cholesky(&a).map_err(|e| e.to_string())?;
+            let rec = l.matmul(&l.t());
+            prop_close(rec.max_abs_diff(&a), 0.0, 1e-8, "reconstruction")
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn lu_solve_random_systems() {
+        check("LU solves Ax=b", 40, |g| {
+            let n = g.usize_in(1..9);
+            let a = random_spd(g.rng(), n);
+            let x_true: Vec<f64> = (0..n).map(|_| g.rng().normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = lu_solve(&a, &b).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                prop_close(x[i], x_true[i], 1e-7, "solution")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        check("A·A⁻¹ = I", 30, |g| {
+            let n = g.usize_in(1..7);
+            let a = random_spd(g.rng(), n);
+            let inv = a.inverse().map_err(|e| e.to_string())?;
+            let prod = a.matmul(&inv);
+            prop_close(prod.max_abs_diff(&Matrix::eye(n)), 0.0, 1e-7, "identity")
+        });
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(lu_solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        check("VᵀAV diagonal, V orthogonal", 30, |g| {
+            let n = g.usize_in(1..8);
+            let a = random_symmetric(g.rng(), n);
+            let (eig, v) = jacobi_eigen(&a, 50);
+            // V orthogonal.
+            let vtv = v.t().matmul(&v);
+            prop_close(vtv.max_abs_diff(&Matrix::eye(n)), 0.0, 1e-8, "orthogonality")?;
+            // Reconstruction A = V diag V^T.
+            let rec = v.matmul(&Matrix::diag(&eig)).matmul(&v.t());
+            prop_close(rec.max_abs_diff(&a), 0.0, 1e-7, "reconstruction")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn jacobi_known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_rows(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (mut eig, _) = jacobi_eigen(&a, 50);
+        eig.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn spd_eigen_all_positive() {
+        check("SPD spectra positive", 20, |g| {
+            let n = g.usize_in(1..7);
+            let a = random_spd(g.rng(), n);
+            let (eig, _) = jacobi_eigen(&a, 60);
+            prop_assert(eig.iter().all(|&l| l > 0.0), "nonpositive eigenvalue")
+        });
+    }
+
+    #[test]
+    fn outer_and_diag() {
+        let o = Matrix::outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(o[(1, 2)], 10.0);
+        let d = Matrix::diag(&[7.0, 8.0]);
+        assert_eq!(d[(0, 0)], 7.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate (f64), hand-rolled for the offline build.
+//!
+//! Exactly what the paper's power-control pipeline (§III-B) needs:
+//!
+//! * [`Matrix`] — small dense row-major matrix with the usual ops.
+//! * [`cholesky`] — `G = LLᵀ`, giving the nonsingular `M₁ = Lᵀ` with
+//!   `G = M₁ᵀM₁` used by the Dinkelbach transform (eq. (28)).
+//! * [`jacobi_eigen`] — cyclic Jacobi eigendecomposition of a symmetric
+//!   matrix, giving the orthogonal `M₂` with `M₂ᵀSM₂ = N = diag(nᵢ)`
+//!   (eq. (29)).
+//! * [`lu_solve`] / [`Matrix::inverse`] — for `M⁻¹z` in problem P4.
+
+pub mod matrix;
+
+pub use matrix::{cholesky, jacobi_eigen, lu_solve, Matrix};

@@ -1,0 +1,55 @@
+//! `repro` — the PAOTA reproduction driver (leader entrypoint).
+//!
+//! See `repro help` for the full command/flag reference, DESIGN.md for the
+//! experiment index, and EXPERIMENTS.md for recorded paper-vs-measured
+//! results.
+
+use anyhow::Result;
+
+use paota::cli::{self, Command};
+use paota::{experiments, fl};
+
+fn main() -> Result<()> {
+    paota::util::log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli::parse(&args)?;
+
+    match &cli.command {
+        Command::Help => {
+            print!("{}", cli::HELP);
+        }
+        Command::ShowConfig => {
+            println!("{:#?}", cli.config);
+        }
+        Command::Run => {
+            let run = fl::run(&cli.config)?;
+            println!(
+                "round,time_s,train_loss,probe_loss,test_loss,test_acc,participants,mean_staleness,mean_power"
+            );
+            for r in &run.records {
+                println!(
+                    "{},{:.2},{:.5},{},{},{},{},{:.2},{:.3}",
+                    r.round,
+                    r.sim_time,
+                    r.train_loss,
+                    r.probe_loss.map_or("-".into(), |v| format!("{v:.5}")),
+                    r.eval.map_or("-".into(), |e| format!("{:.5}", e.loss)),
+                    r.eval.map_or("-".into(), |e| format!("{:.4}", e.accuracy)),
+                    r.participants,
+                    r.mean_staleness,
+                    r.mean_power,
+                );
+            }
+            if let Some(acc) = run.final_accuracy() {
+                println!("# final test accuracy: {:.2}%", acc * 100.0);
+            }
+        }
+        Command::Fig3 => experiments::fig3(&cli.config, &cli.out_dir, cli.f_star_rounds)?,
+        Command::Fig4 => experiments::fig4(&cli.config, &cli.out_dir)?,
+        Command::Table1 => {
+            experiments::table1(&cli.config, &cli.out_dir, &[0.5, 0.6, 0.7, 0.8])?
+        }
+        Command::Ablation(which) => experiments::ablation(which, &cli.config, &cli.out_dir)?,
+    }
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! Metrics: curve extraction, the paper's time-to-accuracy table, and CSV
+//! emission for every figure the harness regenerates.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::fl::{RoundRecord, RunResult};
+
+/// (round, sim_time, value) triples extracted from a run.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+impl Curve {
+    /// Test-accuracy curve (evaluated rounds only).
+    pub fn accuracy(name: &str, run: &RunResult) -> Curve {
+        Curve {
+            name: name.to_string(),
+            points: run
+                .records
+                .iter()
+                .filter_map(|r| {
+                    r.eval
+                        .map(|e| (r.round, r.sim_time, e.accuracy as f64))
+                })
+                .collect(),
+        }
+    }
+
+    /// Loss-gap curve `F(w^r) − F(w*)` from the probe loss.
+    pub fn loss_gap(name: &str, run: &RunResult, f_star: f64) -> Curve {
+        Curve {
+            name: name.to_string(),
+            points: run
+                .records
+                .iter()
+                .filter_map(|r| {
+                    r.probe_loss
+                        .map(|l| (r.round, r.sim_time, (l as f64 - f_star).max(0.0)))
+                })
+                .collect(),
+        }
+    }
+
+    /// Value at the last point.
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.2)
+    }
+}
+
+/// One row of the paper's Table I: first round/time reaching an accuracy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeToAccuracy {
+    pub target: f64,
+    /// 1-based round count, as the paper reports. None = never reached.
+    pub rounds: Option<usize>,
+    pub time_s: Option<f64>,
+}
+
+/// Compute time-to-accuracy rows for each target (fractions in [0,1]).
+pub fn time_to_accuracy(records: &[RoundRecord], targets: &[f64]) -> Vec<TimeToAccuracy> {
+    targets
+        .iter()
+        .map(|&target| {
+            let hit = records.iter().find(|r| {
+                r.eval
+                    .map(|e| e.accuracy as f64 >= target)
+                    .unwrap_or(false)
+            });
+            TimeToAccuracy {
+                target,
+                rounds: hit.map(|r| r.round + 1),
+                time_s: hit.map(|r| r.sim_time),
+            }
+        })
+        .collect()
+}
+
+/// Write curves as CSV: `name,round,time_s,value`.
+pub fn write_curves_csv(path: &Path, curves: &[Curve]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "series,round,time_s,value")?;
+    for c in curves {
+        for (round, t, v) in &c.points {
+            writeln!(f, "{},{round},{t:.3},{v:.6}", c.name)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write per-round telemetry as CSV (one run).
+pub fn write_records_csv(path: &Path, run: &RunResult) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(
+        f,
+        "round,time_s,train_loss,probe_loss,test_loss,test_acc,participants,mean_staleness,mean_power"
+    )?;
+    for r in &run.records {
+        writeln!(
+            f,
+            "{},{:.3},{:.6},{},{},{},{},{:.3},{:.4}",
+            r.round,
+            r.sim_time,
+            r.train_loss,
+            r.probe_loss.map_or(String::new(), |v| format!("{v:.6}")),
+            r.eval.map_or(String::new(), |e| format!("{:.6}", e.loss)),
+            r.eval.map_or(String::new(), |e| format!("{:.4}", e.accuracy)),
+            r.participants,
+            r.mean_staleness,
+            r.mean_power,
+        )?;
+    }
+    Ok(())
+}
+
+/// Render Table-I-style rows for several algorithms.
+pub fn format_table1(rows: &[(String, Vec<TimeToAccuracy>)], targets: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str("| Target Accuracy |        |");
+    for t in targets {
+        out.push_str(&format!(" {:>6.0}% |", t * 100.0));
+    }
+    out.push('\n');
+    for (name, ttas) in rows {
+        out.push_str(&format!("| {name:<15} | round  |"));
+        for t in ttas {
+            match t.rounds {
+                Some(r) => out.push_str(&format!(" {r:>7} |")),
+                None => out.push_str("       – |"),
+            }
+        }
+        out.push('\n');
+        out.push_str(&format!("| {:<15} | time/s |", ""));
+        for t in ttas {
+            match t.time_s {
+                Some(s) => out.push_str(&format!(" {s:>7.1} |")),
+                None => out.push_str("       – |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::runtime::EvalOut;
+
+    fn rec(round: usize, t: f64, acc: f32, probe: f32) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_time: t,
+            train_loss: 1.0,
+            probe_loss: Some(probe),
+            eval: Some(EvalOut {
+                loss: 1.0,
+                accuracy: acc,
+            }),
+            participants: 3,
+            mean_staleness: 0.0,
+            mean_power: 1.0,
+        }
+    }
+
+    fn fake_run() -> RunResult {
+        RunResult {
+            algorithm: Algorithm::Paota,
+            records: vec![
+                rec(0, 8.0, 0.3, 2.0),
+                rec(1, 16.0, 0.55, 1.5),
+                rec(2, 24.0, 0.62, 1.2),
+                rec(3, 32.0, 0.71, 1.0),
+            ],
+            final_weights: vec![],
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let run = fake_run();
+        let rows = time_to_accuracy(&run.records, &[0.5, 0.6, 0.7, 0.8]);
+        assert_eq!(rows[0].rounds, Some(2));
+        assert_eq!(rows[0].time_s, Some(16.0));
+        assert_eq!(rows[1].rounds, Some(3));
+        assert_eq!(rows[2].rounds, Some(4));
+        assert_eq!(rows[3].rounds, None);
+        assert_eq!(rows[3].time_s, None);
+    }
+
+    #[test]
+    fn loss_gap_clamps_at_zero() {
+        let run = fake_run();
+        let c = Curve::loss_gap("paota", &run, 1.1);
+        // Last probe 1.0 < f_star 1.1 → gap clamped to 0.
+        assert_eq!(c.last(), Some(0.0));
+        assert!(c.points[0].2 > 0.0);
+    }
+
+    #[test]
+    fn accuracy_curve_extraction() {
+        let run = fake_run();
+        let c = Curve::accuracy("paota", &run);
+        assert_eq!(c.points.len(), 4);
+        assert!((c.last().unwrap() - 0.71).abs() < 1e-6); // f32→f64 cast slack
+    }
+
+    #[test]
+    fn csv_roundtrip_files() {
+        let dir = std::env::temp_dir().join("paota_metrics_test");
+        let run = fake_run();
+        let curves = vec![Curve::accuracy("a", &run)];
+        let p1 = dir.join("curves.csv");
+        write_curves_csv(&p1, &curves).unwrap();
+        let text = std::fs::read_to_string(&p1).unwrap();
+        assert!(text.starts_with("series,round,time_s,value"));
+        assert_eq!(text.lines().count(), 5);
+
+        let p2 = dir.join("records.csv");
+        write_records_csv(&p2, &run).unwrap();
+        let text = std::fs::read_to_string(&p2).unwrap();
+        assert_eq!(text.lines().count(), 5);
+    }
+
+    #[test]
+    fn table_format_has_all_rows() {
+        let run = fake_run();
+        let rows = vec![(
+            "PAOTA".to_string(),
+            time_to_accuracy(&run.records, &[0.5, 0.8]),
+        )];
+        let s = format_table1(&rows, &[0.5, 0.8]);
+        assert!(s.contains("PAOTA"));
+        assert!(s.contains("round"));
+        assert!(s.contains("time/s"));
+        assert!(s.contains('–')); // unreached target marker
+    }
+}

@@ -1,0 +1,253 @@
+//! Dinkelbach's parametric scheme for the quadratic fractional program
+//! **P2** (Algorithm 2 of the paper).
+//!
+//! The paper *minimizes* `h₁(β)/h₂(β)` over the box, which is equivalent
+//! to maximizing `h₂/h₁`; Dinkelbach iterates
+//!
+//! ```text
+//!   β* ← argmax_β  F(β; λ) = h₂(β) − λ·h₁(β)
+//!   λ  ← h₂(β*) / h₁(β*)
+//! ```
+//!
+//! until `F(β*; λ) < ε`. The parametric subproblem is a (generally
+//! nonconcave) box QP solved by either solver in [`super::quadratic`].
+//! λ is monotonically non-decreasing and converges superlinearly to the
+//! maximal ratio (Dinkelbach 1967; Gotoh & Konno 2001 for the quadratic
+//! case the paper cites).
+
+use anyhow::{bail, Result};
+
+use super::quadratic::{BoxQp, QpSolver};
+use crate::util::Rng;
+
+/// One quadratic form `βᵀAβ + bᵀβ + c`.
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    pub a: crate::linalg::Matrix,
+    pub b: Vec<f64>,
+    pub c: f64,
+}
+
+impl Quadratic {
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.a.quad_form(x) + self.b.iter().zip(x).map(|(p, q)| p * q).sum::<f64>() + self.c
+    }
+}
+
+/// Result of the Dinkelbach loop.
+#[derive(Debug, Clone)]
+pub struct DinkelbachReport {
+    /// The maximizing β (per-client trade-off parameters).
+    pub beta: Vec<f64>,
+    /// Final ratio `h₂/h₁` (the maximized objective).
+    pub ratio: f64,
+    /// λ trace — non-decreasing by construction (property-tested).
+    pub lambdas: Vec<f64>,
+    /// Number of outer iterations.
+    pub iters: usize,
+}
+
+/// Generic Dinkelbach loop: `h1_eval`/`h2_eval` evaluate the two
+/// quadratics; `argmax(λ)` maximizes `F(β;λ) = h₂ − λh₁` over the box and
+/// returns `(β*, F*)`. Specialized callers (the rank-one power-control
+/// path, §Perf) plug in O(K)-per-sweep subproblem solvers.
+pub fn maximize_ratio_generic(
+    n: usize,
+    h1_eval: impl Fn(&[f64]) -> f64,
+    h2_eval: impl Fn(&[f64]) -> f64,
+    mut argmax: impl FnMut(f64) -> Result<(Vec<f64>, f64)>,
+    eps: f64,
+    max_iters: usize,
+) -> Result<DinkelbachReport> {
+    // Initial λ from a feasible point (β = ½·1).
+    let beta0 = vec![0.5; n];
+    let h1v = h1_eval(&beta0);
+    if h1v <= 0.0 {
+        bail!("h1 not positive at the initial point (h1 = {h1v})");
+    }
+    let mut lambda = h2_eval(&beta0) / h1v;
+    let mut lambdas = vec![lambda];
+    let mut beta = beta0;
+
+    for it in 1..=max_iters {
+        let (b_star, f_star) = argmax(lambda)?;
+        let h1s = h1_eval(&b_star);
+        if h1s <= 0.0 {
+            bail!("h1 non-positive at Dinkelbach iterate (h1 = {h1s})");
+        }
+        let new_lambda = h2_eval(&b_star) / h1s;
+        // Keep the best iterate (inner solver is heuristic for PCD).
+        if new_lambda >= lambda {
+            beta = b_star;
+        }
+        let done = f_star < eps;
+        lambda = lambda.max(new_lambda);
+        lambdas.push(lambda);
+        if done {
+            return Ok(DinkelbachReport {
+                beta,
+                ratio: lambda,
+                lambdas,
+                iters: it,
+            });
+        }
+    }
+    // Converged by iteration budget; return the best seen.
+    let iters = lambdas.len() - 1;
+    Ok(DinkelbachReport {
+        beta,
+        ratio: lambda,
+        lambdas,
+        iters,
+    })
+}
+
+/// Maximize `h₂(β)/h₁(β)` over `β ∈ [0,1]^K` with a dense subproblem
+/// solver.
+///
+/// `h₁` must be strictly positive on the box (it is the paper's
+/// denominator-after-inversion — term (d)+(e) of the bound, a sum of a PSD
+/// quadratic and a positive constant).
+pub fn maximize_ratio(
+    h1: &Quadratic,
+    h2: &Quadratic,
+    solver: QpSolver,
+    eps: f64,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> Result<DinkelbachReport> {
+    let n = h1.b.len();
+    if h2.b.len() != n {
+        bail!("h1/h2 dimension mismatch");
+    }
+    maximize_ratio_generic(
+        n,
+        |x| h1.eval(x),
+        |x| h2.eval(x),
+        |lambda| {
+            // F(β; λ) = h₂ − λh₁ as a single BoxQp.
+            let qp = BoxQp {
+                a: h2.a.add_scaled(&h1.a, -lambda),
+                b: h2
+                    .b
+                    .iter()
+                    .zip(&h1.b)
+                    .map(|(q, g)| q - lambda * g)
+                    .collect(),
+                c: h2.c - lambda * h1.c,
+            };
+            qp.maximize(solver, rng)
+        },
+        eps,
+        max_iters,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::testing::{check, prop_assert, prop_close};
+
+    fn quad(diag: &[f64], b: Vec<f64>, c: f64) -> Quadratic {
+        Quadratic {
+            a: Matrix::diag(diag),
+            b,
+            c,
+        }
+    }
+
+    #[test]
+    fn scalar_ratio_known_optimum() {
+        // max (x² + 1) / (x² − x + 1) on [0,1]: at x = 1 ratio = 2;
+        // check interior too: ratio'(x) = 0 at x where derivative sign
+        // flips; brute force confirms max at x = 1 → 2.0.
+        let h2 = quad(&[1.0], vec![0.0], 1.0);
+        let h1 = quad(&[1.0], vec![-1.0], 1.0);
+        let mut rng = Rng::new(2);
+        let rep = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-10, 50, &mut rng).unwrap();
+        // Brute-force the true max.
+        let mut best = 0.0f64;
+        for i in 0..=10_000 {
+            let x = i as f64 / 10_000.0;
+            best = best.max((x * x + 1.0) / (x * x - x + 1.0));
+        }
+        assert!((rep.ratio - best).abs() < 1e-6, "got {} want {best}", rep.ratio);
+    }
+
+    #[test]
+    fn lambda_trace_monotone_nondecreasing() {
+        check("Dinkelbach λ monotone", 25, |g| {
+            let n = g.usize_in(1..6);
+            let d1: Vec<f64> = (0..n).map(|_| g.f64_in(0.1..2.0)).collect();
+            let d2: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0..2.0)).collect();
+            let b1: Vec<f64> = (0..n).map(|_| g.f64_in(-0.2..0.2)).collect();
+            let b2: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0..1.0)).collect();
+            let h1 = quad(&d1, b1, 2.0 + n as f64); // positive on the box
+            let h2 = quad(&d2, b2, 3.0);
+            let mut rng = Rng::new(3);
+            let rep = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-9, 40, &mut rng)
+                .map_err(|e| e.to_string())?;
+            for w in rep.lambdas.windows(2) {
+                prop_assert(w[1] >= w[0] - 1e-12, "λ decreased")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ratio_matches_grid_search_2d() {
+        check("Dinkelbach vs grid search", 10, |g| {
+            let d1: Vec<f64> = (0..2).map(|_| g.f64_in(0.1..1.5)).collect();
+            let d2: Vec<f64> = (0..2).map(|_| g.f64_in(-1.5..1.5)).collect();
+            let h1 = quad(&d1, vec![g.f64_in(-0.3..0.3), g.f64_in(-0.3..0.3)], 1.5);
+            let h2 = quad(&d2, vec![g.f64_in(-1.0..1.0), g.f64_in(-1.0..1.0)], 2.0);
+            let mut rng = Rng::new(5);
+            let rep = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-10, 60, &mut rng)
+                .map_err(|e| e.to_string())?;
+            let mut best = f64::NEG_INFINITY;
+            let steps = 60;
+            for i in 0..=steps {
+                for j in 0..=steps {
+                    let x = [i as f64 / steps as f64, j as f64 / steps as f64];
+                    best = best.max(h2.eval(&x) / h1.eval(&x));
+                }
+            }
+            prop_close(rep.ratio, best, 5e-3, "ratio vs grid")
+        });
+    }
+
+    #[test]
+    fn rejects_nonpositive_denominator() {
+        let h1 = quad(&[1.0], vec![0.0], -10.0);
+        let h2 = quad(&[1.0], vec![0.0], 1.0);
+        let mut rng = Rng::new(7);
+        assert!(maximize_ratio(&h1, &h2, QpSolver::default(), 1e-9, 10, &mut rng).is_err());
+    }
+
+    #[test]
+    fn pla_mip_inner_solver_agrees_with_pcd() {
+        let h1 = quad(&[0.8, 1.2], vec![0.1, -0.1], 2.0);
+        let h2 = quad(&[1.0, -0.5], vec![0.5, 0.8], 1.0);
+        let mut rng = Rng::new(11);
+        let pcd = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-9, 40, &mut rng).unwrap();
+        let mip = maximize_ratio(
+            &h1,
+            &h2,
+            QpSolver::PlaMip {
+                segments: 8,
+                max_nodes: 4000,
+            },
+            1e-9,
+            40,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(
+            (pcd.ratio - mip.ratio).abs() < 1e-2 * (1.0 + pcd.ratio.abs()),
+            "pcd {} vs mip {}",
+            pcd.ratio,
+            mip.ratio
+        );
+    }
+}

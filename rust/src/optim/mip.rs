@@ -1,0 +1,266 @@
+//! 0-1 mixed-integer programming by branch-and-bound over the simplex LP
+//! relaxation — the stand-in for the paper's IBM CPLEX call on problem
+//! P4/(39).
+//!
+//! Binary variables are relaxed to `[0,1]` (upper-bound rows are added
+//! automatically); branching fixes the most-fractional binary to 0/1 via
+//! equality rows. Depth-first with best-bound pruning against the
+//! incumbent; a node budget bounds worst-case blowup (the power-control
+//! driver falls back to PCD for large instances — DESIGN.md §4.2).
+
+use anyhow::Result;
+
+use super::simplex::{Constraint, LinearProgram, LpStatus};
+
+/// Outcome of a B&B run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MipStatus {
+    /// Proven optimal (within tolerance).
+    Optimal,
+    /// Node budget exhausted; best incumbent returned.
+    NodeLimit,
+    /// No feasible integer point found.
+    Infeasible,
+}
+
+/// A 0-1 MIP: maximize `objective·x` over `constraints`, `x ≥ 0`, with
+/// `binaries` constrained to {0,1}.
+#[derive(Debug, Clone)]
+pub struct Mip {
+    pub lp: LinearProgram,
+    /// Indices of binary variables.
+    pub binaries: Vec<usize>,
+    /// Node budget (default 5000).
+    pub max_nodes: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+}
+
+/// B&B result.
+#[derive(Debug, Clone)]
+pub struct MipSolution {
+    pub status: MipStatus,
+    pub x: Vec<f64>,
+    pub value: f64,
+    pub nodes: usize,
+}
+
+impl Mip {
+    pub fn new(lp: LinearProgram, binaries: Vec<usize>) -> Self {
+        Self {
+            lp,
+            binaries,
+            max_nodes: 5000,
+            int_tol: 1e-6,
+        }
+    }
+
+    /// Solve by DFS branch-and-bound.
+    pub fn solve(&self) -> Result<MipSolution> {
+        let n = self.lp.n_vars();
+        // Base LP with binary upper bounds.
+        let mut base = self.lp.clone();
+        for &b in &self.binaries {
+            let mut row = vec![0.0; n];
+            row[b] = 1.0;
+            base.constraints.push(Constraint::le(row, 1.0));
+        }
+
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        let mut nodes = 0usize;
+        // Stack of (fixings) — each fixing is (var, value).
+        let mut stack: Vec<Vec<(usize, f64)>> = vec![Vec::new()];
+        let mut exhausted = true;
+
+        while let Some(fixings) = stack.pop() {
+            if nodes >= self.max_nodes {
+                exhausted = false;
+                break;
+            }
+            nodes += 1;
+
+            let mut lp = base.clone();
+            for &(var, val) in &fixings {
+                let mut row = vec![0.0; n];
+                row[var] = 1.0;
+                lp.constraints.push(Constraint::eq(row, val));
+            }
+            let relax = lp.solve()?;
+            match relax.status {
+                LpStatus::Infeasible => continue,
+                LpStatus::Unbounded => {
+                    // Unbounded relaxation of a box-constrained binary
+                    // problem means the continuous part is unbounded;
+                    // propagate as an error-free prune is impossible.
+                    anyhow::bail!("MIP relaxation unbounded");
+                }
+                LpStatus::Optimal => {}
+            }
+            // Bound: prune if it cannot beat the incumbent.
+            if let Some((_, inc)) = &best {
+                if relax.value <= *inc + 1e-9 {
+                    continue;
+                }
+            }
+            // Find most-fractional binary.
+            let mut frac_var = None;
+            let mut frac_dist = self.int_tol;
+            for &b in &self.binaries {
+                let v = relax.x[b];
+                let d = (v - v.round()).abs();
+                if d > frac_dist {
+                    frac_dist = d;
+                    frac_var = Some(b);
+                }
+            }
+            match frac_var {
+                None => {
+                    // Integer-feasible.
+                    if best.as_ref().map_or(true, |(_, inc)| relax.value > *inc) {
+                        best = Some((relax.x.clone(), relax.value));
+                    }
+                }
+                Some(var) => {
+                    // Branch: explore the rounding-nearest child last so
+                    // it is popped first (DFS dives toward the relaxation).
+                    let v = relax.x[var];
+                    let (first, second) = if v >= 0.5 { (0.0, 1.0) } else { (1.0, 0.0) };
+                    for val in [first, second] {
+                        let mut f = fixings.clone();
+                        f.push((var, val));
+                        stack.push(f);
+                    }
+                }
+            }
+        }
+
+        Ok(match best {
+            Some((x, value)) => MipSolution {
+                status: if exhausted {
+                    MipStatus::Optimal
+                } else {
+                    MipStatus::NodeLimit
+                },
+                x,
+                value,
+                nodes,
+            },
+            None => MipSolution {
+                status: MipStatus::Infeasible,
+                x: vec![0.0; n],
+                value: f64::NEG_INFINITY,
+                nodes,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 6b + 4c ; 5a + 4b + 3c ≤ 10 ; binaries → a=b=1 (16).
+        let lp = LinearProgram {
+            objective: vec![10.0, 6.0, 4.0],
+            constraints: vec![Constraint::le(vec![5.0, 4.0, 3.0], 10.0)],
+        };
+        let sol = Mip::new(lp, vec![0, 1, 2]).solve().unwrap();
+        assert_eq!(sol.status, MipStatus::Optimal);
+        assert!((sol.value - 16.0).abs() < 1e-6, "value={}", sol.value);
+        assert!((sol.x[0] - 1.0).abs() < 1e-6);
+        assert!((sol.x[1] - 1.0).abs() < 1e-6);
+        assert!(sol.x[2].abs() < 1e-6);
+    }
+
+    #[test]
+    fn lp_relaxation_fractional_mip_rounds() {
+        // max x ; 2x ≤ 1, binary x → LP gives 0.5, MIP must give 0.
+        let lp = LinearProgram {
+            objective: vec![1.0],
+            constraints: vec![Constraint::le(vec![2.0], 1.0)],
+        };
+        let sol = Mip::new(lp, vec![0]).solve().unwrap();
+        assert_eq!(sol.status, MipStatus::Optimal);
+        assert!(sol.value.abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_continuous_and_binary() {
+        // max 3b + y ; y ≤ 2 ; b + y ≤ 2.5 ; b binary → b=1, y=1.5 → 4.5.
+        let lp = LinearProgram {
+            objective: vec![3.0, 1.0],
+            constraints: vec![
+                Constraint::le(vec![0.0, 1.0], 2.0),
+                Constraint::le(vec![1.0, 1.0], 2.5),
+            ],
+        };
+        let sol = Mip::new(lp, vec![0]).solve().unwrap();
+        assert_eq!(sol.status, MipStatus::Optimal);
+        assert!((sol.value - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_integer() {
+        // 0.4 ≤ x ≤ 0.6 has no binary solution.
+        let lp = LinearProgram {
+            objective: vec![1.0],
+            constraints: vec![
+                Constraint::ge(vec![1.0], 0.4),
+                Constraint::le(vec![1.0], 0.6),
+            ],
+        };
+        let sol = Mip::new(lp, vec![0]).solve().unwrap();
+        assert_eq!(sol.status, MipStatus::Infeasible);
+    }
+
+    #[test]
+    fn matches_exhaustive_enumeration_random() {
+        use crate::testing::{check, prop_assert, prop_close};
+        check("B&B equals brute force on random knapsacks", 30, |g| {
+            let n = g.usize_in(2..7);
+            let obj: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0..5.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| g.f64_in(0.1..3.0)).collect();
+            let cap = g.f64_in(1.0..5.0);
+            let lp = LinearProgram {
+                objective: obj.clone(),
+                constraints: vec![Constraint::le(w.clone(), cap)],
+            };
+            let sol = Mip::new(lp, (0..n).collect()).solve().map_err(|e| e.to_string())?;
+            // Brute force.
+            let mut best = f64::NEG_INFINITY;
+            for mask in 0..(1u32 << n) {
+                let picked: Vec<f64> = (0..n)
+                    .map(|i| if mask & (1 << i) != 0 { 1.0 } else { 0.0 })
+                    .collect();
+                let weight: f64 = w.iter().zip(&picked).map(|(a, b)| a * b).sum();
+                if weight <= cap + 1e-9 {
+                    let v: f64 = obj.iter().zip(&picked).map(|(a, b)| a * b).sum();
+                    best = best.max(v);
+                }
+            }
+            prop_assert(sol.status == MipStatus::Optimal, "not optimal")?;
+            prop_close(sol.value, best, 1e-6, "objective")
+        });
+    }
+
+    #[test]
+    fn node_limit_returns_incumbent() {
+        let n = 12;
+        let obj: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.1).collect();
+        let w: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 % 3.0)).collect();
+        let lp = LinearProgram {
+            objective: obj,
+            constraints: vec![Constraint::le(w, 7.5)],
+        };
+        let mut mip = Mip::new(lp, (0..n).collect());
+        mip.max_nodes = 3;
+        let sol = mip.solve().unwrap();
+        // With 3 nodes it may or may not find an incumbent, but it must
+        // not claim optimality if the budget stopped the search.
+        if sol.status == MipStatus::NodeLimit {
+            assert!(sol.nodes <= 3);
+        }
+    }
+}

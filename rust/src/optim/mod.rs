@@ -1,0 +1,26 @@
+//! Optimization substrate for the paper's power-control pipeline (§III-B).
+//!
+//! The paper minimizes a ratio of two convex quadratics over the box
+//! `[0,1]^K` (problem **P2**) with Dinkelbach's parametric scheme
+//! (Algorithm 2); each parametric subproblem **P3** is a (generally
+//! nonconcave) quadratic maximization that the paper reduces to a 0-1
+//! linear MIP via eigendecomposition + piecewise-linear approximation
+//! (**P4**/eq. (39)), solved there by IBM CPLEX.
+//!
+//! CPLEX is proprietary, so this module IS the solver stack:
+//!
+//! * [`simplex`]    — two-phase dense tableau simplex (`≤`/`≥`/`=` rows).
+//! * [`mip`]        — 0-1 branch-and-bound over the LP relaxation.
+//! * [`quadratic`]  — box-constrained quadratic maximization: the faithful
+//!   PLA→MIP path (small K) and projected coordinate descent (any K).
+//! * [`dinkelbach`] — the outer fractional-programming loop.
+
+pub mod dinkelbach;
+pub mod mip;
+pub mod quadratic;
+pub mod simplex;
+
+pub use dinkelbach::{maximize_ratio, DinkelbachReport};
+pub use mip::{Mip, MipStatus};
+pub use quadratic::{BoxQp, QpSolver};
+pub use simplex::{Constraint, LinearProgram, LpStatus, Op};

@@ -1,0 +1,441 @@
+//! Two-phase dense tableau simplex.
+//!
+//! Maximizes `cᵀx` subject to general rows (`≤`, `≥`, `=`) and `x ≥ 0`.
+//! Upper bounds are expressed by the caller as explicit `≤` rows (the MIP
+//! layer does this for its `[0,1]` variables). Bland's rule guards against
+//! cycling; problem sizes here are ~10²×10², where a dense tableau is the
+//! right tool.
+
+use anyhow::{bail, Result};
+
+/// Row comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One constraint row: `coeffs · x (op) rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<f64>,
+    pub op: Op,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn le(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Self { coeffs, op: Op::Le, rhs }
+    }
+    pub fn ge(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Self { coeffs, op: Op::Ge, rhs }
+    }
+    pub fn eq(coeffs: Vec<f64>, rhs: f64) -> Self {
+        Self { coeffs, op: Op::Eq, rhs }
+    }
+}
+
+/// Maximization LP in "natural" form.
+#[derive(Debug, Clone)]
+pub struct LinearProgram {
+    /// Objective coefficients (maximize).
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+/// Primal solution.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub value: f64,
+}
+
+const EPS: f64 = 1e-9;
+const MAX_ITERS: usize = 20_000;
+
+struct Tableau {
+    /// rows × cols, last column is rhs.
+    t: Vec<Vec<f64>>,
+    /// Basis variable per row.
+    basis: Vec<usize>,
+    n_rows: usize,
+    n_cols: usize, // structural + slack + artificial (excludes rhs)
+}
+
+impl Tableau {
+    fn pivot(&mut self, row: usize, col: usize) {
+        let inv = 1.0 / self.t[row][col];
+        for j in 0..=self.n_cols {
+            self.t[row][j] *= inv;
+        }
+        for r in 0..self.n_rows {
+            if r == row {
+                continue;
+            }
+            let f = self.t[r][col];
+            if f.abs() < EPS {
+                continue;
+            }
+            for j in 0..=self.n_cols {
+                self.t[r][j] -= f * self.t[row][j];
+            }
+        }
+        self.basis[row] = col;
+    }
+
+    /// One simplex phase: maximize `obj` (length n_cols) given current basis.
+    /// Returns Ok(true) if optimal, Ok(false) if unbounded.
+    fn run(&mut self, obj: &[f64]) -> Result<bool> {
+        // Dantzig's rule for speed; after a degeneracy-scaled number of
+        // iterations, switch to Bland's rule, which provably cannot cycle
+        // (Beale's example cycles under pure Dantzig).
+        let bland_after = 4 * (self.n_rows + self.n_cols).max(16);
+        for iter in 0..MAX_ITERS {
+            let bland = iter >= bland_after;
+            // Reduced costs rc_j = c_j - Σ_rows c_B[r]·t[r][j].
+            let cb: Vec<f64> = self.basis.iter().map(|&b| obj[b]).collect();
+            let mut entering = None;
+            let mut best = EPS;
+            for j in 0..self.n_cols {
+                let mut rc = obj[j];
+                for r in 0..self.n_rows {
+                    if cb[r] != 0.0 {
+                        rc -= cb[r] * self.t[r][j];
+                    }
+                }
+                if bland {
+                    // Bland: first improving column.
+                    if rc > EPS {
+                        entering = Some(j);
+                        break;
+                    }
+                } else if rc > best {
+                    best = rc;
+                    entering = Some(j);
+                }
+            }
+            let Some(col) = entering else {
+                return Ok(true); // optimal
+            };
+            // Ratio test.
+            let mut leave = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.n_rows {
+                if self.t[r][col] > EPS {
+                    let ratio = self.t[r][self.n_cols] / self.t[r][col];
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && leave.map_or(true, |lr: usize| self.basis[r] < self.basis[lr]))
+                    {
+                        best_ratio = ratio;
+                        leave = Some(r);
+                    }
+                }
+            }
+            let Some(row) = leave else {
+                return Ok(false); // unbounded
+            };
+            self.pivot(row, col);
+        }
+        bail!("simplex iteration limit hit");
+    }
+
+    fn objective_value(&self, obj: &[f64]) -> f64 {
+        self.basis
+            .iter()
+            .enumerate()
+            .map(|(r, &b)| obj[b] * self.t[r][self.n_cols])
+            .sum()
+    }
+}
+
+impl LinearProgram {
+    /// Number of structural variables.
+    pub fn n_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> Result<LpSolution> {
+        let n = self.n_vars();
+        let m = self.constraints.len();
+        for (i, c) in self.constraints.iter().enumerate() {
+            if c.coeffs.len() != n {
+                bail!("constraint {i} has {} coeffs, want {n}", c.coeffs.len());
+            }
+        }
+
+        // Normalize rows to nonnegative rhs.
+        let rows: Vec<Constraint> = self
+            .constraints
+            .iter()
+            .map(|c| {
+                if c.rhs < 0.0 {
+                    Constraint {
+                        coeffs: c.coeffs.iter().map(|v| -v).collect(),
+                        op: match c.op {
+                            Op::Le => Op::Ge,
+                            Op::Ge => Op::Le,
+                            Op::Eq => Op::Eq,
+                        },
+                        rhs: -c.rhs,
+                    }
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+
+        // Column layout: [structural | slacks/surplus | artificials].
+        let n_slack = rows.iter().filter(|c| c.op != Op::Eq).count();
+        let n_art = rows.iter().filter(|c| c.op != Op::Le).count();
+        let n_cols = n + n_slack + n_art;
+
+        let mut t = vec![vec![0.0; n_cols + 1]; m];
+        let mut basis = vec![0usize; m];
+        let mut s_off = n;
+        let mut a_off = n + n_slack;
+
+        for (r, c) in rows.iter().enumerate() {
+            t[r][..n].copy_from_slice(&c.coeffs);
+            t[r][n_cols] = c.rhs;
+            match c.op {
+                Op::Le => {
+                    t[r][s_off] = 1.0;
+                    basis[r] = s_off;
+                    s_off += 1;
+                }
+                Op::Ge => {
+                    t[r][s_off] = -1.0;
+                    s_off += 1;
+                    t[r][a_off] = 1.0;
+                    basis[r] = a_off;
+                    a_off += 1;
+                }
+                Op::Eq => {
+                    t[r][a_off] = 1.0;
+                    basis[r] = a_off;
+                    a_off += 1;
+                }
+            }
+        }
+
+        let mut tab = Tableau {
+            t,
+            basis,
+            n_rows: m,
+            n_cols,
+        };
+
+        // Phase 1: maximize -Σ artificials.
+        if n_art > 0 {
+            let mut obj1 = vec![0.0; n_cols];
+            for j in n + n_slack..n_cols {
+                obj1[j] = -1.0;
+            }
+            if !tab.run(&obj1)? {
+                bail!("phase-1 unbounded (cannot happen)");
+            }
+            if tab.objective_value(&obj1) < -1e-7 {
+                return Ok(LpSolution {
+                    status: LpStatus::Infeasible,
+                    x: vec![0.0; n],
+                    value: 0.0,
+                });
+            }
+            // Drive any residual artificial out of the basis when possible.
+            for r in 0..m {
+                if tab.basis[r] >= n + n_slack {
+                    if let Some(col) = (0..n + n_slack).find(|&j| tab.t[r][j].abs() > 1e-7) {
+                        tab.pivot(r, col);
+                    }
+                }
+            }
+        }
+
+        // Phase 2: original objective; artificials pinned at zero cost and
+        // excluded from entering by a large negative cost.
+        let mut obj2 = vec![0.0; n_cols];
+        obj2[..n].copy_from_slice(&self.objective);
+        for j in n + n_slack..n_cols {
+            obj2[j] = -1e12;
+        }
+        let optimal = tab.run(&obj2)?;
+        if !optimal {
+            return Ok(LpSolution {
+                status: LpStatus::Unbounded,
+                x: vec![0.0; n],
+                value: f64::INFINITY,
+            });
+        }
+
+        let mut x = vec![0.0; n];
+        for (r, &b) in tab.basis.iter().enumerate() {
+            if b < n {
+                x[b] = tab.t[r][n_cols];
+            }
+        }
+        let value = self
+            .objective
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum();
+        Ok(LpSolution {
+            status: LpStatus::Optimal,
+            x,
+            value,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(obj: Vec<f64>, cons: Vec<Constraint>) -> LpSolution {
+        LinearProgram {
+            objective: obj,
+            constraints: cons,
+        }
+        .solve()
+        .unwrap()
+    }
+
+    #[test]
+    fn textbook_le_problem() {
+        // max 3x + 5y; x ≤ 4; 2y ≤ 12; 3x + 2y ≤ 18 → (2, 6), value 36.
+        let sol = solve(
+            vec![3.0, 5.0],
+            vec![
+                Constraint::le(vec![1.0, 0.0], 4.0),
+                Constraint::le(vec![0.0, 2.0], 12.0),
+                Constraint::le(vec![3.0, 2.0], 18.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.value - 36.0).abs() < 1e-7);
+        assert!((sol.x[0] - 2.0).abs() < 1e-7);
+        assert!((sol.x[1] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y; x + y = 5; x ≤ 3 → value 5.
+        let sol = solve(
+            vec![1.0, 1.0],
+            vec![
+                Constraint::eq(vec![1.0, 1.0], 5.0),
+                Constraint::le(vec![1.0, 0.0], 3.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.value - 5.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ge_constraints_two_phase() {
+        // max -x - y; x + y ≥ 4; x ≤ 10; y ≤ 10 → value -4.
+        let sol = solve(
+            vec![-1.0, -1.0],
+            vec![
+                Constraint::ge(vec![1.0, 1.0], 4.0),
+                Constraint::le(vec![1.0, 0.0], 10.0),
+                Constraint::le(vec![0.0, 1.0], 10.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.value + 4.0).abs() < 1e-7, "value={}", sol.value);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ 1 and x ≥ 3 cannot both hold.
+        let sol = solve(
+            vec![1.0],
+            vec![
+                Constraint::le(vec![1.0], 1.0),
+                Constraint::ge(vec![1.0], 3.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // max x with only x ≥ 1.
+        let sol = solve(vec![1.0], vec![Constraint::ge(vec![1.0], 1.0)]);
+        assert_eq!(sol.status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // max -x; -x ≥ -5 (i.e. x ≤ 5); x ≥ 2 → x = 2, value -2.
+        let sol = solve(
+            vec![-1.0],
+            vec![
+                Constraint::ge(vec![-1.0], -5.0),
+                Constraint::ge(vec![1.0], 2.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.value + 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degeneracy: multiple rows tie in the ratio test.
+        let sol = solve(
+            vec![0.75, -150.0, 0.02, -6.0],
+            vec![
+                Constraint::le(vec![0.25, -60.0, -0.04, 9.0], 0.0),
+                Constraint::le(vec![0.5, -90.0, -0.02, 3.0], 0.0),
+                Constraint::le(vec![0.0, 0.0, 1.0, 0.0], 1.0),
+            ],
+        );
+        assert_eq!(sol.status, LpStatus::Optimal);
+        assert!((sol.value - 0.05).abs() < 1e-6, "value={}", sol.value);
+    }
+
+    #[test]
+    fn random_lp_feasibility_of_reported_solutions() {
+        use crate::testing::{check, prop_assert};
+        check("simplex solutions are feasible", 60, |g| {
+            let n = g.usize_in(1..6);
+            let m = g.usize_in(1..6);
+            let obj: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0..2.0)).collect();
+            let mut cons = Vec::new();
+            for _ in 0..m {
+                let coeffs: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0..2.0)).collect();
+                cons.push(Constraint::le(coeffs, g.f64_in(0.5..5.0)));
+            }
+            // Box to keep things bounded.
+            for i in 0..n {
+                let mut e = vec![0.0; n];
+                e[i] = 1.0;
+                cons.push(Constraint::le(e, 3.0));
+            }
+            let lp = LinearProgram {
+                objective: obj,
+                constraints: cons.clone(),
+            };
+            let sol = lp.solve().map_err(|e| e.to_string())?;
+            prop_assert(sol.status == LpStatus::Optimal, "not optimal")?;
+            for (i, c) in cons.iter().enumerate() {
+                let lhs: f64 = c.coeffs.iter().zip(&sol.x).map(|(a, b)| a * b).sum();
+                prop_assert(lhs <= c.rhs + 1e-6, &format!("row {i} violated"))?;
+            }
+            prop_assert(sol.x.iter().all(|&v| v >= -1e-9), "negative variable")
+        });
+    }
+}

@@ -1,0 +1,500 @@
+//! Uplink power control — the paper's §III-B pipeline, end to end.
+//!
+//! Per aggregation round, every participating client k gets a transmit
+//! power (eq. (25))
+//!
+//! ```text
+//!   p_k = p_k^max · (β_k·ρ_k + (1-β_k)·θ_k)
+//!   ρ_k = Ω/(s_k + Ω)                       staleness discount
+//!   θ_k = (cos(Δw_k, w_g^t − w_g^{t-1}) + 1)/2   similarity factor
+//! ```
+//!
+//! and the trade-off vector β ∈ [0,1]^K minimizes the power-dependent part
+//! of the convergence bound (Theorem 1, terms (d)+(e)) — problem **P1**:
+//!
+//! ```text
+//!   min_p  L·ε²·K·Σ_k α_k²  +  2·L·d·σ_n² / (Σ_k b_k p_k)²
+//! ```
+//!
+//! Substituting α_k = p_k/Σp and p = P·(θ + Dβ) (P = diag of per-round
+//! effective power caps, D = diag(ρ−θ)) turns P1 into the quadratic
+//! fractional program **P2** = h₁(β)/h₂(β), minimized by maximizing
+//! h₂/h₁ with Dinkelbach (Algorithm 2, [`crate::optim::dinkelbach`]);
+//! the parametric subproblem is solved faithfully by PLA→0-1 MIP for
+//! small active sets and by projected coordinate descent at scale
+//! (DESIGN.md §4.2).
+
+pub mod bound;
+
+use anyhow::Result;
+
+use crate::config::SolverKind;
+use crate::linalg::Matrix;
+use crate::optim::dinkelbach::{maximize_ratio, maximize_ratio_generic, Quadratic};
+use crate::optim::quadratic::RankOneQp;
+use crate::optim::QpSolver;
+use crate::util::Rng;
+
+/// Staleness discount ρ_k = Ω/(s_k + Ω) (eq. (25)).
+pub fn staleness_factor(stale_rounds: usize, omega: f64) -> f64 {
+    assert!(omega > 0.0);
+    omega / (stale_rounds as f64 + omega)
+}
+
+/// Similarity factor θ_k = (cos + 1)/2 ∈ [0, 1] (eq. (25)).
+pub fn similarity_factor(cosine: f64) -> f64 {
+    debug_assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&cosine));
+    (cosine.clamp(-1.0, 1.0) + 1.0) / 2.0
+}
+
+/// One participating client's inputs to the power optimizer.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientFactors {
+    /// s_k — global rounds this update is stale by.
+    pub stale_rounds: usize,
+    /// cos(Δw_k, w_g^t − w_g^{t−1}) ∈ [−1, 1].
+    pub cosine: f64,
+    /// Per-round effective power cap (channel-inversion limited), watts.
+    pub p_cap: f64,
+}
+
+/// Static problem constants (from the bound).
+#[derive(Debug, Clone, Copy)]
+pub struct BoundConstants {
+    /// Smoothness L (paper: 10).
+    pub l_smooth: f64,
+    /// Staleness drift bound ε² (Assumption 3).
+    pub epsilon2: f64,
+    /// Total client count K (the paper's term (d) uses the full K).
+    pub k_total: usize,
+    /// Model dimension d.
+    pub dim: usize,
+    /// Channel noise power σ_n² = B·N₀, watts.
+    pub noise_power: f64,
+    /// Staleness bound Ω.
+    pub omega: f64,
+}
+
+/// Solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSolverConfig {
+    pub solver: SolverKind,
+    /// Active sets larger than this always use PCD (MIP blowup guard).
+    pub mip_max_k: usize,
+    pub pla_segments: usize,
+    pub mip_max_nodes: usize,
+    pub dinkelbach_eps: f64,
+    pub dinkelbach_iters: usize,
+    /// Ablation A1: skip the optimization and use a fixed β for all
+    /// clients (1.0 = staleness-only, 0.0 = similarity-only).
+    pub force_beta: Option<f64>,
+}
+
+impl Default for PowerSolverConfig {
+    fn default() -> Self {
+        Self {
+            solver: SolverKind::Pcd,
+            mip_max_k: 12,
+            pla_segments: 6,
+            mip_max_nodes: 4000,
+            dinkelbach_eps: 1e-6,
+            dinkelbach_iters: 25,
+            force_beta: None,
+        }
+    }
+}
+
+/// Result of one power-control solve.
+#[derive(Debug, Clone)]
+pub struct PowerAllocation {
+    /// Transmit powers for the active clients (same order as input).
+    pub powers: Vec<f64>,
+    /// The β trade-off vector chosen.
+    pub beta: Vec<f64>,
+    /// Final Dinkelbach ratio h₂/h₁ (larger = smaller bound).
+    pub ratio: f64,
+    /// Dinkelbach iterations used.
+    pub iters: usize,
+}
+
+/// Build the P2 quadratics (h₁ = bound numerator, h₂ = (Σp)² denominator)
+/// over the *active* clients only.
+///
+/// Exposed for the optimizer integration tests and the ablation bench.
+pub fn build_p2(
+    factors: &[ClientFactors],
+    consts: &BoundConstants,
+) -> (Quadratic, Quadratic, Vec<f64>, Vec<f64>) {
+    let n = factors.len();
+    let rho: Vec<f64> = factors
+        .iter()
+        .map(|f| staleness_factor(f.stale_rounds, consts.omega))
+        .collect();
+    let theta: Vec<f64> = factors.iter().map(|f| similarity_factor(f.cosine)).collect();
+
+    // p(β) = P·(θ + D·β): per-client affine. Coefficients of p_k:
+    //   p_k = cap_k·θ_k + cap_k·(ρ_k − θ_k)·β_k  =: t_k + d_k·β_k.
+    let t: Vec<f64> = (0..n).map(|i| factors[i].p_cap * theta[i]).collect();
+    let d: Vec<f64> = (0..n)
+        .map(|i| factors[i].p_cap * (rho[i] - theta[i]))
+        .collect();
+
+    // h₁(β) = c1·Σ p_k² + c2  (bound numerator; c1 = L·ε²·K, c2 = 2Ldσ²).
+    let c1 = consts.l_smooth * consts.epsilon2 * consts.k_total as f64;
+    let c2 = 2.0 * consts.l_smooth * consts.dim as f64 * consts.noise_power;
+    // Σ p² = Σ (t + dβ)² = Σ d²β² + 2Σ t·d·β + Σ t².
+    let mut a1 = Matrix::zeros(n, n);
+    let mut b1 = vec![0.0; n];
+    let mut k1 = 0.0;
+    for i in 0..n {
+        a1[(i, i)] = c1 * d[i] * d[i];
+        b1[i] = 2.0 * c1 * t[i] * d[i];
+        k1 += c1 * t[i] * t[i];
+    }
+    let h1 = Quadratic {
+        a: a1,
+        b: b1,
+        c: k1 + c2,
+    };
+
+    // h₂(β) = (Σ p)² = (T + Σ dᵢβᵢ)², T = Σ t.
+    let t_sum: f64 = t.iter().sum();
+    let mut a2 = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a2[(i, j)] = d[i] * d[j];
+        }
+    }
+    let b2: Vec<f64> = d.iter().map(|&di| 2.0 * t_sum * di).collect();
+    let h2 = Quadratic {
+        a: a2,
+        b: b2,
+        c: t_sum * t_sum,
+    };
+
+    (h1, h2, t, d)
+}
+
+/// Solve the round's power control: returns per-active-client powers.
+///
+/// Empty active set returns an empty allocation. A single client gets its
+/// staleness-discounted cap directly (the ratio is β-independent up to
+/// degeneracies; eq. (25) with β = 1 preserves the staleness discount).
+pub fn solve_power_control(
+    factors: &[ClientFactors],
+    consts: &BoundConstants,
+    cfg: &PowerSolverConfig,
+    rng: &mut Rng,
+) -> Result<PowerAllocation> {
+    let n = factors.len();
+    if n == 0 {
+        return Ok(PowerAllocation {
+            powers: vec![],
+            beta: vec![],
+            ratio: 0.0,
+            iters: 0,
+        });
+    }
+
+    let (h1, h2, t, d) = build_p2(factors, consts);
+
+    // Ablation path: fixed β, no optimization (eq. (25) directly).
+    if let Some(b) = cfg.force_beta {
+        let beta = vec![b; n];
+        let powers: Vec<f64> = (0..n).map(|i| (t[i] + d[i] * b).max(0.0)).collect();
+        let ratio = h2.eval(&beta) / h1.eval(&beta);
+        return Ok(PowerAllocation {
+            powers,
+            beta,
+            ratio,
+            iters: 0,
+        });
+    }
+
+    // Degenerate single-client round: any β gives α = 1; keep the paper's
+    // parametric form with β = 1 (pure staleness discount).
+    if n == 1 {
+        let beta = vec![1.0];
+        let p = (t[0] + d[0]).max(0.0);
+        return Ok(PowerAllocation {
+            powers: vec![p],
+            beta,
+            ratio: h2.eval(&[1.0]) / h1.eval(&[1.0]),
+            iters: 0,
+        });
+    }
+
+    let use_mip = matches!(cfg.solver, SolverKind::PlaMip) && n <= cfg.mip_max_k;
+    let rep = if use_mip {
+        maximize_ratio(
+            &h1,
+            &h2,
+            QpSolver::PlaMip {
+                segments: cfg.pla_segments,
+                max_nodes: cfg.mip_max_nodes,
+            },
+            cfg.dinkelbach_eps,
+            cfg.dinkelbach_iters,
+            rng,
+        )?
+    } else {
+        // §Perf fast path: F(β;λ) = (T + dᵀβ)² − λ·(c1·Σ(tᵢ+dᵢβᵢ)² + c2)
+        // is rank-one + diagonal, so coordinate sweeps are O(K) instead of
+        // the dense solver's O(K²) — ~40× at the paper's K = 100.
+        let c1 = consts.l_smooth * consts.epsilon2 * consts.k_total as f64;
+        let c2 = 2.0 * consts.l_smooth * consts.dim as f64 * consts.noise_power;
+        let t_sum: f64 = t.iter().sum();
+        let t2_sum: f64 = t.iter().map(|v| v * v).sum();
+        // O(K) closed-form evaluators (h₁ = c1·Σ(tᵢ+dᵢβᵢ)² + c2,
+        // h₂ = (T + dᵀβ)²) — avoids the dense matvec per Dinkelbach step.
+        let h1_fast = |x: &[f64]| {
+            c1 * x
+                .iter()
+                .enumerate()
+                .map(|(i, &xi)| {
+                    let p = t[i] + d[i] * xi;
+                    p * p
+                })
+                .sum::<f64>()
+                + c2
+        };
+        let h2_fast = |x: &[f64]| {
+            let s: f64 = t_sum + d.iter().zip(x).map(|(a, b)| a * b).sum::<f64>();
+            s * s
+        };
+        maximize_ratio_generic(
+            n,
+            h1_fast,
+            h2_fast,
+            |lambda| {
+                let qp = RankOneQp {
+                    s: 1.0,
+                    u: d.clone(),
+                    t: t_sum,
+                    diag: d.iter().map(|&di| -lambda * c1 * di * di).collect(),
+                    b: (0..n)
+                        .map(|i| -lambda * 2.0 * c1 * t[i] * d[i])
+                        .collect(),
+                    c: -lambda * (c1 * t2_sum + c2),
+                };
+                Ok(qp.maximize_pcd(8, 60, rng))
+            },
+            cfg.dinkelbach_eps,
+            cfg.dinkelbach_iters,
+        )?
+    };
+
+    let powers: Vec<f64> = rep
+        .beta
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| (t[i] + d[i] * b).max(0.0))
+        .collect();
+    Ok(PowerAllocation {
+        powers,
+        beta: rep.beta,
+        ratio: rep.ratio,
+        iters: rep.iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert, prop_close};
+
+    fn consts() -> BoundConstants {
+        BoundConstants {
+            l_smooth: 10.0,
+            epsilon2: 1.0,
+            k_total: 100,
+            dim: 8070,
+            noise_power: 7.96e-14,
+            omega: 3.0,
+        }
+    }
+
+    fn cfg() -> PowerSolverConfig {
+        PowerSolverConfig::default()
+    }
+
+    #[test]
+    fn staleness_factor_values() {
+        assert_eq!(staleness_factor(0, 3.0), 1.0);
+        assert_eq!(staleness_factor(3, 3.0), 0.5);
+        assert!((staleness_factor(9, 3.0) - 0.25).abs() < 1e-12);
+        // Monotone decreasing in staleness.
+        for s in 0..10 {
+            assert!(staleness_factor(s + 1, 3.0) < staleness_factor(s, 3.0));
+        }
+    }
+
+    #[test]
+    fn similarity_factor_range() {
+        assert_eq!(similarity_factor(1.0), 1.0);
+        assert_eq!(similarity_factor(-1.0), 0.0);
+        assert_eq!(similarity_factor(0.0), 0.5);
+    }
+
+    #[test]
+    fn powers_within_caps_property() {
+        check("0 ≤ p_k ≤ cap_k", 30, |g| {
+            let n = g.usize_in(1..10);
+            let factors: Vec<ClientFactors> = (0..n)
+                .map(|_| ClientFactors {
+                    stale_rounds: g.usize_in(0..5),
+                    cosine: g.f64_in(-1.0..1.0),
+                    p_cap: g.f64_in(0.1..15.0),
+                })
+                .collect();
+            let mut rng = Rng::new(g.rng().next_u64());
+            let alloc = solve_power_control(&factors, &consts(), &cfg(), &mut rng)
+                .map_err(|e| e.to_string())?;
+            for (f, &p) in factors.iter().zip(&alloc.powers) {
+                prop_assert(p >= -1e-9, "negative power")?;
+                prop_assert(p <= f.p_cap + 1e-9, "power exceeds cap")?;
+            }
+            for &b in &alloc.beta {
+                prop_assert((-1e-9..=1.0 + 1e-9).contains(&b), "β outside box")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn h1_strictly_positive_on_box() {
+        check("h1 > 0", 30, |g| {
+            let n = g.usize_in(1..8);
+            let factors: Vec<ClientFactors> = (0..n)
+                .map(|_| ClientFactors {
+                    stale_rounds: g.usize_in(0..4),
+                    cosine: g.f64_in(-1.0..1.0),
+                    p_cap: g.f64_in(0.1..15.0),
+                })
+                .collect();
+            let (h1, _h2, _, _) = build_p2(&factors, &consts());
+            let beta: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..1.0)).collect();
+            prop_assert(h1.eval(&beta) > 0.0, "h1 not positive")
+        });
+    }
+
+    #[test]
+    fn identical_clients_get_identical_power() {
+        let factors = vec![
+            ClientFactors {
+                stale_rounds: 1,
+                cosine: 0.4,
+                p_cap: 10.0,
+            };
+            5
+        ];
+        let mut rng = Rng::new(3);
+        let alloc = solve_power_control(&factors, &consts(), &cfg(), &mut rng).unwrap();
+        for w in alloc.powers.windows(2) {
+            assert!(
+                (w[0] - w[1]).abs() < 1e-6,
+                "symmetric clients got asymmetric powers: {:?}",
+                alloc.powers
+            );
+        }
+    }
+
+    #[test]
+    fn fresh_aligned_beats_stale_opposed() {
+        // A fresh, gradient-aligned client should end up with at least the
+        // power of a very stale, opposed client with the same cap.
+        let factors = vec![
+            ClientFactors {
+                stale_rounds: 0,
+                cosine: 0.9,
+                p_cap: 15.0,
+            },
+            ClientFactors {
+                stale_rounds: 6,
+                cosine: -0.9,
+                p_cap: 15.0,
+            },
+        ];
+        let mut rng = Rng::new(4);
+        let alloc = solve_power_control(&factors, &consts(), &cfg(), &mut rng).unwrap();
+        assert!(
+            alloc.powers[0] >= alloc.powers[1],
+            "powers = {:?}",
+            alloc.powers
+        );
+        // The fresh/aligned client's p is high in absolute terms: both ρ
+        // and θ are ≥ 0.9 of cap, so p ≥ 0.9·cap whatever β is.
+        assert!(alloc.powers[0] > 0.85 * 15.0);
+    }
+
+    #[test]
+    fn mip_and_pcd_agree_small() {
+        check("MIP ≈ PCD power ratios", 6, |g| {
+            let n = g.usize_in(2..5);
+            let factors: Vec<ClientFactors> = (0..n)
+                .map(|_| ClientFactors {
+                    stale_rounds: g.usize_in(0..4),
+                    cosine: g.f64_in(-1.0..1.0),
+                    p_cap: g.f64_in(1.0..15.0),
+                })
+                .collect();
+            let mut rng = Rng::new(9);
+            let pcd = solve_power_control(&factors, &consts(), &cfg(), &mut rng)
+                .map_err(|e| e.to_string())?;
+            let mip_cfg = PowerSolverConfig {
+                solver: SolverKind::PlaMip,
+                ..cfg()
+            };
+            let mip = solve_power_control(&factors, &consts(), &mip_cfg, &mut rng)
+                .map_err(|e| e.to_string())?;
+            prop_close(mip.ratio, pcd.ratio, 1e-2, "Dinkelbach ratio")
+        });
+    }
+
+    #[test]
+    fn empty_and_single_active_set() {
+        let mut rng = Rng::new(5);
+        let empty = solve_power_control(&[], &consts(), &cfg(), &mut rng).unwrap();
+        assert!(empty.powers.is_empty());
+
+        let single = solve_power_control(
+            &[ClientFactors {
+                stale_rounds: 3,
+                cosine: 0.0,
+                p_cap: 15.0,
+            }],
+            &consts(),
+            &cfg(),
+            &mut rng,
+        )
+        .unwrap();
+        // β = 1: p = cap·ρ = 15·(3/(3+3)) = 7.5.
+        assert!((single.powers[0] - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisier_channel_shifts_allocation_up() {
+        // With huge σ², term (e) dominates: the optimizer should push the
+        // total power Σp higher than in the quiet-channel solution.
+        let factors: Vec<ClientFactors> = (0..6)
+            .map(|i| ClientFactors {
+                stale_rounds: i % 3,
+                cosine: 0.5 - 0.2 * i as f64,
+                p_cap: 15.0,
+            })
+            .collect();
+        let quiet = consts();
+        let mut loud = consts();
+        loud.noise_power = 7.96e-4; // −74 dBm/Hz regime
+        loud.epsilon2 = 1e-4; // make (e) matter vs (d)
+        let mut rng = Rng::new(6);
+        let q = solve_power_control(&factors, &quiet, &cfg(), &mut rng).unwrap();
+        let l = solve_power_control(&factors, &loud, &cfg(), &mut rng).unwrap();
+        let sum_q: f64 = q.powers.iter().sum();
+        let sum_l: f64 = l.powers.iter().sum();
+        assert!(
+            sum_l >= sum_q - 1e-6,
+            "loud channel did not raise total power: {sum_l} vs {sum_q}"
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Artifact manifest + the typed model runtime the FL layer drives.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` (key=value geometry) and
+//! four HLO-text entry points; [`ModelRuntime`] loads all of them on one
+//! [`Engine`](super::Engine) and exposes the paper's operations with plain
+//! slices:
+//!
+//! * [`ModelRuntime::local_train`] — M-step local SGD (paper eq. (3)/(4)).
+//! * [`ModelRuntime::evaluate`]    — test loss + accuracy.
+//! * [`ModelRuntime::aggregate`]   — AirComp superposition + normalization
+//!   (eq. (6)+(8)); the weighted sum is the L1 Pallas kernel.
+//! * [`ModelRuntime::grad_probe`]  — one full-batch gradient (diagnostics).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::pjrt::{Engine, Exec, Input};
+
+/// Geometry of the AOT artifacts — parsed from `artifacts/manifest.txt`,
+/// the single source of truth shared with `python/compile/aot.py`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Input feature dimension (paper: 784).
+    pub d_in: usize,
+    /// Hidden width of both hidden layers (paper: 10).
+    pub hidden: usize,
+    /// Number of classes (paper: 10).
+    pub classes: usize,
+    /// Flat parameter count (paper model: 8070).
+    pub dim: usize,
+    /// M — local SGD steps per round (paper: 5).
+    pub local_steps: usize,
+    /// Local minibatch size.
+    pub batch: usize,
+    /// K — client rows in the aggregate artifact (paper: 100).
+    pub clients: usize,
+    /// Evaluation set size baked into `evaluate.hlo.txt`.
+    pub eval_size: usize,
+    /// Batch size of the `grad_probe` artifact.
+    pub probe_batch: usize,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` (lines of `key=value`; `#` comments).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("manifest line without '=': {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |key: &str| -> Result<usize> {
+            kv.get(key)
+                .with_context(|| format!("manifest missing key {key:?}"))?
+                .parse::<usize>()
+                .with_context(|| format!("manifest key {key:?} not an integer"))
+        };
+        let m = Self {
+            d_in: get("d_in")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+            dim: get("dim")?,
+            local_steps: get("local_steps")?,
+            batch: get("batch")?,
+            clients: get("clients")?,
+            eval_size: get("eval_size")?,
+            probe_batch: get("probe_batch")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load from `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Internal consistency: flat dim must match the MLP geometry.
+    pub fn validate(&self) -> Result<()> {
+        let want = self.d_in * self.hidden
+            + self.hidden
+            + self.hidden * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes;
+        if want != self.dim {
+            bail!(
+                "manifest dim {} inconsistent with geometry ({} expected)",
+                self.dim,
+                want
+            );
+        }
+        if self.local_steps == 0 || self.batch == 0 || self.clients == 0 {
+            bail!("manifest has zero-sized geometry");
+        }
+        Ok(())
+    }
+}
+
+/// Result of one local training call.
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    /// Updated flat model after M local SGD steps.
+    pub weights: Vec<f32>,
+    /// Mean of the M minibatch losses.
+    pub loss: f32,
+}
+
+/// Result of one evaluation call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOut {
+    /// Mean softmax-CE loss over the eval set.
+    pub loss: f32,
+    /// Fraction of correct predictions in `[0, 1]`.
+    pub accuracy: f32,
+}
+
+/// All four compiled entry points plus their geometry.
+pub struct ModelRuntime {
+    manifest: Manifest,
+    local_train: Exec,
+    evaluate: Exec,
+    aggregate: Exec,
+    grad_probe: Exec,
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact in `dir` on `engine`.
+    pub fn load(engine: &Engine, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let load = |name: &str| -> Result<Exec> {
+            engine.load_hlo_text(&dir.join(format!("{name}.hlo.txt")))
+        };
+        Ok(Self {
+            manifest,
+            local_train: load("local_train")?,
+            evaluate: load("evaluate")?,
+            aggregate: load("aggregate")?,
+            grad_probe: load("grad_probe")?,
+        })
+    }
+
+    /// Default artifact directory: `$PAOTA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PAOTA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// M local SGD steps: `w ← w − η ∇F_k(w; D_k^τ)` for τ = 1..M.
+    ///
+    /// `xs` is `[M, B, d_in]` flat, `ys` is `[M, B, classes]` flat one-hot.
+    pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<TrainOut> {
+        let m = &self.manifest;
+        let (ms, b) = (m.local_steps as i64, m.batch as i64);
+        self.check_len("local_train.w", w, m.dim)?;
+        self.check_len("local_train.xs", xs, m.local_steps * m.batch * m.d_in)?;
+        self.check_len("local_train.ys", ys, m.local_steps * m.batch * m.classes)?;
+        let lr_v = [lr];
+        let out = self.local_train.run(&[
+            Input::new(w, &[m.dim as i64]),
+            Input::new(xs, &[ms, b, m.d_in as i64]),
+            Input::new(ys, &[ms, b, m.classes as i64]),
+            Input::new(&lr_v, &[]),
+        ])?;
+        let [weights, loss] = take2(out, "local_train")?;
+        Ok(TrainOut {
+            weights,
+            loss: scalar(&loss, "local_train.loss")?,
+        })
+    }
+
+    /// Evaluate on the baked eval set shape `[eval_size, d_in]`.
+    pub fn evaluate(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<EvalOut> {
+        let m = &self.manifest;
+        self.check_len("evaluate.w", w, m.dim)?;
+        self.check_len("evaluate.x", x, m.eval_size * m.d_in)?;
+        self.check_len("evaluate.y", y, m.eval_size * m.classes)?;
+        let out = self.evaluate.run(&[
+            Input::new(w, &[m.dim as i64]),
+            Input::new(x, &[m.eval_size as i64, m.d_in as i64]),
+            Input::new(y, &[m.eval_size as i64, m.classes as i64]),
+        ])?;
+        let [loss, correct] = take2(out, "evaluate")?;
+        Ok(EvalOut {
+            loss: scalar(&loss, "evaluate.loss")?,
+            accuracy: scalar(&correct, "evaluate.correct")? / m.eval_size as f32,
+        })
+    }
+
+    /// AirComp aggregation: `w_g = (coefᵀ·W + n) / Σ coef` over the full
+    /// K-row stack (rows with `coef == 0` are non-participants).
+    pub fn aggregate(&self, w_stack: &[f32], coef: &[f32], noise: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        self.check_len("aggregate.w_stack", w_stack, m.clients * m.dim)?;
+        self.check_len("aggregate.coef", coef, m.clients)?;
+        self.check_len("aggregate.noise", noise, m.dim)?;
+        let out = self.aggregate.run(&[
+            Input::new(w_stack, &[m.clients as i64, m.dim as i64]),
+            Input::new(coef, &[m.clients as i64]),
+            Input::new(noise, &[m.dim as i64]),
+        ])?;
+        let [w_g] = take1(out, "aggregate")?;
+        Ok(w_g)
+    }
+
+    /// One full-batch gradient over `[probe_batch, d_in]`.
+    pub fn grad_probe(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        self.check_len("grad_probe.w", w, m.dim)?;
+        self.check_len("grad_probe.x", x, m.probe_batch * m.d_in)?;
+        self.check_len("grad_probe.y", y, m.probe_batch * m.classes)?;
+        let out = self.grad_probe.run(&[
+            Input::new(w, &[m.dim as i64]),
+            Input::new(x, &[m.probe_batch as i64, m.d_in as i64]),
+            Input::new(y, &[m.probe_batch as i64, m.classes as i64]),
+        ])?;
+        let [g] = take1(out, "grad_probe")?;
+        Ok(g)
+    }
+
+    fn check_len(&self, what: &str, data: &[f32], want: usize) -> Result<()> {
+        if data.len() != want {
+            bail!("{what}: expected {want} elements, got {}", data.len());
+        }
+        Ok(())
+    }
+}
+
+fn take1(mut out: Vec<Vec<f32>>, name: &str) -> Result<[Vec<f32>; 1]> {
+    if out.len() != 1 {
+        bail!("{name}: expected 1 output, got {}", out.len());
+    }
+    Ok([out.remove(0)])
+}
+
+fn take2(mut out: Vec<Vec<f32>>, name: &str) -> Result<[Vec<f32>; 2]> {
+    if out.len() != 2 {
+        bail!("{name}: expected 2 outputs, got {}", out.len());
+    }
+    let b = out.remove(1);
+    let a = out.remove(0);
+    Ok([a, b])
+}
+
+fn scalar(v: &[f32], what: &str) -> Result<f32> {
+    if v.len() != 1 {
+        bail!("{what}: expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "# comment\nd_in=784\nhidden=10\nclasses=10\ndim=8070\n\
+                        local_steps=5\nbatch=32\nclients=100\neval_size=2000\nprobe_batch=256\n";
+
+    #[test]
+    fn parse_good_manifest() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.dim, 8070);
+        assert_eq!(m.clients, 100);
+        assert_eq!(m.local_steps, 5);
+    }
+
+    #[test]
+    fn parse_rejects_missing_key() {
+        let broken = GOOD.replace("clients=100\n", "");
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_integer() {
+        let broken = GOOD.replace("dim=8070", "dim=abc");
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_inconsistent_dim() {
+        let broken = GOOD.replace("dim=8070", "dim=9999");
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_comments() {
+        let spaced = GOOD.replace("d_in=784", "  d_in = 784  ");
+        assert_eq!(Manifest::parse(&spaced).unwrap().d_in, 784);
+    }
+
+    #[test]
+    fn scalar_helper() {
+        assert_eq!(scalar(&[3.5], "x").unwrap(), 3.5);
+        assert!(scalar(&[1.0, 2.0], "x").is_err());
+        assert!(scalar(&[], "x").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them on the PJRT CPU
+//! client from the coordinator hot path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! `python/compile/aot.py` for why text rather than serialized protos), and
+//! after `make artifacts` the `repro` binary is fully self-contained.
+//!
+//! Layering:
+//! * [`pjrt`] — thin, checked wrapper over the `xla` crate
+//!   (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//!   `execute`), flat `f32` in/out.
+//! * [`artifacts`] — the manifest parser plus [`artifacts::ModelRuntime`],
+//!   the typed façade the FL layer calls (`local_train`, `evaluate`,
+//!   `aggregate`, `grad_probe`).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`): each worker thread builds its
+//! own [`pjrt::Engine`]. Compilation of the paper-scale artifacts takes
+//! milliseconds, so per-thread engines are cheap.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod pool;
+
+pub use artifacts::{EvalOut, Manifest, ModelRuntime, TrainOut};
+pub use pjrt::{Engine, Exec};
+pub use pool::TrainPool;

@@ -1,0 +1,137 @@
+//! Thin, checked wrapper around the `xla` crate's PJRT client.
+//!
+//! Everything the FL layer feeds the accelerator is a flat `f32` slice plus
+//! a shape; everything that comes back is a `Vec<f32>` (plus scalars). This
+//! module owns the Literal plumbing and tuple unpacking so no other module
+//! touches `xla::` types.
+
+use anyhow::{bail, Context, Result};
+
+/// A PJRT engine: one CPU client. Not `Send` (the underlying client is
+/// `Rc`-backed) — build one per thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name as reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    ///
+    /// The text parser reassigns instruction ids, which is exactly why the
+    /// interchange format is text (jax ≥ 0.5 emits 64-bit ids that
+    /// xla_extension 0.5.1 rejects in proto form).
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Exec {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled executable plus its name (for error messages).
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// One input tensor: flat `f32` data + dims. Scalars use `dims = &[]`.
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl<'a> Input<'a> {
+    pub fn new(data: &'a [f32], dims: &'a [i64]) -> Self {
+        Self { data, dims }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let expect: i64 = self.dims.iter().product::<i64>();
+        if self.dims.is_empty() {
+            if self.data.len() != 1 {
+                bail!("scalar input must have exactly 1 element");
+            }
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        if expect as usize != self.data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                self.dims,
+                expect,
+                self.data.len()
+            );
+        }
+        // Single-copy path (§Perf): build the shaped literal directly from
+        // the raw bytes instead of vec1 + reshape (two copies). The 3.2 MB
+        // aggregate stack goes through here every round.
+        let dims_usize: Vec<usize> = self.dims.iter().map(|&d| d as usize).collect();
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims_usize,
+            bytes,
+        )?)
+    }
+}
+
+impl Exec {
+    /// Execute with flat-f32 inputs; returns each tuple element as a flat
+    /// `Vec<f32>` (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("building inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let buf = result
+            .first()
+            .and_then(|replica| replica.first())
+            .with_context(|| format!("{}: empty result", self.name))?;
+        let root = buf
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetching result", self.name))?;
+        let parts = root
+            .to_tuple()
+            .with_context(|| format!("{}: untupling result", self.name))?;
+        parts
+            .iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("{}: output to f32", self.name))
+            })
+            .collect()
+    }
+
+    /// Name of the artifact this executable came from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}

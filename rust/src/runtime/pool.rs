@@ -1,0 +1,286 @@
+//! Parallel local-training pool (§Perf, L3).
+//!
+//! ~84% of a PAOTA round is the participants' `local_train` executions,
+//! which are independent — but `PjRtClient` is `Rc`-backed (not `Send`),
+//! so the pool spawns N worker threads that each build their *own* PJRT
+//! engine and compile the `local_train` artifact once. Jobs are
+//! distributed over a shared channel; results carry the submission index
+//! so callers get deterministic, order-preserving output regardless of
+//! completion order (bit-identical to the sequential path: each job's
+//! numerics are self-contained).
+//!
+//! Worker count defaults to `min(available_parallelism, 8)`; set
+//! `PAOTA_WORKERS=1` to force the sequential path (used by the perf bench
+//! to measure the speedup).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::artifacts::TrainOut;
+use super::pjrt::{Engine, Input};
+
+/// One local-training job.
+struct Job {
+    idx: usize,
+    w: Vec<f32>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    lr: f32,
+}
+
+/// Worker → caller result.
+struct JobResult {
+    idx: usize,
+    out: Result<TrainOut>,
+}
+
+/// A pool of PJRT workers dedicated to the `local_train` artifact.
+pub struct TrainPool {
+    jobs: Sender<Job>,
+    results: Receiver<JobResult>,
+    workers: usize,
+    _threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Geometry a worker needs to validate/shape inputs.
+#[derive(Clone, Copy)]
+struct Geom {
+    dim: usize,
+    local_steps: usize,
+    batch: usize,
+    d_in: usize,
+    classes: usize,
+}
+
+impl TrainPool {
+    /// Number of workers chosen for this machine (≥ 1).
+    pub fn default_workers() -> usize {
+        if let Ok(v) = std::env::var("PAOTA_WORKERS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(8))
+            .unwrap_or(1)
+    }
+
+    /// Spawn `workers` threads, each compiling `local_train.hlo.txt` from
+    /// `artifacts_dir` on its own engine.
+    pub fn new(artifacts_dir: &std::path::Path, workers: usize) -> Result<Self> {
+        let manifest = super::Manifest::load(artifacts_dir)?;
+        let geom = Geom {
+            dim: manifest.dim,
+            local_steps: manifest.local_steps,
+            batch: manifest.batch,
+            d_in: manifest.d_in,
+            classes: manifest.classes,
+        };
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = channel::<JobResult>();
+
+        let mut threads = Vec::with_capacity(workers);
+        let dir: PathBuf = artifacts_dir.to_path_buf();
+        for worker_id in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let res_tx = res_tx.clone();
+            let dir = dir.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("paota-train-{worker_id}"))
+                .spawn(move || {
+                    // Each worker owns its engine + executable.
+                    let built = (|| -> Result<_> {
+                        let engine = Engine::cpu()?;
+                        let exe = engine
+                            .load_hlo_text(&dir.join("local_train.hlo.txt"))
+                            .context("pool worker compiling local_train")?;
+                        Ok((engine, exe))
+                    })();
+                    let (_engine, exe) = match built {
+                        Ok(pair) => pair,
+                        Err(e) => {
+                            // Surface the failure on the first job instead
+                            // of dying silently.
+                            while let Ok(job) = job_rx.lock().unwrap().recv() {
+                                let _ = res_tx.send(JobResult {
+                                    idx: job.idx,
+                                    out: Err(anyhow::anyhow!(
+                                        "pool worker failed to initialize: {e:#}"
+                                    )),
+                                });
+                            }
+                            return;
+                        }
+                    };
+                    loop {
+                        let job = match job_rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return, // pool dropped
+                        };
+                        let out = (|| -> Result<TrainOut> {
+                            let lr_v = [job.lr];
+                            let got = exe.run(&[
+                                Input::new(&job.w, &[geom.dim as i64]),
+                                Input::new(
+                                    &job.xs,
+                                    &[
+                                        geom.local_steps as i64,
+                                        geom.batch as i64,
+                                        geom.d_in as i64,
+                                    ],
+                                ),
+                                Input::new(
+                                    &job.ys,
+                                    &[
+                                        geom.local_steps as i64,
+                                        geom.batch as i64,
+                                        geom.classes as i64,
+                                    ],
+                                ),
+                                Input::new(&lr_v, &[]),
+                            ])?;
+                            anyhow::ensure!(got.len() == 2, "local_train arity");
+                            let loss = *got[1]
+                                .first()
+                                .context("local_train loss scalar")?;
+                            Ok(TrainOut {
+                                weights: got.into_iter().next().unwrap(),
+                                loss,
+                            })
+                        })();
+                        if res_tx.send(JobResult { idx: job.idx, out }).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .context("spawning pool worker")?;
+            threads.push(handle);
+        }
+
+        Ok(Self {
+            jobs: job_tx,
+            results: res_rx,
+            workers,
+            _threads: threads,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run a batch of local-training jobs; returns outputs in submission
+    /// order. Inputs are `(w, xs, ys)` with the artifact's fixed shapes.
+    pub fn run_batch(
+        &self,
+        jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+        lr: f32,
+    ) -> Result<Vec<TrainOut>> {
+        let n = jobs.len();
+        for (idx, (w, xs, ys)) in jobs.into_iter().enumerate() {
+            self.jobs
+                .send(Job { idx, w, xs, ys, lr })
+                .context("pool submit (workers died?)")?;
+        }
+        let mut out: Vec<Option<TrainOut>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let res = self.results.recv().context("pool collect")?;
+            out[res.idx] = Some(res.out?);
+        }
+        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelRuntime;
+    use crate::util::Rng;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = ModelRuntime::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: no artifacts");
+            None
+        }
+    }
+
+    fn job(m: &crate::runtime::Manifest, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut w = vec![0.0f32; m.dim];
+        rng.fill_normal(&mut w, 0.05);
+        let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+        rng.fill_normal(&mut xs, 0.5);
+        let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+        for r in 0..(m.local_steps * m.batch) {
+            ys[r * m.classes + rng.index(m.classes)] = 1.0;
+        }
+        (w, xs, ys)
+    }
+
+    #[test]
+    fn pool_matches_sequential_runtime_bitwise() {
+        let Some(dir) = artifacts() else { return };
+        let engine = Engine::cpu().unwrap();
+        let rt = ModelRuntime::load(&engine, &dir).unwrap();
+        let m = rt.manifest().clone();
+        let pool = TrainPool::new(&dir, 3).unwrap();
+
+        let mut rng = Rng::new(42);
+        let jobs: Vec<_> = (0..7).map(|_| job(&m, &mut rng)).collect();
+        let seq: Vec<TrainOut> = jobs
+            .iter()
+            .map(|(w, xs, ys)| rt.local_train(w, xs, ys, 0.1).unwrap())
+            .collect();
+        let par = pool.run_batch(jobs, 0.1).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(&par) {
+            assert_eq!(s.loss, p.loss);
+            assert_eq!(s.weights, p.weights);
+        }
+    }
+
+    #[test]
+    fn pool_preserves_submission_order() {
+        let Some(dir) = artifacts() else { return };
+        let engine = Engine::cpu().unwrap();
+        let rt = ModelRuntime::load(&engine, &dir).unwrap();
+        let m = rt.manifest().clone();
+        let pool = TrainPool::new(&dir, 4).unwrap();
+
+        // Jobs with distinct, recognizable losses (different label layouts).
+        let mut rng = Rng::new(7);
+        let jobs: Vec<_> = (0..8).map(|_| job(&m, &mut rng)).collect();
+        let expect: Vec<f32> = jobs
+            .iter()
+            .map(|(w, xs, ys)| rt.local_train(w, xs, ys, 0.05).unwrap().loss)
+            .collect();
+        let got: Vec<f32> = pool
+            .run_batch(jobs, 0.05)
+            .unwrap()
+            .into_iter()
+            .map(|t| t.loss)
+            .collect();
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let Some(dir) = artifacts() else { return };
+        let pool = TrainPool::new(&dir, 1).unwrap();
+        assert_eq!(pool.workers(), 1);
+        let engine = Engine::cpu().unwrap();
+        let rt = ModelRuntime::load(&engine, &dir).unwrap();
+        let m = rt.manifest().clone();
+        let mut rng = Rng::new(3);
+        let out = pool.run_batch(vec![job(&m, &mut rng)], 0.1).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].loss.is_finite());
+    }
+}

@@ -1,0 +1,156 @@
+//! Device-heterogeneity simulation: per-round compute-latency models and
+//! the virtual clock used for all "training time" reporting.
+//!
+//! The paper's testbed (§IV-A) draws each client's per-round computation
+//! latency from U(5, 15) s; Table I's "time/s" column is virtual time under
+//! that model (PAOTA rounds take exactly ΔT; synchronous rounds take the
+//! max participant latency). Ablations swap in the other models.
+
+pub mod events;
+
+use crate::util::Rng;
+
+/// Per-round client compute-latency model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyModel {
+    /// U(lo, hi) seconds — the paper's setting (5, 15).
+    Uniform { lo: f64, hi: f64 },
+    /// All clients identical (no stragglers; sanity/ablation).
+    Homogeneous { value: f64 },
+    /// Two device classes: fast clients at `fast`, a `slow_frac` fraction
+    /// of draws at `slow` (severe-straggler ablation).
+    Bimodal { fast: f64, slow: f64, slow_frac: f64 },
+}
+
+impl LatencyModel {
+    /// Draw one per-round latency.
+    pub fn draw(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Uniform { lo, hi } => rng.uniform(lo, hi),
+            LatencyModel::Homogeneous { value } => value,
+            LatencyModel::Bimodal {
+                fast,
+                slow,
+                slow_frac,
+            } => {
+                if rng.f64() < slow_frac {
+                    slow
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+
+    /// Mean latency (closed form).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::Uniform { lo, hi } => (lo + hi) / 2.0,
+            LatencyModel::Homogeneous { value } => value,
+            LatencyModel::Bimodal {
+                fast,
+                slow,
+                slow_frac,
+            } => fast * (1.0 - slow_frac) + slow * slow_frac,
+        }
+    }
+}
+
+/// Monotone virtual clock — all reported "training time" comes from here,
+/// never from the wall clock, so runs are machine-independent.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` (must be non-negative); returns the new time.
+    pub fn advance(&mut self, dt: f64) -> f64 {
+        assert!(dt >= 0.0, "time cannot go backwards (dt = {dt})");
+        self.now += dt;
+        self.now
+    }
+
+    /// Advance to an absolute time (must not be in the past).
+    pub fn advance_to(&mut self, t: f64) -> f64 {
+        assert!(
+            t >= self.now - 1e-9,
+            "advance_to({t}) is before now ({})",
+            self.now
+        );
+        self.now = self.now.max(t);
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, prop_assert};
+
+    #[test]
+    fn uniform_latency_range_and_mean() {
+        let m = LatencyModel::Uniform { lo: 5.0, hi: 15.0 };
+        let mut rng = Rng::new(1);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let l = m.draw(&mut rng);
+            assert!((5.0..15.0).contains(&l));
+            sum += l;
+        }
+        assert!((sum / n as f64 - 10.0).abs() < 0.05);
+        assert_eq!(m.mean(), 10.0);
+    }
+
+    #[test]
+    fn homogeneous_is_constant() {
+        let m = LatencyModel::Homogeneous { value: 7.5 };
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            assert_eq!(m.draw(&mut rng), 7.5);
+        }
+    }
+
+    #[test]
+    fn bimodal_fraction() {
+        let m = LatencyModel::Bimodal {
+            fast: 2.0,
+            slow: 30.0,
+            slow_frac: 0.2,
+        };
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let slow = (0..n).filter(|_| m.draw(&mut rng) == 30.0).count();
+        assert!((slow as f64 / n as f64 - 0.2).abs() < 0.01);
+        assert!((m.mean() - (2.0 * 0.8 + 30.0 * 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        check("clock never goes backwards", 50, |g| {
+            let mut c = VirtualClock::new();
+            let mut last = 0.0;
+            for _ in 0..g.usize_in(1..20) {
+                let t = c.advance(g.f64_in(0.0..10.0));
+                prop_assert(t >= last, "clock went backwards")?;
+                last = t;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "time cannot go backwards")]
+    fn clock_rejects_negative() {
+        VirtualClock::new().advance(-1.0);
+    }
+}

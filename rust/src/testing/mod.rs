@@ -1,0 +1,197 @@
+//! Mini property-testing framework (offline stand-in for `proptest`).
+//!
+//! Provides seeded-random case generation with automatic *input shrinking*
+//! on failure, so coordinator invariants can be tested the proptest way:
+//!
+//! ```ignore
+//! use paota::testing::{check, Gen};
+//! check("weights normalize", 200, |g| {
+//!     let v = g.vec_f64(1..20, 0.0..10.0);
+//!     let s: f64 = v.iter().sum();
+//!     prop_assert(s >= 0.0)
+//! });
+//! ```
+//!
+//! Failures report the seed of the failing case so it can be replayed with
+//! `PAOTA_PROP_SEED=<seed>`; `PAOTA_PROP_CASES` scales case counts.
+
+use crate::util::Rng;
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert approximate equality inside a property.
+pub fn prop_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} !≈ {b} (tol {tol})"))
+    }
+}
+
+/// Case generator handed to properties — a thin layer over [`Rng`] with
+/// range-style helpers.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]: grows over the run so early cases are small.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in `[lo, hi)`, biased small early in the run.
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        let span = range.end - range.start;
+        let scaled = ((span as f64 * self.size).ceil() as usize).clamp(1, span);
+        range.start + self.rng.index(scaled)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, range: std::ops::Range<f64>) -> f64 {
+        self.rng.uniform(range.start, range.end)
+    }
+
+    /// Bool with probability `p` of true.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    /// Vec of f64 with length drawn from `len` and values from `vals`.
+    pub fn vec_f64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<f64>,
+    ) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    /// Vec of f32.
+    pub fn vec_f32(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<f64>,
+    ) -> Vec<f32> {
+        self.vec_f64(len, vals).into_iter().map(|v| v as f32).collect()
+    }
+}
+
+fn env_cases(default_cases: usize) -> usize {
+    std::env::var("PAOTA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("PAOTA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the failing seed
+/// on the first failure. The per-case seed is derived deterministically
+/// from the property name so adding properties elsewhere doesn't reshuffle
+/// this one's cases.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+
+    if let Some(seed) = env_seed() {
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name:?} failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+
+    let cases = env_cases(cases);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let size = 0.1 + 0.9 * (i as f64 + 1.0) / cases as f64;
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink pass: retry with smaller size hints on the same seed;
+            // report the smallest size that still fails.
+            let mut fail_size = size;
+            for shrink in [0.05, 0.1, 0.2, 0.4] {
+                if shrink >= size {
+                    break;
+                }
+                let mut g2 = Gen::new(seed, shrink);
+                if prop(&mut g2).is_err() {
+                    fail_size = shrink;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed on case {i}/{cases} \
+                 (seed {seed}, size {fail_size:.2}): {msg}\n\
+                 replay with PAOTA_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum of abs is nonneg", 50, |g| {
+            let v = g.vec_f64(0..10, -5.0..5.0);
+            let s: f64 = v.iter().map(|x| x.abs()).sum();
+            prop_assert(s >= 0.0, "negative abs-sum")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 20, |g| {
+            let v = g.f64_in(0.0..1.0);
+            prop_assert(v < 0.0, "uniform draw is never negative")
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("usize_in respects range", 100, |g| {
+            let n = g.usize_in(3..17);
+            prop_assert((3..17).contains(&n), "out of range")
+        });
+        check("f64_in respects range", 100, |g| {
+            let x = g.f64_in(-2.0..3.0);
+            prop_assert((-2.0..3.0).contains(&x), "out of range")
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(prop_close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal leveled logger (offline environment: no `tracing`/`env_logger`).
+//!
+//! Global level, set once from the CLI (`--log-level`) or
+//! `PAOTA_LOG=debug|info|warn|error`. Macros mirror the `log` crate's shape
+//! so call sites read conventionally.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+/// Set the global level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from `PAOTA_LOG` if present.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("PAOTA_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Whether `level` is currently enabled.
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log at `level` (used by the macros; prefer those at call sites).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.tag(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,16 @@
+//! Small shared substrates: deterministic PRNG with the distributions the
+//! paper's simulation needs, vector math over flat `f32` models, logging,
+//! and wall-clock timing helpers.
+//!
+//! The build environment is fully offline (only the `xla` crate closure is
+//! vendored), so these are hand-rolled rather than pulled from `rand`/
+//! `tracing` — and unit-tested like any other substrate.
+
+pub mod log;
+pub mod rng;
+pub mod timer;
+pub mod vecmath;
+
+pub use log::{set_level, Level};
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,301 @@
+//! Deterministic PRNG + the distributions the PAOTA simulation draws from.
+//!
+//! Core generator: PCG-XSH-RR 64/32 (O'Neill 2014) — small state, good
+//! statistical quality, trivially reproducible across platforms. On top of
+//! it: uniform/normal (Box–Muller), Rayleigh (the paper's fading model,
+//! §II-C), exponential (|h|² of a CN(0,1) coefficient), and the sampling
+//! utilities the data partitioner uses (shuffle, choice without
+//! replacement).
+//!
+//! Every stochastic component in the system takes an explicit `Rng` so runs
+//! are bit-reproducible given a seed; independent streams are derived with
+//! [`Rng::split`].
+
+/// PCG-XSH-RR 64/32 with 64-bit state and a per-stream increment.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// Cached second output of Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Seeded generator on the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Seeded generator on an explicit stream (odd-ified internally).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream; deterministic in (self, tag).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Rng::with_stream(seed ^ tag.wrapping_mul(0x9e3779b97f4a7c15), tag)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    pub fn f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection method (unbiased).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u32() as u64;
+            let m = x * n as u64;
+            let lo = m as u32;
+            if lo >= n || lo >= (u32::MAX - n + 1) % n {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        assert!(n > 0 && n <= u32::MAX as usize);
+        self.below(n as u32) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Rayleigh with scale σ (mode). `E[X] = σ√(π/2)`, `E[X²] = 2σ²`.
+    ///
+    /// This is the paper's uplink fading magnitude model: `|h| ~ Rayleigh`.
+    pub fn rayleigh(&mut self, sigma: f64) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return sigma * (-2.0 * (1.0 - u).ln()).sqrt();
+            }
+        }
+    }
+
+    /// Exponential with rate λ (`|h|²` of CN(0,1) is Exp(1)).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return -(1.0 - u).ln() / lambda;
+            }
+        }
+    }
+
+    /// Fill a slice with i.i.d. `N(0, std²)` f32 samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = (self.normal() * std as f64) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.index(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_streams_are_independentish() {
+        let mut root = Rng::new(7);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.f64();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_range() {
+        let mut rng = Rng::new(11);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 1e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+    }
+
+    #[test]
+    fn rayleigh_moments() {
+        // E[X] = σ√(π/2), Var = (2 − π/2)σ².
+        let sigma = 2.0;
+        let mut rng = Rng::new(9);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = rng.rayleigh(sigma);
+            assert!(x >= 0.0);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let want_mean = sigma * (std::f64::consts::PI / 2.0).sqrt();
+        assert!((mean - want_mean).abs() < 2e-2, "mean={mean} want={want_mean}");
+        let e2 = sq / n as f64;
+        assert!((e2 - 2.0 * sigma * sigma).abs() < 0.1, "E[X²]={e2}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(13);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += rng.exponential(0.5);
+        }
+        assert!((sum / n as f64 - 2.0).abs() < 5e-2);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(17);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_indices_distinct_and_in_range() {
+        let mut rng = Rng::new(19);
+        for _ in 0..50 {
+            let k = rng.index(20) + 1;
+            let picked = rng.choose_indices(30, k);
+            assert_eq!(picked.len(), k);
+            let mut s = picked.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), k, "duplicates in {picked:?}");
+            assert!(picked.iter().all(|&i| i < 30));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Wall-clock timing helpers for the benchmark harness and perf logging.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch with lap support.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<Duration>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+            laps: Vec::new(),
+        }
+    }
+
+    /// Time since start (or last `lap`).
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        self.laps.push(d);
+        d
+    }
+
+    /// Time since start without resetting.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn laps(&self) -> &[Duration] {
+        &self.laps
+    }
+}
+
+/// Format a duration compactly (`1.23ms`, `4.56s`).
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = sw.lap();
+        assert!(l1 >= Duration::from_millis(1));
+        assert_eq!(sw.laps().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Flat-vector math over `f32` models.
+//!
+//! The whole coordinator works on flat `f32[dim]` model vectors (see
+//! DESIGN.md "flat-parameter convention"); these are the few primitives it
+//! needs, written to be allocation-free on the hot path.
+
+/// Dot product (f64 accumulator for stability over 8k+ elements).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine of the angle between two vectors, in `[-1, 1]`.
+///
+/// This is the paper's `Θ(a, b)` (eq. (25)) — the gradient-similarity
+/// measure between a client update and the last global update direction.
+/// Zero vectors get cosine 0 (neutral similarity).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// `out = a - b`.
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert!(a.len() == b.len() && a.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// `y += alpha * x` (axpy).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y *= s`.
+pub fn scale(y: &mut [f32], s: f32) {
+    for v in y.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Squared L2 distance.
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_basic() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_zero_vector_is_neutral() {
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(cosine(&[1.0, 2.0], &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_clamped() {
+        // Nearly-parallel vectors must not exceed 1 from rounding.
+        let a = vec![0.1f32; 1000];
+        let c = cosine(&a, &a);
+        assert!(c <= 1.0 && c > 0.999999);
+    }
+
+    #[test]
+    fn axpy_scale_sub() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![10.5, 21.0]);
+        let mut out = vec![0.0f32; 2];
+        sub(&[5.0, 5.0], &[1.0, 2.0], &mut out);
+        assert_eq!(out, vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn dist2_matches_norm_of_diff() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 3.0];
+        assert!((dist2(&a, &b) - 25.0).abs() < 1e-12);
+    }
+}

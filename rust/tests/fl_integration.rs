@@ -1,0 +1,258 @@
+//! Integration over the full FL stack: trainers + runtime + channel +
+//! power control on the real AOT artifacts (paper-scale K = 100).
+//!
+//! Tests are skipped with a loud eprintln when artifacts are missing.
+
+use paota::config::{Algorithm, Config, LatencyKind};
+use paota::fl::{self, TrainContext};
+use paota::runtime::{Engine, ModelRuntime};
+
+fn have_artifacts() -> bool {
+    let ok = ModelRuntime::default_dir().join("manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: run `make artifacts` first");
+    }
+    ok
+}
+
+fn quick_cfg() -> Config {
+    let mut c = Config::default();
+    c.rounds = 4;
+    c.eval_every = 2;
+    c
+}
+
+#[test]
+fn paota_deterministic_given_seed() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = quick_cfg();
+    let r1 = fl::run(&cfg).unwrap();
+    let r2 = fl::run(&cfg).unwrap();
+    assert_eq!(r1.records.len(), r2.records.len());
+    for (a, b) in r1.records.iter().zip(&r2.records) {
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.train_loss, b.train_loss);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(r1.final_weights, r2.final_weights);
+}
+
+#[test]
+fn paota_seed_changes_trajectory() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c1 = quick_cfg();
+    c1.seed = 1;
+    let mut c2 = quick_cfg();
+    c2.seed = 2;
+    let r1 = fl::run(&c1).unwrap();
+    let r2 = fl::run(&c2).unwrap();
+    assert_ne!(r1.final_weights, r2.final_weights);
+}
+
+#[test]
+fn paota_round_timing_is_exactly_delta_t() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = quick_cfg();
+    let run = fl::run(&cfg).unwrap();
+    for (i, r) in run.records.iter().enumerate() {
+        assert_eq!(r.round, i);
+        assert!((r.sim_time - (i as f64 + 1.0) * cfg.delta_t).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn paota_staleness_appears_with_slow_clients_only() {
+    if !have_artifacts() {
+        return;
+    }
+    // Homogeneous latency below ΔT: everyone participates each round with
+    // zero staleness.
+    let mut c = quick_cfg();
+    c.latency_kind = LatencyKind::Homogeneous;
+    c.latency_lo = 6.0;
+    c.latency_hi = 6.0; // homogeneous value = mean = 6 < ΔT = 8
+    let run = fl::run(&c).unwrap();
+    for r in &run.records {
+        assert_eq!(r.participants, c.partition.clients);
+        assert_eq!(r.mean_staleness, 0.0);
+    }
+
+    // Homogeneous latency in (ΔT, 2ΔT): every client spans two windows —
+    // uploads arrive every other round with staleness 1.
+    let mut c2 = quick_cfg();
+    c2.rounds = 5;
+    c2.latency_kind = LatencyKind::Homogeneous;
+    c2.latency_lo = 12.0;
+    c2.latency_hi = 12.0;
+    let run2 = fl::run(&c2).unwrap();
+    // Round 0 (t ≤ 8): nobody done. Round 1 (t ≤ 16): all (stale 1). ...
+    assert_eq!(run2.records[0].participants, 0);
+    assert_eq!(run2.records[1].participants, c2.partition.clients);
+    assert!((run2.records[1].mean_staleness - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn sync_baselines_round_time_within_latency_bounds() {
+    if !have_artifacts() {
+        return;
+    }
+    for algo in [Algorithm::LocalSgd, Algorithm::Cotaf] {
+        let mut c = quick_cfg();
+        c.algorithm = algo;
+        let run = fl::run(&c).unwrap();
+        let mut last = 0.0;
+        for r in &run.records {
+            let dur = r.sim_time - last;
+            last = r.sim_time;
+            assert!(
+                dur >= c.latency_lo && dur <= c.latency_hi,
+                "{:?} round duration {dur} outside [{}, {}]",
+                algo,
+                c.latency_lo,
+                c.latency_hi
+            );
+            assert_eq!(r.mean_staleness, 0.0);
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_learn_on_shared_context() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut base = Config::default();
+    base.rounds = 15;
+    base.eval_every = 14;
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+
+    let chance = 1.0 / base.synth.classes as f32;
+    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        let run = fl::run_with_context(&ctx, &cfg).unwrap();
+        let acc = run.final_accuracy().unwrap();
+        assert!(
+            acc > chance + 0.08,
+            "{algo:?} did not beat chance after 15 rounds: {acc}"
+        );
+        // Probe loss must have fallen below the ln(C) start.
+        let probe = run.records.last().unwrap().probe_loss.unwrap();
+        assert!(probe < (base.synth.classes as f32).ln());
+    }
+}
+
+#[test]
+fn paota_more_noise_worse_or_equal() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut base = Config::default();
+    base.rounds = 12;
+    base.eval_every = 11;
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+
+    let quiet = fl::run_with_context(&ctx, &base).unwrap();
+    let mut loud_cfg = base.clone();
+    // +6 dBm/Hz: σ_n ≈ 280 W against ς ≈ 660 W of summed transmit power —
+    // the equivalent per-entry noise (~0.4) dwarfs the weight scale
+    // (~0.05), so training must be destroyed (probe loss pinned near
+    // ln C) while the quiet channel makes clear progress.
+    loud_cfg.channel.n0_dbm_per_hz = 6.0;
+    let loud = fl::run_with_context(&ctx, &loud_cfg).unwrap();
+    let q_loss = quiet.records.last().unwrap().probe_loss.unwrap();
+    let l_loss = loud.records.last().unwrap().probe_loss.unwrap();
+    let ln_c = (base.synth.classes as f32).ln();
+    assert!(q_loss < ln_c - 0.05, "quiet channel made no progress: {q_loss}");
+    assert!(
+        l_loss > q_loss,
+        "destroyed channel unexpectedly beat quiet: {l_loss} vs {q_loss}"
+    );
+}
+
+#[test]
+fn force_beta_ablation_paths_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut base = Config::default();
+    base.rounds = 3;
+    base.eval_every = 2;
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+    for beta in [0.0, 0.5, 1.0] {
+        let mut cfg = base.clone();
+        cfg.force_beta = Some(beta);
+        let run = fl::run_with_context(&ctx, &cfg).unwrap();
+        assert_eq!(run.records.len(), 3);
+    }
+}
+
+#[test]
+fn centralized_estimates_f_star_below_initial_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let base = Config::default();
+    let ctx = TrainContext::build(&engine, &base).unwrap();
+    let init_loss = ctx.probe_loss(&ctx.init_weights()).unwrap();
+    let f_star = paota::fl::centralized::estimate_f_star(&ctx, &base, 40).unwrap();
+    assert!(
+        f_star < init_loss,
+        "f_star {f_star} not below initial loss {init_loss}"
+    );
+}
+
+#[test]
+fn fedasync_extension_runs_and_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.algorithm = Algorithm::FedAsync;
+    cfg.rounds = 20;
+    cfg.eval_every = 19;
+    let run = fl::run(&cfg).unwrap();
+    assert_eq!(run.records.len(), cfg.rounds);
+    // Continuous-time arrivals bucketed per ΔT window: with latency
+    // U(5,15) and ΔT = 8, every window after warmup sees uploads.
+    let total_uploads: usize = run.records.iter().map(|r| r.participants).sum();
+    assert!(total_uploads > cfg.rounds * 50, "uploads = {total_uploads}");
+    // Learns past chance.
+    let acc = run.final_accuracy().unwrap();
+    assert!(acc > 0.18, "FedAsync stuck at {acc}");
+    // Window times are exact ΔT boundaries.
+    for (i, r) in run.records.iter().enumerate() {
+        assert!((r.sim_time - (i as f64 + 1.0) * cfg.delta_t).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn records_are_well_formed() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = quick_cfg();
+    cfg.eval_every = 1;
+    let run = fl::run(&cfg).unwrap();
+    assert_eq!(run.records.len(), cfg.rounds);
+    for r in &run.records {
+        assert!(r.eval.is_some());
+        let e = r.eval.unwrap();
+        assert!((0.0..=1.0).contains(&e.accuracy));
+        assert!(e.loss.is_finite());
+        assert!(r.probe_loss.unwrap().is_finite());
+        assert!(r.participants <= cfg.partition.clients);
+        assert!(r.mean_staleness >= 0.0);
+        assert!(r.mean_power >= 0.0);
+    }
+}

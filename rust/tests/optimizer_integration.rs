@@ -1,0 +1,186 @@
+//! Integration of the full power-control pipeline (§III-B): P2 assembly →
+//! Dinkelbach → P3 solvers, on realistic paper-scale inputs. No artifacts
+//! required (pure Rust).
+
+use paota::config::SolverKind;
+use paota::optim::dinkelbach::maximize_ratio;
+use paota::optim::QpSolver;
+use paota::power::{
+    build_p2, solve_power_control, staleness_factor, BoundConstants, ClientFactors,
+    PowerSolverConfig,
+};
+use paota::util::Rng;
+
+fn paper_consts() -> BoundConstants {
+    BoundConstants {
+        l_smooth: 10.0,
+        epsilon2: 1.0,
+        k_total: 100,
+        dim: 8070,
+        noise_power: 7.96e-14,
+        omega: 3.0,
+    }
+}
+
+fn realistic_factors(n: usize, seed: u64) -> Vec<ClientFactors> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| ClientFactors {
+            stale_rounds: rng.index(4),
+            cosine: rng.uniform(-1.0, 1.0),
+            p_cap: rng.uniform(0.05, 0.6), // channel-inversion scale
+        })
+        .collect()
+}
+
+#[test]
+fn paper_scale_solve_is_fast_and_feasible() {
+    // 60 active clients — the typical PAOTA round at ΔT = 8.
+    let factors = realistic_factors(60, 1);
+    let consts = paper_consts();
+    let cfg = PowerSolverConfig::default();
+    let mut rng = Rng::new(2);
+    let t0 = std::time::Instant::now();
+    let alloc = solve_power_control(&factors, &consts, &cfg, &mut rng).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < std::time::Duration::from_millis(500),
+        "power solve too slow: {elapsed:?}"
+    );
+    assert_eq!(alloc.powers.len(), 60);
+    for (f, &p) in factors.iter().zip(&alloc.powers) {
+        assert!(p >= -1e-9 && p <= f.p_cap + 1e-9);
+    }
+    assert!(alloc.ratio.is_finite() && alloc.ratio > 0.0);
+}
+
+#[test]
+fn dinkelbach_ratio_beats_naive_allocations() {
+    // The optimized β must achieve a ratio at least as good as β = 0,
+    // β = 1, and 20 random β draws evaluated on the same P2.
+    let factors = realistic_factors(10, 3);
+    let consts = paper_consts();
+    let (h1, h2, _, _) = build_p2(&factors, &consts);
+    let mut rng = Rng::new(4);
+    let rep = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-8, 30, &mut rng).unwrap();
+
+    let eval_ratio = |beta: &[f64]| h2.eval(beta) / h1.eval(beta);
+    assert!(rep.ratio >= eval_ratio(&vec![0.0; 10]) - 1e-6);
+    assert!(rep.ratio >= eval_ratio(&vec![1.0; 10]) - 1e-6);
+    for _ in 0..20 {
+        let beta: Vec<f64> = (0..10).map(|_| rng.f64()).collect();
+        assert!(rep.ratio >= eval_ratio(&beta) - 1e-6);
+    }
+}
+
+#[test]
+fn mip_pipeline_matches_pcd_on_small_instances() {
+    for seed in [5, 6, 7] {
+        let factors = realistic_factors(4, seed);
+        let consts = paper_consts();
+        let mut rng = Rng::new(8);
+        let pcd = solve_power_control(
+            &factors,
+            &consts,
+            &PowerSolverConfig::default(),
+            &mut rng,
+        )
+        .unwrap();
+        let mip_cfg = PowerSolverConfig {
+            solver: SolverKind::PlaMip,
+            pla_segments: 8,
+            ..PowerSolverConfig::default()
+        };
+        let mip = solve_power_control(&factors, &consts, &mip_cfg, &mut rng).unwrap();
+        let rel = (mip.ratio - pcd.ratio).abs() / pcd.ratio.max(1e-12);
+        assert!(
+            rel < 0.01,
+            "seed {seed}: MIP ratio {} vs PCD {} ({}% off)",
+            mip.ratio,
+            pcd.ratio,
+            rel * 100.0
+        );
+    }
+}
+
+#[test]
+fn mip_guard_falls_back_to_pcd_above_limit() {
+    // With mip_max_k below the active-set size the MIP config must still
+    // solve (via PCD) in reasonable time.
+    let factors = realistic_factors(40, 9);
+    let consts = paper_consts();
+    let cfg = PowerSolverConfig {
+        solver: SolverKind::PlaMip,
+        mip_max_k: 12,
+        ..PowerSolverConfig::default()
+    };
+    let mut rng = Rng::new(10);
+    let t0 = std::time::Instant::now();
+    let alloc = solve_power_control(&factors, &consts, &cfg, &mut rng).unwrap();
+    assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+    assert_eq!(alloc.powers.len(), 40);
+}
+
+#[test]
+fn staleness_discount_dominates_when_beta_forced_to_one() {
+    // With β = 1 forced, powers must be exactly cap·ρ(s).
+    let factors: Vec<ClientFactors> = (0..6)
+        .map(|s| ClientFactors {
+            stale_rounds: s,
+            cosine: 0.3,
+            p_cap: 10.0,
+        })
+        .collect();
+    let cfg = PowerSolverConfig {
+        force_beta: Some(1.0),
+        ..PowerSolverConfig::default()
+    };
+    let mut rng = Rng::new(11);
+    let alloc = solve_power_control(&factors, &paper_consts(), &cfg, &mut rng).unwrap();
+    for (s, &p) in alloc.powers.iter().enumerate() {
+        let want = 10.0 * staleness_factor(s, 3.0);
+        assert!((p - want).abs() < 1e-12, "s={s}: {p} != {want}");
+    }
+    // Strictly decreasing in staleness.
+    for w in alloc.powers.windows(2) {
+        assert!(w[1] < w[0]);
+    }
+}
+
+#[test]
+fn similarity_dominates_when_beta_forced_to_zero() {
+    // With β = 0 forced, powers must be exactly cap·(cos+1)/2.
+    let cosines = [-1.0, -0.5, 0.0, 0.5, 1.0];
+    let factors: Vec<ClientFactors> = cosines
+        .iter()
+        .map(|&c| ClientFactors {
+            stale_rounds: 2,
+            cosine: c,
+            p_cap: 8.0,
+        })
+        .collect();
+    let cfg = PowerSolverConfig {
+        force_beta: Some(0.0),
+        ..PowerSolverConfig::default()
+    };
+    let mut rng = Rng::new(12);
+    let alloc = solve_power_control(&factors, &paper_consts(), &cfg, &mut rng).unwrap();
+    for (&c, &p) in cosines.iter().zip(&alloc.powers) {
+        let want = 8.0 * (c + 1.0) / 2.0;
+        assert!((p - want).abs() < 1e-12);
+    }
+    assert_eq!(alloc.powers[0], 0.0); // fully opposed client is silenced
+}
+
+#[test]
+fn dinkelbach_iterations_bounded_and_monotone_at_scale() {
+    let factors = realistic_factors(80, 13);
+    let consts = paper_consts();
+    let (h1, h2, _, _) = build_p2(&factors, &consts);
+    let mut rng = Rng::new(14);
+    let rep = maximize_ratio(&h1, &h2, QpSolver::default(), 1e-8, 30, &mut rng).unwrap();
+    assert!(rep.iters <= 30);
+    for w in rep.lambdas.windows(2) {
+        assert!(w[1] >= w[0] - 1e-12, "λ regressed: {:?}", rep.lambdas);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-module property tests (the coordinator invariants DESIGN.md §6
+//! calls out), via the `testing` mini-proptest harness. No artifacts
+//! needed — these exercise the pure-Rust layers at paper scale.
+
+use paota::channel::{dbm_to_watts, ChannelConfig, Mac};
+use paota::data::{Partition, PartitionConfig, SynthConfig};
+use paota::power::{
+    build_p2, solve_power_control, BoundConstants, ClientFactors, PowerSolverConfig,
+};
+use paota::testing::{check, prop_assert, prop_close};
+use paota::util::{vecmath, Rng};
+
+fn consts() -> BoundConstants {
+    BoundConstants {
+        l_smooth: 10.0,
+        epsilon2: 1.0,
+        k_total: 100,
+        dim: 8070,
+        noise_power: dbm_to_watts(-174.0) * 20e6,
+        omega: 3.0,
+    }
+}
+
+#[test]
+fn aggregation_weights_form_a_simplex() {
+    // α_k = p_k/Σp must be a probability vector for any feasible powers.
+    check("alpha simplex", 100, |g| {
+        let n = g.usize_in(1..40);
+        let factors: Vec<ClientFactors> = (0..n)
+            .map(|_| ClientFactors {
+                stale_rounds: g.usize_in(0..6),
+                cosine: g.f64_in(-1.0..1.0),
+                p_cap: g.f64_in(0.01..15.0),
+            })
+            .collect();
+        let mut rng = Rng::new(g.rng().next_u64());
+        let alloc =
+            solve_power_control(&factors, &consts(), &PowerSolverConfig::default(), &mut rng)
+                .map_err(|e| e.to_string())?;
+        let sum: f64 = alloc.powers.iter().sum();
+        if sum <= 0.0 {
+            return Ok(()); // degenerate all-zero round: no aggregation
+        }
+        let mut total = 0.0;
+        for &p in &alloc.powers {
+            let a = p / sum;
+            prop_assert((0.0..=1.0 + 1e-12).contains(&a), "α outside [0,1]")?;
+            total += a;
+        }
+        prop_close(total, 1.0, 1e-9, "Σα")
+    });
+}
+
+#[test]
+fn p2_ratio_invariant_under_uniform_power_scaling() {
+    // h₂/h₁ with σ² ≈ 0 is scale-invariant in the caps: doubling every
+    // cap must not change the optimal ratio structure (term (d) is a
+    // Rayleigh quotient). Verifies the P2 assembly algebra.
+    check("P2 scale invariance", 40, |g| {
+        let n = g.usize_in(2..10);
+        let factors: Vec<ClientFactors> = (0..n)
+            .map(|_| ClientFactors {
+                stale_rounds: g.usize_in(0..4),
+                cosine: g.f64_in(-1.0..1.0),
+                p_cap: g.f64_in(0.1..5.0),
+            })
+            .collect();
+        let mut c = consts();
+        c.noise_power = 0.0;
+        let (h1a, h2a, _, _) = build_p2(&factors, &c);
+        let scaled: Vec<ClientFactors> = factors
+            .iter()
+            .map(|f| ClientFactors {
+                p_cap: f.p_cap * 2.0,
+                ..*f
+            })
+            .collect();
+        let (h1b, h2b, _, _) = build_p2(&scaled, &c);
+        let beta: Vec<f64> = (0..n).map(|_| g.f64_in(0.0..1.0)).collect();
+        let ra = h2a.eval(&beta) / h1a.eval(&beta);
+        let rb = h2b.eval(&beta) / h1b.eval(&beta);
+        prop_close(ra, rb, 1e-9, "scale invariance")
+    });
+}
+
+#[test]
+fn partition_conserves_and_respects_skew() {
+    check("partition invariants", 15, |g| {
+        let synth = SynthConfig {
+            side: 8,
+            classes: 6,
+            strokes: 2,
+            blur_passes: 1,
+            jitter: 1,
+            pixel_noise: 0.3,
+            label_noise: 0.0,
+        };
+        let cfg = PartitionConfig {
+            clients: g.usize_in(2..20),
+            sizes: vec![20, 40, 60],
+            max_classes: g.usize_in(1..6),
+            test_size: 30,
+        };
+        let mut rng = Rng::new(g.rng().next_u64());
+        let p = Partition::generate(synth, &cfg, &mut rng);
+        prop_assert(p.clients.len() == cfg.clients, "client count")?;
+        let mut total = 0;
+        for c in &p.clients {
+            total += c.data.len();
+            prop_assert(cfg.sizes.contains(&c.data.len()), "size not from menu")?;
+            prop_assert(
+                !c.classes.is_empty() && c.classes.len() <= cfg.max_classes,
+                "class count",
+            )?;
+            for &y in &c.data.y {
+                prop_assert(c.classes.contains(&(y as usize)), "label outside skew")?;
+            }
+        }
+        prop_assert(p.pooled().len() == total, "pooled conservation")?;
+        prop_assert(p.test.len() == cfg.test_size, "test size")
+    });
+}
+
+#[test]
+fn channel_noise_scales_inversely_with_total_power() {
+    // Var[ñ] = σ_n²/ς²: quadrupling ς must quarter the std.
+    let mac = Mac::new(ChannelConfig {
+        bandwidth_hz: 20e6,
+        n0_dbm_per_hz: -74.0,
+    });
+    let dim = 20_000;
+    let std_at = |sigma: f64, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let v = mac.equivalent_noise(&mut rng, dim, sigma);
+        (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / dim as f64).sqrt()
+    };
+    let s1 = std_at(10.0, 1);
+    let s4 = std_at(40.0, 2);
+    let ratio = s1 / s4;
+    assert!(
+        (ratio - 4.0).abs() < 0.15,
+        "noise should scale 1/ς: ratio {ratio}"
+    );
+}
+
+#[test]
+fn cosine_similarity_bounds_on_random_updates() {
+    check("cosine ∈ [-1,1] and symmetry", 200, |g| {
+        let n = g.usize_in(1..50);
+        let a: Vec<f32> = (0..n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| g.f64_in(-2.0..2.0) as f32).collect();
+        let c1 = vecmath::cosine(&a, &b);
+        let c2 = vecmath::cosine(&b, &a);
+        prop_assert((-1.0..=1.0).contains(&c1), "out of range")?;
+        prop_close(c1, c2, 1e-12, "symmetry")
+    });
+}
+
+#[test]
+fn power_allocation_never_rewards_more_staleness() {
+    // Two otherwise-identical clients: the staler one never gets MORE
+    // power (the ρ factor is monotone and θ is equal).
+    check("staleness monotonicity", 40, |g| {
+        let cosine = g.f64_in(-1.0..1.0);
+        let cap = g.f64_in(0.5..15.0);
+        let s1 = g.usize_in(0..3);
+        let s2 = s1 + g.usize_in(1..4);
+        let factors = vec![
+            ClientFactors {
+                stale_rounds: s1,
+                cosine,
+                p_cap: cap,
+            },
+            ClientFactors {
+                stale_rounds: s2,
+                cosine,
+                p_cap: cap,
+            },
+        ];
+        let mut rng = Rng::new(g.rng().next_u64());
+        let alloc =
+            solve_power_control(&factors, &consts(), &PowerSolverConfig::default(), &mut rng)
+                .map_err(|e| e.to_string())?;
+        prop_assert(
+            alloc.powers[1] <= alloc.powers[0] + 1e-6,
+            &format!("staler client got more power: {:?}", alloc.powers),
+        )
+    });
+}
+
+#[test]
+fn rng_streams_do_not_collide_across_trainer_tags() {
+    // The trainer stream tags must give distinct sequences (a collision
+    // would silently correlate data sampling with channel noise).
+    let tags = [0x1a7u64, 0xba7c, 0xc4a2, 0x0b7, 0x91c4, 0xda7a, 0xce27];
+    let mut seqs: Vec<Vec<u32>> = Vec::new();
+    for &t in &tags {
+        let mut r = Rng::with_stream(42, t);
+        seqs.push((0..16).map(|_| r.next_u32()).collect());
+    }
+    for i in 0..seqs.len() {
+        for j in i + 1..seqs.len() {
+            assert_ne!(seqs[i], seqs[j], "streams {i} and {j} collide");
+        }
+    }
+}

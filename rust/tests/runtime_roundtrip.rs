@@ -1,0 +1,208 @@
+//! Integration: the Rust PJRT runtime loads the AOT artifacts and its
+//! numerics agree with closed-form expectations (and hence with the python
+//! oracles, which the pytest suite ties to the same artifacts).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially, with a loud eprintln) when artifacts are missing so plain
+//! `cargo test` works in a fresh checkout.
+
+use paota::runtime::{Engine, ModelRuntime};
+use paota::util::Rng;
+
+fn runtime() -> Option<(Engine, ModelRuntime)> {
+    let dir = ModelRuntime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!(
+            "SKIP: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        return None;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let rt = ModelRuntime::load(&engine, &dir).expect("loading artifacts");
+    Some((engine, rt))
+}
+
+#[test]
+fn aggregate_matches_closed_form() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(1);
+
+    let mut stack = vec![0.0f32; m.clients * m.dim];
+    rng.fill_normal(&mut stack, 1.0);
+    let mut coef = vec![0.0f32; m.clients];
+    for (i, c) in coef.iter_mut().enumerate() {
+        if i % 3 != 0 {
+            *c = rng.f32() * 10.0 + 0.1;
+        }
+    }
+    let noise = vec![0.0f32; m.dim];
+
+    let got = rt.aggregate(&stack, &coef, &noise).unwrap();
+    assert_eq!(got.len(), m.dim);
+
+    // Closed form: w_g[j] = Σ_k coef_k · W[k, j] / Σ coef.
+    let sigma: f64 = coef.iter().map(|&c| c as f64).sum();
+    for j in (0..m.dim).step_by(977) {
+        let want: f64 = (0..m.clients)
+            .map(|k| coef[k] as f64 * stack[k * m.dim + j] as f64)
+            .sum::<f64>()
+            / sigma;
+        let diff = (got[j] as f64 - want).abs();
+        assert!(diff < 1e-3, "dim {j}: got {} want {want}", got[j]);
+    }
+}
+
+#[test]
+fn aggregate_single_participant_identity() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(2);
+
+    let mut stack = vec![0.0f32; m.clients * m.dim];
+    rng.fill_normal(&mut stack, 0.5);
+    let mut coef = vec![0.0f32; m.clients];
+    coef[7] = 4.2;
+    let noise = vec![0.0f32; m.dim];
+
+    let got = rt.aggregate(&stack, &coef, &noise).unwrap();
+    for j in (0..m.dim).step_by(503) {
+        let want = stack[7 * m.dim + j];
+        assert!(
+            (got[j] - want).abs() < 1e-4,
+            "dim {j}: got {} want {want}",
+            got[j]
+        );
+    }
+}
+
+#[test]
+fn local_train_zero_lr_is_identity_and_loss_is_ln_c() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(3);
+
+    // Zero weights -> uniform logits -> CE = ln(classes) exactly.
+    let w = vec![0.0f32; m.dim];
+    let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    rng.fill_normal(&mut xs, 1.0);
+    let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    for row in 0..(m.local_steps * m.batch) {
+        let c = rng.index(m.classes);
+        ys[row * m.classes + c] = 1.0;
+    }
+
+    let out = rt.local_train(&w, &xs, &ys, 0.0).unwrap();
+    assert_eq!(out.weights.len(), m.dim);
+    assert!(out.weights.iter().all(|&v| v == 0.0), "zero lr must not move w");
+    let want = (m.classes as f32).ln();
+    assert!(
+        (out.loss - want).abs() < 1e-4,
+        "loss {} vs ln(C) {want}",
+        out.loss
+    );
+}
+
+#[test]
+fn local_train_descends_on_fixed_batch() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(4);
+
+    let mut w = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut w, 0.1);
+    let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    rng.fill_normal(&mut xs, 1.0);
+    let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    // Same label pattern each step so repeated rounds should descend.
+    for row in 0..(m.local_steps * m.batch) {
+        ys[row * m.classes + (row % m.classes)] = 1.0;
+    }
+
+    let first = rt.local_train(&w, &xs, &ys, 0.05).unwrap();
+    let mut cur = first.weights;
+    let mut last_loss = first.loss;
+    let mut decreased = false;
+    for _ in 0..5 {
+        let out = rt.local_train(&cur, &xs, &ys, 0.05).unwrap();
+        if out.loss < last_loss {
+            decreased = true;
+        }
+        last_loss = out.loss;
+        cur = out.weights;
+    }
+    assert!(decreased, "loss never decreased across local rounds");
+    assert!(
+        last_loss < first.loss,
+        "no net descent: {last_loss} vs {}",
+        first.loss
+    );
+}
+
+#[test]
+fn evaluate_uniform_model_is_chance() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(5);
+
+    let w = vec![0.0f32; m.dim];
+    let mut x = vec![0.0f32; m.eval_size * m.d_in];
+    rng.fill_normal(&mut x, 1.0);
+    let mut y = vec![0.0f32; m.eval_size * m.classes];
+    for row in 0..m.eval_size {
+        y[row * m.classes + rng.index(m.classes)] = 1.0;
+    }
+
+    let out = rt.evaluate(&w, &x, &y).unwrap();
+    assert!((out.loss - (m.classes as f32).ln()).abs() < 1e-4);
+    // All-zero logits: argmax picks class 0 every row -> accuracy is the
+    // empirical frequency of label 0, ~1/C.
+    assert!(out.accuracy > 0.0 && out.accuracy < 0.25, "acc={}", out.accuracy);
+}
+
+#[test]
+fn grad_probe_descent_consistency() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(6);
+
+    let mut w = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut w, 0.05);
+    let mut x = vec![0.0f32; m.probe_batch * m.d_in];
+    rng.fill_normal(&mut x, 1.0);
+    let mut y = vec![0.0f32; m.probe_batch * m.classes];
+    for row in 0..m.probe_batch {
+        y[row * m.classes + rng.index(m.classes)] = 1.0;
+    }
+
+    let g = rt.grad_probe(&w, &x, &y).unwrap();
+    assert_eq!(g.len(), m.dim);
+    let gnorm2: f64 = g.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    assert!(gnorm2 > 0.0, "gradient identically zero");
+
+    // A descent step along -g must shrink the gradient alignment
+    // ⟨g(w - t·g), g(w)⟩ below |g(w)|² for a smooth convex-ish surrogate.
+    let t = 0.5f32;
+    let w2: Vec<f32> = w.iter().zip(&g).map(|(&wi, &gi)| wi - t * gi).collect();
+    let g2 = rt.grad_probe(&w2, &x, &y).unwrap();
+    let align: f64 = g2.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
+    assert!(
+        align < gnorm2,
+        "descent step did not reduce gradient alignment: {align} !< {gnorm2}"
+    );
+}
+
+#[test]
+fn input_shape_validation_errors() {
+    let Some((_e, rt)) = runtime() else { return };
+    let m = rt.manifest().clone();
+    let w_bad = vec![0.0f32; m.dim - 1];
+    let xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    let ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    assert!(rt.local_train(&w_bad, &xs, &ys, 0.1).is_err());
+    let coef = vec![1.0f32; m.clients + 1];
+    let stack = vec![0.0f32; m.clients * m.dim];
+    let noise = vec![0.0f32; m.dim];
+    assert!(rt.aggregate(&stack, &coef, &noise).is_err());
+}
