@@ -1,0 +1,25 @@
+# Repo-level driver targets. The tier-1 gate is `make verify`.
+
+RUST_DIR := rust
+
+.PHONY: verify build test fmt clippy artifacts
+
+# Everything CI runs: release build, tests, formatting, lints.
+verify: build test fmt clippy
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+fmt:
+	cd $(RUST_DIR) && cargo fmt --check
+
+clippy:
+	cd $(RUST_DIR) && cargo clippy -- -D warnings
+
+# Regenerate the AOT HLO artifacts (needs the Python toolchain; see
+# python/compile/aot.py).
+artifacts:
+	python3 python/compile/aot.py

@@ -3,7 +3,9 @@
 //! Grammar: `repro <subcommand> [--key value | --key=value]...`
 //! Every `--key value` pair is routed to [`crate::config::Config::set`],
 //! plus a few harness-level flags (`--config <file>`, `--out <dir>`,
-//! `--log-level <l>`, `--f-star-rounds <n>`).
+//! `--log-level <l>`, `--f-star-rounds <n>`). The `--algo` key selects
+//! which [`AggregationPolicy`](crate::fl::AggregationPolicy) the shared
+//! coordinator runs (see [`crate::fl::build_policy`]).
 
 use anyhow::{bail, Result};
 

@@ -8,7 +8,9 @@ use anyhow::{bail, Context, Result};
 use crate::channel::ChannelConfig;
 use crate::data::{PartitionConfig, SynthConfig};
 
-/// Which training algorithm to run.
+/// Which training algorithm to run — i.e. which
+/// [`AggregationPolicy`](crate::fl::AggregationPolicy) the coordinator
+/// is driven by (the mapping lives in [`crate::fl::build_policy`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
     /// The paper's semi-asynchronous periodic-aggregation AirComp scheme.
@@ -44,6 +46,17 @@ impl Algorithm {
             Algorithm::Centralized => "centralized",
             Algorithm::FedAsync => "fedasync",
         }
+    }
+
+    /// Every implemented algorithm (sweep/equivalence-test helper).
+    pub fn all() -> [Algorithm; 5] {
+        [
+            Algorithm::Paota,
+            Algorithm::LocalSgd,
+            Algorithm::Cotaf,
+            Algorithm::Centralized,
+            Algorithm::FedAsync,
+        ]
     }
 }
 
@@ -318,6 +331,9 @@ impl Config {
         if self.p_max <= 0.0 {
             bail!("p_max must be positive");
         }
+        if self.eval_every == 0 {
+            bail!("eval_every must be ≥ 1");
+        }
         Ok(())
     }
 
@@ -417,6 +433,9 @@ mod tests {
         let mut c = Config::default();
         c.rounds = 0;
         assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.eval_every = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -442,5 +461,12 @@ mod tests {
     fn algorithm_parse_aliases() {
         assert_eq!(Algorithm::parse("FedAvg").unwrap(), Algorithm::LocalSgd);
         assert_eq!(Algorithm::parse("central").unwrap(), Algorithm::Centralized);
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip_for_every_variant() {
+        for algo in Algorithm::all() {
+            assert_eq!(Algorithm::parse(algo.name()).unwrap(), algo);
+        }
     }
 }

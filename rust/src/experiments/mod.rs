@@ -3,6 +3,10 @@
 //! Each regenerates the corresponding figure/table: runs every algorithm
 //! on the *same* partition/probe/test data, prints the series or rows the
 //! paper reports, and writes CSVs under the chosen output directory.
+//! Every run goes through the shared event-driven
+//! [`Coordinator`](crate::fl::Coordinator) core, so curves across
+//! algorithms differ only in their aggregation policy — never in the
+//! round loop, RNG streams, or telemetry bucketing.
 
 use std::path::Path;
 

@@ -1,84 +1,96 @@
-//! Centralized SGD on the pooled client data.
+//! Centralized SGD on the pooled client data, as an
+//! [`AggregationPolicy`].
 //!
 //! Not a paper baseline per se — it estimates `F(w*)`, the optimal global
 //! loss the Fig. 3 curves subtract (`E[F(w^r)] − F(w*)`). The model, step
 //! count and batch geometry are identical to the federated runs (the same
 //! `local_train` artifact), only the sampling pool differs: all data,
-//! centrally.
+//! centrally — hence the [`make_job`](AggregationPolicy::make_job)
+//! override and a dedicated minibatch RNG stream.
 //!
-//! Virtual timing: one "round" is one M-step pass; time advances by the
-//! mean latency (a centralized node has no stragglers). The timing is not
-//! used by the gap metric, only recorded for completeness.
+//! Virtual timing ([`SingleNode`](RoundTiming::SingleNode)): one "round"
+//! is one M-step pass; time advances by the mean latency (a centralized
+//! node has no stragglers). The timing is not used by the gap metric,
+//! only recorded for completeness.
 
 use anyhow::Result;
 
-use crate::config::Config;
-use crate::sim::VirtualClock;
+use crate::config::{Algorithm, Config};
+use crate::data::Dataset;
 use crate::util::Rng;
 
-use super::{RoundRecord, RunResult, TrainContext};
+use super::coordinator::{
+    streams, AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload,
+};
+use super::TrainContext;
 
-pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let m = ctx.rt.manifest().clone();
-    let pooled = ctx.partition.pooled();
-    let mut batch_rng = Rng::with_stream(cfg.seed, 0xce27);
+/// Pooled-data SGD (the `F(w*)` estimator).
+pub struct Centralized {
+    pooled: Dataset,
+}
 
-    let mut w = ctx.init_weights();
-    let mut clock = VirtualClock::new();
-    let mean_latency = (cfg.latency_lo + cfg.latency_hi) / 2.0;
-
-    let mut records = Vec::with_capacity(cfg.rounds);
-
-    for round in 0..cfg.rounds {
-        // Sample M minibatches from the pooled data.
-        let mut xs = Vec::with_capacity(m.local_steps * m.batch * pooled.dim);
-        let mut ys = vec![0.0f32; m.local_steps * m.batch * pooled.classes];
-        for row in 0..(m.local_steps * m.batch) {
-            let i = batch_rng.index(pooled.len());
-            xs.extend_from_slice(pooled.row(i));
-            ys[row * pooled.classes + pooled.y[i] as usize] = 1.0;
+impl Centralized {
+    pub fn new(ctx: &TrainContext, _cfg: &Config) -> Self {
+        Self {
+            pooled: ctx.partition.pooled(),
         }
-        let out = ctx.rt.local_train(&w, &xs, &ys, cfg.lr)?;
-        w = out.weights;
-        clock.advance(mean_latency);
+    }
+}
 
-        let eval = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(ctx.evaluate(&w)?)
-        } else {
-            None
-        };
-        let probe_loss = if eval.is_some() {
-            Some(ctx.probe_loss(&w)?)
-        } else {
-            None
-        };
-        records.push(RoundRecord {
-            round,
-            sim_time: clock.now(),
-            train_loss: out.loss,
-            probe_loss,
-            eval,
-            participants: 1,
-            mean_staleness: 0.0,
-            mean_power: 0.0,
-        });
+impl AggregationPolicy for Centralized {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Centralized
     }
 
-    Ok(RunResult {
-        algorithm: crate::config::Algorithm::Centralized,
-        records,
-        final_weights: w,
-    })
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::SingleNode
+    }
+
+    fn batch_stream(&self) -> u64 {
+        streams::POOLED_BATCH
+    }
+
+    /// Sample M minibatches from the pooled data instead of a client
+    /// shard.
+    fn make_job(
+        &self,
+        _client: usize,
+        base: &[f32],
+        ctx: &TrainContext,
+        batch_rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let m = ctx.rt.manifest();
+        let d = &self.pooled;
+        let rows = m.local_steps * m.batch;
+        let mut xs = Vec::with_capacity(rows * d.dim);
+        let mut ys = vec![0.0f32; rows * d.classes];
+        for row in 0..rows {
+            let i = batch_rng.index(d.len());
+            xs.extend_from_slice(d.row(i));
+            ys[row * d.classes + d.y[i] as usize] = 1.0;
+        }
+        (base.to_vec(), xs, ys)
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        _uploads: &[Upload],
+        _rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        Ok(RoundAction::Adopt)
+    }
 }
 
 /// Estimate `F(w*)`: run centralized SGD for `rounds` and return the
 /// minimum probe loss seen (the paper's optimum reference for Fig. 3).
 pub fn estimate_f_star(ctx: &TrainContext, cfg: &Config, rounds: usize) -> Result<f32> {
     let mut c = cfg.clone();
-    c.algorithm = crate::config::Algorithm::Centralized;
+    c.algorithm = Algorithm::Centralized;
     c.rounds = rounds;
     c.eval_every = 5.min(rounds).max(1);
-    let run = run(ctx, &c)?;
+    let run = super::run_with_context(ctx, &c)?;
     let best = run
         .records
         .iter()

@@ -1,0 +1,783 @@
+//! The discrete-event **coordinator core** every FL algorithm runs on.
+//!
+//! The paper's contribution is a *coordination mechanism*; this module is
+//! the one place that mechanism lives. A [`Coordinator`] owns everything
+//! every scheme needs —
+//!
+//! * the [`VirtualClock`](crate::sim::VirtualClock) and the
+//!   [`EventQueue`](crate::sim::events::EventQueue) of client-finished
+//!   arrivals (the single scheduling driver),
+//! * per-client [`ClientSlot`]s (base round, base weights, finish time),
+//! * deterministic per-purpose RNG streams ([`RngStreams`]),
+//! * the reusable `stack`/`coef`/noise buffers of the AirComp kernel,
+//! * a [`Telemetry`] recorder that buckets uploads into ΔT windows and
+//!   emits the canonical [`RoundRecord`] stream with a single eval/probe
+//!   cadence,
+//!
+//! — while the algorithm itself shrinks to an [`AggregationPolicy`]: *who*
+//! uploads ([`AggregationPolicy::select_participants`]), *what the server
+//! does with the uploads* ([`AggregationPolicy::on_uploads`] →
+//! [`RoundAction`]), and *when aggregation happens*
+//! ([`AggregationPolicy::timing`] → [`RoundTiming`]).
+//!
+//! Local training is always fanned out through
+//! [`TrainContext::train_many`], so every policy — including the
+//! continuous-time FedAsync extension, whose simultaneous arrivals are
+//! coalesced into one batch — shares the parallel PJRT pool.
+//!
+//! Adding a scheme (grouped AirComp à la Air-FedGA, channel-aware client
+//! scheduling, multi-cell variants) means writing a policy struct, not a
+//! new round loop.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{Algorithm, Config};
+use crate::runtime::EvalOut;
+use crate::sim::events::EventQueue;
+use crate::sim::{LatencyModel, VirtualClock};
+use crate::util::{vecmath, Rng};
+
+use super::{RoundRecord, RunResult, TrainContext};
+
+/// Stream tags — one independent PCG stream per stochastic purpose, all
+/// derived from the config's master seed. Fixed tags keep runs
+/// bit-reproducible and make trajectories comparable across refactors.
+pub mod streams {
+    /// Client compute-latency draws.
+    pub const LATENCY: u64 = 0x1a7;
+    /// Local-training minibatch sampling (federated shards).
+    pub const BATCH: u64 = 0xba7c;
+    /// Pooled-data minibatch sampling (the centralized policy).
+    pub const POOLED_BATCH: u64 = 0xce27;
+    /// Synchronous cohort selection.
+    pub const PICK: u64 = 0x91c4;
+    /// Fading gains + receiver noise.
+    pub const CHANNEL: u64 = 0xc4a2;
+    /// Power-control solver randomness.
+    pub const OPT: u64 = 0x0b7;
+}
+
+/// The coordinator's deterministic per-purpose RNG streams.
+pub struct RngStreams {
+    pub latency: Rng,
+    pub batch: Rng,
+    pub pick: Rng,
+    pub channel: Rng,
+    pub opt: Rng,
+}
+
+impl RngStreams {
+    /// Derive all streams from the master seed. `batch_stream` is the
+    /// policy's choice of minibatch stream (see
+    /// [`AggregationPolicy::batch_stream`]).
+    pub fn new(seed: u64, batch_stream: u64) -> Self {
+        Self {
+            latency: Rng::with_stream(seed, streams::LATENCY),
+            batch: Rng::with_stream(seed, batch_stream),
+            pick: Rng::with_stream(seed, streams::PICK),
+            channel: Rng::with_stream(seed, streams::CHANNEL),
+            opt: Rng::with_stream(seed, streams::OPT),
+        }
+    }
+}
+
+/// When the coordinator aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundTiming {
+    /// Time-triggered ΔT slots (PAOTA): round r closes at `(r+1)·ΔT`
+    /// with whatever finished inside the slot; the PS never waits.
+    Periodic,
+    /// Synchronous cohorts: each round lasts as long as its slowest
+    /// participant's compute latency (Local SGD, COTAF).
+    Synchronous,
+    /// Aggregate on every client arrival; telemetry is bucketed into ΔT
+    /// windows so the record stream stays comparable (FedAsync).
+    Continuous,
+    /// One pooled-data node, no client fleet; rounds advance by the mean
+    /// latency (the `F(w*)` estimator).
+    SingleNode,
+}
+
+/// One finished local-training job, handed to the policy.
+#[derive(Debug, Clone)]
+pub struct Upload {
+    /// Client index k.
+    pub client: usize,
+    /// Rounds (or ΔT windows) since this client took its base model.
+    pub staleness: usize,
+    /// Mean local training loss over the M steps.
+    pub loss: f32,
+    /// The trained model w_k.
+    pub weights: Vec<f32>,
+    /// `w_k − base` — filled only when the policy asked via
+    /// [`AggregationPolicy::needs_deltas`], else empty.
+    pub delta: Vec<f32>,
+}
+
+/// What the policy tells the coordinator to do with a round's uploads.
+#[derive(Debug, Clone)]
+pub enum RoundAction {
+    /// Weighted aggregation through the L1 AirComp kernel:
+    /// `w ← (Σ_j coefs[j]·row_j + noise)/Σ_j coefs[j]`. `coefs[j]` pairs
+    /// with `uploads[j]`; an empty `noise` means a lossless uplink. With
+    /// `deltas`, the stacked rows are the uploads' update vectors and the
+    /// kernel's weighted mean is *added* to the global model (COTAF);
+    /// otherwise the rows are full models and the mean *replaces* it.
+    Aggregate {
+        coefs: Vec<f32>,
+        noise: Vec<f32>,
+        deltas: bool,
+        mean_power: f64,
+    },
+    /// Per-upload sequential mixing `w_g ← (1−γ_j)·w_g + γ_j·w_j`, each
+    /// uploader restarting from the freshly mixed model (FedAsync).
+    Mix { gammas: Vec<f64> },
+    /// Adopt the single upload's weights as the new global model.
+    Adopt,
+    /// Leave the global model untouched this round.
+    Skip { mean_power: f64 },
+}
+
+/// Accumulated upload statistics for one telemetry round/window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    pub uploads: usize,
+    pub loss_sum: f64,
+    pub staleness_sum: f64,
+    pub mean_power: f64,
+}
+
+impl WindowStats {
+    /// Fold one upload into the window.
+    pub fn absorb(&mut self, up: &Upload) {
+        self.uploads += 1;
+        self.loss_sum += up.loss as f64;
+        self.staleness_sum += up.staleness as f64;
+    }
+
+    /// Mean participant training loss (NaN for an empty window).
+    pub fn train_loss(&self) -> f32 {
+        if self.uploads > 0 {
+            (self.loss_sum / self.uploads as f64) as f32
+        } else {
+            f32::NAN
+        }
+    }
+
+    /// Mean upload staleness (0 for an empty window).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.uploads > 0 {
+            self.staleness_sum / self.uploads as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The canonical [`RoundRecord`] emitter: one eval/probe cadence and one
+/// window-bookkeeping rule for every algorithm.
+#[derive(Debug)]
+pub struct Telemetry {
+    rounds: usize,
+    eval_every: usize,
+    records: Vec<RoundRecord>,
+}
+
+impl Telemetry {
+    pub fn new(rounds: usize, eval_every: usize) -> Self {
+        assert!(eval_every > 0, "eval_every must be ≥ 1");
+        Self {
+            rounds,
+            eval_every,
+            records: Vec::with_capacity(rounds),
+        }
+    }
+
+    /// The shared eval/probe cadence: every `eval_every` rounds plus the
+    /// final round, so every run ends with a measurement.
+    pub fn should_eval(&self, round: usize) -> bool {
+        round % self.eval_every == 0 || round + 1 == self.rounds
+    }
+
+    /// Index of the next round/window to be recorded.
+    pub fn window(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True once all `rounds` records are in.
+    pub fn is_complete(&self) -> bool {
+        self.records.len() >= self.rounds
+    }
+
+    /// Append one round's record. Windows must be contiguous and monotone
+    /// in `sim_time` — the invariants every consumer of the stream relies
+    /// on.
+    pub fn record(
+        &mut self,
+        round: usize,
+        sim_time: f64,
+        stats: WindowStats,
+        eval: Option<EvalOut>,
+        probe_loss: Option<f32>,
+    ) -> &RoundRecord {
+        assert_eq!(round, self.records.len(), "telemetry window out of order");
+        if let Some(prev) = self.records.last() {
+            assert!(
+                sim_time >= prev.sim_time,
+                "telemetry time went backwards: {sim_time} after {}",
+                prev.sim_time
+            );
+        }
+        self.records.push(RoundRecord {
+            round,
+            sim_time,
+            train_loss: stats.train_loss(),
+            probe_loss,
+            eval,
+            participants: stats.uploads,
+            mean_staleness: stats.mean_staleness(),
+            mean_power: stats.mean_power,
+        });
+        self.records.last().expect("just pushed")
+    }
+
+    pub fn into_records(self) -> Vec<RoundRecord> {
+        self.records
+    }
+}
+
+/// Per-client scheduler state (what the client trains from, and when its
+/// current local run finishes).
+#[derive(Debug, Clone)]
+pub struct ClientSlot {
+    /// Global round (or ΔT window) whose model this client trains from.
+    pub base_round: usize,
+    /// The base weights it received.
+    pub base_weights: Vec<f32>,
+    /// Virtual time its current local training finishes.
+    pub finish_time: f64,
+}
+
+/// An FL algorithm, reduced to its decisions. Everything else — the round
+/// loop, the clock, client scheduling, batched training, telemetry — is
+/// the [`Coordinator`]'s.
+pub trait AggregationPolicy {
+    /// Which algorithm this policy implements (for [`RunResult`]).
+    fn algorithm(&self) -> Algorithm;
+
+    /// When the coordinator aggregates.
+    fn timing(&self) -> RoundTiming;
+
+    /// RNG stream minibatch sampling draws from. The centralized policy
+    /// overrides this to keep its pooled-data stream independent.
+    fn batch_stream(&self) -> u64 {
+        streams::BATCH
+    }
+
+    /// Ask the coordinator to fill [`Upload::delta`] (`w_k − base`) —
+    /// needed by similarity factors (PAOTA) and update-precoding (COTAF).
+    fn needs_deltas(&self) -> bool {
+        false
+    }
+
+    /// Choose this round's uploaders among `offered` — the ready clients
+    /// under event-driven timing, the whole fleet under synchronous
+    /// timing. Ready clients left out stay available next round. The
+    /// default takes everyone, in the offered order.
+    ///
+    /// Contract: every returned value must be a **client id drawn from
+    /// `offered`** (not a position into it) — the coordinator trains,
+    /// stacks and reschedules by client id.
+    fn select_participants(&mut self, offered: &[usize], rngs: &mut RngStreams) -> Vec<usize> {
+        let _ = rngs;
+        offered.to_vec()
+    }
+
+    /// Build one participant's training job `(w0, xs, ys)`. The default
+    /// samples M·B rows from the client's own shard and trains from
+    /// `base`.
+    fn make_job(
+        &self,
+        client: usize,
+        base: &[f32],
+        ctx: &TrainContext,
+        batch_rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let m = ctx.rt.manifest();
+        let (xs, ys) =
+            ctx.partition.clients[client].sample_batches(m.local_steps, m.batch, batch_rng);
+        (base.to_vec(), xs, ys)
+    }
+
+    /// The aggregation decision: given this round's trained uploads,
+    /// return what the server does (weights/powers/noise or mixing
+    /// rates). Only called when at least one upload arrived.
+    fn on_uploads(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction>;
+
+    /// Called after the global model moved by `delta = w_new − w_old`
+    /// (PAOTA keeps it as the similarity reference direction).
+    fn on_global_delta(&mut self, delta: &[f32]) {
+        let _ = delta;
+    }
+}
+
+/// Drive `policy` over the configured horizon against a prepared context.
+pub fn run(
+    ctx: &TrainContext,
+    cfg: &Config,
+    policy: &mut dyn AggregationPolicy,
+) -> Result<RunResult> {
+    Coordinator::new(ctx, cfg, policy.batch_stream()).run(policy)
+}
+
+/// The event-driven simulation core shared by all algorithms.
+pub struct Coordinator<'a> {
+    ctx: &'a TrainContext,
+    cfg: &'a Config,
+    latency: LatencyModel,
+    clock: VirtualClock,
+    /// Client-finished arrivals, keyed by virtual finish time.
+    queue: EventQueue<usize>,
+    slots: Vec<ClientSlot>,
+    /// Ready clients carried across periodic slots (finished but not yet
+    /// scheduled by the policy).
+    pending: Vec<usize>,
+    rngs: RngStreams,
+    telemetry: Telemetry,
+    w_g: Vec<f32>,
+    // Reusable flat buffers for the aggregate kernel.
+    stack: Vec<f32>,
+    coef: Vec<f32>,
+    zero_noise: Vec<f32>,
+    scratch: Vec<f32>,
+    dim: usize,
+    k: usize,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(ctx: &'a TrainContext, cfg: &'a Config, batch_stream: u64) -> Self {
+        let dim = ctx.dim();
+        let k = ctx.clients();
+        Self {
+            ctx,
+            cfg,
+            latency: cfg.latency(),
+            clock: VirtualClock::new(),
+            queue: EventQueue::new(),
+            slots: Vec::new(),
+            pending: Vec::new(),
+            rngs: RngStreams::new(cfg.seed, batch_stream),
+            telemetry: Telemetry::new(cfg.rounds, cfg.eval_every),
+            w_g: ctx.init_weights(),
+            stack: vec![0.0; k * dim],
+            coef: vec![0.0; k],
+            zero_noise: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+            dim,
+            k,
+        }
+    }
+
+    /// Run to completion and yield the record stream + final model.
+    pub fn run(mut self, policy: &mut dyn AggregationPolicy) -> Result<RunResult> {
+        match policy.timing() {
+            RoundTiming::Periodic => self.drive_periodic(policy)?,
+            RoundTiming::Synchronous => self.drive_synchronous(policy)?,
+            RoundTiming::Continuous => self.drive_continuous(policy)?,
+            RoundTiming::SingleNode => self.drive_single_node(policy)?,
+        }
+        let Coordinator { telemetry, w_g, .. } = self;
+        Ok(RunResult {
+            algorithm: policy.algorithm(),
+            records: telemetry.into_records(),
+            final_weights: w_g,
+        })
+    }
+
+    /// All clients start training on w_g^0 at t = 0 (b_k^1 = 1 ∀k).
+    fn spawn_fleet(&mut self) {
+        self.slots = (0..self.k)
+            .map(|_| ClientSlot {
+                base_round: 0,
+                base_weights: self.w_g.clone(),
+                finish_time: 0.0,
+            })
+            .collect();
+        for client in 0..self.k {
+            let finish = self.latency.draw(&mut self.rngs.latency);
+            self.slots[client].finish_time = finish;
+            self.queue.push(finish, client);
+        }
+    }
+
+    /// PAOTA-style time-triggered slots: every round closes after exactly
+    /// ΔT virtual seconds, aggregating whatever finished inside it.
+    fn drive_periodic(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
+        self.spawn_fleet();
+        for round in 0..self.cfg.rounds {
+            let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
+            while let Some((_, client)) = self.queue.pop_until(slot_end) {
+                self.pending.push(client);
+            }
+            // Client-index order keeps the per-purpose streams aligned
+            // with a deterministic scan over the fleet.
+            self.pending.sort_unstable();
+            let offered = std::mem::take(&mut self.pending);
+            let chosen = policy.select_participants(&offered, &mut self.rngs);
+            self.pending = offered.into_iter().filter(|c| !chosen.contains(c)).collect();
+
+            let mut uploads = self.train_uploads(round, &chosen, policy, true)?;
+            let action = if uploads.is_empty() {
+                RoundAction::Skip { mean_power: 0.0 }
+            } else {
+                policy.on_uploads(round, &self.w_g, &uploads, &mut self.rngs)?
+            };
+            let stats = self.apply_round_action(action, &mut uploads, policy)?;
+
+            // Uploaders restart from the fresh global model at the next
+            // slot boundary.
+            for up in &uploads {
+                let finish = slot_end + self.latency.draw(&mut self.rngs.latency);
+                self.slots[up.client] = ClientSlot {
+                    base_round: round + 1,
+                    base_weights: self.w_g.clone(),
+                    finish_time: finish,
+                };
+                self.queue.push(finish, up.client);
+            }
+
+            self.clock.advance_to(slot_end);
+            self.close_round(policy, round, slot_end, stats)?;
+        }
+        Ok(())
+    }
+
+    /// Synchronous cohorts: the PS waits for everyone it scheduled, so
+    /// the round lasts as long as its slowest participant.
+    fn drive_synchronous(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
+        let fleet: Vec<usize> = (0..self.k).collect();
+        for round in 0..self.cfg.rounds {
+            let chosen = policy.select_participants(&fleet, &mut self.rngs);
+            let mut round_time = 0.0f64;
+            for _ in &chosen {
+                round_time = round_time.max(self.latency.draw(&mut self.rngs.latency));
+            }
+            let mut uploads = self.train_uploads(round, &chosen, policy, false)?;
+            let action = if uploads.is_empty() {
+                RoundAction::Skip { mean_power: 0.0 }
+            } else {
+                policy.on_uploads(round, &self.w_g, &uploads, &mut self.rngs)?
+            };
+            let stats = self.apply_round_action(action, &mut uploads, policy)?;
+            self.clock.advance(round_time);
+            let now = self.clock.now();
+            self.close_round(policy, round, now, stats)?;
+        }
+        Ok(())
+    }
+
+    /// One pooled-data node: no stragglers, rounds advance by the mean of
+    /// the configured latency span.
+    fn drive_single_node(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
+        let round_latency = (self.cfg.latency_lo + self.cfg.latency_hi) / 2.0;
+        let node = [0usize];
+        for round in 0..self.cfg.rounds {
+            let mut uploads = self.train_uploads(round, &node, policy, false)?;
+            let action = if uploads.is_empty() {
+                RoundAction::Skip { mean_power: 0.0 }
+            } else {
+                policy.on_uploads(round, &self.w_g, &uploads, &mut self.rngs)?
+            };
+            let stats = self.apply_round_action(action, &mut uploads, policy)?;
+            self.clock.advance(round_latency);
+            let now = self.clock.now();
+            self.close_round(policy, round, now, stats)?;
+        }
+        Ok(())
+    }
+
+    /// Fully-asynchronous arrivals: the model updates on every upload,
+    /// telemetry is bucketed per ΔT window, and simultaneous arrivals are
+    /// coalesced into one batched `train_many` call — bit-identical to
+    /// serving them one by one, because each client's base snapshot was
+    /// fixed when it last restarted and the mixing stays in FIFO order.
+    fn drive_continuous(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
+        self.spawn_fleet();
+        let delta_t = self.cfg.delta_t;
+        let horizon = self.cfg.rounds as f64 * delta_t;
+        let mut stats = WindowStats::default();
+        let mut batch: Vec<usize> = Vec::new();
+        while let Some((t, first)) = self.queue.pop() {
+            if t > horizon {
+                break;
+            }
+            // Close every ΔT window that ended strictly before this
+            // arrival (telemetry only — the model updates continuously).
+            while (self.telemetry.window() as f64 + 1.0) * delta_t < t {
+                let window = self.telemetry.window();
+                let end = (window as f64 + 1.0) * delta_t;
+                let closed = std::mem::take(&mut stats);
+                self.close_round(policy, window, end, closed)?;
+            }
+            let window = self.telemetry.window();
+
+            batch.clear();
+            batch.push(first);
+            while self.queue.peek_time() == Some(t) {
+                batch.push(self.queue.pop().expect("peeked").1);
+            }
+
+            let uploads = self.train_uploads(window, &batch, policy, true)?;
+            let action = policy.on_uploads(window, &self.w_g, &uploads, &mut self.rngs)?;
+            let RoundAction::Mix { gammas } = action else {
+                bail!("Continuous timing expects RoundAction::Mix");
+            };
+            ensure!(gammas.len() == uploads.len(), "one mixing rate per upload");
+
+            self.clock.advance_to(t);
+            for (up, &gamma) in uploads.iter().zip(&gammas) {
+                // w_g ← (1 − γ)·w_g + γ·w_k; the client restarts
+                // immediately from the freshly mixed global model.
+                self.scratch.copy_from_slice(&self.w_g);
+                vecmath::scale(&mut self.scratch, (1.0 - gamma) as f32);
+                vecmath::axpy(gamma as f32, &up.weights, &mut self.scratch);
+                std::mem::swap(&mut self.w_g, &mut self.scratch);
+                stats.absorb(up);
+
+                let finish = t + self.latency.draw(&mut self.rngs.latency);
+                self.slots[up.client] = ClientSlot {
+                    base_round: window,
+                    base_weights: self.w_g.clone(),
+                    finish_time: finish,
+                };
+                self.queue.push(finish, up.client);
+            }
+        }
+        // Flush the remaining windows to exactly `rounds` records. The
+        // first flushed window keeps everything it accumulated before the
+        // horizon — including its staleness sum.
+        while !self.telemetry.is_complete() {
+            let window = self.telemetry.window();
+            let end = (window as f64 + 1.0) * delta_t;
+            let closed = std::mem::take(&mut stats);
+            self.close_round(policy, window, end, closed)?;
+        }
+        Ok(())
+    }
+
+    /// Train `chosen` participants as one batched `train_many` call.
+    /// With `from_slots`, bases (and staleness) come from the clients'
+    /// scheduler slots; otherwise everyone trains from the current global
+    /// model with zero staleness.
+    fn train_uploads(
+        &mut self,
+        round: usize,
+        chosen: &[usize],
+        policy: &mut dyn AggregationPolicy,
+        from_slots: bool,
+    ) -> Result<Vec<Upload>> {
+        let want_deltas = policy.needs_deltas();
+        let mut jobs = Vec::with_capacity(chosen.len());
+        for &client in chosen {
+            let base: &[f32] = if from_slots {
+                &self.slots[client].base_weights
+            } else {
+                &self.w_g
+            };
+            jobs.push(policy.make_job(client, base, self.ctx, &mut self.rngs.batch));
+        }
+        let outs = self.ctx.train_many(jobs, self.cfg.lr)?;
+        let mut uploads = Vec::with_capacity(chosen.len());
+        for (&client, out) in chosen.iter().zip(outs) {
+            let (staleness, base): (usize, &[f32]) = if from_slots {
+                let slot = &self.slots[client];
+                (round.saturating_sub(slot.base_round), &slot.base_weights)
+            } else {
+                (0, &self.w_g)
+            };
+            let mut delta = Vec::new();
+            if want_deltas {
+                delta = vec![0.0f32; self.dim];
+                vecmath::sub(&out.weights, base, &mut delta);
+            }
+            uploads.push(Upload {
+                client,
+                staleness,
+                loss: out.loss,
+                weights: out.weights,
+                delta,
+            });
+        }
+        Ok(uploads)
+    }
+
+    /// Apply the policy's decision to the global model and fold the
+    /// round's uploads into a [`WindowStats`].
+    fn apply_round_action(
+        &mut self,
+        action: RoundAction,
+        uploads: &mut [Upload],
+        policy: &mut dyn AggregationPolicy,
+    ) -> Result<WindowStats> {
+        let mut stats = WindowStats::default();
+        for up in uploads.iter() {
+            stats.absorb(up);
+        }
+        match action {
+            RoundAction::Skip { mean_power } => stats.mean_power = mean_power,
+            RoundAction::Adopt => {
+                ensure!(uploads.len() == 1, "Adopt expects exactly one upload");
+                self.w_g = std::mem::take(&mut uploads[0].weights);
+            }
+            RoundAction::Mix { .. } => bail!("Mix is only valid under Continuous timing"),
+            RoundAction::Aggregate {
+                coefs,
+                noise,
+                deltas,
+                mean_power,
+            } => {
+                ensure!(coefs.len() == uploads.len(), "one coefficient per upload");
+                stats.mean_power = mean_power;
+                self.coef.iter_mut().for_each(|c| *c = 0.0);
+                self.stack.iter_mut().for_each(|v| *v = 0.0);
+                for (up, &c) in uploads.iter().zip(&coefs) {
+                    self.coef[up.client] = c;
+                    let row = if deltas { &up.delta } else { &up.weights };
+                    self.stack[up.client * self.dim..(up.client + 1) * self.dim]
+                        .copy_from_slice(row);
+                }
+                let noise_ref: &[f32] = if noise.is_empty() { &self.zero_noise } else { &noise };
+                let out = self.ctx.rt.aggregate(&self.stack, &self.coef, noise_ref)?;
+                if deltas {
+                    // The kernel's weighted mean of update rows IS the
+                    // global step.
+                    policy.on_global_delta(&out);
+                    vecmath::axpy(1.0, &out, &mut self.w_g);
+                } else {
+                    let prev = std::mem::replace(&mut self.w_g, out);
+                    vecmath::sub(&self.w_g, &prev, &mut self.scratch);
+                    policy.on_global_delta(&self.scratch);
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Evaluate per the shared cadence and emit the round's record.
+    fn close_round(
+        &mut self,
+        policy: &dyn AggregationPolicy,
+        round: usize,
+        sim_time: f64,
+        stats: WindowStats,
+    ) -> Result<()> {
+        let eval = if self.telemetry.should_eval(round) {
+            Some(self.ctx.evaluate(&self.w_g)?)
+        } else {
+            None
+        };
+        let probe_loss = match eval {
+            Some(_) => Some(self.ctx.probe_loss(&self.w_g)?),
+            None => None,
+        };
+        let rec = self.telemetry.record(round, sim_time, stats, eval, probe_loss);
+        crate::debug!(
+            "{} r={round} t={sim_time:.0}s up={} stale={:.2} loss={:.4} acc={:?}",
+            policy.algorithm().name(),
+            rec.participants,
+            rec.mean_staleness,
+            rec.train_loss,
+            rec.eval.map(|e| e.accuracy),
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upload(loss: f32, staleness: usize) -> Upload {
+        Upload {
+            client: 0,
+            staleness,
+            loss,
+            weights: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn eval_cadence_hits_every_nth_and_final_round() {
+        let t = Telemetry::new(10, 3);
+        let evaluated: Vec<usize> = (0..10).filter(|&r| t.should_eval(r)).collect();
+        assert_eq!(evaluated, vec![0, 3, 6, 9]);
+        let t = Telemetry::new(5, 2);
+        let evaluated: Vec<usize> = (0..5).filter(|&r| t.should_eval(r)).collect();
+        assert_eq!(evaluated, vec![0, 2, 4]);
+        // The final round is always evaluated even off-cadence.
+        let t = Telemetry::new(4, 3);
+        assert!(t.should_eval(3));
+    }
+
+    #[test]
+    fn window_stats_means_and_empty_window() {
+        let mut s = WindowStats::default();
+        assert!(s.train_loss().is_nan());
+        assert_eq!(s.mean_staleness(), 0.0);
+        s.absorb(&upload(1.0, 2));
+        s.absorb(&upload(3.0, 4));
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.train_loss(), 2.0);
+        assert_eq!(s.mean_staleness(), 3.0);
+    }
+
+    #[test]
+    fn telemetry_records_are_contiguous() {
+        let mut t = Telemetry::new(3, 1);
+        t.record(0, 8.0, WindowStats::default(), None, None);
+        t.record(1, 16.0, WindowStats::default(), None, None);
+        t.record(2, 24.0, WindowStats::default(), None, None);
+        assert!(t.is_complete());
+        let recs = t.into_records();
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.round, i);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn telemetry_rejects_window_gaps() {
+        let mut t = Telemetry::new(3, 1);
+        t.record(1, 8.0, WindowStats::default(), None, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn telemetry_rejects_time_regression() {
+        let mut t = Telemetry::new(3, 1);
+        t.record(0, 8.0, WindowStats::default(), None, None);
+        t.record(1, 4.0, WindowStats::default(), None, None);
+    }
+
+    #[test]
+    fn rng_streams_are_deterministic_and_distinct() {
+        let mut a = RngStreams::new(42, streams::BATCH);
+        let mut b = RngStreams::new(42, streams::BATCH);
+        assert_eq!(a.latency.next_u32(), b.latency.next_u32());
+        assert_eq!(a.batch.next_u32(), b.batch.next_u32());
+        // Purposes are independent streams: drawing from one must not
+        // perturb another.
+        let before = b.channel.next_u32();
+        for _ in 0..17 {
+            a.pick.next_u32();
+        }
+        assert_eq!(a.channel.next_u32(), before);
+    }
+}

@@ -1,9 +1,10 @@
-//! COTAF (Sery & Cohen, "On Analog Gradient Descent Learning Over Multiple
-//! Access Fading Channels") — baseline (2) of §IV-B: synchronous AirComp
-//! FL with *time-varying precoding*.
+//! COTAF (Sery & Cohen, "On Analog Gradient Descent Learning Over
+//! Multiple Access Fading Channels") — baseline (2) of §IV-B, as an
+//! [`AggregationPolicy`]: synchronous AirComp with *time-varying
+//! precoding*.
 //!
-//! Participants upload their model **updates** `Δw_k = w_k − w_g` over the
-//! MAC, pre-scaled by `√α_t` with
+//! Participants upload their model **updates** `Δw_k = w_k − w_g` over
+//! the MAC, pre-scaled by `√α_t` with
 //!
 //! ```text
 //!   α_t = P_max / max_k ‖Δw_k‖²
@@ -19,130 +20,100 @@
 //!
 //! As training converges, ‖Δw‖ shrinks → `α_t` grows → effective noise
 //! `n/√α_t` shrinks: precoding matched to the update scale. The weakness
-//! the paper exploits (Fig. 3b) is that the *instantaneous* update norm is
-//! what bounds α_t; in loud channels (N₀ = −74 dBm/Hz) the unscaled noise
+//! the paper exploits (Fig. 3b) is that the *instantaneous* update norm
+//! bounds α_t; in loud channels (N₀ = −74 dBm/Hz) the unscaled noise
 //! floor is large relative to shrunken updates, degrading the model —
 //! PAOTA instead keeps full-scale *models* on the air and adapts powers.
 //!
-//! Synchronous timing: like Local SGD, the round lasts as long as its
-//! slowest participant (same participant count for fairness, §IV-B).
+//! Timing is synchronous like Local SGD (same participant count for
+//! fairness, §IV-B): the coordinator stacks the update rows
+//! (`deltas: true`) with unit coefficients, so the kernel's division by
+//! the participant count yields exactly the COTAF estimator above.
 
 use anyhow::Result;
 
-use crate::channel::Mac;
-use crate::config::Config;
-use crate::sim::VirtualClock;
-use crate::util::{vecmath, Rng};
+use crate::config::{Algorithm, Config};
+use crate::util::vecmath;
 
-use super::{RoundRecord, RunResult, TrainContext};
+use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+use super::TrainContext;
 
-pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let dim = ctx.dim();
-    let k = ctx.clients();
-    let m = ctx.rt.manifest().clone();
-    let participants = ctx.sync_participants(cfg);
-    let latency = cfg.latency();
-    let mac = Mac::new(cfg.channel);
+/// Synchronous AirComp with time-varying precoding.
+pub struct Cotaf {
+    participants: usize,
+    p_max: f64,
+    /// Channel noise power σ_n² = B·N₀ (watts).
+    noise_power: f64,
+    dim: usize,
+}
 
-    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
-    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
-    let mut pick_rng = Rng::with_stream(cfg.seed, 0x91c4);
-    let mut chan_rng = Rng::with_stream(cfg.seed, 0xc4a2);
-
-    let mut w_g = ctx.init_weights();
-    let mut clock = VirtualClock::new();
-    let mut stack = vec![0.0f32; k * dim];
-    let mut coef = vec![0.0f32; k];
-    let mut delta = vec![0.0f32; dim];
-
-    let mut records = Vec::with_capacity(cfg.rounds);
-
-    for round in 0..cfg.rounds {
-        let chosen = pick_rng.choose_indices(k, participants);
-
-        let mut round_time = 0.0f64;
-        let mut train_loss_sum = 0.0f64;
-        let mut max_delta_norm2 = 0.0f64;
-        coef.iter_mut().for_each(|c| *c = 0.0);
-        stack.iter_mut().for_each(|v| *v = 0.0);
-
-        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = chosen
-            .iter()
-            .map(|&i| {
-                round_time = round_time.max(latency.draw(&mut lat_rng));
-                let (xs, ys) = ctx.partition.clients[i].sample_batches(
-                    m.local_steps,
-                    m.batch,
-                    &mut batch_rng,
-                );
-                (w_g.clone(), xs, ys)
-            })
-            .collect();
-        for (&i, out) in chosen.iter().zip(ctx.train_many(jobs, cfg.lr)?) {
-            train_loss_sum += out.loss as f64;
-            // Stack the UPDATE, not the model.
-            vecmath::sub(&out.weights, &w_g, &mut delta);
-            let n2 = vecmath::dot(&delta, &delta);
-            max_delta_norm2 = max_delta_norm2.max(n2);
-            stack[i * dim..(i + 1) * dim].copy_from_slice(&delta);
-            coef[i] = 1.0;
+impl Cotaf {
+    pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
+        Self {
+            participants: ctx.sync_participants(cfg),
+            p_max: cfg.p_max,
+            noise_power: cfg.channel.noise_power(),
+            dim: ctx.dim(),
         }
-        clock.advance(round_time);
+    }
+}
 
+impl AggregationPolicy for Cotaf {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Cotaf
+    }
+
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Synchronous
+    }
+
+    fn needs_deltas(&self) -> bool {
+        true
+    }
+
+    fn select_participants(&mut self, offered: &[usize], rngs: &mut RngStreams) -> Vec<usize> {
+        // Positions into `offered` mapped back to client ids (identity for
+        // the synchronous full fleet, but correct for any offered set).
+        let n = self.participants.min(offered.len());
+        rngs.pick
+            .choose_indices(offered.len(), n)
+            .into_iter()
+            .map(|i| offered[i])
+            .collect()
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        let mut max_delta_norm2 = 0.0f64;
+        for up in uploads {
+            max_delta_norm2 = max_delta_norm2.max(vecmath::dot(&up.delta, &up.delta));
+        }
         // Time-varying precoder α_t = P_max / max‖Δw‖² (guard tiny norms).
         let alpha_t = if max_delta_norm2 > 1e-20 {
-            cfg.p_max / max_delta_norm2
+            self.p_max / max_delta_norm2
         } else {
             f64::INFINITY
         };
-        // aggregate() computes (Σ Δw + noise)/participants when coef = 1;
-        // the channel noise is already unscaled by the precoder: the noise
-        // handed to the kernel must be n/√α_t (the kernel then divides by
-        // the participant count).
+        // The noise handed to the kernel must already be unscaled by the
+        // precoder (n/√α_t); the kernel's division by Σcoef = |P| then
+        // yields n/(√α_t·|P|) — exactly the COTAF estimator.
         let noise_std = if alpha_t.is_finite() {
-            (mac.config().noise_power().sqrt() / alpha_t.sqrt()) as f32
+            (self.noise_power.sqrt() / alpha_t.sqrt()) as f32
         } else {
             0.0
         };
-        // After unscaling, the PS sees n/√α_t; the kernel's division by
-        // Σcoef (= participant count) then yields n/(√α_t·|P|) — exactly
-        // the COTAF estimator above.
-        let mut noise = vec![0.0f32; dim];
-        chan_rng.fill_normal(&mut noise, noise_std);
-        let mean_update = ctx.rt.aggregate(&stack, &coef, &noise)?;
-        vecmath::axpy(1.0, &mean_update, &mut w_g);
-
-        let eval = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(ctx.evaluate(&w_g)?)
-        } else {
-            None
-        };
-        let probe_loss = if eval.is_some() {
-            Some(ctx.probe_loss(&w_g)?)
-        } else {
-            None
-        };
-        records.push(RoundRecord {
-            round,
-            sim_time: clock.now(),
-            train_loss: (train_loss_sum / participants as f64) as f32,
-            probe_loss,
-            eval,
-            participants,
-            mean_staleness: 0.0,
-            mean_power: cfg.p_max,
-        });
-        crate::debug!(
-            "cotaf r={round} t={:.0}s α={alpha_t:.2e} loss={:.4} acc={:?}",
-            clock.now(),
-            records.last().unwrap().train_loss,
-            records.last().unwrap().eval.map(|e| e.accuracy),
-        );
+        let mut noise = vec![0.0f32; self.dim];
+        rngs.channel.fill_normal(&mut noise, noise_std);
+        Ok(RoundAction::Aggregate {
+            coefs: vec![1.0; uploads.len()],
+            noise,
+            deltas: true,
+            mean_power: self.p_max,
+        })
     }
-
-    Ok(RunResult {
-        algorithm: crate::config::Algorithm::Cotaf,
-        records,
-        final_weights: w_g,
-    })
 }

@@ -1,6 +1,8 @@
 //! FedAsync — fully-asynchronous FL, the other end of the spectrum the
 //! paper positions PAOTA against (its reference [7], Su & Li, "How
-//! Asynchronous can Federated Learning Be?"; mixing rule after Xie et al.).
+//! Asynchronous can Federated Learning Be?"; mixing rule after Xie et
+//! al.) — as an [`AggregationPolicy`] under the coordinator's
+//! [`Continuous`](RoundTiming::Continuous) timing.
 //!
 //! No rounds at all: the PS updates the global model **on every client
 //! arrival**, with a staleness-discounted mixing rate
@@ -15,173 +17,63 @@
 //! avoids: K simultaneous uploads need K time/frequency slots here but
 //! one MAC slot under AirComp.
 //!
-//! Driven by the continuous-time [`EventQueue`](crate::sim::events): the
-//! trainer runs until `rounds·ΔT` virtual seconds so budgets match the
-//! periodic schemes, and telemetry is bucketed per ΔT window to emit the
-//! same [`RoundRecord`] stream.
+//! The coordinator drives the run off the continuous-time event queue
+//! until `rounds·ΔT` virtual seconds so budgets match the periodic
+//! schemes, buckets telemetry per ΔT window into the same
+//! [`RoundRecord`](super::RoundRecord) stream, and coalesces
+//! simultaneous arrivals into one batched
+//! `train_many` call (bit-identical to serving them one by one).
 //!
-//! This is an *extension* (DESIGN.md step-5 scope): not one of the paper's
-//! evaluated baselines, but the natural ablation of "periodic" in
+//! This is an *extension* (DESIGN.md step-5 scope): not one of the
+//! paper's evaluated baselines, but the natural ablation of "periodic" in
 //! Periodic Aggregation Over-The-Air.
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Algorithm, Config};
 use crate::power::staleness_factor;
-use crate::sim::events::EventQueue;
-use crate::util::{vecmath, Rng};
 
-use super::{RoundRecord, RunResult, TrainContext};
+use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+use super::TrainContext;
 
-/// Client-finished event payload.
-#[derive(Debug, Clone, Copy)]
-struct Finished {
-    client: usize,
-    /// Window index when this client's base model was taken.
-    base_window: usize,
+/// Per-arrival staleness-discounted mixing.
+pub struct FedAsync {
+    /// Base mixing rate γ₀.
+    gamma0: f64,
+    /// Staleness bound Ω of the discount γ_s = γ₀·Ω/(s + Ω).
+    omega: f64,
 }
 
-pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let dim = ctx.dim();
-    let k = ctx.clients();
-    let m = ctx.rt.manifest().clone();
-    let latency = cfg.latency();
-    let horizon = cfg.rounds as f64 * cfg.delta_t;
-    let gamma0 = cfg.fedasync_gamma;
-
-    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
-    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
-
-    let mut w_g = ctx.init_weights();
-    // Per-client base model snapshot (what it trains from).
-    let mut bases: Vec<Vec<f32>> = (0..k).map(|_| w_g.clone()).collect();
-
-    let mut q = EventQueue::new();
-    for client in 0..k {
-        q.push(
-            latency.draw(&mut lat_rng),
-            Finished {
-                client,
-                base_window: 0,
-            },
-        );
-    }
-
-    let mut records = Vec::with_capacity(cfg.rounds);
-    let mut window = 0usize;
-    let mut win_updates = 0usize;
-    let mut win_loss = 0.0f64;
-    let mut win_stale = 0.0f64;
-    let mut mixed = vec![0.0f32; dim];
-
-    while let Some((t, ev)) = q.pop() {
-        if t > horizon {
-            break;
+impl FedAsync {
+    pub fn new(_ctx: &TrainContext, cfg: &Config) -> Self {
+        Self {
+            gamma0: cfg.fedasync_gamma,
+            omega: cfg.omega,
         }
-        // Close any ΔT windows that ended before this event (telemetry
-        // only — the model updates continuously).
-        while (window as f64 + 1.0) * cfg.delta_t < t {
-            let end = (window as f64 + 1.0) * cfg.delta_t;
-            let eval = if window % cfg.eval_every == 0 {
-                Some(ctx.evaluate(&w_g)?)
-            } else {
-                None
-            };
-            records.push(RoundRecord {
-                round: window,
-                sim_time: end,
-                train_loss: if win_updates > 0 {
-                    (win_loss / win_updates as f64) as f32
-                } else {
-                    f32::NAN
-                },
-                probe_loss: if eval.is_some() {
-                    Some(ctx.probe_loss(&w_g)?)
-                } else {
-                    None
-                },
-                eval,
-                participants: win_updates,
-                mean_staleness: if win_updates > 0 {
-                    win_stale / win_updates as f64
-                } else {
-                    0.0
-                },
-                mean_power: 0.0,
-            });
-            window += 1;
-            win_updates = 0;
-            win_loss = 0.0;
-            win_stale = 0.0;
-        }
+    }
+}
 
-        // Local training from this client's base snapshot.
-        let (xs, ys) =
-            ctx.partition.clients[ev.client].sample_batches(m.local_steps, m.batch, &mut batch_rng);
-        let out = ctx
-            .rt
-            .local_train(&bases[ev.client], &xs, &ys, cfg.lr)?;
-
-        // Staleness in ΔT windows (comparable to PAOTA's s_k).
-        let stale = window.saturating_sub(ev.base_window);
-        let gamma = gamma0 * staleness_factor(stale, cfg.omega);
-
-        // w_g ← (1−γ)w_g + γ·w_k.
-        mixed.copy_from_slice(&w_g);
-        vecmath::scale(&mut mixed, (1.0 - gamma) as f32);
-        vecmath::axpy(gamma as f32, &out.weights, &mut mixed);
-        std::mem::swap(&mut w_g, &mut mixed);
-
-        win_updates += 1;
-        win_loss += out.loss as f64;
-        win_stale += stale as f64;
-
-        // Client restarts immediately from the fresh global model.
-        bases[ev.client] = w_g.clone();
-        q.push(
-            t + latency.draw(&mut lat_rng),
-            Finished {
-                client: ev.client,
-                base_window: window,
-            },
-        );
+impl AggregationPolicy for FedAsync {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::FedAsync
     }
 
-    // Flush remaining windows to exactly `rounds` records.
-    while records.len() < cfg.rounds {
-        let window = records.len();
-        let end = (window as f64 + 1.0) * cfg.delta_t;
-        let eval = if window % cfg.eval_every == 0 || window + 1 == cfg.rounds {
-            Some(ctx.evaluate(&w_g)?)
-        } else {
-            None
-        };
-        records.push(RoundRecord {
-            round: window,
-            sim_time: end,
-            train_loss: if win_updates > 0 {
-                (win_loss / win_updates as f64) as f32
-            } else {
-                f32::NAN
-            },
-            probe_loss: if eval.is_some() {
-                Some(ctx.probe_loss(&w_g)?)
-            } else {
-                None
-            },
-            eval,
-            participants: win_updates,
-            mean_staleness: 0.0,
-            mean_power: 0.0,
-        });
-        win_updates = 0;
-        win_loss = 0.0;
-        win_stale = 0.0;
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Continuous
     }
 
-    Ok(RunResult {
-        algorithm: crate::config::Algorithm::FedAsync,
-        records,
-        final_weights: w_g,
-    })
+    fn on_uploads(
+        &mut self,
+        _window: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        _rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        Ok(RoundAction::Mix {
+            gammas: uploads
+                .iter()
+                .map(|up| self.gamma0 * staleness_factor(up.staleness, self.omega))
+                .collect(),
+        })
+    }
 }

@@ -1,103 +1,75 @@
 //! Ideal synchronous Local SGD (FedAvg, McMahan et al.) — baseline (1) of
-//! §IV-B: per round, a fixed number of clients receive the global model,
-//! run M local SGD steps, and upload *losslessly*; the PS averages with
-//! data-size weights `D_k/ΣD`. The round's virtual duration is the slowest
-//! participant's compute latency — exactly the straggler bottleneck PAOTA
-//! removes.
+//! §IV-B, as an [`AggregationPolicy`]: per round, a fixed cohort receives
+//! the global model, runs M local SGD steps, and uploads *losslessly*;
+//! the PS averages with data-size weights `D_k/ΣD`. Under the
+//! coordinator's [`Synchronous`](RoundTiming::Synchronous) timing the
+//! round's virtual duration is the slowest participant's compute latency
+//! — exactly the straggler bottleneck PAOTA removes.
 //!
-//! The aggregation itself reuses the AirComp artifact with `coef = D_k`
-//! and zero noise, which is then *exactly* the FedAvg weighted mean —
-//! one code path, two semantics.
+//! The aggregation reuses the AirComp kernel with `coef = D_k` and zero
+//! noise, which is then *exactly* the FedAvg weighted mean — one code
+//! path, two semantics.
 
 use anyhow::Result;
 
-use crate::config::Config;
-use crate::sim::VirtualClock;
-use crate::util::Rng;
+use crate::config::{Algorithm, Config};
 
-use super::{RoundRecord, RunResult, TrainContext};
+use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+use super::TrainContext;
 
-pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let dim = ctx.dim();
-    let k = ctx.clients();
-    let m = ctx.rt.manifest().clone();
-    let participants = ctx.sync_participants(cfg);
-    let latency = cfg.latency();
+/// Lossless synchronous FedAvg.
+pub struct LocalSgd {
+    participants: usize,
+    /// D_k per client — the FedAvg aggregation weights.
+    sizes: Vec<f32>,
+}
 
-    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
-    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
-    let mut pick_rng = Rng::with_stream(cfg.seed, 0x91c4);
-
-    let mut w_g = ctx.init_weights();
-    let mut clock = VirtualClock::new();
-    let mut stack = vec![0.0f32; k * dim];
-    let mut coef = vec![0.0f32; k];
-    let noise = vec![0.0f32; dim]; // lossless uplink
-
-    let mut records = Vec::with_capacity(cfg.rounds);
-
-    for round in 0..cfg.rounds {
-        let chosen = pick_rng.choose_indices(k, participants);
-
-        // Synchronous: the round lasts as long as its slowest participant.
-        let mut round_time = 0.0f64;
-        let mut train_loss_sum = 0.0f64;
-        coef.iter_mut().for_each(|c| *c = 0.0);
-        stack.iter_mut().for_each(|v| *v = 0.0);
-
-        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = chosen
-            .iter()
-            .map(|&i| {
-                round_time = round_time.max(latency.draw(&mut lat_rng));
-                let (xs, ys) = ctx.partition.clients[i].sample_batches(
-                    m.local_steps,
-                    m.batch,
-                    &mut batch_rng,
-                );
-                (w_g.clone(), xs, ys)
-            })
-            .collect();
-        for (&i, out) in chosen.iter().zip(ctx.train_many(jobs, cfg.lr)?) {
-            train_loss_sum += out.loss as f64;
-            stack[i * dim..(i + 1) * dim].copy_from_slice(&out.weights);
-            coef[i] = ctx.partition.clients[i].data.len() as f32; // D_k
+impl LocalSgd {
+    pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
+        Self {
+            participants: ctx.sync_participants(cfg),
+            sizes: ctx
+                .partition
+                .clients
+                .iter()
+                .map(|c| c.data.len() as f32)
+                .collect(),
         }
-        clock.advance(round_time);
+    }
+}
 
-        // Lossless FedAvg: data-size-weighted mean.
-        w_g = ctx.rt.aggregate(&stack, &coef, &noise)?;
-
-        let eval = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(ctx.evaluate(&w_g)?)
-        } else {
-            None
-        };
-        let probe_loss = if eval.is_some() {
-            Some(ctx.probe_loss(&w_g)?)
-        } else {
-            None
-        };
-        records.push(RoundRecord {
-            round,
-            sim_time: clock.now(),
-            train_loss: (train_loss_sum / participants as f64) as f32,
-            probe_loss,
-            eval,
-            participants,
-            mean_staleness: 0.0,
-            mean_power: 0.0,
-        });
-        crate::debug!(
-            "local_sgd r={round} t={:.0}s loss={:.4} acc={:?}",
-            clock.now(),
-            records.last().unwrap().train_loss,
-            records.last().unwrap().eval.map(|e| e.accuracy),
-        );
+impl AggregationPolicy for LocalSgd {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::LocalSgd
     }
 
-    Ok(RunResult {
-        algorithm: crate::config::Algorithm::LocalSgd,
-        records,
-        final_weights: w_g,
-    })
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Synchronous
+    }
+
+    fn select_participants(&mut self, offered: &[usize], rngs: &mut RngStreams) -> Vec<usize> {
+        // Positions into `offered` mapped back to client ids (identity for
+        // the synchronous full fleet, but correct for any offered set).
+        let n = self.participants.min(offered.len());
+        rngs.pick
+            .choose_indices(offered.len(), n)
+            .into_iter()
+            .map(|i| offered[i])
+            .collect()
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        _rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        Ok(RoundAction::Aggregate {
+            coefs: uploads.iter().map(|up| self.sizes[up.client]).collect(),
+            noise: Vec::new(), // lossless uplink
+            deltas: false,
+            mean_power: 0.0,
+        })
+    }
 }

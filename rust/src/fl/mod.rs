@@ -1,24 +1,41 @@
-//! Federated-learning trainers: PAOTA (the paper's contribution) and the
-//! baselines it is evaluated against, all driving the same AOT-compiled
-//! learning workload through [`crate::runtime::ModelRuntime`].
+//! Federated learning on one event-driven core: a single
+//! [`Coordinator`](coordinator::Coordinator) drives every algorithm, and
+//! each algorithm is an [`AggregationPolicy`](coordinator::AggregationPolicy)
+//! — a struct of decisions, not a round loop.
 //!
-//! * [`paota`]       — semi-asynchronous periodic aggregation via AirComp
-//!   with per-round power control (Algorithm 1).
+//! The coordinator owns the virtual clock, the client-finished event
+//! queue, per-client base-model slots, the deterministic per-purpose RNG
+//! streams, the reusable AirComp stack/coefficient buffers, and the
+//! [`Telemetry`](coordinator::Telemetry) recorder; local training always
+//! fans out through [`TrainContext::train_many`] (the parallel PJRT
+//! pool). Policies only decide *who* uploads, *what* the server does with
+//! the uploads, and *when* aggregation fires:
+//!
+//! * [`paota`]       — periodic semi-asynchronous AirComp with per-round
+//!   power control (the paper's Algorithm 1).
 //! * [`local_sgd`]   — ideal synchronous Local SGD / FedAvg (baseline 1).
 //! * [`cotaf`]       — synchronous AirComp with time-varying precoding
 //!   (baseline 2, Sery & Cohen).
-//! * [`centralized`] — pooled-data SGD; provides the `F(w*)` estimate for
-//!   the Fig. 3 loss-gap curves.
+//! * [`centralized`] — pooled-data SGD; the `F(w*)` estimator for the
+//!   Fig. 3 loss-gap curves.
+//! * [`fedasync`]    — fully-asynchronous per-arrival mixing (extension).
 //!
-//! All trainers share [`TrainContext`] (runtime + data + probes) and emit
-//! the same [`RoundRecord`] stream so the experiment harness can overlay
-//! them directly.
+//! Every run emits the same [`RoundRecord`] stream so the experiment
+//! harness can overlay algorithms directly. To add a scheme, implement
+//! `AggregationPolicy` and list it in [`build_policy`] — see
+//! [`coordinator`] for the contract.
 
 pub mod centralized;
+pub mod coordinator;
 pub mod cotaf;
 pub mod fedasync;
 pub mod local_sgd;
 pub mod paota;
+
+pub use coordinator::{
+    AggregationPolicy, Coordinator, RngStreams, RoundAction, RoundTiming, Telemetry, Upload,
+    WindowStats,
+};
 
 use anyhow::{bail, Context as _, Result};
 
@@ -264,11 +281,19 @@ pub fn run(cfg: &Config) -> Result<RunResult> {
 /// Run against a pre-built context (lets the harness reuse data+runtime
 /// across algorithm sweeps — same partition, same probe, same test set).
 pub fn run_with_context(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
+    let mut policy = build_policy(ctx, cfg);
+    coordinator::run(ctx, cfg, policy.as_mut())
+}
+
+/// Construct the aggregation policy the config selects. The only place
+/// that maps [`Algorithm`] to an implementation — new schemes register
+/// here.
+pub fn build_policy(ctx: &TrainContext, cfg: &Config) -> Box<dyn AggregationPolicy> {
     match cfg.algorithm {
-        Algorithm::Paota => paota::run(ctx, cfg),
-        Algorithm::LocalSgd => local_sgd::run(ctx, cfg),
-        Algorithm::Cotaf => cotaf::run(ctx, cfg),
-        Algorithm::Centralized => centralized::run(ctx, cfg),
-        Algorithm::FedAsync => fedasync::run(ctx, cfg),
+        Algorithm::Paota => Box::new(paota::Paota::new(ctx, cfg)),
+        Algorithm::LocalSgd => Box::new(local_sgd::LocalSgd::new(ctx, cfg)),
+        Algorithm::Cotaf => Box::new(cotaf::Cotaf::new(ctx, cfg)),
+        Algorithm::Centralized => Box::new(centralized::Centralized::new(ctx, cfg)),
+        Algorithm::FedAsync => Box::new(fedasync::FedAsync::new(ctx, cfg)),
     }
 }

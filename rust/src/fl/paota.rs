@@ -1,16 +1,7 @@
-//! PAOTA — the paper's Algorithm 1: time-triggered semi-asynchronous
-//! federated learning with over-the-air aggregation and per-round
-//! power control.
-//!
-//! Round structure (Fig. 2):
-//!
-//! ```text
-//!  t = r·ΔT                t = (r+1)·ΔT
-//!  ├────────── round r ──────────┤ aggregation slot
-//!  ready clients receive w_g^r    clients whose local training finished
-//!  and start M local SGD steps    inside (r·ΔT, (r+1)·ΔT] upload their
-//!  (compute latency ℓ ~ U(5,15))  models simultaneously over the MAC
-//! ```
+//! PAOTA — the paper's Algorithm 1 as an [`AggregationPolicy`]:
+//! time-triggered semi-asynchronous aggregation over the air with
+//! per-round power control, riding the coordinator's
+//! [`Periodic`](RoundTiming::Periodic) timing (Fig. 2's ΔT slot anatomy).
 //!
 //! A client whose latency exceeds the period misses `s_k` aggregation
 //! slots; its eventual upload is trained from the stale base `w_g^{r−s_k}`
@@ -18,221 +9,127 @@
 //! virtual seconds — that is the whole point of the scheme (no straggler
 //! bottleneck, Table I's time column).
 //!
-//! Per aggregation slot the coordinator:
-//! 1. collects the finished clients, runs their M-step local training
-//!    (AOT `local_train` artifact) from their stale bases,
-//! 2. draws the round's Rayleigh fades, computes per-client effective
+//! Per slot this policy:
+//! 1. draws the round's Rayleigh fades and derives per-client effective
 //!    power caps (channel inversion, eq. (5)/(7)),
-//! 3. computes staleness factors ρ and gradient-similarity factors θ and
+//! 2. computes staleness factors ρ and gradient-similarity factors θ and
 //!    solves the Dinkelbach power control (eq. (25)–(27)) for p_k,
-//! 4. aggregates over the air: `w_g ← (Σ_k p_k·w_k + n)/Σ_k p_k`
-//!    (eq. (6)+(8), the L1 Pallas reduction) with AWGN of power B·N₀,
-//! 5. hands `w_g^{r+1}` to every client that uploaded (they restart
-//!    immediately at the next round boundary).
+//! 3. returns the powers as AirComp coefficients with AWGN of power B·N₀
+//!    (eq. (6)+(8); the L1 kernel performs the ς division).
 
 use anyhow::Result;
 
 use crate::channel::Mac;
-use crate::config::Config;
+use crate::config::{Algorithm, Config, PowerCapMode};
 use crate::power::{
     solve_power_control, BoundConstants, ClientFactors, PowerSolverConfig,
 };
 use crate::util::vecmath;
-use crate::util::Rng;
 
-use super::{RoundRecord, RunResult, TrainContext};
+use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+use super::TrainContext;
 
-/// Per-client scheduler state.
-#[derive(Debug, Clone)]
-struct ClientSlot {
-    /// Global round whose model this client is training from.
-    base_round: usize,
-    /// The base weights w_g^{base_round} it received.
-    base_weights: Vec<f32>,
-    /// Virtual time its current local training finishes.
-    finish_time: f64,
+/// The paper's semi-asynchronous periodic-aggregation scheme.
+pub struct Paota {
+    mac: Mac,
+    consts: BoundConstants,
+    solver_cfg: PowerSolverConfig,
+    power_cap_mode: PowerCapMode,
+    p_max: f64,
+    dim: usize,
+    /// w_g^r − w_g^{r−1}: the similarity reference direction (eq. (25)).
+    last_delta: Vec<f32>,
 }
 
-/// Run PAOTA per the config. See the module docs for the round anatomy.
-pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let dim = ctx.dim();
-    let k = ctx.clients();
-    let latency = cfg.latency();
-    let mac = Mac::new(cfg.channel);
-    let consts = BoundConstants {
-        l_smooth: cfg.l_smooth,
-        epsilon2: cfg.epsilon2,
-        k_total: k,
-        dim,
-        noise_power: cfg.channel.noise_power(),
-        omega: cfg.omega,
-    };
-    let solver_cfg = PowerSolverConfig {
-        solver: cfg.solver,
-        mip_max_k: cfg.mip_max_k,
-        pla_segments: cfg.pla_segments,
-        mip_max_nodes: cfg.mip_max_nodes,
-        dinkelbach_eps: cfg.dinkelbach_eps,
-        dinkelbach_iters: cfg.dinkelbach_iters,
-        force_beta: cfg.force_beta,
-    };
-
-    // Independent deterministic streams.
-    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
-    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
-    let mut chan_rng = Rng::with_stream(cfg.seed, 0xc4a2);
-    let mut opt_rng = Rng::with_stream(cfg.seed, 0x0b7);
-
-    let mut w_g = ctx.init_weights();
-    // w_g^r − w_g^{r−1}: the similarity reference direction (eq. (25)).
-    let mut last_delta = vec![0.0f32; dim];
-
-    // All clients start training on w_g^0 at t = 0 (b_k^1 = 1 ∀k).
-    let mut slots: Vec<ClientSlot> = (0..k)
-        .map(|_| ClientSlot {
-            base_round: 0,
-            base_weights: w_g.clone(),
-            finish_time: latency.draw(&mut lat_rng),
-        })
-        .collect();
-
-    // Reusable flat buffers for the aggregate artifact.
-    let mut stack = vec![0.0f32; k * dim];
-    let mut coef = vec![0.0f32; k];
-
-    let mut records = Vec::with_capacity(cfg.rounds);
-    let mut scratch = vec![0.0f32; dim];
-
-    for round in 0..cfg.rounds {
-        let slot_end = (round as f64 + 1.0) * cfg.delta_t;
-
-        // 1. Who finished inside this window?
-        let ready: Vec<usize> = (0..k)
-            .filter(|&i| slots[i].finish_time <= slot_end)
-            .collect();
-
-        let mut train_loss_sum = 0.0f64;
-        let mut staleness_sum = 0.0f64;
-        let mut updates: Vec<(usize, Vec<f32>, usize, f64)> = Vec::with_capacity(ready.len());
-
-        // 2. Local training for each finisher (M SGD steps from its base) —
-        // fanned out over the PJRT worker pool (§Perf; bit-identical to
-        // the sequential path, deterministic order).
-        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = ready
-            .iter()
-            .map(|&i| {
-                let (xs, ys) = ctx.partition.clients[i].sample_batches(
-                    ctx.rt.manifest().local_steps,
-                    ctx.rt.manifest().batch,
-                    &mut batch_rng,
-                );
-                (slots[i].base_weights.clone(), xs, ys)
-            })
-            .collect();
-        let outs = ctx.train_many(jobs, cfg.lr)?;
-        for (&i, out) in ready.iter().zip(outs) {
-            let staleness = round.saturating_sub(slots[i].base_round);
-            train_loss_sum += out.loss as f64;
-            staleness_sum += staleness as f64;
-
-            // Gradient-similarity factor input: cos(Δw_k, w_g^r − w_g^{r−1}).
-            vecmath::sub(&out.weights, &slots[i].base_weights, &mut scratch);
-            let cosine = vecmath::cosine(&scratch, &last_delta);
-            updates.push((i, out.weights, staleness, cosine));
-        }
-
-        let mut mean_power = 0.0;
-        if !updates.is_empty() {
-            // 3. Channel draws + power control.
-            let gains = mac.draw_fading_gains(&mut chan_rng, updates.len());
-            let factors: Vec<ClientFactors> = updates
-                .iter()
-                .zip(&gains)
-                .map(|((_, w_k, stale, cosine), &g2)| ClientFactors {
-                    stale_rounds: *stale,
-                    cosine: *cosine,
-                    p_cap: match cfg.power_cap_mode {
-                        // eq. (25) uses P_max directly (perfect inversion).
-                        crate::config::PowerCapMode::Paper => cfg.p_max,
-                        // Stricter eq. (7) reading: inverting the fade
-                        // spends energy ∝ ‖w‖²/|h|².
-                        crate::config::PowerCapMode::Inversion => mac
-                            .effective_power_cap(cfg.p_max, g2, vecmath::norm(w_k)),
-                    },
-                })
-                .collect();
-            let alloc = solve_power_control(&factors, &consts, &solver_cfg, &mut opt_rng)?;
-
-            // 4. Over-the-air aggregation.
-            coef.iter_mut().for_each(|c| *c = 0.0);
-            stack.iter_mut().for_each(|v| *v = 0.0);
-            let mut sigma_sum = 0.0f64;
-            for (slot_idx, (i, w_k, _, _)) in updates.iter().enumerate() {
-                coef[*i] = alloc.powers[slot_idx] as f32;
-                sigma_sum += alloc.powers[slot_idx];
-                stack[i * dim..(i + 1) * dim].copy_from_slice(w_k);
-            }
-            mean_power = sigma_sum / updates.len() as f64;
-            if sigma_sum > 0.0 {
-                // Raw eq.-(6) noise: the kernel performs the ς division.
-                let noise = mac.channel_noise(&mut chan_rng, dim);
-                let new_w = ctx.rt.aggregate(&stack, &coef, &noise)?;
-                vecmath::sub(&new_w, &w_g, &mut last_delta.as_mut_slice());
-                w_g = new_w;
-            }
-
-            // 5. Uploaders restart from the fresh global model at the next
-            // round boundary.
-            for (i, _, _, _) in &updates {
-                slots[*i] = ClientSlot {
-                    base_round: round + 1,
-                    base_weights: w_g.clone(),
-                    finish_time: slot_end + latency.draw(&mut lat_rng),
-                };
-            }
-        }
-
-        // Telemetry.
-        let n_up = updates.len();
-        let eval = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(ctx.evaluate(&w_g)?)
-        } else {
-            None
-        };
-        let probe_loss = if eval.is_some() {
-            Some(ctx.probe_loss(&w_g)?)
-        } else {
-            None
-        };
-        records.push(RoundRecord {
-            round,
-            sim_time: slot_end,
-            train_loss: if n_up > 0 {
-                (train_loss_sum / n_up as f64) as f32
-            } else {
-                f32::NAN
+impl Paota {
+    pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
+        let dim = ctx.dim();
+        Self {
+            mac: Mac::new(cfg.channel),
+            consts: BoundConstants {
+                l_smooth: cfg.l_smooth,
+                epsilon2: cfg.epsilon2,
+                k_total: ctx.clients(),
+                dim,
+                noise_power: cfg.channel.noise_power(),
+                omega: cfg.omega,
             },
-            probe_loss,
-            eval,
-            participants: n_up,
-            mean_staleness: if n_up > 0 {
-                staleness_sum / n_up as f64
-            } else {
-                0.0
+            solver_cfg: PowerSolverConfig {
+                solver: cfg.solver,
+                mip_max_k: cfg.mip_max_k,
+                pla_segments: cfg.pla_segments,
+                mip_max_nodes: cfg.mip_max_nodes,
+                dinkelbach_eps: cfg.dinkelbach_eps,
+                dinkelbach_iters: cfg.dinkelbach_iters,
+                force_beta: cfg.force_beta,
             },
-            mean_power,
-        });
-        crate::debug!(
-            "paota r={round} t={slot_end:.0}s up={n_up} stale={:.2} loss={:.4} acc={:?}",
-            records.last().unwrap().mean_staleness,
-            records.last().unwrap().train_loss,
-            records.last().unwrap().eval.map(|e| e.accuracy),
-        );
+            power_cap_mode: cfg.power_cap_mode,
+            p_max: cfg.p_max,
+            dim,
+            last_delta: vec![0.0; dim],
+        }
+    }
+}
+
+impl AggregationPolicy for Paota {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Paota
     }
 
-    Ok(RunResult {
-        algorithm: crate::config::Algorithm::Paota,
-        records,
-        final_weights: w_g,
-    })
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Periodic
+    }
+
+    fn needs_deltas(&self) -> bool {
+        true
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        // Channel draws + per-client factor inputs.
+        let gains = self.mac.draw_fading_gains(&mut rngs.channel, uploads.len());
+        let factors: Vec<ClientFactors> = uploads
+            .iter()
+            .zip(&gains)
+            .map(|(up, &g2)| ClientFactors {
+                stale_rounds: up.staleness,
+                // cos(Δw_k, w_g^r − w_g^{r−1}) — the θ input of eq. (25).
+                cosine: vecmath::cosine(&up.delta, &self.last_delta),
+                p_cap: match self.power_cap_mode {
+                    // eq. (25) uses P_max directly (perfect inversion).
+                    PowerCapMode::Paper => self.p_max,
+                    // Stricter eq. (7) reading: inverting the fade spends
+                    // energy ∝ ‖w‖²/|h|².
+                    PowerCapMode::Inversion => {
+                        self.mac
+                            .effective_power_cap(self.p_max, g2, vecmath::norm(&up.weights))
+                    }
+                },
+            })
+            .collect();
+        let alloc = solve_power_control(&factors, &self.consts, &self.solver_cfg, &mut rngs.opt)?;
+
+        let sigma_sum: f64 = alloc.powers.iter().sum();
+        let mean_power = sigma_sum / uploads.len() as f64;
+        if sigma_sum <= 0.0 {
+            return Ok(RoundAction::Skip { mean_power });
+        }
+        // Raw eq.-(6) AWGN: the kernel performs the ς division.
+        let noise = self.mac.channel_noise(&mut rngs.channel, self.dim);
+        Ok(RoundAction::Aggregate {
+            coefs: alloc.powers.iter().map(|&p| p as f32).collect(),
+            noise,
+            deltas: false,
+            mean_power,
+        })
+    }
+
+    fn on_global_delta(&mut self, delta: &[f32]) {
+        self.last_delta.copy_from_slice(delta);
+    }
 }

@@ -4,19 +4,27 @@
 //! Learning for Over-the-air Computation"* (Kou, Ji, Zhong, Zhang; 2023) as
 //! a three-layer Rust + JAX + Pallas system:
 //!
-//! * **L3 (this crate)** — the paper's coordination contribution: a
-//!   time-triggered, semi-asynchronous FL server with over-the-air (AirComp)
-//!   aggregation, per-round uplink power-control optimization (Dinkelbach
-//!   fractional programming over the convergence bound of Theorem 1), a
-//!   discrete-event device simulator and a wireless MAC channel simulator,
-//!   plus the paper's baselines (ideal Local SGD, COTAF).
+//! * **L3 (this crate)** — the paper's coordination contribution, built
+//!   around one discrete-event core: [`fl::coordinator::Coordinator`] owns
+//!   the virtual clock, the client-arrival event queue, per-client
+//!   base-model slots, deterministic per-purpose RNG streams, the AirComp
+//!   aggregation buffers, and the telemetry recorder; every algorithm —
+//!   PAOTA itself plus the baselines (ideal Local SGD, COTAF, pooled-data
+//!   SGD) and the FedAsync extension — is an
+//!   [`fl::coordinator::AggregationPolicy`] that only decides participant
+//!   selection, aggregation weights/powers (for PAOTA: the Dinkelbach
+//!   fractional program over the convergence bound of Theorem 1, see
+//!   [`power`]), and its round timing (synchronous, periodic, or
+//!   continuous). The wireless MAC channel simulator lives in
+//!   [`channel`]; device heterogeneity in [`sim`].
 //! * **L2/L1 (build time)** — the learning workload (MLP fwd/bwd, local SGD,
 //!   AirComp reduction) authored in JAX + Pallas and AOT-lowered to HLO-text
 //!   artifacts which [`runtime`] loads through PJRT. Python never runs at
 //!   request time.
 //!
-//! Start at [`fl`] for the training loops, [`power`] for the paper's power
-//! control, and `examples/quickstart.rs` for a minimal end-to-end run.
+//! Start at [`fl`] for the coordinator/policy architecture, [`power`] for
+//! the paper's power control, and `examples/quickstart.rs` for a minimal
+//! end-to-end run.
 
 pub mod runtime;
 pub mod util;

@@ -1,5 +1,10 @@
 //! Metrics: curve extraction, the paper's time-to-accuracy table, and CSV
 //! emission for every figure the harness regenerates.
+//!
+//! Everything here consumes the canonical [`RoundRecord`] stream emitted
+//! by the coordinator's [`Telemetry`](crate::fl::Telemetry) recorder —
+//! contiguous rounds, monotone `sim_time` — so curves from different
+//! algorithms (and different round timings) overlay directly.
 
 use std::io::Write;
 use std::path::Path;

@@ -1,6 +1,10 @@
-//! Continuous-time event queue for the fully-asynchronous extension
-//! (`fl::fedasync`): a min-heap over f64 timestamps with FIFO tie-breaking
-//! (stable order for simultaneous events keeps runs reproducible).
+//! Continuous-time event queue — the single scheduling driver behind
+//! [`crate::fl::coordinator::Coordinator`]: client-finished arrivals for
+//! every timing mode (periodic PAOTA slots, continuous FedAsync arrivals)
+//! flow through one of these. A min-heap over f64 timestamps with FIFO
+//! tie-breaking (stable order for simultaneous events keeps runs
+//! reproducible, and lets the coordinator coalesce same-timestamp
+//! arrivals into one batched `train_many` call).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -80,6 +84,16 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Pop the earliest event only if it is due at or before `t` — the
+    /// drain primitive for time-triggered aggregation slots.
+    pub fn pop_until(&mut self, t: f64) -> Option<(f64, T)> {
+        if self.peek_time()? <= t {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -141,5 +155,20 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn rejects_nan_time() {
         EventQueue::new().push(f64::NAN, 0);
+    }
+
+    #[test]
+    fn pop_until_respects_deadline() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        q.push(3.0, "c");
+        // Boundary is inclusive: an event exactly at the slot end is due.
+        assert_eq!(q.pop_until(2.0), Some((1.0, "a")));
+        assert_eq!(q.pop_until(2.0), Some((2.0, "b")));
+        assert_eq!(q.pop_until(2.0), None);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_until(10.0), Some((3.0, "c")));
+        assert_eq!(q.pop_until(10.0), None);
     }
 }

@@ -1,5 +1,7 @@
-//! Device-heterogeneity simulation: per-round compute-latency models and
-//! the virtual clock used for all "training time" reporting.
+//! Device-heterogeneity simulation: per-round compute-latency models, the
+//! virtual clock used for all "training time" reporting, and the
+//! continuous-time [`events::EventQueue`] the FL
+//! [`Coordinator`](crate::fl::Coordinator) is driven by.
 //!
 //! The paper's testbed (§IV-A) draws each client's per-round computation
 //! latency from U(5, 15) s; Table I's "time/s" column is virtual time under

@@ -1,0 +1,601 @@
+//! Golden-seed equivalence: each refactored [`AggregationPolicy`] must
+//! reproduce the seed trainers' `RoundRecord` stream on a small fixed
+//! config — same round count, participants, sim_time and staleness, and
+//! losses/weights within f32 tolerance.
+//!
+//! The references below are direct ports of the seed's five hand-rolled
+//! round loops (eval/probe/logging stripped — those draw no randomness),
+//! so any drift in the coordinator's RNG-stream discipline, slot
+//! scheduling, or aggregation plumbing fails loudly. The FedAsync
+//! reference carries the *intended* trailing-flush semantics (the seed
+//! dropped the last partial window's accumulated staleness; the
+//! coordinator fixes that, and so does the reference).
+//!
+//! Tests are skipped with a loud eprintln when artifacts are missing.
+
+use paota::channel::Mac;
+use paota::config::{Algorithm, Config, LatencyKind, PowerCapMode};
+use paota::fl::{self, TrainContext};
+use paota::power::{
+    solve_power_control, staleness_factor, BoundConstants, ClientFactors, PowerSolverConfig,
+};
+use paota::runtime::{Engine, ModelRuntime};
+use paota::sim::events::EventQueue;
+use paota::sim::VirtualClock;
+use paota::util::{vecmath, Rng};
+
+fn have_artifacts() -> bool {
+    let ok = ModelRuntime::default_dir().join("manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: run `make artifacts` first");
+    }
+    ok
+}
+
+fn quick_cfg(algo: Algorithm) -> Config {
+    let mut c = Config::default();
+    c.algorithm = algo;
+    c.rounds = 4;
+    c.eval_every = 2;
+    c
+}
+
+/// The telemetry fields the equivalence contract covers (eval/probe are
+/// deterministic functions of the weights and draw no randomness, so the
+/// references skip them).
+struct RefRecord {
+    round: usize,
+    sim_time: f64,
+    train_loss: f32,
+    participants: usize,
+    mean_staleness: f64,
+    mean_power: f64,
+}
+
+struct RefRun {
+    records: Vec<RefRecord>,
+    final_weights: Vec<f32>,
+}
+
+fn close_f32(a: f32, b: f32, what: &str) {
+    if a.is_nan() && b.is_nan() {
+        return;
+    }
+    assert!(
+        (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+        "{what}: {a} vs {b}"
+    );
+}
+
+fn assert_equivalent(got: &fl::RunResult, want: &RefRun) {
+    assert_eq!(got.records.len(), want.records.len(), "record count");
+    for (g, w) in got.records.iter().zip(&want.records) {
+        let tag = format!("round {}", w.round);
+        assert_eq!(g.round, w.round, "{tag}: round index");
+        assert_eq!(g.participants, w.participants, "{tag}: participants");
+        assert!(
+            (g.sim_time - w.sim_time).abs() < 1e-9,
+            "{tag}: sim_time {} vs {}",
+            g.sim_time,
+            w.sim_time
+        );
+        assert!(
+            (g.mean_staleness - w.mean_staleness).abs() < 1e-9,
+            "{tag}: staleness {} vs {}",
+            g.mean_staleness,
+            w.mean_staleness
+        );
+        close_f32(g.train_loss, w.train_loss, &format!("{tag}: train_loss"));
+        assert!(
+            (g.mean_power - w.mean_power).abs() <= 1e-9 * (1.0 + w.mean_power.abs()),
+            "{tag}: mean_power {} vs {}",
+            g.mean_power,
+            w.mean_power
+        );
+    }
+    assert_eq!(got.final_weights.len(), want.final_weights.len());
+    for (i, (a, b)) in got
+        .final_weights
+        .iter()
+        .zip(&want.final_weights)
+        .enumerate()
+    {
+        close_f32(*a, *b, &format!("final_weights[{i}]"));
+    }
+}
+
+fn run_case(cfg: &Config, reference: fn(&TrainContext, &Config) -> RefRun) {
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, cfg).unwrap();
+    let got = fl::run_with_context(&ctx, cfg).unwrap();
+    let want = reference(&ctx, cfg);
+    assert_equivalent(&got, &want);
+}
+
+// ---------------------------------------------------------------------
+// Reference round loops (seed ports).
+// ---------------------------------------------------------------------
+
+fn ref_paota(ctx: &TrainContext, cfg: &Config) -> RefRun {
+    struct Slot {
+        base_round: usize,
+        base_weights: Vec<f32>,
+        finish_time: f64,
+    }
+    let dim = ctx.dim();
+    let k = ctx.clients();
+    let latency = cfg.latency();
+    let mac = Mac::new(cfg.channel);
+    let consts = BoundConstants {
+        l_smooth: cfg.l_smooth,
+        epsilon2: cfg.epsilon2,
+        k_total: k,
+        dim,
+        noise_power: cfg.channel.noise_power(),
+        omega: cfg.omega,
+    };
+    let solver_cfg = PowerSolverConfig {
+        solver: cfg.solver,
+        mip_max_k: cfg.mip_max_k,
+        pla_segments: cfg.pla_segments,
+        mip_max_nodes: cfg.mip_max_nodes,
+        dinkelbach_eps: cfg.dinkelbach_eps,
+        dinkelbach_iters: cfg.dinkelbach_iters,
+        force_beta: cfg.force_beta,
+    };
+
+    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
+    let mut chan_rng = Rng::with_stream(cfg.seed, 0xc4a2);
+    let mut opt_rng = Rng::with_stream(cfg.seed, 0x0b7);
+
+    let mut w_g = ctx.init_weights();
+    let mut last_delta = vec![0.0f32; dim];
+    let mut slots: Vec<Slot> = (0..k)
+        .map(|_| Slot {
+            base_round: 0,
+            base_weights: w_g.clone(),
+            finish_time: latency.draw(&mut lat_rng),
+        })
+        .collect();
+
+    let mut stack = vec![0.0f32; k * dim];
+    let mut coef = vec![0.0f32; k];
+    let mut scratch = vec![0.0f32; dim];
+    let mut records = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        let slot_end = (round as f64 + 1.0) * cfg.delta_t;
+        let ready: Vec<usize> = (0..k).filter(|&i| slots[i].finish_time <= slot_end).collect();
+
+        let mut train_loss_sum = 0.0f64;
+        let mut staleness_sum = 0.0f64;
+        let mut updates: Vec<(usize, Vec<f32>, usize, f64)> = Vec::with_capacity(ready.len());
+
+        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = ready
+            .iter()
+            .map(|&i| {
+                let (xs, ys) = ctx.partition.clients[i].sample_batches(
+                    ctx.rt.manifest().local_steps,
+                    ctx.rt.manifest().batch,
+                    &mut batch_rng,
+                );
+                (slots[i].base_weights.clone(), xs, ys)
+            })
+            .collect();
+        let outs = ctx.train_many(jobs, cfg.lr).unwrap();
+        for (&i, out) in ready.iter().zip(outs) {
+            let staleness = round.saturating_sub(slots[i].base_round);
+            train_loss_sum += out.loss as f64;
+            staleness_sum += staleness as f64;
+            vecmath::sub(&out.weights, &slots[i].base_weights, &mut scratch);
+            let cosine = vecmath::cosine(&scratch, &last_delta);
+            updates.push((i, out.weights, staleness, cosine));
+        }
+
+        let mut mean_power = 0.0;
+        if !updates.is_empty() {
+            let gains = mac.draw_fading_gains(&mut chan_rng, updates.len());
+            let factors: Vec<ClientFactors> = updates
+                .iter()
+                .zip(&gains)
+                .map(|((_, w_k, stale, cosine), &g2)| ClientFactors {
+                    stale_rounds: *stale,
+                    cosine: *cosine,
+                    p_cap: match cfg.power_cap_mode {
+                        PowerCapMode::Paper => cfg.p_max,
+                        PowerCapMode::Inversion => {
+                            mac.effective_power_cap(cfg.p_max, g2, vecmath::norm(w_k))
+                        }
+                    },
+                })
+                .collect();
+            let alloc = solve_power_control(&factors, &consts, &solver_cfg, &mut opt_rng).unwrap();
+
+            coef.iter_mut().for_each(|c| *c = 0.0);
+            stack.iter_mut().for_each(|v| *v = 0.0);
+            let mut sigma_sum = 0.0f64;
+            for (slot_idx, (i, w_k, _, _)) in updates.iter().enumerate() {
+                coef[*i] = alloc.powers[slot_idx] as f32;
+                sigma_sum += alloc.powers[slot_idx];
+                stack[i * dim..(i + 1) * dim].copy_from_slice(w_k);
+            }
+            mean_power = sigma_sum / updates.len() as f64;
+            if sigma_sum > 0.0 {
+                let noise = mac.channel_noise(&mut chan_rng, dim);
+                let new_w = ctx.rt.aggregate(&stack, &coef, &noise).unwrap();
+                vecmath::sub(&new_w, &w_g, &mut last_delta);
+                w_g = new_w;
+            }
+            for (i, _, _, _) in &updates {
+                slots[*i] = Slot {
+                    base_round: round + 1,
+                    base_weights: w_g.clone(),
+                    finish_time: slot_end + latency.draw(&mut lat_rng),
+                };
+            }
+        }
+
+        let n_up = updates.len();
+        records.push(RefRecord {
+            round,
+            sim_time: slot_end,
+            train_loss: if n_up > 0 {
+                (train_loss_sum / n_up as f64) as f32
+            } else {
+                f32::NAN
+            },
+            participants: n_up,
+            mean_staleness: if n_up > 0 {
+                staleness_sum / n_up as f64
+            } else {
+                0.0
+            },
+            mean_power,
+        });
+    }
+    RefRun {
+        records,
+        final_weights: w_g,
+    }
+}
+
+fn ref_local_sgd(ctx: &TrainContext, cfg: &Config) -> RefRun {
+    let dim = ctx.dim();
+    let k = ctx.clients();
+    let m = ctx.rt.manifest().clone();
+    let participants = ctx.sync_participants(cfg);
+    let latency = cfg.latency();
+
+    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
+    let mut pick_rng = Rng::with_stream(cfg.seed, 0x91c4);
+
+    let mut w_g = ctx.init_weights();
+    let mut clock = VirtualClock::new();
+    let mut stack = vec![0.0f32; k * dim];
+    let mut coef = vec![0.0f32; k];
+    let noise = vec![0.0f32; dim];
+    let mut records = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        let chosen = pick_rng.choose_indices(k, participants);
+        let mut round_time = 0.0f64;
+        let mut train_loss_sum = 0.0f64;
+        coef.iter_mut().for_each(|c| *c = 0.0);
+        stack.iter_mut().for_each(|v| *v = 0.0);
+
+        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = chosen
+            .iter()
+            .map(|&i| {
+                round_time = round_time.max(latency.draw(&mut lat_rng));
+                let (xs, ys) =
+                    ctx.partition.clients[i].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+                (w_g.clone(), xs, ys)
+            })
+            .collect();
+        for (&i, out) in chosen.iter().zip(ctx.train_many(jobs, cfg.lr).unwrap()) {
+            train_loss_sum += out.loss as f64;
+            stack[i * dim..(i + 1) * dim].copy_from_slice(&out.weights);
+            coef[i] = ctx.partition.clients[i].data.len() as f32;
+        }
+        clock.advance(round_time);
+        w_g = ctx.rt.aggregate(&stack, &coef, &noise).unwrap();
+
+        records.push(RefRecord {
+            round,
+            sim_time: clock.now(),
+            train_loss: (train_loss_sum / participants as f64) as f32,
+            participants,
+            mean_staleness: 0.0,
+            mean_power: 0.0,
+        });
+    }
+    RefRun {
+        records,
+        final_weights: w_g,
+    }
+}
+
+fn ref_cotaf(ctx: &TrainContext, cfg: &Config) -> RefRun {
+    let dim = ctx.dim();
+    let k = ctx.clients();
+    let m = ctx.rt.manifest().clone();
+    let participants = ctx.sync_participants(cfg);
+    let latency = cfg.latency();
+    let mac = Mac::new(cfg.channel);
+
+    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
+    let mut pick_rng = Rng::with_stream(cfg.seed, 0x91c4);
+    let mut chan_rng = Rng::with_stream(cfg.seed, 0xc4a2);
+
+    let mut w_g = ctx.init_weights();
+    let mut clock = VirtualClock::new();
+    let mut stack = vec![0.0f32; k * dim];
+    let mut coef = vec![0.0f32; k];
+    let mut delta = vec![0.0f32; dim];
+    let mut records = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        let chosen = pick_rng.choose_indices(k, participants);
+        let mut round_time = 0.0f64;
+        let mut train_loss_sum = 0.0f64;
+        let mut max_delta_norm2 = 0.0f64;
+        coef.iter_mut().for_each(|c| *c = 0.0);
+        stack.iter_mut().for_each(|v| *v = 0.0);
+
+        let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = chosen
+            .iter()
+            .map(|&i| {
+                round_time = round_time.max(latency.draw(&mut lat_rng));
+                let (xs, ys) =
+                    ctx.partition.clients[i].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+                (w_g.clone(), xs, ys)
+            })
+            .collect();
+        for (&i, out) in chosen.iter().zip(ctx.train_many(jobs, cfg.lr).unwrap()) {
+            train_loss_sum += out.loss as f64;
+            vecmath::sub(&out.weights, &w_g, &mut delta);
+            let n2 = vecmath::dot(&delta, &delta);
+            max_delta_norm2 = max_delta_norm2.max(n2);
+            stack[i * dim..(i + 1) * dim].copy_from_slice(&delta);
+            coef[i] = 1.0;
+        }
+        clock.advance(round_time);
+
+        let alpha_t = if max_delta_norm2 > 1e-20 {
+            cfg.p_max / max_delta_norm2
+        } else {
+            f64::INFINITY
+        };
+        let noise_std = if alpha_t.is_finite() {
+            (mac.config().noise_power().sqrt() / alpha_t.sqrt()) as f32
+        } else {
+            0.0
+        };
+        let mut noise = vec![0.0f32; dim];
+        chan_rng.fill_normal(&mut noise, noise_std);
+        let mean_update = ctx.rt.aggregate(&stack, &coef, &noise).unwrap();
+        vecmath::axpy(1.0, &mean_update, &mut w_g);
+
+        records.push(RefRecord {
+            round,
+            sim_time: clock.now(),
+            train_loss: (train_loss_sum / participants as f64) as f32,
+            participants,
+            mean_staleness: 0.0,
+            mean_power: cfg.p_max,
+        });
+    }
+    RefRun {
+        records,
+        final_weights: w_g,
+    }
+}
+
+fn ref_centralized(ctx: &TrainContext, cfg: &Config) -> RefRun {
+    let m = ctx.rt.manifest().clone();
+    let pooled = ctx.partition.pooled();
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xce27);
+
+    let mut w = ctx.init_weights();
+    let mut clock = VirtualClock::new();
+    let mean_latency = (cfg.latency_lo + cfg.latency_hi) / 2.0;
+    let mut records = Vec::with_capacity(cfg.rounds);
+
+    for round in 0..cfg.rounds {
+        let mut xs = Vec::with_capacity(m.local_steps * m.batch * pooled.dim);
+        let mut ys = vec![0.0f32; m.local_steps * m.batch * pooled.classes];
+        for row in 0..(m.local_steps * m.batch) {
+            let i = batch_rng.index(pooled.len());
+            xs.extend_from_slice(pooled.row(i));
+            ys[row * pooled.classes + pooled.y[i] as usize] = 1.0;
+        }
+        let out = ctx.rt.local_train(&w, &xs, &ys, cfg.lr).unwrap();
+        w = out.weights;
+        clock.advance(mean_latency);
+
+        records.push(RefRecord {
+            round,
+            sim_time: clock.now(),
+            train_loss: out.loss,
+            participants: 1,
+            mean_staleness: 0.0,
+            mean_power: 0.0,
+        });
+    }
+    RefRun {
+        records,
+        final_weights: w,
+    }
+}
+
+fn ref_fedasync(ctx: &TrainContext, cfg: &Config) -> RefRun {
+    #[derive(Clone, Copy)]
+    struct Finished {
+        client: usize,
+        base_window: usize,
+    }
+    let dim = ctx.dim();
+    let k = ctx.clients();
+    let m = ctx.rt.manifest().clone();
+    let latency = cfg.latency();
+    let horizon = cfg.rounds as f64 * cfg.delta_t;
+    let gamma0 = cfg.fedasync_gamma;
+
+    let mut lat_rng = Rng::with_stream(cfg.seed, 0x1a7);
+    let mut batch_rng = Rng::with_stream(cfg.seed, 0xba7c);
+
+    let mut w_g = ctx.init_weights();
+    let mut bases: Vec<Vec<f32>> = (0..k).map(|_| w_g.clone()).collect();
+
+    let mut q = EventQueue::new();
+    for client in 0..k {
+        q.push(
+            latency.draw(&mut lat_rng),
+            Finished {
+                client,
+                base_window: 0,
+            },
+        );
+    }
+
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut window = 0usize;
+    let mut win_updates = 0usize;
+    let mut win_loss = 0.0f64;
+    let mut win_stale = 0.0f64;
+    let mut mixed = vec![0.0f32; dim];
+
+    let flush = |records: &mut Vec<RefRecord>, window: usize, n: usize, loss: f64, stale: f64| {
+        records.push(RefRecord {
+            round: window,
+            sim_time: (window as f64 + 1.0) * cfg.delta_t,
+            train_loss: if n > 0 { (loss / n as f64) as f32 } else { f32::NAN },
+            participants: n,
+            mean_staleness: if n > 0 { stale / n as f64 } else { 0.0 },
+            mean_power: 0.0,
+        });
+    };
+
+    while let Some((t, ev)) = q.pop() {
+        if t > horizon {
+            break;
+        }
+        while (window as f64 + 1.0) * cfg.delta_t < t {
+            flush(&mut records, window, win_updates, win_loss, win_stale);
+            window += 1;
+            win_updates = 0;
+            win_loss = 0.0;
+            win_stale = 0.0;
+        }
+
+        let (xs, ys) =
+            ctx.partition.clients[ev.client].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+        let out = ctx
+            .rt
+            .local_train(&bases[ev.client], &xs, &ys, cfg.lr)
+            .unwrap();
+
+        let stale = window.saturating_sub(ev.base_window);
+        let gamma = gamma0 * staleness_factor(stale, cfg.omega);
+
+        mixed.copy_from_slice(&w_g);
+        vecmath::scale(&mut mixed, (1.0 - gamma) as f32);
+        vecmath::axpy(gamma as f32, &out.weights, &mut mixed);
+        std::mem::swap(&mut w_g, &mut mixed);
+
+        win_updates += 1;
+        win_loss += out.loss as f64;
+        win_stale += stale as f64;
+
+        bases[ev.client] = w_g.clone();
+        q.push(
+            t + latency.draw(&mut lat_rng),
+            Finished {
+                client: ev.client,
+                base_window: window,
+            },
+        );
+    }
+
+    // Intended trailing-flush semantics: the first partial window keeps
+    // its accumulated staleness (the seed hardcoded 0.0 here).
+    while records.len() < cfg.rounds {
+        let window = records.len();
+        flush(&mut records, window, win_updates, win_loss, win_stale);
+        win_updates = 0;
+        win_loss = 0.0;
+        win_stale = 0.0;
+    }
+
+    RefRun {
+        records,
+        final_weights: w_g,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The equivalence tests.
+// ---------------------------------------------------------------------
+
+#[test]
+fn paota_matches_seed_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    run_case(&quick_cfg(Algorithm::Paota), ref_paota);
+}
+
+#[test]
+fn local_sgd_matches_seed_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    run_case(&quick_cfg(Algorithm::LocalSgd), ref_local_sgd);
+}
+
+#[test]
+fn cotaf_matches_seed_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    run_case(&quick_cfg(Algorithm::Cotaf), ref_cotaf);
+}
+
+#[test]
+fn centralized_matches_seed_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    run_case(&quick_cfg(Algorithm::Centralized), ref_centralized);
+}
+
+#[test]
+fn fedasync_matches_seed_trainer() {
+    if !have_artifacts() {
+        return;
+    }
+    // rounds = 5 leaves a tail beyond the last arrival so the trailing
+    // window flush (the fixed-staleness path) is exercised too.
+    let mut cfg = quick_cfg(Algorithm::FedAsync);
+    cfg.rounds = 5;
+    run_case(&cfg, ref_fedasync);
+}
+
+#[test]
+fn fedasync_coalesced_ties_match_sequential_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    // Homogeneous latency makes ALL K clients finish at identical
+    // timestamps: the coordinator coalesces each tie into one batched
+    // `train_many` call, the reference serves them strictly one by one —
+    // the streams must still agree bit-for-bit (within f32 tolerance).
+    let mut cfg = quick_cfg(Algorithm::FedAsync);
+    cfg.latency_kind = LatencyKind::Homogeneous;
+    cfg.latency_lo = 6.0;
+    cfg.latency_hi = 6.0;
+    run_case(&cfg, ref_fedasync);
+}

@@ -204,3 +204,68 @@ fn rng_streams_do_not_collide_across_trainer_tags() {
         }
     }
 }
+
+#[test]
+fn coordinator_telemetry_windows_contiguous_and_monotone() {
+    // The coordinator's continuous-mode bucketing: arrivals at random
+    // virtual times, ΔT windows closed lazily, trailing windows flushed
+    // to the configured horizon. Whatever the schedule, the emitted
+    // record stream must cover rounds 0..R contiguously with strictly
+    // increasing sim_time pinned to the window boundaries.
+    use paota::fl::{Telemetry, Upload, WindowStats};
+    check("telemetry windows contiguous + monotone", 100, |g| {
+        let rounds = g.usize_in(1..25);
+        let delta_t = g.f64_in(0.5..12.0);
+        let horizon = rounds as f64 * delta_t;
+        let n_events = g.usize_in(0..80);
+        let mut times: Vec<f64> = (0..n_events)
+            .map(|_| g.f64_in(0.0..horizon * 1.2))
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        let mut tel = Telemetry::new(rounds, g.usize_in(1..5));
+        let mut stats = WindowStats::default();
+        for &t in &times {
+            if t > horizon {
+                break;
+            }
+            while (tel.window() as f64 + 1.0) * delta_t < t {
+                let w = tel.window();
+                let closed = std::mem::take(&mut stats);
+                tel.record(w, (w as f64 + 1.0) * delta_t, closed, None, None);
+            }
+            stats.absorb(&Upload {
+                client: 0,
+                staleness: tel.window(),
+                loss: 1.0,
+                weights: Vec::new(),
+                delta: Vec::new(),
+            });
+        }
+        while !tel.is_complete() {
+            let w = tel.window();
+            let closed = std::mem::take(&mut stats);
+            tel.record(w, (w as f64 + 1.0) * delta_t, closed, None, None);
+        }
+
+        let records = tel.into_records();
+        prop_assert(records.len() == rounds, "one record per round")?;
+        let mut last = f64::NEG_INFINITY;
+        for (i, r) in records.iter().enumerate() {
+            prop_assert(r.round == i, "windows not contiguous")?;
+            prop_assert(r.sim_time > last, "sim_time not monotone")?;
+            prop_close(
+                r.sim_time,
+                (i as f64 + 1.0) * delta_t,
+                1e-9,
+                "window boundary",
+            )?;
+            prop_assert(
+                r.participants > 0 || r.train_loss.is_nan(),
+                "empty window must report NaN train loss",
+            )?;
+            last = r.sim_time;
+        }
+        Ok(())
+    });
+}
