@@ -24,10 +24,10 @@ fn main() {
         ctx.sync_participants(&base)
     ));
     let b = Bench::new("e2e_round");
-    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+    for algo in ["paota", "local_sgd", "cotaf"] {
         let mut cfg = base.clone();
-        cfg.algorithm = algo;
-        let m = b.iter(&format!("{:?}_4rounds", algo), || {
+        cfg.algorithm = Algorithm::parse(algo).unwrap();
+        let m = b.iter(&format!("{algo}_4rounds"), || {
             fl::run_with_context(&ctx, &cfg).unwrap();
         });
         println!(

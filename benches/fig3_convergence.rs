@@ -31,31 +31,31 @@ fn main() {
         let mut sw = Stopwatch::start();
         let mut finals = Vec::new();
         println!("{:<10} {}", "series", "gap per eval round");
-        for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+        for algo in ["paota", "local_sgd", "cotaf"] {
             let mut cfg = base.clone();
-            cfg.algorithm = algo;
+            cfg.algorithm = Algorithm::parse(algo).unwrap();
             cfg.channel.n0_dbm_per_hz = n0;
             let run = fl::run_with_context(&ctx, &cfg).unwrap();
-            let curve = Curve::loss_gap(&format!("{algo:?}"), &run, f_star);
+            let curve = Curve::loss_gap(algo, &run, f_star);
             let series: Vec<String> =
                 curve.points.iter().map(|p| format!("{:.3}", p.2)).collect();
-            println!("{:<10} {}", format!("{algo:?}"), series.join(" "));
+            println!("{algo:<10} {}", series.join(" "));
             finals.push((algo, curve.last().unwrap_or(f64::NAN)));
         }
         println!("sweep wall time: {:?}", sw.lap());
         for (algo, gap) in &finals {
-            println!("  final gap {algo:?}: {gap:.4}");
+            println!("  final gap {algo}: {gap:.4}");
         }
         // Shape assertions (soft — printed, not panicking, per bench role).
-        let get = |a: Algorithm| finals.iter().find(|(x, _)| *x == a).unwrap().1;
+        let get = |a: &str| finals.iter().find(|(x, _)| *x == a).unwrap().1;
         if n0 == -74.0 {
-            let ok = get(Algorithm::Paota) <= get(Algorithm::Cotaf) * 1.25;
+            let ok = get("paota") <= get("cotaf") * 1.25;
             println!(
                 "  shape[PAOTA robust vs COTAF at -74]: {}",
                 if ok { "HOLDS" } else { "VIOLATED (short bench run?)" }
             );
         } else {
-            let ok = (get(Algorithm::Paota) - get(Algorithm::LocalSgd)).abs() < 0.5;
+            let ok = (get("paota") - get("local_sgd")).abs() < 0.5;
             println!(
                 "  shape[PAOTA ≈ LocalSGD at -174]: {}",
                 if ok { "HOLDS" } else { "VIOLATED (short bench run?)" }

@@ -23,11 +23,11 @@ fn main() {
 
     let mut sw = Stopwatch::start();
     let mut curves = Vec::new();
-    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+    for algo in ["paota", "local_sgd", "cotaf"] {
         let mut cfg = base.clone();
-        cfg.algorithm = algo;
+        cfg.algorithm = Algorithm::parse(algo).unwrap();
         let run = fl::run_with_context(&ctx, &cfg).unwrap();
-        curves.push((algo, Curve::accuracy(&format!("{algo:?}"), &run)));
+        curves.push((algo, Curve::accuracy(algo, &run)));
     }
     println!("# 3-algorithm sweep: {:?} ({} rounds each)\n", sw.lap(), base.rounds);
 

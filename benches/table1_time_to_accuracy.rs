@@ -23,9 +23,9 @@ fn main() {
 
     let mut sw = Stopwatch::start();
     let mut runs = Vec::new();
-    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+    for algo in ["paota", "local_sgd", "cotaf"] {
         let mut cfg = base.clone();
-        cfg.algorithm = algo;
+        cfg.algorithm = Algorithm::parse(algo).unwrap();
         runs.push((algo, fl::run_with_context(&ctx, &cfg).unwrap()));
     }
     let sweep = sw.lap();
@@ -44,7 +44,7 @@ fn main() {
         .iter()
         .map(|(algo, run)| {
             (
-                format!("{algo:?}"),
+                algo.to_string(),
                 time_to_accuracy(&run.records, &targets),
             )
         })
@@ -57,9 +57,9 @@ fn main() {
     print!("{}", format_table1(&rows, &targets));
 
     // The paper's headline: PAOTA needs more rounds but less time.
-    let find = |a: Algorithm| rows.iter().find(|(n, _)| n == &format!("{a:?}")).unwrap();
-    let p = &find(Algorithm::Paota).1;
-    let s = &find(Algorithm::LocalSgd).1;
+    let find = |a: &str| rows.iter().find(|(n, _)| n == a).unwrap();
+    let p = &find("paota").1;
+    let s = &find("local_sgd").1;
     for (pt, st) in p.iter().zip(s.iter()) {
         if let (Some(ptime), Some(stime)) = (pt.time_s, st.time_s) {
             println!(

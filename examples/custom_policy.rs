@@ -1,0 +1,96 @@
+//! Register a brand-new aggregation scheme **without touching the core
+//! crate** — the point of the string-keyed policy registry.
+//!
+//! ```bash
+//! cargo run --release --offline --example custom_policy
+//! ```
+//!
+//! The policy below ("equal_mix") is deliberately tiny: periodic ΔT slots
+//! like PAOTA, but a lossless equal-coefficient mean of whatever models
+//! arrived — no power control, no channel. The interesting part is the
+//! wiring, which is all of one `registry::register` call: after it, the
+//! name parses through `Algorithm::parse`/`--algo`, shows up in
+//! `repro help`, and runs on the shared coordinator. Zero diffs under
+//! `rust/src/config`, `rust/src/cli`, or the `fl` dispatch path.
+//!
+//! Runs on the AOT artifacts when present, else on the pure-Rust native
+//! kernel — so this example works from a fresh checkout.
+
+use anyhow::Result;
+use paota::config::{Algorithm, Config};
+use paota::fl::{self, registry, AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+
+/// Periodic-slot, lossless, equal-weight model averaging.
+struct EqualMix;
+
+impl AggregationPolicy for EqualMix {
+    fn name(&self) -> &str {
+        "equal_mix"
+    }
+
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Periodic
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        _rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        Ok(RoundAction::Aggregate {
+            coefs: vec![1.0; uploads.len()],
+            noise: Vec::new(), // lossless uplink
+            deltas: false,
+            mean_power: 0.0,
+        })
+    }
+}
+
+fn main() -> Result<()> {
+    println!("registered before: {}", registry::names().join(", "));
+
+    // The single line that opens the whole surface:
+    registry::register("equal_mix", "EqualMix (example)", &["toy"], |_ctx, _cfg| {
+        Box::new(EqualMix) as Box<dyn AggregationPolicy>
+    })?;
+
+    println!("registered after:  {}\n", registry::names().join(", "));
+
+    let mut cfg = Config::default();
+    cfg.rounds = 8;
+    cfg.eval_every = 2;
+    // Resolve via the alias — exactly what `repro run --algo toy` does.
+    cfg.algorithm = Algorithm::parse("toy")?;
+    assert_eq!(cfg.algorithm.name(), "equal_mix");
+
+    let manifest = paota::runtime::ModelRuntime::default_dir().join("manifest.txt");
+    if !manifest.exists() {
+        println!("(no AOT artifacts — running on the native reference kernel)\n");
+        cfg.artifacts_dir = "native".into();
+        cfg.synth.side = 10;
+        cfg.partition.clients = 20;
+        cfg.partition.sizes = vec![60, 120];
+        cfg.partition.test_size = 100;
+    }
+
+    let run = fl::run(&cfg)?;
+
+    println!("round  time(s)  participants  test-acc");
+    for r in run.records.iter().filter(|r| r.eval.is_some()) {
+        println!(
+            "{:>5}  {:>7.0}  {:>12}  {:>7.2}%",
+            r.round,
+            r.sim_time,
+            r.participants,
+            r.eval.unwrap().accuracy * 100.0
+        );
+    }
+    println!(
+        "\n`{}` final accuracy: {:.2}%",
+        run.algorithm.name(),
+        run.final_accuracy().unwrap_or(0.0) * 100.0
+    );
+    Ok(())
+}

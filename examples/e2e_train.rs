@@ -12,7 +12,7 @@
 //! The recorded run lives in EXPERIMENTS.md §E2E. Takes a few minutes.
 
 use anyhow::Result;
-use paota::config::{Algorithm, Config};
+use paota::config::Config;
 use paota::fl::{self, centralized, TrainContext};
 use paota::metrics::time_to_accuracy;
 use paota::runtime::Engine;

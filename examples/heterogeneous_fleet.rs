@@ -36,9 +36,9 @@ fn main() -> Result<()> {
     let ctx = TrainContext::build(&engine, &cfg)?;
 
     let mut results = Vec::new();
-    for algo in [Algorithm::Paota, Algorithm::LocalSgd] {
+    for algo in ["paota", "local_sgd"] {
         let mut c = cfg.clone();
-        c.algorithm = algo;
+        c.algorithm = Algorithm::parse(algo)?;
         let run = fl::run_with_context(&ctx, &c)?;
         results.push((algo, run));
     }
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
         let tta = time_to_accuracy(&run.records, &[0.5, 0.6]);
         println!(
             "{:<10}  {:>8.2}%   {:>9.0}s   {:>10}   {:>10}",
-            format!("{algo:?}"),
+            algo,
             run.final_accuracy().unwrap_or(0.0) * 100.0,
             run.records.last().map(|r| r.sim_time).unwrap_or(0.0),
             tta[0]

@@ -30,9 +30,9 @@ fn main() -> Result<()> {
 
     for n0 in [-174.0, -74.0, -44.0] {
         let mut row = Vec::new();
-        for algo in [Algorithm::Paota, Algorithm::Cotaf] {
+        for algo in ["paota", "cotaf"] {
             let mut cfg = base.clone();
-            cfg.algorithm = algo;
+            cfg.algorithm = Algorithm::parse(algo)?;
             cfg.channel.n0_dbm_per_hz = n0;
             let run = fl::run_with_context(&ctx, &cfg)?;
             row.push(run.final_accuracy().unwrap_or(0.0));

@@ -29,7 +29,7 @@ pub fn watts_to_dbm(w: f64) -> f64 {
 }
 
 /// Static channel parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChannelConfig {
     /// Uplink bandwidth in Hz (paper: 20 MHz).
     pub bandwidth_hz: f64,

@@ -3,9 +3,11 @@
 //! Grammar: `repro <subcommand> [--key value | --key=value]...`
 //! Every `--key value` pair is routed to [`crate::config::Config::set`],
 //! plus a few harness-level flags (`--config <file>`, `--out <dir>`,
-//! `--log-level <l>`, `--f-star-rounds <n>`). The `--algo` key selects
-//! which [`AggregationPolicy`](crate::fl::AggregationPolicy) the shared
-//! coordinator runs (see [`crate::fl::build_policy`]).
+//! `--log-level <l>`, `--f-star-rounds <n>`). The `--algo` key is a
+//! **registry name**: it resolves through
+//! [`crate::fl::registry`], and [`help_text`] enumerates whatever is
+//! registered — a newly registered policy shows up here with zero edits
+//! to this module.
 
 use anyhow::{bail, Result};
 
@@ -33,7 +35,8 @@ pub enum Command {
     Fig4,
     /// Table I: rounds & time to target accuracies.
     Table1,
-    /// Ablations: `beta`, `dt`, `omega`, `latency`.
+    /// Ablations: `beta`, `dt`, `omega`, `latency`, `solver`,
+    /// `scheduling`.
     Ablation(String),
     /// Print the effective config and exit.
     ShowConfig,
@@ -41,21 +44,38 @@ pub enum Command {
     Help,
 }
 
-pub const HELP: &str = "\
+/// Render the full help text. The ALGORITHMS section is generated from
+/// the live policy registry, so registered extensions are listed without
+/// any edit here.
+pub fn help_text() -> String {
+    let infos = crate::fl::registry::infos();
+    let names: Vec<&str> = infos.iter().map(|i| i.name.as_str()).collect();
+    let mut algos = String::new();
+    for i in &infos {
+        algos.push_str(&format!("    {:<13} {}", i.name, i.label));
+        if !i.aliases.is_empty() {
+            algos.push_str(&format!("  (aliases: {})", i.aliases.join(", ")));
+        }
+        algos.push('\n');
+    }
+    format!(
+        "\
 repro — PAOTA reproduction driver (semi-async FEEL via AirComp)
 
 USAGE:
     repro <COMMAND> [--key value]...
 
 COMMANDS:
-    run           run one algorithm (--algo paota|local_sgd|cotaf|centralized|fedasync)
+    run           run one algorithm (--algo <name>, see ALGORITHMS)
     fig3          loss-gap curves E[F(w)]-F(w*)  (paper Fig. 3; use --n0 -74 for 3b)
     fig4          test accuracy vs rounds & time (paper Fig. 4)
     table1        time/rounds to target accuracy (paper Table I)
-    ablation X    X ∈ beta | dt | omega | latency | solver
-    show-config   print the effective configuration
+    ablation X    X ∈ beta | dt | omega | latency | solver | scheduling
+    show-config   print the effective configuration (re-parseable `key = value`)
     help          this text
 
+ALGORITHMS (from the policy registry — register more, they appear here):
+{algos}
 HARNESS FLAGS:
     --config FILE        apply `key = value` lines before CLI overrides
     --out DIR            CSV output directory (default: results)
@@ -70,7 +90,12 @@ CONFIG KEYS (defaults = paper §IV-A):
     dinkelbach_eps dinkelbach_iters l_smooth epsilon2
     bandwidth_hz n0 clients max_classes test_size sizes
     pixel_noise label_noise jitter eval_every artifacts_dir
-";
+    (--algo accepts any of: {})
+    (artifacts_dir=native selects the pure-Rust reference kernel)
+",
+        names.join("|")
+    )
+}
 
 /// Parse `args` (without argv[0]).
 pub fn parse(args: &[String]) -> Result<Cli> {
@@ -92,7 +117,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         "table1" => Command::Table1,
         "ablation" => {
             let Some(which) = it.next() else {
-                bail!("ablation requires an argument (beta|dt|omega|latency|solver)");
+                bail!("ablation requires an argument (beta|dt|omega|latency|solver|scheduling)");
             };
             Command::Ablation(which.clone())
         }
@@ -156,9 +181,25 @@ mod tests {
     fn parse_run_with_flags() {
         let cli = parse(&args(&["run", "--algo", "cotaf", "--rounds=10", "--n0", "-74"])).unwrap();
         assert_eq!(cli.command, Command::Run);
-        assert_eq!(cli.config.algorithm, Algorithm::Cotaf);
+        assert_eq!(cli.config.algorithm, Algorithm::parse("cotaf").unwrap());
         assert_eq!(cli.config.rounds, 10);
         assert_eq!(cli.config.channel.n0_dbm_per_hz, -74.0);
+    }
+
+    #[test]
+    fn registered_policies_parse_from_the_cli() {
+        // ca_paota exists without any edit to this module or to config.
+        let cli = parse(&args(&["run", "--algo", "ca_paota"])).unwrap();
+        assert_eq!(cli.config.algorithm.name(), "ca_paota");
+    }
+
+    #[test]
+    fn help_lists_registered_algorithms_dynamically() {
+        let h = help_text();
+        for name in ["paota", "local_sgd", "cotaf", "centralized", "fedasync", "ca_paota"] {
+            assert!(h.contains(name), "help text missing {name}");
+        }
+        assert!(h.contains("aliases: localsgd, fedavg"), "{h}");
     }
 
     #[test]

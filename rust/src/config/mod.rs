@@ -8,55 +8,50 @@ use anyhow::{bail, Context, Result};
 use crate::channel::ChannelConfig;
 use crate::data::{PartitionConfig, SynthConfig};
 
-/// Which training algorithm to run — i.e. which
-/// [`AggregationPolicy`](crate::fl::AggregationPolicy) the coordinator
-/// is driven by (the mapping lives in [`crate::fl::build_policy`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algorithm {
-    /// The paper's semi-asynchronous periodic-aggregation AirComp scheme.
-    Paota,
-    /// Ideal synchronous Local SGD (lossless uplink) — baseline (1).
-    LocalSgd,
-    /// Synchronous AirComp with time-varying precoding — baseline (2).
-    Cotaf,
-    /// Centralized SGD on pooled data (the `F(w*)` estimator).
-    Centralized,
-    /// Fully-asynchronous FL (extension; per-arrival staleness-discounted
-    /// mixing, no AirComp) — see `fl::fedasync`.
-    FedAsync,
-}
+/// Which training algorithm to run — a **validated policy name** resolved
+/// through the string-keyed registry ([`crate::fl::registry`]).
+///
+/// [`Algorithm::parse`] canonicalizes aliases (`fedavg` → `local_sgd`) and
+/// rejects names no registered factory claims, so a new scheme becomes
+/// selectable here — and on the CLI, and in config files — the moment it
+/// calls [`crate::fl::registry::register`], with zero edits to this
+/// module.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Algorithm(String);
 
 impl Algorithm {
+    /// Resolve a user-supplied name or alias through the policy registry.
     pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "paota" => Algorithm::Paota,
-            "local_sgd" | "localsgd" | "fedavg" => Algorithm::LocalSgd,
-            "cotaf" => Algorithm::Cotaf,
-            "centralized" | "central" => Algorithm::Centralized,
-            "fedasync" | "fed_async" | "async" => Algorithm::FedAsync,
-            other => bail!("unknown algorithm {other:?}"),
-        })
+        Ok(Algorithm(crate::fl::registry::canonical(s)?))
     }
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algorithm::Paota => "paota",
-            Algorithm::LocalSgd => "local_sgd",
-            Algorithm::Cotaf => "cotaf",
-            Algorithm::Centralized => "centralized",
-            Algorithm::FedAsync => "fedasync",
-        }
+    /// The canonical registry name.
+    pub fn name(&self) -> &str {
+        &self.0
     }
 
-    /// Every implemented algorithm (sweep/equivalence-test helper).
-    pub fn all() -> [Algorithm; 5] {
-        [
-            Algorithm::Paota,
-            Algorithm::LocalSgd,
-            Algorithm::Cotaf,
-            Algorithm::Centralized,
-            Algorithm::FedAsync,
-        ]
+    /// Trusted constructor that bypasses registry validation (run-result
+    /// tagging, defaults). Prefer [`Algorithm::parse`] for user input.
+    pub fn raw(name: impl Into<String>) -> Self {
+        Algorithm(name.into())
+    }
+
+    /// Every registered policy, canonical names in sorted order.
+    pub fn all() -> Vec<Algorithm> {
+        crate::fl::registry::names().into_iter().map(Algorithm).collect()
+    }
+}
+
+impl Default for Algorithm {
+    /// The paper's scheme.
+    fn default() -> Self {
+        Algorithm("paota".to_string())
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
     }
 }
 
@@ -77,6 +72,14 @@ impl SolverKind {
             other => bail!("unknown solver {other:?}"),
         })
     }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Pcd => "pcd",
+            SolverKind::PlaMip => "pla_mip",
+        }
+    }
 }
 
 /// Power-cap derivation mode (see `Config::power_cap_mode`).
@@ -95,6 +98,14 @@ impl PowerCapMode {
             "inversion" => PowerCapMode::Inversion,
             other => bail!("unknown power cap mode {other:?}"),
         })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerCapMode::Paper => "paper",
+            PowerCapMode::Inversion => "inversion",
+        }
     }
 }
 
@@ -115,10 +126,19 @@ impl LatencyKind {
             other => bail!("unknown latency model {other:?}"),
         })
     }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LatencyKind::Uniform => "uniform",
+            LatencyKind::Homogeneous => "homogeneous",
+            LatencyKind::Bimodal => "bimodal",
+        }
+    }
 }
 
 /// Full experiment configuration. Field defaults reproduce the paper.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Config {
     /// Master seed; all streams derive from it.
     pub seed: u64,
@@ -188,7 +208,7 @@ impl Default for Config {
     fn default() -> Self {
         Self {
             seed: 42,
-            algorithm: Algorithm::Paota,
+            algorithm: Algorithm::default(),
             rounds: 60,
             delta_t: 8.0,
             latency_lo: 5.0,
@@ -370,6 +390,67 @@ impl Config {
         let frac = ((self.delta_t - self.latency_lo) / span).clamp(0.0, 1.0);
         frac * self.partition.clients as f64
     }
+
+    /// Serialize the *settable* configuration surface as `key = value`
+    /// lines that round-trip through [`Config::apply_file`] — what
+    /// `repro show-config` prints, so an effective config can be saved
+    /// and replayed verbatim with `--config`.
+    pub fn to_kv_string(&self) -> String {
+        let mut s = String::new();
+        let mut kv = |k: &str, v: String| {
+            s.push_str(k);
+            s.push_str(" = ");
+            s.push_str(&v);
+            s.push('\n');
+        };
+        kv("seed", self.seed.to_string());
+        kv("algo", self.algorithm.name().to_string());
+        kv("rounds", self.rounds.to_string());
+        kv("delta_t", self.delta_t.to_string());
+        kv("latency_lo", self.latency_lo.to_string());
+        kv("latency_hi", self.latency_hi.to_string());
+        kv("latency_kind", self.latency_kind.name().to_string());
+        kv("latency_slow", self.latency_slow.to_string());
+        kv("latency_slow_frac", self.latency_slow_frac.to_string());
+        kv("participants", self.participants.to_string());
+        kv("lr", self.lr.to_string());
+        kv("p_max", self.p_max.to_string());
+        kv("power_cap_mode", self.power_cap_mode.name().to_string());
+        kv("omega", self.omega.to_string());
+        kv("fedasync_gamma", self.fedasync_gamma.to_string());
+        kv(
+            "force_beta",
+            self.force_beta.map_or("none".to_string(), |b| b.to_string()),
+        );
+        kv("solver", self.solver.name().to_string());
+        kv("mip_max_k", self.mip_max_k.to_string());
+        kv("pla_segments", self.pla_segments.to_string());
+        kv("mip_max_nodes", self.mip_max_nodes.to_string());
+        kv("dinkelbach_eps", self.dinkelbach_eps.to_string());
+        kv("dinkelbach_iters", self.dinkelbach_iters.to_string());
+        kv("l_smooth", self.l_smooth.to_string());
+        kv("epsilon2", self.epsilon2.to_string());
+        kv("bandwidth_hz", self.channel.bandwidth_hz.to_string());
+        kv("n0", self.channel.n0_dbm_per_hz.to_string());
+        kv("clients", self.partition.clients.to_string());
+        kv("max_classes", self.partition.max_classes.to_string());
+        kv("test_size", self.partition.test_size.to_string());
+        kv(
+            "sizes",
+            self.partition
+                .sizes
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        kv("pixel_noise", self.synth.pixel_noise.to_string());
+        kv("label_noise", self.synth.label_noise.to_string());
+        kv("jitter", self.synth.jitter.to_string());
+        kv("eval_every", self.eval_every.to_string());
+        kv("artifacts_dir", self.artifacts_dir.display().to_string());
+        s
+    }
 }
 
 #[cfg(test)]
@@ -401,7 +482,7 @@ mod tests {
         c.set("n0", "-74").unwrap();
         c.set("lr", "0.1").unwrap();
         assert_eq!(c.rounds, 120);
-        assert_eq!(c.algorithm, Algorithm::Cotaf);
+        assert_eq!(c.algorithm.name(), "cotaf");
         assert_eq!(c.channel.n0_dbm_per_hz, -74.0);
         assert_eq!(c.lr, 0.1);
     }
@@ -459,14 +540,56 @@ mod tests {
 
     #[test]
     fn algorithm_parse_aliases() {
-        assert_eq!(Algorithm::parse("FedAvg").unwrap(), Algorithm::LocalSgd);
-        assert_eq!(Algorithm::parse("central").unwrap(), Algorithm::Centralized);
+        assert_eq!(Algorithm::parse("FedAvg").unwrap().name(), "local_sgd");
+        assert_eq!(Algorithm::parse("central").unwrap().name(), "centralized");
+        assert_eq!(Algorithm::parse("ca-paota").unwrap().name(), "ca_paota");
     }
 
     #[test]
-    fn algorithm_names_roundtrip_for_every_variant() {
-        for algo in Algorithm::all() {
+    fn algorithm_names_roundtrip_for_every_registered_policy() {
+        let all = Algorithm::all();
+        assert!(all.len() >= 6, "expected the built-ins to be registered");
+        for algo in all {
             assert_eq!(Algorithm::parse(algo.name()).unwrap(), algo);
         }
+    }
+
+    #[test]
+    fn show_config_roundtrips_through_apply_file() {
+        let dir = std::env::temp_dir().join("paota_showcfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("effective.cfg");
+
+        // A config mutated away from every default category: numbers,
+        // enums, the option, the list, the path.
+        let mut c = Config::default();
+        c.set("algo", "fedasync").unwrap();
+        c.set("rounds", "7").unwrap();
+        c.set("latency_kind", "bimodal").unwrap();
+        c.set("force_beta", "0.25").unwrap();
+        c.set("solver", "pla_mip").unwrap();
+        c.set("power_cap_mode", "inversion").unwrap();
+        c.set("sizes", "100,200").unwrap();
+        c.set("n0", "-74").unwrap();
+        c.set("dinkelbach_eps", "0.000001").unwrap();
+        c.set("artifacts_dir", "native").unwrap();
+
+        std::fs::write(&path, c.to_kv_string()).unwrap();
+        let mut back = Config::default();
+        back.apply_file(&path).unwrap();
+        // Field-level equality (not string equality, which would be
+        // vacuous for any key to_kv_string forgot to emit).
+        assert_eq!(back, c);
+        assert_eq!(back.algorithm.name(), "fedasync");
+        assert_eq!(back.force_beta, Some(0.25));
+        assert_eq!(back.partition.sizes, vec![100, 200]);
+
+        // The default config round-trips too.
+        let d = Config::default();
+        std::fs::write(&path, d.to_kv_string()).unwrap();
+        let mut back = Config::default();
+        back.set("rounds", "999").unwrap(); // will be overwritten
+        back.apply_file(&path).unwrap();
+        assert_eq!(back, d);
     }
 }

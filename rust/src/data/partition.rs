@@ -8,7 +8,7 @@ use crate::util::Rng;
 use super::synth::{Dataset, Prototypes, SynthConfig};
 
 /// Partition parameters (defaults = the paper's setting).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PartitionConfig {
     /// Number of clients K (paper: 100).
     pub clients: usize,

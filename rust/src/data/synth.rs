@@ -4,7 +4,7 @@
 use crate::util::Rng;
 
 /// Generator parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SynthConfig {
     /// Image side (28 → 784 features).
     pub side: usize,

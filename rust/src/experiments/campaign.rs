@@ -1,0 +1,371 @@
+//! The declarative **campaign engine**: run a set of named config-deltas
+//! ([`Scenario`]s) on one shared [`TrainContext`] and stream the results
+//! through pluggable [`RunObserver`] sinks.
+//!
+//! This replaces the hand-rolled run-loop + println + CSV harness that
+//! every figure used to copy: a figure/table/ablation is now a *data
+//! declaration* —
+//!
+//! ```ignore
+//! Campaign::new("fig4", base.clone())
+//!     .scenario("PAOTA", |c| c.algorithm = Algorithm::parse("paota").unwrap())
+//!     .scenario("COTAF", |c| c.algorithm = Algorithm::parse("cotaf").unwrap())
+//!     .observe(CurvesCsv::accuracy(out.join("fig4_accuracy.csv")))
+//!     .observe(RecordsCsv::new(out, "fig4"))
+//!     .run()?;
+//! ```
+//!
+//! All scenarios share the context built from the campaign's base config
+//! (same partition, probe and test set — the paper's §IV-B fairness
+//! requirement), while each run's RNG streams derive solely from its own
+//! config seed, so a campaign run is bit-identical to the equivalent
+//! sequence of single [`crate::fl::run_with_context`] calls (covered by
+//! `tests/registry_campaign.rs`). Generic sinks live here
+//! ([`CurvesCsv`], [`RecordsCsv`]); figure-specific stdout tables are
+//! small observers next to their campaign declarations in
+//! [`crate::experiments`].
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::fl::{self, RunResult, TrainContext};
+use crate::metrics::{write_curves_csv, write_records_csv, Curve};
+use crate::runtime::Engine;
+
+/// A named config-delta: one run of a campaign.
+pub struct Scenario {
+    /// Series label (tables, CSV series column, plots).
+    pub name: String,
+    /// The full effective config of this run.
+    pub cfg: Config,
+}
+
+impl Scenario {
+    /// Apply `delta` to a copy of `base`.
+    pub fn new(name: impl Into<String>, base: &Config, delta: impl FnOnce(&mut Config)) -> Self {
+        let mut cfg = base.clone();
+        delta(&mut cfg);
+        Self { name: name.into(), cfg }
+    }
+
+    /// Wrap an already-prepared config.
+    pub fn from_config(name: impl Into<String>, cfg: Config) -> Self {
+        Self { name: name.into(), cfg }
+    }
+}
+
+/// One finished scenario.
+pub struct ScenarioResult {
+    pub name: String,
+    pub cfg: Config,
+    pub run: RunResult,
+}
+
+/// A sink observing campaign progress. All methods default to no-ops so
+/// an observer implements only the hooks it needs.
+#[allow(unused_variables)]
+pub trait RunObserver {
+    /// Before a scenario's run starts.
+    fn on_scenario_start(&mut self, scenario: &Scenario) -> Result<()> {
+        Ok(())
+    }
+
+    /// After a scenario's run finished (called in declaration order).
+    fn on_scenario_end(&mut self, scenario: &Scenario, run: &RunResult) -> Result<()> {
+        Ok(())
+    }
+
+    /// Once, after every scenario ran.
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// A named set of scenarios sharing one training context and a list of
+/// observer sinks.
+pub struct Campaign {
+    name: String,
+    base: Config,
+    scenarios: Vec<Scenario>,
+    observers: Vec<Box<dyn RunObserver>>,
+}
+
+impl Campaign {
+    /// A campaign whose shared context is built from `base`.
+    pub fn new(name: impl Into<String>, base: Config) -> Self {
+        Self {
+            name: name.into(),
+            base,
+            scenarios: Vec::new(),
+            observers: Vec::new(),
+        }
+    }
+
+    /// The campaign's name (progress logging).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declare one scenario as a delta over the campaign base.
+    pub fn scenario(mut self, name: impl Into<String>, delta: impl FnOnce(&mut Config)) -> Self {
+        let s = Scenario::new(name, &self.base, delta);
+        self.scenarios.push(s);
+        self
+    }
+
+    /// Declare a batch of prepared scenarios.
+    pub fn scenarios(mut self, list: impl IntoIterator<Item = Scenario>) -> Self {
+        self.scenarios.extend(list);
+        self
+    }
+
+    /// Attach an observer sink.
+    pub fn observe(mut self, observer: impl RunObserver + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Build the shared context from the base config and run.
+    pub fn run(self) -> Result<Vec<ScenarioResult>> {
+        let engine = Engine::cpu()?;
+        let ctx = TrainContext::build(&engine, &self.base)?;
+        self.run_with_context(&ctx)
+    }
+
+    /// Run every scenario against a prepared context, feeding observers.
+    ///
+    /// Every scenario is checked *before the first run starts*: it must
+    /// pass [`Config::validate`] and must not change any field the shared
+    /// context was built from (partition, synthetic-data geometry,
+    /// artifacts/backend selection) — a delta there would silently run on
+    /// data the scenario's config no longer describes. Changing `seed` is
+    /// allowed: the partition stays the base's, while the run's RNG
+    /// streams re-derive from the scenario seed (seed-replicate sweeps on
+    /// fixed data).
+    pub fn run_with_context(mut self, ctx: &TrainContext) -> Result<Vec<ScenarioResult>> {
+        let base_ctx = context_fingerprint(&self.base);
+        for scenario in &self.scenarios {
+            scenario.cfg.validate()?;
+            let got = context_fingerprint(&scenario.cfg);
+            if got != base_ctx {
+                anyhow::bail!(
+                    "scenario {:?} changes context-defining config (partition/synth/\
+                     artifacts_dir): campaign scenarios share one TrainContext built \
+                     from the base config — run a separate campaign instead",
+                    scenario.name
+                );
+            }
+        }
+        let mut results = Vec::with_capacity(self.scenarios.len());
+        for scenario in &self.scenarios {
+            for obs in self.observers.iter_mut() {
+                obs.on_scenario_start(scenario)?;
+            }
+            crate::info!("running {} ({} rounds)...", scenario.name, scenario.cfg.rounds);
+            let run = fl::run_with_context(ctx, &scenario.cfg)?;
+            for obs in self.observers.iter_mut() {
+                obs.on_scenario_end(scenario, &run)?;
+            }
+            results.push(ScenarioResult {
+                name: scenario.name.clone(),
+                cfg: scenario.cfg.clone(),
+                run,
+            });
+        }
+        for obs in self.observers.iter_mut() {
+            obs.on_campaign_end(&results)?;
+        }
+        Ok(results)
+    }
+}
+
+/// Which per-round series a [`CurvesCsv`] sink extracts.
+#[derive(Debug, Clone, Copy)]
+pub enum CurveKind {
+    /// Test accuracy at evaluated rounds.
+    Accuracy,
+    /// Probe-loss gap `F(w^r) − F(w*)`.
+    LossGap {
+        f_star: f64,
+    },
+}
+
+/// Observer writing one `series,round,time_s,value` CSV with a curve per
+/// scenario, in declaration order.
+pub struct CurvesCsv {
+    path: PathBuf,
+    kind: CurveKind,
+}
+
+impl CurvesCsv {
+    pub fn accuracy(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), kind: CurveKind::Accuracy }
+    }
+
+    pub fn loss_gap(path: impl Into<PathBuf>, f_star: f64) -> Self {
+        Self { path: path.into(), kind: CurveKind::LossGap { f_star } }
+    }
+}
+
+impl RunObserver for CurvesCsv {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        let curves: Vec<Curve> = results
+            .iter()
+            .map(|r| match self.kind {
+                CurveKind::Accuracy => Curve::accuracy(&r.name, &r.run),
+                CurveKind::LossGap { f_star } => Curve::loss_gap(&r.name, &r.run, f_star),
+            })
+            .collect();
+        write_curves_csv(&self.path, &curves)
+    }
+}
+
+/// Observer writing one full per-round telemetry CSV per scenario, named
+/// `{prefix}_{algorithm}.csv` under `dir`.
+pub struct RecordsCsv {
+    dir: PathBuf,
+    prefix: String,
+}
+
+impl RecordsCsv {
+    pub fn new(dir: impl Into<PathBuf>, prefix: impl Into<String>) -> Self {
+        Self { dir: dir.into(), prefix: prefix.into() }
+    }
+
+    fn path_for(&self, scenario: &Scenario) -> PathBuf {
+        records_csv_path(&self.dir, &self.prefix, scenario.cfg.algorithm.name())
+    }
+}
+
+impl RunObserver for RecordsCsv {
+    fn on_scenario_end(&mut self, scenario: &Scenario, run: &RunResult) -> Result<()> {
+        write_records_csv(&self.path_for(scenario), run)
+    }
+}
+
+/// The records-CSV path a [`RecordsCsv`] sink writes for an algorithm —
+/// the single definition of the `{prefix}_{algorithm}.csv` scheme.
+pub fn records_csv_path(dir: &Path, prefix: &str, algorithm: &str) -> PathBuf {
+    dir.join(format!("{prefix}_{algorithm}.csv"))
+}
+
+/// The config fields a [`TrainContext`] is built from. Scenarios sharing
+/// a campaign context must agree on all of them.
+fn context_fingerprint(cfg: &Config) -> String {
+    format!("{:?}|{:?}|{:?}", cfg.partition, cfg.synth, cfg.artifacts_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::fl::RoundRecord;
+    use crate::runtime::EvalOut;
+
+    fn fake_result(name: &str, algo: &str, acc: f32) -> ScenarioResult {
+        let mut cfg = Config::default();
+        cfg.algorithm = Algorithm::raw(algo);
+        ScenarioResult {
+            name: name.to_string(),
+            cfg,
+            run: RunResult {
+                algorithm: Algorithm::raw(algo),
+                records: vec![RoundRecord {
+                    round: 0,
+                    sim_time: 8.0,
+                    train_loss: 1.0,
+                    probe_loss: Some(2.0),
+                    eval: Some(EvalOut { loss: 1.5, accuracy: acc }),
+                    participants: 3,
+                    mean_staleness: 0.5,
+                    mean_power: 1.0,
+                }],
+                final_weights: vec![],
+            },
+        }
+    }
+
+    #[test]
+    fn curves_csv_sink_writes_scenarios_in_order() {
+        let dir = std::env::temp_dir().join("paota_campaign_test");
+        let path = dir.join("curves.csv");
+        let results = vec![
+            fake_result("B-first", "paota", 0.5),
+            fake_result("A-second", "cotaf", 0.7),
+        ];
+        let mut sink = CurvesCsv::accuracy(&path);
+        sink.on_campaign_end(&results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "series,round,time_s,value");
+        assert!(lines[1].starts_with("B-first,0,"), "{}", lines[1]);
+        assert!(lines[2].starts_with("A-second,0,"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn records_csv_sink_names_files_by_algorithm() {
+        let dir = std::env::temp_dir().join("paota_campaign_test");
+        let r = fake_result("PAOTA", "paota", 0.6);
+        let scenario = Scenario::from_config(r.name.clone(), r.cfg.clone());
+        let mut sink = RecordsCsv::new(&dir, "figX");
+        sink.on_scenario_end(&scenario, &r.run).unwrap();
+        let want = records_csv_path(&dir, "figX", "paota");
+        let text = std::fs::read_to_string(want).unwrap();
+        assert!(text.starts_with("round,time_s,train_loss"));
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn scenario_delta_applies_to_base_copy() {
+        let base = Config::default();
+        let s = Scenario::new("more rounds", &base, |c| c.rounds = 123);
+        assert_eq!(s.cfg.rounds, 123);
+        assert_eq!(base.rounds, Config::default().rounds);
+    }
+
+    fn tiny_native_base() -> Config {
+        let mut base = Config::default();
+        base.artifacts_dir = "native".into();
+        base.synth.side = 6;
+        base.partition.clients = 4;
+        base.partition.sizes = vec![20];
+        base.partition.test_size = 12;
+        base
+    }
+
+    #[test]
+    fn campaign_validates_scenario_configs_up_front() {
+        // An invalid delta (rounds = 0) must fail before any run starts —
+        // even as the SECOND scenario, so no partial artifacts are left.
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("paota_campaign_nowrite"));
+        let campaign = Campaign::new("bad", tiny_native_base())
+            .scenario("fine", |_| {})
+            .scenario("broken", |c| c.rounds = 0)
+            .observe(RecordsCsv::new(
+                std::env::temp_dir().join("paota_campaign_nowrite"),
+                "never",
+            ));
+        assert!(campaign.run().is_err());
+        let leaked = records_csv_path(
+            &std::env::temp_dir().join("paota_campaign_nowrite"),
+            "never",
+            "paota",
+        );
+        assert!(!leaked.exists(), "a run executed before validation finished");
+    }
+
+    #[test]
+    fn campaign_rejects_context_changing_deltas() {
+        // The shared context is built from the base config; a scenario
+        // that alters what the context was built from must be refused.
+        let campaign = Campaign::new("bad", tiny_native_base())
+            .scenario("more clients", |c| c.partition.clients = 50);
+        let err = campaign.run().unwrap_err().to_string();
+        assert!(err.contains("context-defining"), "{err}");
+        // A seed-only delta is allowed (seed replicates on fixed data).
+        let ok = Campaign::new("ok", tiny_native_base()).scenario("seed 7", |c| c.seed = 7);
+        assert!(ok.run().is_ok());
+    }
+}

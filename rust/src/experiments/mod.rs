@@ -1,47 +1,53 @@
-//! Experiment harness — one function per paper artifact (DESIGN.md §5).
+//! Experiment harness — every paper artifact is a **campaign
+//! declaration** (DESIGN.md §5) on the engine in [`campaign`].
 //!
-//! Each regenerates the corresponding figure/table: runs every algorithm
-//! on the *same* partition/probe/test data, prints the series or rows the
-//! paper reports, and writes CSVs under the chosen output directory.
-//! Every run goes through the shared event-driven
+//! A [`Scenario`] is a named config-delta; a [`Campaign`] runs its
+//! scenarios on one shared [`TrainContext`] (same partition, probe and
+//! test data — the §IV-B fairness setup) and streams results through
+//! [`RunObserver`] sinks: the generic [`CurvesCsv`]/[`RecordsCsv`] CSV
+//! writers plus the figure-specific stdout tables defined privately
+//! below. The functions here — [`fig3`], [`fig4`], [`table1`],
+//! [`ablation`] — only *declare* scenarios and attach sinks; the run
+//! loop, validation and ordering live in the engine, so a new comparison
+//! or sweep is a few lines of declaration, not another copied harness.
+//!
+//! Algorithms are referred to **by registry name**
+//! ([`crate::fl::registry`]); anything registered — including policies
+//! registered by examples or downstream code — can appear in a scenario.
+//! Every run still goes through the shared event-driven
 //! [`Coordinator`](crate::fl::Coordinator) core, so curves across
 //! algorithms differ only in their aggregation policy — never in the
 //! round loop, RNG streams, or telemetry bucketing.
+
+pub mod campaign;
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::config::{Algorithm, Config};
-use crate::fl::{self, centralized, RunResult, TrainContext};
-use crate::metrics::{
-    format_table1, time_to_accuracy, write_curves_csv, write_records_csv, Curve,
+pub use campaign::{
+    records_csv_path, Campaign, CurveKind, CurvesCsv, RecordsCsv, RunObserver, Scenario,
+    ScenarioResult,
 };
+
+use crate::config::{Algorithm, Config};
+use crate::fl::{centralized, registry, RunResult, TrainContext};
+use crate::metrics::{format_table1, time_to_accuracy, write_csv_lines, Curve};
 use crate::runtime::Engine;
 
-/// The three compared algorithms, in the paper's order.
-pub const COMPARED: [Algorithm; 3] = [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf];
-
-/// Pretty label for plots/tables.
-pub fn label(algo: Algorithm) -> &'static str {
-    match algo {
-        Algorithm::Paota => "PAOTA",
-        Algorithm::LocalSgd => "Local SGD",
-        Algorithm::Cotaf => "COTAF",
-        Algorithm::Centralized => "Centralized",
-        Algorithm::FedAsync => "FedAsync",
-    }
+/// Pretty label for a registered policy name (plots/tables).
+pub fn label(name: &str) -> String {
+    registry::label(name)
 }
 
-/// Run all compared algorithms on one shared context.
-pub fn run_compared(ctx: &TrainContext, base: &Config) -> Result<Vec<(Algorithm, RunResult)>> {
-    COMPARED
+/// The paper's three compared algorithms as scenarios, in its order.
+fn compared_scenarios(base: &Config) -> Vec<Scenario> {
+    ["paota", "local_sgd", "cotaf"]
         .iter()
-        .map(|&algo| {
+        .map(|&name| {
             let mut cfg = base.clone();
-            cfg.algorithm = algo;
-            crate::info!("running {} ({} rounds)...", label(algo), cfg.rounds);
-            Ok((algo, fl::run_with_context(ctx, &cfg)?))
+            cfg.algorithm = Algorithm::parse(name).expect("built-in policy");
+            Scenario::from_config(label(name), cfg)
         })
         .collect()
 }
@@ -57,40 +63,17 @@ pub fn fig3(base: &Config, out_dir: &Path, f_star_rounds: usize) -> Result<()> {
     let f_star = centralized::estimate_f_star(&ctx, base, f_star_rounds)? as f64;
     println!("# F(w*) estimate = {f_star:.6}");
 
-    let runs = run_compared(&ctx, base)?;
-    let curves: Vec<Curve> = runs
-        .iter()
-        .map(|(algo, run)| Curve::loss_gap(label(*algo), run, f_star))
-        .collect();
-
-    println!(
-        "# Fig.3 loss gap — N0 = {} dBm/Hz, B = {} MHz",
-        base.channel.n0_dbm_per_hz,
-        base.channel.bandwidth_hz / 1e6
-    );
-    println!("round,{}", curves.iter().map(|c| c.name.clone()).collect::<Vec<_>>().join(","));
-    let rounds: Vec<usize> = curves[0].points.iter().map(|p| p.0).collect();
-    for (idx, r) in rounds.iter().enumerate() {
-        let row: Vec<String> = curves
-            .iter()
-            .map(|c| {
-                c.points
-                    .get(idx)
-                    .map(|p| format!("{:.6}", p.2))
-                    .unwrap_or_default()
-            })
-            .collect();
-        println!("{r},{}", row.join(","));
-    }
-
     let tag = format!("fig3_n0_{}", base.channel.n0_dbm_per_hz.abs() as i64);
-    write_curves_csv(&out_dir.join(format!("{tag}.csv")), &curves)?;
-    for (algo, run) in &runs {
-        write_records_csv(
-            &out_dir.join(format!("{tag}_{}.csv", algo.name())),
-            run,
-        )?;
-    }
+    Campaign::new("fig3", base.clone())
+        .scenarios(compared_scenarios(base))
+        .observe(LossGapStdout {
+            n0: base.channel.n0_dbm_per_hz,
+            bandwidth_mhz: base.channel.bandwidth_hz / 1e6,
+            f_star,
+        })
+        .observe(CurvesCsv::loss_gap(out_dir.join(format!("{tag}.csv")), f_star))
+        .observe(RecordsCsv::new(out_dir, tag.clone()))
+        .run_with_context(&ctx)?;
     println!("# wrote {}/{tag}.csv", out_dir.display());
     Ok(())
 }
@@ -100,32 +83,13 @@ pub fn fig3(base: &Config, out_dir: &Path, f_star_rounds: usize) -> Result<()> {
 pub fn fig4(base: &Config, out_dir: &Path) -> Result<()> {
     let engine = Engine::cpu()?;
     let ctx = TrainContext::build(&engine, base)?;
-    let runs = run_compared(&ctx, base)?;
 
-    let curves: Vec<Curve> = runs
-        .iter()
-        .map(|(algo, run)| Curve::accuracy(label(*algo), run))
-        .collect();
-
-    println!("# Fig.4 test accuracy (a: vs rounds, b: vs time)");
-    println!("series,round,time_s,accuracy");
-    for c in &curves {
-        for (r, t, v) in &c.points {
-            println!("{},{r},{t:.1},{v:.4}", c.name);
-        }
-    }
-    for (algo, run) in &runs {
-        println!(
-            "# {} final accuracy: {:.1}%",
-            label(*algo),
-            run.final_accuracy().unwrap_or(f32::NAN) * 100.0
-        );
-    }
-
-    write_curves_csv(&out_dir.join("fig4_accuracy.csv"), &curves)?;
-    for (algo, run) in &runs {
-        write_records_csv(&out_dir.join(format!("fig4_{}.csv", algo.name())), run)?;
-    }
+    Campaign::new("fig4", base.clone())
+        .scenarios(compared_scenarios(base))
+        .observe(AccuracyStdout)
+        .observe(CurvesCsv::accuracy(out_dir.join("fig4_accuracy.csv")))
+        .observe(RecordsCsv::new(out_dir, "fig4"))
+        .run_with_context(&ctx)?;
     println!("# wrote {}/fig4_accuracy.csv", out_dir.display());
     Ok(())
 }
@@ -134,45 +98,40 @@ pub fn fig4(base: &Config, out_dir: &Path) -> Result<()> {
 pub fn table1(base: &Config, out_dir: &Path, targets: &[f64]) -> Result<()> {
     let engine = Engine::cpu()?;
     let ctx = TrainContext::build(&engine, base)?;
-    let runs = run_compared(&ctx, base)?;
 
-    let rows: Vec<(String, Vec<crate::metrics::TimeToAccuracy>)> = runs
-        .iter()
-        .map(|(algo, run)| {
-            (
-                label(*algo).to_string(),
-                time_to_accuracy(&run.records, targets),
-            )
+    Campaign::new("table1", base.clone())
+        .scenarios(compared_scenarios(base))
+        .observe(Table1Stdout { targets: targets.to_vec() })
+        .observe(Table1Csv {
+            path: out_dir.join("table1.csv"),
+            targets: targets.to_vec(),
         })
-        .collect();
-
-    println!("# Table I — convergence time (targets as in the paper)");
-    print!("{}", format_table1(&rows, targets));
-
-    // CSV.
-    let mut csv = String::from("algorithm,target,rounds,time_s\n");
-    for (name, ttas) in &rows {
-        for t in ttas {
-            csv.push_str(&format!(
-                "{name},{:.2},{},{}\n",
-                t.target,
-                t.rounds.map_or(String::new(), |r| r.to_string()),
-                t.time_s.map_or(String::new(), |s| format!("{s:.1}")),
-            ));
-        }
-    }
-    std::fs::create_dir_all(out_dir).ok();
-    std::fs::write(out_dir.join("table1.csv"), csv)?;
+        .run_with_context(&ctx)?;
     println!("# wrote {}/table1.csv", out_dir.display());
     Ok(())
 }
 
-/// Ablations (DESIGN.md A1–A4): each sweeps one knob of PAOTA and prints
-/// final accuracy + time-to-70%.
+/// Ablations (DESIGN.md A1–A4 plus `scheduling`): each sweeps one knob of
+/// the PAOTA family and prints final accuracy + time-to-70%.
 pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
     let engine = Engine::cpu()?;
     let ctx = TrainContext::build(&engine, base)?;
+    let scenarios = ablation_scenarios(which, base)?;
 
+    println!("# Ablation `{which}` — PAOTA variants");
+    println!("variant,final_acc,best_acc,time_to_70%_s,mean_staleness");
+    Campaign::new(format!("ablation_{which}"), base.clone())
+        .scenarios(scenarios)
+        .observe(AblationStdout)
+        .observe(CurvesCsv::accuracy(out_dir.join(format!("ablation_{which}.csv"))))
+        .run_with_context(&ctx)?;
+    println!("# wrote {}/ablation_{which}.csv", out_dir.display());
+    Ok(())
+}
+
+/// The variant set of one ablation, as scenarios.
+fn ablation_scenarios(which: &str, base: &Config) -> Result<Vec<Scenario>> {
+    let paota = Algorithm::parse("paota").expect("built-in policy");
     let variants: Vec<(String, Config)> = match which {
         "beta" => vec![
             ("optimized".into(), base.clone()),
@@ -224,33 +183,230 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
                 c
             }),
         ],
-        other => anyhow::bail!("unknown ablation {other:?} (beta|dt|omega|latency|solver)"),
+        // Channel/gradient-aware participant scheduling (arXiv 2212.00491)
+        // vs PAOTA's take-all rule, at the same energy budget and data.
+        "scheduling" => {
+            let ca = Algorithm::parse("ca_paota").expect("built-in policy");
+            let m = (base.partition.clients / 5).max(1);
+            vec![
+                ("paota_take_all".into(), base.clone()),
+                ("ca_adaptive".into(), {
+                    let mut c = base.clone();
+                    c.algorithm = ca.clone();
+                    c
+                }),
+                (format!("ca_top{m}"), {
+                    let mut c = base.clone();
+                    c.algorithm = ca;
+                    c.participants = m;
+                    c
+                }),
+            ]
+        }
+        other => anyhow::bail!(
+            "unknown ablation {other:?} (beta|dt|omega|latency|solver|scheduling)"
+        ),
     };
+    Ok(variants
+        .into_iter()
+        .map(|(name, mut cfg)| {
+            // Every ablation runs the PAOTA family: variants that did not
+            // explicitly pick ca_paota are pinned to the paper's scheme.
+            let keep = which == "scheduling" && cfg.algorithm.name() == "ca_paota";
+            if !keep {
+                cfg.algorithm = paota.clone();
+            }
+            Scenario::from_config(name, cfg)
+        })
+        .collect())
+}
 
-    println!("# Ablation `{which}` — PAOTA variants");
-    println!("variant,final_acc,best_acc,time_to_70%_s,mean_staleness");
-    let mut curves = Vec::new();
-    for (name, mut cfg) in variants {
-        cfg.algorithm = Algorithm::Paota;
-        crate::info!("ablation {which}: {name}");
-        let run = fl::run_with_context(&ctx, &cfg)?;
-        let tta = time_to_accuracy(&run.records, &[0.7]);
-        let mean_stale: f64 = run
-            .records
+// ---------------------------------------------------------------------
+// Figure-specific stdout sinks.
+// ---------------------------------------------------------------------
+
+/// Fig. 3 stdout table: one row per *evaluated round in any series*
+/// (algorithms may eval at different cadences; cells a series did not
+/// evaluate stay empty instead of misaligning the row).
+struct LossGapStdout {
+    n0: f64,
+    bandwidth_mhz: f64,
+    f_star: f64,
+}
+
+impl RunObserver for LossGapStdout {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        let curves: Vec<Curve> = results
             .iter()
-            .map(|r| r.mean_staleness)
-            .sum::<f64>()
+            .map(|r| Curve::loss_gap(&r.name, &r.run, self.f_star))
+            .collect();
+        println!(
+            "# Fig.3 loss gap — N0 = {} dBm/Hz, B = {} MHz",
+            self.n0, self.bandwidth_mhz
+        );
+        println!(
+            "round,{}",
+            curves.iter().map(|c| c.name.clone()).collect::<Vec<_>>().join(",")
+        );
+        let mut rounds: Vec<usize> = curves
+            .iter()
+            .flat_map(|c| c.points.iter().map(|p| p.0))
+            .collect();
+        rounds.sort_unstable();
+        rounds.dedup();
+        for r in rounds {
+            let row: Vec<String> = curves
+                .iter()
+                .map(|c| {
+                    c.points
+                        .iter()
+                        .find(|p| p.0 == r)
+                        .map(|p| format!("{:.6}", p.2))
+                        .unwrap_or_default()
+                })
+                .collect();
+            println!("{r},{}", row.join(","));
+        }
+        Ok(())
+    }
+}
+
+/// Fig. 4 stdout: the long-form accuracy series plus final accuracies.
+struct AccuracyStdout;
+
+impl RunObserver for AccuracyStdout {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        let curves: Vec<Curve> = results
+            .iter()
+            .map(|r| Curve::accuracy(&r.name, &r.run))
+            .collect();
+        println!("# Fig.4 test accuracy (a: vs rounds, b: vs time)");
+        println!("series,round,time_s,accuracy");
+        for c in &curves {
+            for (r, t, v) in &c.points {
+                println!("{},{r},{t:.1},{v:.4}", c.name);
+            }
+        }
+        for r in results {
+            println!(
+                "# {} final accuracy: {:.1}%",
+                r.name,
+                r.run.final_accuracy().unwrap_or(f32::NAN) * 100.0
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Table I rows for a result set.
+fn table1_rows(
+    results: &[ScenarioResult],
+    targets: &[f64],
+) -> Vec<(String, Vec<crate::metrics::TimeToAccuracy>)> {
+    results
+        .iter()
+        .map(|r| (r.name.clone(), time_to_accuracy(&r.run.records, targets)))
+        .collect()
+}
+
+/// Table I stdout: the paper's row layout.
+struct Table1Stdout {
+    targets: Vec<f64>,
+}
+
+impl RunObserver for Table1Stdout {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        println!("# Table I — convergence time (targets as in the paper)");
+        print!("{}", format_table1(&table1_rows(results, &self.targets), &self.targets));
+        Ok(())
+    }
+}
+
+/// Table I CSV through the shared metrics writer.
+struct Table1Csv {
+    path: std::path::PathBuf,
+    targets: Vec<f64>,
+}
+
+impl RunObserver for Table1Csv {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        let mut rows = Vec::new();
+        for (name, ttas) in table1_rows(results, &self.targets) {
+            for t in ttas {
+                rows.push(format!(
+                    "{name},{:.2},{},{}",
+                    t.target,
+                    t.rounds.map_or(String::new(), |r| r.to_string()),
+                    t.time_s.map_or(String::new(), |s| format!("{s:.1}")),
+                ));
+            }
+        }
+        write_csv_lines(&self.path, "algorithm,target,rounds,time_s", rows)
+    }
+}
+
+/// Ablation stdout: one summary row per finished variant.
+struct AblationStdout;
+
+impl RunObserver for AblationStdout {
+    fn on_scenario_end(&mut self, scenario: &Scenario, run: &RunResult) -> Result<()> {
+        let tta = time_to_accuracy(&run.records, &[0.7]);
+        let mean_stale: f64 = run.records.iter().map(|r| r.mean_staleness).sum::<f64>()
             / run.records.len().max(1) as f64;
         println!(
-            "{name},{:.4},{:.4},{},{:.3}",
+            "{},{:.4},{:.4},{},{:.3}",
+            scenario.name,
             run.final_accuracy().unwrap_or(f32::NAN),
             run.best_accuracy().unwrap_or(f32::NAN),
             tta[0].time_s.map_or("-".into(), |t| format!("{t:.1}")),
             mean_stale
         );
-        curves.push(Curve::accuracy(&name, &run));
+        Ok(())
     }
-    write_curves_csv(&out_dir.join(format!("ablation_{which}.csv")), &curves)?;
-    println!("# wrote {}/ablation_{which}.csv", out_dir.display());
-    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_scenario_sets_match_the_published_variants() {
+        let base = Config::default();
+        for (which, count) in
+            [("beta", 3), ("dt", 4), ("omega", 3), ("latency", 3), ("solver", 2), ("scheduling", 3)]
+        {
+            let s = ablation_scenarios(which, &base).unwrap();
+            assert_eq!(s.len(), count, "ablation {which}");
+        }
+        assert!(ablation_scenarios("nope", &base).is_err());
+    }
+
+    #[test]
+    fn knob_ablations_always_run_paota() {
+        let base = Config::default();
+        for which in ["beta", "dt", "omega", "latency", "solver"] {
+            for s in ablation_scenarios(which, &base).unwrap() {
+                assert_eq!(s.cfg.algorithm.name(), "paota", "{which}/{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn scheduling_ablation_compares_paota_and_ca_paota() {
+        let base = Config::default();
+        let s = ablation_scenarios("scheduling", &base).unwrap();
+        assert_eq!(s[0].cfg.algorithm.name(), "paota");
+        assert_eq!(s[1].cfg.algorithm.name(), "ca_paota");
+        assert_eq!(s[2].cfg.algorithm.name(), "ca_paota");
+        assert_eq!(s[2].cfg.participants, 20); // K/5 at the paper's K=100
+    }
+
+    #[test]
+    fn compared_scenarios_use_registry_labels() {
+        let base = Config::default();
+        let s = compared_scenarios(&base);
+        let names: Vec<&str> = s.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["PAOTA", "Local SGD", "COTAF"]);
+        assert_eq!(s[1].cfg.algorithm.name(), "local_sgd");
+    }
 }

@@ -1,0 +1,191 @@
+//! CA-PAOTA — channel/gradient-aware participant scheduling on top of
+//! PAOTA (after arXiv 2212.00491, "Scheduling and Aggregation Design for
+//! Asynchronous Federated Learning over Wireless Networks").
+//!
+//! PAOTA's rule is *take-all*: every client that finished inside the ΔT
+//! slot uploads, however deep its fade and however little its update
+//! moved. This policy keeps PAOTA's periodic AirComp timing, power
+//! control and aggregation untouched and only overrides
+//! [`select_participants`](super::AggregationPolicy::select_participants):
+//! ready clients are ranked by the scheduling metric
+//!
+//! ```text
+//!   score_k = |h_k| · ‖Δw_k‖̂
+//! ```
+//!
+//! — the fading amplitude drawn at scheduling time multiplied by the
+//! client's last observed update norm (an optimistic prior for clients
+//! that never uploaded, so fresh clients are explored by channel quality
+//! first). The top-`m` clients upload; the rest stay in the ready pool
+//! and are re-offered next slot with correspondingly higher staleness —
+//! exactly the scheduling/staleness trade-off the reference studies.
+//!
+//! `m` comes from `Config::participants` when set; with the default
+//! `participants = 0` an adaptive rule keeps every ready client whose
+//! score is at least the ready-pool mean (at least one), so the scheme
+//! degrades gracefully to take-all when the pool is homogeneous.
+//!
+//! Registered as `ca_paota` in [`super::registry`]; compare against plain
+//! PAOTA with `repro ablation scheduling`.
+
+use anyhow::Result;
+
+use crate::channel::Mac;
+use crate::config::Config;
+use crate::util::vecmath;
+
+use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
+use super::paota::Paota;
+use super::TrainContext;
+
+/// Update-norm prior for clients that never uploaded: large enough to
+/// dominate any observed norm, so unexplored clients are scheduled first
+/// (ordered among themselves by channel quality), finite so the fading
+/// amplitude still differentiates them.
+const NORM_PRIOR: f64 = 1e6;
+
+/// PAOTA with channel/gradient-aware top-`m` participant selection.
+pub struct CaPaota {
+    inner: Paota,
+    mac: Mac,
+    /// Fixed upload budget per slot; 0 = adaptive mean-threshold rule.
+    target: usize,
+    /// Last observed ‖Δw_k‖ per client (NORM_PRIOR until first upload).
+    norm_est: Vec<f64>,
+}
+
+impl CaPaota {
+    pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
+        Self {
+            inner: Paota::new(ctx, cfg),
+            mac: Mac::new(cfg.channel),
+            target: cfg.participants,
+            norm_est: vec![NORM_PRIOR; ctx.clients()],
+        }
+    }
+}
+
+impl AggregationPolicy for CaPaota {
+    fn name(&self) -> &str {
+        "ca_paota"
+    }
+
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Periodic
+    }
+
+    fn needs_deltas(&self) -> bool {
+        true
+    }
+
+    fn select_participants(&mut self, offered: &[usize], rngs: &mut RngStreams) -> Vec<usize> {
+        if offered.len() <= 1 {
+            return offered.to_vec();
+        }
+        // Scheduling-phase CSI snapshot: one fading draw per ready client
+        // (independent of the transmission-phase draws in `on_uploads`).
+        let gains = self.mac.draw_fading_gains(&mut rngs.channel, offered.len());
+        rank_and_select(offered, &gains, &self.norm_est, self.target)
+    }
+
+    fn on_uploads(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        for up in uploads {
+            self.norm_est[up.client] = vecmath::norm(&up.delta).max(1e-12);
+        }
+        self.inner.on_uploads(round, global, uploads, rngs)
+    }
+
+    fn on_global_delta(&mut self, delta: &[f32]) {
+        self.inner.on_global_delta(delta);
+    }
+}
+
+/// Rank `offered` by `|h|·‖Δw‖̂` and keep the top `target` (or, with
+/// `target == 0`, everyone scoring at least the pool mean — minimum one).
+/// Returns client ids in ascending order, the coordinator's deterministic
+/// fleet-scan convention.
+fn rank_and_select(
+    offered: &[usize],
+    gains: &[f64],
+    norm_est: &[f64],
+    target: usize,
+) -> Vec<usize> {
+    let mut ranked: Vec<(usize, f64)> = offered
+        .iter()
+        .zip(gains)
+        .map(|(&client, &g2)| (client, g2.sqrt() * norm_est[client]))
+        .collect();
+    let m = if target > 0 {
+        target.min(ranked.len())
+    } else {
+        let mean = ranked.iter().map(|r| r.1).sum::<f64>() / ranked.len() as f64;
+        ranked.iter().filter(|r| r.1 >= mean).count().max(1)
+    };
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let mut chosen: Vec<usize> = ranked[..m].iter().map(|r| r.0).collect();
+    chosen.sort_unstable();
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_respects_target_and_returns_offered_ids() {
+        let offered = vec![1, 3, 4, 7, 8, 9];
+        let gains = vec![0.5, 2.0, 0.1, 1.5, 0.9, 3.0];
+        let norms = vec![NORM_PRIOR; 10];
+        let chosen = rank_and_select(&offered, &gains, &norms, 3);
+        assert_eq!(chosen.len(), 3);
+        for c in &chosen {
+            assert!(offered.contains(c), "chose {c} outside offered set");
+        }
+        // Equal norms → pure channel ranking: gains 3.0, 2.0, 1.5 belong
+        // to clients 9, 3, 7 — returned in client-id order.
+        assert_eq!(chosen, vec![3, 7, 9]);
+    }
+
+    #[test]
+    fn adaptive_rule_keeps_at_least_one_and_not_more_than_offered() {
+        let offered: Vec<usize> = (0..6).collect();
+        let gains = vec![1.0e-6, 1.0e-6, 1.0e-6, 1.0e-6, 1.0e-6, 9.0];
+        let norms = vec![1.0; 6];
+        let chosen = rank_and_select(&offered, &gains, &norms, 0);
+        // One client dominates the mean: only it survives.
+        assert_eq!(chosen, vec![5]);
+
+        let flat = vec![1.0; 6];
+        let all = rank_and_select(&offered, &flat, &norms, 0);
+        // Homogeneous pool degrades to take-all.
+        assert_eq!(all, offered);
+    }
+
+    #[test]
+    fn target_larger_than_pool_takes_everyone() {
+        let offered = vec![2, 5];
+        let gains = vec![1.0, 4.0];
+        let norms = vec![1.0; 6];
+        assert_eq!(rank_and_select(&offered, &gains, &norms, 10), vec![2, 5]);
+    }
+
+    #[test]
+    fn low_update_norm_client_is_deferred() {
+        let offered = vec![0, 1, 2, 3];
+        let gains = vec![1.0; 4];
+        // Client 0's last update barely moved; the rest sit at the prior.
+        let norms = vec![1e-9, NORM_PRIOR, NORM_PRIOR, NORM_PRIOR];
+        let chosen = rank_and_select(&offered, &gains, &norms, 2);
+        assert!(!chosen.contains(&0), "vanishing-update client was scheduled: {chosen:?}");
+    }
+}

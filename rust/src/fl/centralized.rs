@@ -38,8 +38,8 @@ impl Centralized {
 }
 
 impl AggregationPolicy for Centralized {
-    fn algorithm(&self) -> Algorithm {
-        Algorithm::Centralized
+    fn name(&self) -> &str {
+        "centralized"
     }
 
     fn timing(&self) -> RoundTiming {
@@ -87,7 +87,7 @@ impl AggregationPolicy for Centralized {
 /// minimum probe loss seen (the paper's optimum reference for Fig. 3).
 pub fn estimate_f_star(ctx: &TrainContext, cfg: &Config, rounds: usize) -> Result<f32> {
     let mut c = cfg.clone();
-    c.algorithm = Algorithm::Centralized;
+    c.algorithm = Algorithm::raw("centralized");
     c.rounds = rounds;
     c.eval_every = 5.min(rounds).max(1);
     let run = super::run_with_context(ctx, &c)?;

@@ -262,8 +262,9 @@ pub struct ClientSlot {
 /// loop, the clock, client scheduling, batched training, telemetry — is
 /// the [`Coordinator`]'s.
 pub trait AggregationPolicy {
-    /// Which algorithm this policy implements (for [`RunResult`]).
-    fn algorithm(&self) -> Algorithm;
+    /// Canonical registry name of this policy (tags [`RunResult`], debug
+    /// logs and CSV filenames; see [`crate::fl::registry`]).
+    fn name(&self) -> &str;
 
     /// When the coordinator aggregates.
     fn timing(&self) -> RoundTiming;
@@ -394,7 +395,7 @@ impl<'a> Coordinator<'a> {
         }
         let Coordinator { telemetry, w_g, .. } = self;
         Ok(RunResult {
-            algorithm: policy.algorithm(),
+            algorithm: Algorithm::raw(policy.name()),
             records: telemetry.into_records(),
             final_weights: w_g,
         })
@@ -689,7 +690,7 @@ impl<'a> Coordinator<'a> {
         let rec = self.telemetry.record(round, sim_time, stats, eval, probe_loss);
         crate::debug!(
             "{} r={round} t={sim_time:.0}s up={} stale={:.2} loss={:.4} acc={:?}",
-            policy.algorithm().name(),
+            policy.name(),
             rec.participants,
             rec.mean_staleness,
             rec.train_loss,

@@ -32,7 +32,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Algorithm, Config};
+use crate::config::Config;
 use crate::util::vecmath;
 
 use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
@@ -59,8 +59,8 @@ impl Cotaf {
 }
 
 impl AggregationPolicy for Cotaf {
-    fn algorithm(&self) -> Algorithm {
-        Algorithm::Cotaf
+    fn name(&self) -> &str {
+        "cotaf"
     }
 
     fn timing(&self) -> RoundTiming {

@@ -30,7 +30,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Algorithm, Config};
+use crate::config::Config;
 use crate::power::staleness_factor;
 
 use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
@@ -54,8 +54,8 @@ impl FedAsync {
 }
 
 impl AggregationPolicy for FedAsync {
-    fn algorithm(&self) -> Algorithm {
-        Algorithm::FedAsync
+    fn name(&self) -> &str {
+        "fedasync"
     }
 
     fn timing(&self) -> RoundTiming {

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Algorithm, Config};
+use crate::config::Config;
 
 use super::coordinator::{AggregationPolicy, RngStreams, RoundAction, RoundTiming, Upload};
 use super::TrainContext;
@@ -39,8 +39,8 @@ impl LocalSgd {
 }
 
 impl AggregationPolicy for LocalSgd {
-    fn algorithm(&self) -> Algorithm {
-        Algorithm::LocalSgd
+    fn name(&self) -> &str {
+        "local_sgd"
     }
 
     fn timing(&self) -> RoundTiming {

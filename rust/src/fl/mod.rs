@@ -1,7 +1,9 @@
-//! Federated learning on one event-driven core: a single
-//! [`Coordinator`](coordinator::Coordinator) drives every algorithm, and
-//! each algorithm is an [`AggregationPolicy`](coordinator::AggregationPolicy)
-//! — a struct of decisions, not a round loop.
+//! Federated learning on one event-driven core with an **open policy
+//! surface**: a single [`Coordinator`](coordinator::Coordinator) drives
+//! every algorithm, each algorithm is an
+//! [`AggregationPolicy`](coordinator::AggregationPolicy) — a struct of
+//! decisions, not a round loop — and policies are looked up **by name**
+//! in the string-keyed [`registry`].
 //!
 //! The coordinator owns the virtual clock, the client-finished event
 //! queue, per-client base-model slots, the deterministic per-purpose RNG
@@ -9,7 +11,7 @@
 //! [`Telemetry`](coordinator::Telemetry) recorder; local training always
 //! fans out through [`TrainContext::train_many`] (the parallel PJRT
 //! pool). Policies only decide *who* uploads, *what* the server does with
-//! the uploads, and *when* aggregation fires:
+//! the uploads, and *when* aggregation fires. Registered out of the box:
 //!
 //! * [`paota`]       — periodic semi-asynchronous AirComp with per-round
 //!   power control (the paper's Algorithm 1).
@@ -19,18 +21,29 @@
 //! * [`centralized`] — pooled-data SGD; the `F(w*)` estimator for the
 //!   Fig. 3 loss-gap curves.
 //! * [`fedasync`]    — fully-asynchronous per-arrival mixing (extension).
+//! * [`ca_paota`]    — PAOTA with channel/gradient-aware participant
+//!   scheduling (extension, after arXiv 2212.00491).
 //!
 //! Every run emits the same [`RoundRecord`] stream so the experiment
-//! harness can overlay algorithms directly. To add a scheme, implement
-//! `AggregationPolicy` and list it in [`build_policy`] — see
-//! [`coordinator`] for the contract.
+//! harness ([`crate::experiments`] campaigns) can overlay algorithms
+//! directly. **To add a scheme**, implement `AggregationPolicy` and call
+//! [`registry::register`] — no edits to `config`, `cli`, or this module;
+//! `examples/custom_policy.rs` does it end-to-end. [`build_policy`] is
+//! nothing but the registry lookup for the config's algorithm name.
+//!
+//! The [`TrainContext`] loads the AOT PJRT artifacts by default; setting
+//! `artifacts_dir = native` selects the pure-Rust reference kernel
+//! ([`crate::runtime::native`]) so everything here also runs in
+//! artifact-free environments (CI, fresh checkouts).
 
+pub mod ca_paota;
 pub mod centralized;
 pub mod coordinator;
 pub mod cotaf;
 pub mod fedasync;
 pub mod local_sgd;
 pub mod paota;
+pub mod registry;
 
 pub use coordinator::{
     AggregationPolicy, Coordinator, RngStreams, RoundAction, RoundTiming, Telemetry, Upload,
@@ -110,10 +123,21 @@ pub struct TrainContext {
 
 impl TrainContext {
     /// Build data + runtime from a config. `engine` outlives the context.
+    ///
+    /// `artifacts_dir = native` selects the pure-Rust reference kernel
+    /// (geometry derived from the config) instead of the AOT PJRT
+    /// artifacts — same API, no artifacts required.
     pub fn build(engine: &Engine, cfg: &Config) -> Result<Self> {
         cfg.validate()?;
-        let rt = ModelRuntime::load(engine, &cfg.artifacts_dir)
-            .context("loading AOT artifacts (run `make artifacts`)")?;
+        let native = crate::runtime::is_native_dir(&cfg.artifacts_dir);
+        let rt = if native {
+            ModelRuntime::native_for(cfg)?
+        } else {
+            ModelRuntime::load(engine, &cfg.artifacts_dir).context(
+                "loading AOT artifacts (run `make artifacts`, or set \
+                 artifacts_dir=native for the pure-Rust reference kernel)",
+            )?
+        };
         let m = rt.manifest().clone();
         if m.d_in != cfg.synth.dim() {
             bail!(
@@ -157,7 +181,9 @@ impl TrainContext {
         }
 
         let workers = crate::runtime::TrainPool::default_workers();
-        let pool = if workers > 1 {
+        // The native reference kernel runs in-process and sequentially —
+        // no per-thread PJRT engines to spawn.
+        let pool = if workers > 1 && !native {
             match crate::runtime::TrainPool::new(&cfg.artifacts_dir, workers) {
                 Ok(p) => Some(p),
                 Err(e) => {
@@ -281,19 +307,13 @@ pub fn run(cfg: &Config) -> Result<RunResult> {
 /// Run against a pre-built context (lets the harness reuse data+runtime
 /// across algorithm sweeps — same partition, same probe, same test set).
 pub fn run_with_context(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
-    let mut policy = build_policy(ctx, cfg);
+    let mut policy = build_policy(ctx, cfg)?;
     coordinator::run(ctx, cfg, policy.as_mut())
 }
 
-/// Construct the aggregation policy the config selects. The only place
-/// that maps [`Algorithm`] to an implementation — new schemes register
-/// here.
-pub fn build_policy(ctx: &TrainContext, cfg: &Config) -> Box<dyn AggregationPolicy> {
-    match cfg.algorithm {
-        Algorithm::Paota => Box::new(paota::Paota::new(ctx, cfg)),
-        Algorithm::LocalSgd => Box::new(local_sgd::LocalSgd::new(ctx, cfg)),
-        Algorithm::Cotaf => Box::new(cotaf::Cotaf::new(ctx, cfg)),
-        Algorithm::Centralized => Box::new(centralized::Centralized::new(ctx, cfg)),
-        Algorithm::FedAsync => Box::new(fedasync::FedAsync::new(ctx, cfg)),
-    }
+/// Construct the aggregation policy the config selects — a pure
+/// [`registry`] lookup. New schemes call [`registry::register`] and are
+/// immediately buildable here; nothing in this module enumerates them.
+pub fn build_policy(ctx: &TrainContext, cfg: &Config) -> Result<Box<dyn AggregationPolicy>> {
+    registry::build(cfg.algorithm.name(), ctx, cfg)
 }

@@ -20,7 +20,7 @@
 use anyhow::Result;
 
 use crate::channel::Mac;
-use crate::config::{Algorithm, Config, PowerCapMode};
+use crate::config::{Config, PowerCapMode};
 use crate::power::{
     solve_power_control, BoundConstants, ClientFactors, PowerSolverConfig,
 };
@@ -72,8 +72,8 @@ impl Paota {
 }
 
 impl AggregationPolicy for Paota {
-    fn algorithm(&self) -> Algorithm {
-        Algorithm::Paota
+    fn name(&self) -> &str {
+        "paota"
     }
 
     fn timing(&self) -> RoundTiming {

@@ -1,0 +1,372 @@
+//! String-keyed **policy registry** — the open end of the run API.
+//!
+//! PR 1 reduced every algorithm to an
+//! [`AggregationPolicy`](super::AggregationPolicy); this module removes the
+//! last closed seam by replacing enum dispatch with a registry of named
+//! factories `(&TrainContext, &Config) -> Box<dyn AggregationPolicy>`:
+//!
+//! * the built-in schemes self-register under their canonical names (plus
+//!   aliases) when the global registry is first touched;
+//! * [`crate::config::Algorithm`] is a *validated name* — parsing resolves
+//!   aliases and rejects anything no factory claims;
+//! * the CLI `help` text and [`names`] enumerate whatever is registered.
+//!
+//! Net effect: a new scheme — an example binary, a test, a downstream
+//! crate — calls [`register`] once and is immediately reachable through
+//! `repro run --algo <name>`, config files, and campaign declarations,
+//! with **zero edits** to `config`, `cli`, or the `fl` dispatch path. See
+//! `examples/custom_policy.rs` for the end-to-end demonstration and
+//! [`super::ca_paota`] for a registered-from-a-module scheme.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+
+use super::coordinator::AggregationPolicy;
+use super::TrainContext;
+
+/// A policy factory: builds a ready-to-run policy for one training run.
+pub type PolicyFactory =
+    Arc<dyn Fn(&TrainContext, &Config) -> Box<dyn AggregationPolicy> + Send + Sync>;
+
+/// Public metadata of one registered policy (help text, listings).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyInfo {
+    /// Canonical registry key (what `Algorithm::name()` returns).
+    pub name: String,
+    /// Human-readable label for tables and plots (e.g. "Local SGD").
+    pub label: String,
+    /// Accepted aliases, resolved to `name` at parse time.
+    pub aliases: Vec<String>,
+}
+
+struct Entry {
+    label: String,
+    aliases: Vec<String>,
+    factory: PolicyFactory,
+}
+
+/// The registry itself. Most callers use the free functions, which act on
+/// the process-global instance; owning a [`PolicyRegistry`] directly is
+/// for tests and embedders that want isolation.
+#[derive(Default)]
+pub struct PolicyRegistry {
+    /// Canonical name → entry (BTreeMap keeps listings sorted).
+    entries: BTreeMap<String, Entry>,
+    /// Alias → canonical name.
+    aliases: HashMap<String, String>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry (no built-ins).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-seeded with the five reproduction policies plus the
+    /// channel-aware scheduling extension.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        let seed = "seeding built-in policy";
+        r.register("paota", "PAOTA", &[], |ctx, cfg| {
+            Box::new(super::paota::Paota::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("local_sgd", "Local SGD", &["localsgd", "fedavg"], |ctx, cfg| {
+            Box::new(super::local_sgd::LocalSgd::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("cotaf", "COTAF", &[], |ctx, cfg| {
+            Box::new(super::cotaf::Cotaf::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("centralized", "Centralized", &["central"], |ctx, cfg| {
+            Box::new(super::centralized::Centralized::new(ctx, cfg))
+                as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("fedasync", "FedAsync", &["fed_async", "async"], |ctx, cfg| {
+            Box::new(super::fedasync::FedAsync::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("ca_paota", "CA-PAOTA", &["ca-paota", "channel_aware"], |ctx, cfg| {
+            Box::new(super::ca_paota::CaPaota::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r
+    }
+
+    /// Register a policy under `name` (lowercased). Fails if the name or
+    /// any alias collides with an existing name or alias.
+    pub fn register<F>(
+        &mut self,
+        name: &str,
+        label: &str,
+        aliases: &[&str],
+        factory: F,
+    ) -> Result<()>
+    where
+        F: Fn(&TrainContext, &Config) -> Box<dyn AggregationPolicy> + Send + Sync + 'static,
+    {
+        let name = normalize(name)?;
+        if self.entries.contains_key(&name) || self.aliases.contains_key(&name) {
+            bail!("policy {name:?} is already registered");
+        }
+        let mut normalized_aliases = Vec::with_capacity(aliases.len());
+        for alias in aliases {
+            let alias = normalize(alias)?;
+            if alias == name
+                || self.entries.contains_key(&alias)
+                || self.aliases.contains_key(&alias)
+                || normalized_aliases.contains(&alias)
+            {
+                bail!("policy alias {alias:?} is already taken");
+            }
+            normalized_aliases.push(alias);
+        }
+        for alias in &normalized_aliases {
+            self.aliases.insert(alias.clone(), name.clone());
+        }
+        self.entries.insert(
+            name,
+            Entry {
+                label: label.to_string(),
+                aliases: normalized_aliases,
+                factory: Arc::new(factory),
+            },
+        );
+        Ok(())
+    }
+
+    /// Resolve a user-supplied name or alias to its canonical name. The
+    /// error lists every available policy.
+    pub fn canonical(&self, query: &str) -> Result<String> {
+        let q = query.trim().to_ascii_lowercase();
+        if self.entries.contains_key(&q) {
+            return Ok(q);
+        }
+        if let Some(name) = self.aliases.get(&q) {
+            return Ok(name.clone());
+        }
+        bail!(
+            "unknown algorithm {query:?} — available: {}",
+            self.names().join(", ")
+        );
+    }
+
+    /// The factory registered under a name/alias (cloned out so callers
+    /// can invoke it without holding any registry lock).
+    pub fn factory(&self, query: &str) -> Result<PolicyFactory> {
+        let name = self.canonical(query)?;
+        Ok(Arc::clone(
+            &self.entries.get(&name).expect("canonical name present").factory,
+        ))
+    }
+
+    /// Build the policy a name selects.
+    pub fn build(
+        &self,
+        query: &str,
+        ctx: &TrainContext,
+        cfg: &Config,
+    ) -> Result<Box<dyn AggregationPolicy>> {
+        let factory = self.factory(query)?;
+        Ok((*factory)(ctx, cfg))
+    }
+
+    /// Canonical names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Display label for a name/alias (falls back to the query itself for
+    /// unregistered names, so ad-hoc series still print something).
+    pub fn label(&self, query: &str) -> String {
+        match self.canonical(query) {
+            Ok(name) => self.entries[&name].label.clone(),
+            Err(_) => query.to_string(),
+        }
+    }
+
+    /// Metadata of every registered policy, sorted by name.
+    pub fn infos(&self) -> Vec<PolicyInfo> {
+        self.entries
+            .iter()
+            .map(|(name, e)| PolicyInfo {
+                name: name.clone(),
+                label: e.label.clone(),
+                aliases: e.aliases.clone(),
+            })
+            .collect()
+    }
+}
+
+fn normalize(name: &str) -> Result<String> {
+    let name = name.trim().to_ascii_lowercase();
+    if name.is_empty() {
+        bail!("policy name must be non-empty");
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        bail!("policy name {name:?} may only contain [a-z0-9_-]");
+    }
+    Ok(name)
+}
+
+// ---------------------------------------------------------------------
+// The process-global registry (what `Algorithm::parse`, the CLI and the
+// coordinator dispatch consult).
+// ---------------------------------------------------------------------
+
+static GLOBAL: OnceLock<RwLock<PolicyRegistry>> = OnceLock::new();
+
+fn global() -> &'static RwLock<PolicyRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(PolicyRegistry::with_builtins()))
+}
+
+fn read() -> RwLockReadGuard<'static, PolicyRegistry> {
+    global().read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write() -> RwLockWriteGuard<'static, PolicyRegistry> {
+    global().write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Register a policy in the global registry (see
+/// [`PolicyRegistry::register`]).
+pub fn register<F>(name: &str, label: &str, aliases: &[&str], factory: F) -> Result<()>
+where
+    F: Fn(&TrainContext, &Config) -> Box<dyn AggregationPolicy> + Send + Sync + 'static,
+{
+    write().register(name, label, aliases, factory)
+}
+
+/// Resolve a name/alias to its canonical registered name.
+pub fn canonical(query: &str) -> Result<String> {
+    read().canonical(query)
+}
+
+/// Build the policy a name selects against a prepared context.
+pub fn build(query: &str, ctx: &TrainContext, cfg: &Config) -> Result<Box<dyn AggregationPolicy>> {
+    // Clone the factory out first: it must run without holding the lock,
+    // so a factory may itself consult the registry.
+    let factory = read().factory(query)?;
+    Ok((*factory)(ctx, cfg))
+}
+
+/// Every registered canonical name, sorted.
+pub fn names() -> Vec<String> {
+    read().names()
+}
+
+/// Display label for a policy name.
+pub fn label(query: &str) -> String {
+    read().label(query)
+}
+
+/// Metadata of every registered policy (help text, listings).
+pub fn infos() -> Vec<PolicyInfo> {
+    read().infos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::coordinator::{RngStreams, RoundAction, RoundTiming, Upload};
+
+    struct Noop;
+    impl AggregationPolicy for Noop {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn timing(&self) -> RoundTiming {
+            RoundTiming::Periodic
+        }
+        fn on_uploads(
+            &mut self,
+            _round: usize,
+            _global: &[f32],
+            _uploads: &[Upload],
+            _rngs: &mut RngStreams,
+        ) -> Result<RoundAction> {
+            Ok(RoundAction::Skip { mean_power: 0.0 })
+        }
+    }
+
+    fn noop_factory(_ctx: &TrainContext, _cfg: &Config) -> Box<dyn AggregationPolicy> {
+        Box::new(Noop)
+    }
+
+    #[test]
+    fn builtins_are_seeded_and_sorted() {
+        let r = PolicyRegistry::with_builtins();
+        assert_eq!(
+            r.names(),
+            vec!["ca_paota", "centralized", "cotaf", "fedasync", "local_sgd", "paota"]
+        );
+        assert_eq!(r.label("paota"), "PAOTA");
+        assert_eq!(r.label("fedavg"), "Local SGD");
+    }
+
+    #[test]
+    fn aliases_resolve_case_insensitively() {
+        let r = PolicyRegistry::with_builtins();
+        assert_eq!(r.canonical("FedAvg").unwrap(), "local_sgd");
+        assert_eq!(r.canonical("CA-PAOTA").unwrap(), "ca_paota");
+        assert_eq!(r.canonical(" paota ").unwrap(), "paota");
+    }
+
+    #[test]
+    fn unknown_name_error_lists_available_policies() {
+        let r = PolicyRegistry::with_builtins();
+        let msg = r.canonical("nope").unwrap_err().to_string();
+        assert!(msg.contains("unknown algorithm"), "{msg}");
+        for name in ["paota", "local_sgd", "cotaf", "centralized", "fedasync", "ca_paota"] {
+            assert!(msg.contains(name), "{msg} missing {name}");
+        }
+    }
+
+    #[test]
+    fn duplicate_name_and_alias_rejected() {
+        let mut r = PolicyRegistry::with_builtins();
+        assert!(r.register("paota", "dup", &[], noop_factory).is_err());
+        // Alias colliding with an existing name.
+        assert!(r.register("fresh", "x", &["cotaf"], noop_factory).is_err());
+        // Alias colliding with an existing alias.
+        assert!(r.register("fresh", "x", &["fedavg"], noop_factory).is_err());
+        // Name colliding with an existing alias.
+        assert!(r.register("fedavg", "x", &[], noop_factory).is_err());
+        // A clean registration still works afterwards.
+        r.register("fresh", "Fresh", &["f"], noop_factory).unwrap();
+        assert_eq!(r.canonical("f").unwrap(), "fresh");
+    }
+
+    #[test]
+    fn invalid_names_rejected() {
+        let mut r = PolicyRegistry::new();
+        assert!(r.register("", "x", &[], noop_factory).is_err());
+        assert!(r.register("has space", "x", &[], noop_factory).is_err());
+        assert!(r.register("ok_name-1", "x", &[], noop_factory).is_ok());
+    }
+
+    #[test]
+    fn infos_carry_aliases() {
+        let r = PolicyRegistry::with_builtins();
+        let infos = r.infos();
+        let sgd = infos.iter().find(|i| i.name == "local_sgd").unwrap();
+        assert_eq!(sgd.aliases, vec!["localsgd", "fedavg"]);
+        assert_eq!(sgd.label, "Local SGD");
+    }
+
+    #[test]
+    fn global_registry_serves_builtins() {
+        assert_eq!(canonical("fedavg").unwrap(), "local_sgd");
+        assert!(names().contains(&"ca_paota".to_string()));
+        assert_eq!(label("cotaf"), "COTAF");
+    }
+}

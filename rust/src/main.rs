@@ -16,10 +16,12 @@ fn main() -> Result<()> {
 
     match &cli.command {
         Command::Help => {
-            print!("{}", cli::HELP);
+            print!("{}", cli::help_text());
         }
         Command::ShowConfig => {
-            println!("{:#?}", cli.config);
+            // Re-parseable `key = value` lines: pipe to a file and replay
+            // the exact configuration with `repro <cmd> --config <file>`.
+            print!("{}", cli.config.to_kv_string());
         }
         Command::Run => {
             let run = fl::run(&cli.config)?;

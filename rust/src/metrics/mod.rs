@@ -85,13 +85,37 @@ pub fn time_to_accuracy(records: &[RoundRecord], targets: &[f64]) -> Vec<TimeToA
         .collect()
 }
 
+/// Create `path` (and its parent directory) for CSV emission — the one
+/// shared entry point for every CSV the harness writes, so directory
+/// errors surface instead of being silently swallowed.
+fn create_csv(path: &Path) -> Result<std::fs::File> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating output directory {}", dir.display()))?;
+        }
+    }
+    std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))
+}
+
+/// Write a CSV as a `header` line plus preformatted `rows` (the shared
+/// writer for table-shaped outputs like Table I).
+pub fn write_csv_lines<I, S>(path: &Path, header: &str, rows: I) -> Result<()>
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let mut f = create_csv(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{}", row.as_ref())?;
+    }
+    Ok(())
+}
+
 /// Write curves as CSV: `name,round,time_s,value`.
 pub fn write_curves_csv(path: &Path, curves: &[Curve]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
-    }
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
+    let mut f = create_csv(path)?;
     writeln!(f, "series,round,time_s,value")?;
     for c in curves {
         for (round, t, v) in &c.points {
@@ -103,11 +127,7 @@ pub fn write_curves_csv(path: &Path, curves: &[Curve]) -> Result<()> {
 
 /// Write per-round telemetry as CSV (one run).
 pub fn write_records_csv(path: &Path, run: &RunResult) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
-    }
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
+    let mut f = create_csv(path)?;
     writeln!(
         f,
         "round,time_s,train_loss,probe_loss,test_loss,test_acc,participants,mean_staleness,mean_power"
@@ -183,7 +203,7 @@ mod tests {
 
     fn fake_run() -> RunResult {
         RunResult {
-            algorithm: Algorithm::Paota,
+            algorithm: Algorithm::default(),
             records: vec![
                 rec(0, 8.0, 0.3, 2.0),
                 rec(1, 16.0, 0.55, 1.5),
@@ -238,6 +258,21 @@ mod tests {
         write_records_csv(&p2, &run).unwrap();
         let text = std::fs::read_to_string(&p2).unwrap();
         assert_eq!(text.lines().count(), 5);
+    }
+
+    #[test]
+    fn write_csv_lines_creates_parent_dirs_and_reports_failures() {
+        let dir = std::env::temp_dir()
+            .join("paota_metrics_test")
+            .join("nested")
+            .join("deeper");
+        let p = dir.join("t.csv");
+        write_csv_lines(&p, "a,b", ["1,2".to_string(), "3,4".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        // A path whose parent is an existing *file* must error loudly.
+        let bad = p.join("impossible.csv");
+        assert!(write_csv_lines(&bad, "x", ["y"]).is_err());
     }
 
     #[test]

@@ -125,13 +125,23 @@ pub struct EvalOut {
     pub accuracy: f32,
 }
 
-/// All four compiled entry points plus their geometry.
+/// The execution backend behind a [`ModelRuntime`]: AOT-compiled PJRT
+/// executables (the default) or the pure-Rust reference kernel
+/// ([`super::native`], selected with `artifacts_dir = native`).
+enum Backend {
+    Pjrt {
+        local_train: Exec,
+        evaluate: Exec,
+        aggregate: Exec,
+        grad_probe: Exec,
+    },
+    Native(super::native::NativeModel),
+}
+
+/// All four model entry points plus their geometry.
 pub struct ModelRuntime {
     manifest: Manifest,
-    local_train: Exec,
-    evaluate: Exec,
-    aggregate: Exec,
-    grad_probe: Exec,
+    backend: Backend,
 }
 
 impl ModelRuntime {
@@ -143,11 +153,42 @@ impl ModelRuntime {
         };
         Ok(Self {
             manifest,
-            local_train: load("local_train")?,
-            evaluate: load("evaluate")?,
-            aggregate: load("aggregate")?,
-            grad_probe: load("grad_probe")?,
+            backend: Backend::Pjrt {
+                local_train: load("local_train")?,
+                evaluate: load("evaluate")?,
+                aggregate: load("aggregate")?,
+                grad_probe: load("grad_probe")?,
+            },
         })
+    }
+
+    /// A runtime on the pure-Rust reference kernel with explicit geometry
+    /// (no artifacts, no PJRT).
+    pub fn native(manifest: Manifest) -> Result<Self> {
+        manifest.validate()?;
+        Ok(Self {
+            backend: Backend::Native(super::native::NativeModel::new(manifest.clone())),
+            manifest,
+        })
+    }
+
+    /// A native-kernel runtime whose geometry is derived from `cfg` (the
+    /// paper's hidden width and local-step/batch shape, the config's data
+    /// dimensions) — what `artifacts_dir = native` resolves to.
+    pub fn native_for(cfg: &crate::config::Config) -> Result<Self> {
+        let (d_in, hidden, classes) = (cfg.synth.dim(), 10usize, cfg.synth.classes);
+        let manifest = Manifest {
+            d_in,
+            hidden,
+            classes,
+            dim: d_in * hidden + hidden + hidden * hidden + hidden + hidden * classes + classes,
+            local_steps: 5,
+            batch: 32,
+            clients: cfg.partition.clients,
+            eval_size: cfg.partition.test_size,
+            probe_batch: 256,
+        };
+        Self::native(manifest)
     }
 
     /// Default artifact directory: `$PAOTA_ARTIFACTS` or `./artifacts`.
@@ -170,8 +211,12 @@ impl ModelRuntime {
         self.check_len("local_train.w", w, m.dim)?;
         self.check_len("local_train.xs", xs, m.local_steps * m.batch * m.d_in)?;
         self.check_len("local_train.ys", ys, m.local_steps * m.batch * m.classes)?;
+        let exec = match &self.backend {
+            Backend::Native(nm) => return nm.local_train(w, xs, ys, lr),
+            Backend::Pjrt { local_train, .. } => local_train,
+        };
         let lr_v = [lr];
-        let out = self.local_train.run(&[
+        let out = exec.run(&[
             Input::new(w, &[m.dim as i64]),
             Input::new(xs, &[ms, b, m.d_in as i64]),
             Input::new(ys, &[ms, b, m.classes as i64]),
@@ -190,7 +235,11 @@ impl ModelRuntime {
         self.check_len("evaluate.w", w, m.dim)?;
         self.check_len("evaluate.x", x, m.eval_size * m.d_in)?;
         self.check_len("evaluate.y", y, m.eval_size * m.classes)?;
-        let out = self.evaluate.run(&[
+        let exec = match &self.backend {
+            Backend::Native(nm) => return nm.evaluate(w, x, y),
+            Backend::Pjrt { evaluate, .. } => evaluate,
+        };
+        let out = exec.run(&[
             Input::new(w, &[m.dim as i64]),
             Input::new(x, &[m.eval_size as i64, m.d_in as i64]),
             Input::new(y, &[m.eval_size as i64, m.classes as i64]),
@@ -209,7 +258,11 @@ impl ModelRuntime {
         self.check_len("aggregate.w_stack", w_stack, m.clients * m.dim)?;
         self.check_len("aggregate.coef", coef, m.clients)?;
         self.check_len("aggregate.noise", noise, m.dim)?;
-        let out = self.aggregate.run(&[
+        let exec = match &self.backend {
+            Backend::Native(nm) => return nm.aggregate(w_stack, coef, noise),
+            Backend::Pjrt { aggregate, .. } => aggregate,
+        };
+        let out = exec.run(&[
             Input::new(w_stack, &[m.clients as i64, m.dim as i64]),
             Input::new(coef, &[m.clients as i64]),
             Input::new(noise, &[m.dim as i64]),
@@ -224,7 +277,11 @@ impl ModelRuntime {
         self.check_len("grad_probe.w", w, m.dim)?;
         self.check_len("grad_probe.x", x, m.probe_batch * m.d_in)?;
         self.check_len("grad_probe.y", y, m.probe_batch * m.classes)?;
-        let out = self.grad_probe.run(&[
+        let exec = match &self.backend {
+            Backend::Native(nm) => return nm.grad_probe(w, x, y),
+            Backend::Pjrt { grad_probe, .. } => grad_probe,
+        };
+        let out = exec.run(&[
             Input::new(w, &[m.dim as i64]),
             Input::new(x, &[m.probe_batch as i64, m.d_in as i64]),
             Input::new(y, &[m.probe_batch as i64, m.classes as i64]),
@@ -308,5 +365,25 @@ mod tests {
         assert_eq!(scalar(&[3.5], "x").unwrap(), 3.5);
         assert!(scalar(&[1.0, 2.0], "x").is_err());
         assert!(scalar(&[], "x").is_err());
+    }
+
+    #[test]
+    fn native_runtime_geometry_derives_from_config() {
+        let mut cfg = crate::config::Config::default();
+        cfg.partition.clients = 7;
+        cfg.partition.test_size = 33;
+        cfg.synth.side = 6; // d_in = 36
+        let rt = ModelRuntime::native_for(&cfg).unwrap();
+        let m = rt.manifest();
+        assert_eq!(m.d_in, 36);
+        assert_eq!(m.clients, 7);
+        assert_eq!(m.eval_size, 33);
+        m.validate().unwrap();
+        // The native backend actually serves the aggregate entry point.
+        let stack = vec![0.0f32; m.clients * m.dim];
+        let mut coef = vec![0.0f32; m.clients];
+        coef[0] = 1.0;
+        let noise = vec![0.0f32; m.dim];
+        assert_eq!(rt.aggregate(&stack, &coef, &noise).unwrap().len(), m.dim);
     }
 }

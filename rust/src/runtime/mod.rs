@@ -10,18 +10,30 @@
 //! * [`pjrt`] — thin, checked wrapper over the `xla` crate
 //!   (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
 //!   `execute`), flat `f32` in/out.
+//! * [`native`] — a pure-Rust reference kernel implementing the same four
+//!   entry points in-process; selected with `artifacts_dir = native` so
+//!   artifact-free environments (CI, fresh checkouts) still run the full
+//!   coordinator stack, including the golden-seed equivalence suite.
 //! * [`artifacts`] — the manifest parser plus [`artifacts::ModelRuntime`],
 //!   the typed façade the FL layer calls (`local_train`, `evaluate`,
-//!   `aggregate`, `grad_probe`).
+//!   `aggregate`, `grad_probe`), dispatching to either backend.
 //!
 //! `PjRtClient` is `Rc`-backed (not `Send`): each worker thread builds its
 //! own [`pjrt::Engine`]. Compilation of the paper-scale artifacts takes
 //! milliseconds, so per-thread engines are cheap.
 
 pub mod artifacts;
+pub mod native;
 pub mod pjrt;
 pub mod pool;
 
 pub use artifacts::{EvalOut, Manifest, ModelRuntime, TrainOut};
+pub use native::NativeModel;
 pub use pjrt::{Engine, Exec};
 pub use pool::TrainPool;
+
+/// Whether an `artifacts_dir` value selects the pure-Rust reference
+/// kernel instead of on-disk AOT artifacts.
+pub fn is_native_dir(dir: &std::path::Path) -> bool {
+    dir.as_os_str() == "native"
+}

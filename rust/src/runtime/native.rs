@@ -1,0 +1,439 @@
+//! Pure-Rust **reference kernel**: the same four model operations the AOT
+//! PJRT artifacts expose (`local_train`, `evaluate`, `aggregate`,
+//! `grad_probe`), implemented directly on flat `f32` slices.
+//!
+//! Purpose: artifact-free environments. CI has no Python/XLA toolchain to
+//! run `make artifacts`, which used to make the golden-seed equivalence
+//! suite self-skip (ROADMAP open item). With this backend,
+//! `artifacts_dir = native` gives [`super::ModelRuntime`] a fully
+//! functional in-process model whose geometry is derived from the config
+//! ([`super::ModelRuntime::native_for`]), so every coordinator/policy
+//! path — including the equivalence tests, campaigns and examples — runs
+//! from a fresh checkout.
+//!
+//! The model is the paper's MLP (`d_in → hidden → hidden → classes`,
+//! ReLU, softmax cross-entropy) over the flat parameter layout
+//! `[W1, b1, W2, b2, W3, b3]` used by `TrainContext::init_weights` and
+//! `python/compile/model.py`. It is a *reference*, not a drop-in bitwise
+//! twin of the XLA artifacts: results are deterministic and correct, but
+//! not float-identical to the PJRT backend — which is all the
+//! equivalence suite needs, since it compares two drivers over the *same*
+//! backend.
+
+use anyhow::{ensure, Result};
+
+use super::artifacts::{EvalOut, Manifest, TrainOut};
+
+/// The in-process model backend.
+pub struct NativeModel {
+    m: Manifest,
+}
+
+/// Parameter views over the flat weight vector.
+struct Params<'a> {
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+    w3: &'a [f32],
+    b3: &'a [f32],
+}
+
+fn split<'a>(m: &Manifest, w: &'a [f32]) -> Params<'a> {
+    let (d, h, c) = (m.d_in, m.hidden, m.classes);
+    let s1 = d * h;
+    let s2 = s1 + h;
+    let s3 = s2 + h * h;
+    let s4 = s3 + h;
+    let s5 = s4 + h * c;
+    let s6 = s5 + c;
+    Params {
+        w1: &w[..s1],
+        b1: &w[s1..s2],
+        w2: &w[s2..s3],
+        b2: &w[s3..s4],
+        w3: &w[s4..s5],
+        b3: &w[s5..s6],
+    }
+}
+
+/// `out[n, d_out] = x[n, d_in] · w[d_in, d_out] + b` (w row-major by
+/// input dimension, matching the init layout's fan-in convention).
+fn affine(x: &[f32], w: &[f32], b: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d_out];
+    for i in 0..n {
+        let row = &mut out[i * d_out..(i + 1) * d_out];
+        row.copy_from_slice(b);
+        let xr = &x[i * d_in..(i + 1) * d_in];
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * d_out..(k + 1) * d_out];
+            for (o, &wv) in row.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn relu(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Softmax cross-entropy over `logits[n, c]` against one-hot `y`.
+/// Returns `(mean loss, d_logits = (p − y)/n)`.
+fn softmax_ce(logits: &[f32], y: &[f32], n: usize, c: usize) -> (f32, Vec<f32>) {
+    let mut d = vec![0.0f32; n * c];
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let lr = &logits[i * c..(i + 1) * c];
+        let yr = &y[i * c..(i + 1) * c];
+        let dr = &mut d[i * c..(i + 1) * c];
+        let max = lr.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for (dv, &lv) in dr.iter_mut().zip(lr) {
+            let e = (lv - max).exp();
+            *dv = e;
+            sum += e;
+        }
+        for (dv, &yv) in dr.iter_mut().zip(yr) {
+            let p = *dv / sum;
+            if yv > 0.0 {
+                loss -= f64::from(yv) * f64::from(p.max(1e-30).ln());
+            }
+            *dv = (p - yv) / n as f32;
+        }
+    }
+    ((loss / n as f64) as f32, d)
+}
+
+/// Accumulate `gw += aᵀ·dz` and `gb += Σ_i dz_i` for one affine layer.
+fn grad_affine(
+    a: &[f32],
+    dz: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    gw: &mut [f32],
+    gb: &mut [f32],
+) {
+    for i in 0..n {
+        let ar = &a[i * d_in..(i + 1) * d_in];
+        let dr = &dz[i * d_out..(i + 1) * d_out];
+        for (g, &dv) in gb.iter_mut().zip(dr) {
+            *g += dv;
+        }
+        for (k, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let gr = &mut gw[k * d_out..(k + 1) * d_out];
+            for (g, &dv) in gr.iter_mut().zip(dr) {
+                *g += av * dv;
+            }
+        }
+    }
+}
+
+/// `dx[n, d_in] = (dz[n, d_out] · wᵀ) ⊙ (a > 0)` — backprop through an
+/// affine layer and its preceding ReLU (whose output was `a`).
+fn backprop_masked(
+    dz: &[f32],
+    w: &[f32],
+    a: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; n * d_in];
+    for i in 0..n {
+        let dr = &dz[i * d_out..(i + 1) * d_out];
+        let ar = &a[i * d_in..(i + 1) * d_in];
+        let xr = &mut dx[i * d_in..(i + 1) * d_in];
+        for (k, x) in xr.iter_mut().enumerate() {
+            if ar[k] <= 0.0 {
+                continue;
+            }
+            let wr = &w[k * d_out..(k + 1) * d_out];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *x = acc;
+        }
+    }
+    dx
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl NativeModel {
+    pub fn new(m: Manifest) -> Self {
+        Self { m }
+    }
+
+    fn logits(&self, w: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let p = split(&self.m, w);
+        let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
+        let mut a1 = affine(x, p.w1, p.b1, n, d, h);
+        relu(&mut a1);
+        let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
+        relu(&mut a2);
+        affine(&a2, p.w3, p.b3, n, h, c)
+    }
+
+    /// Mean softmax-CE loss and full flat gradient on one batch.
+    fn loss_and_grad(&self, w: &[f32], x: &[f32], y: &[f32], n: usize) -> (f32, Vec<f32>) {
+        let p = split(&self.m, w);
+        let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
+        let mut a1 = affine(x, p.w1, p.b1, n, d, h);
+        relu(&mut a1);
+        let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
+        relu(&mut a2);
+        let logits = affine(&a2, p.w3, p.b3, n, h, c);
+        let (loss, dz3) = softmax_ce(&logits, y, n, c);
+
+        let mut g = vec![0.0f32; self.m.dim];
+        {
+            let (gw1, rest) = g.split_at_mut(d * h);
+            let (gb1, rest) = rest.split_at_mut(h);
+            let (gw2, rest) = rest.split_at_mut(h * h);
+            let (gb2, rest) = rest.split_at_mut(h);
+            let (gw3, gb3) = rest.split_at_mut(h * c);
+            grad_affine(&a2, &dz3, n, h, c, gw3, gb3);
+            let dz2 = backprop_masked(&dz3, p.w3, &a2, n, h, c);
+            grad_affine(&a1, &dz2, n, h, h, gw2, gb2);
+            let dz1 = backprop_masked(&dz2, p.w2, &a1, n, h, h);
+            grad_affine(x, &dz1, n, d, h, gw1, gb1);
+        }
+        (loss, g)
+    }
+
+    /// M local SGD steps; `xs`/`ys` hold the M pre-sampled minibatches.
+    pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<TrainOut> {
+        let m = &self.m;
+        let b = m.batch;
+        let mut w_cur = w.to_vec();
+        let mut loss_sum = 0.0f64;
+        for step in 0..m.local_steps {
+            let x = &xs[step * b * m.d_in..(step + 1) * b * m.d_in];
+            let y = &ys[step * b * m.classes..(step + 1) * b * m.classes];
+            let (loss, g) = self.loss_and_grad(&w_cur, x, y, b);
+            loss_sum += f64::from(loss);
+            for (wv, gv) in w_cur.iter_mut().zip(&g) {
+                *wv -= lr * gv;
+            }
+        }
+        Ok(TrainOut {
+            weights: w_cur,
+            loss: (loss_sum / m.local_steps as f64) as f32,
+        })
+    }
+
+    /// Test loss + accuracy over the baked eval-set shape.
+    pub fn evaluate(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<EvalOut> {
+        let (n, c) = (self.m.eval_size, self.m.classes);
+        let logits = self.logits(w, x, n);
+        let (loss, _d) = softmax_ce(&logits, y, n, c);
+        let mut correct = 0usize;
+        for i in 0..n {
+            let lr = &logits[i * c..(i + 1) * c];
+            let yr = &y[i * c..(i + 1) * c];
+            if argmax(lr) == argmax(yr) {
+                correct += 1;
+            }
+        }
+        Ok(EvalOut {
+            loss,
+            accuracy: correct as f32 / n as f32,
+        })
+    }
+
+    /// AirComp superposition + normalization:
+    /// `out = (Σ_k coef_k · stack_k + noise) / Σ_k coef_k`.
+    pub fn aggregate(&self, stack: &[f32], coef: &[f32], noise: &[f32]) -> Result<Vec<f32>> {
+        let dim = self.m.dim;
+        let s: f32 = coef.iter().sum();
+        ensure!(s != 0.0, "aggregate: zero coefficient sum");
+        let mut out = noise.to_vec();
+        for (k, &ck) in coef.iter().enumerate() {
+            if ck == 0.0 {
+                continue;
+            }
+            let row = &stack[k * dim..(k + 1) * dim];
+            for (o, &rv) in out.iter_mut().zip(row) {
+                *o += ck * rv;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= s;
+        }
+        Ok(out)
+    }
+
+    /// One full-batch gradient over the probe shape.
+    pub fn grad_probe(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let (_loss, g) = self.loss_and_grad(w, x, y, self.m.probe_batch);
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tiny_manifest() -> Manifest {
+        let (d, h, c) = (4usize, 3usize, 3usize);
+        Manifest {
+            d_in: d,
+            hidden: h,
+            classes: c,
+            dim: d * h + h + h * h + h + h * c + c,
+            local_steps: 2,
+            batch: 4,
+            clients: 5,
+            eval_size: 6,
+            probe_batch: 4,
+        }
+    }
+
+    fn random_case(m: &Manifest, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0.0f32; m.dim];
+        rng.fill_normal(&mut w, 0.4);
+        let mut x = vec![0.0f32; n * m.d_in];
+        rng.fill_normal(&mut x, 1.0);
+        let mut y = vec![0.0f32; n * m.classes];
+        for i in 0..n {
+            y[i * m.classes + rng.index(m.classes)] = 1.0;
+        }
+        (w, x, y)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let n = 4;
+        let (w, x, y) = random_case(&m, n, 11);
+        let (_loss, g) = nm.loss_and_grad(&w, &x, &y, n);
+        let eps = 1e-2f32;
+        // Full numeric gradient (the model is tiny). A central difference
+        // that straddles a ReLU kink can clip a coordinate or two, so the
+        // contract is: near-zero aggregate error plus almost-everywhere
+        // coordinate agreement.
+        let mut num = vec![0.0f32; m.dim];
+        let mut mismatches = 0usize;
+        for (idx, nv) in num.iter_mut().enumerate() {
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let (lp, _) = nm.loss_and_grad(&wp, &x, &y, n);
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let (lm, _) = nm.loss_and_grad(&wm, &x, &y, n);
+            *nv = (lp - lm) / (2.0 * eps);
+            if (*nv - g[idx]).abs() > 2e-2 * (1.0 + g[idx].abs()) {
+                mismatches += 1;
+            }
+        }
+        assert!(mismatches <= 2, "{mismatches} of {} coordinates disagree", m.dim);
+        let err2: f64 = num
+            .iter()
+            .zip(&g)
+            .map(|(a, b)| f64::from(a - b) * f64::from(a - b))
+            .sum();
+        let norm2: f64 = g.iter().map(|v| f64::from(*v) * f64::from(*v)).sum();
+        assert!(
+            err2.sqrt() <= 0.05 * (1.0 + norm2.sqrt()),
+            "relative gradient error too large: {} vs ‖g‖ {}",
+            err2.sqrt(),
+            norm2.sqrt()
+        );
+    }
+
+    #[test]
+    fn local_train_reduces_loss() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let rows = m.local_steps * m.batch;
+        let (w, xs, ys) = random_case(&m, rows, 5);
+        let first = nm.local_train(&w, &xs, &ys, 0.1).unwrap();
+        let second = nm.local_train(&first.weights, &xs, &ys, 0.1).unwrap();
+        assert!(first.loss.is_finite() && second.loss.is_finite());
+        assert!(
+            second.loss < first.loss,
+            "no progress on a refittable batch: {} -> {}",
+            first.loss,
+            second.loss
+        );
+        assert_eq!(first.weights.len(), m.dim);
+    }
+
+    #[test]
+    fn aggregate_is_the_coef_weighted_mean() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let mut stack = vec![0.0f32; m.clients * m.dim];
+        stack[..m.dim].iter_mut().for_each(|v| *v = 3.0); // client 0
+        stack[m.dim..2 * m.dim].iter_mut().for_each(|v| *v = 9.0); // client 1
+        let mut coef = vec![0.0f32; m.clients];
+        coef[0] = 2.0;
+        coef[1] = 1.0;
+        let noise = vec![0.0f32; m.dim];
+        let out = nm.aggregate(&stack, &coef, &noise).unwrap();
+        for v in &out {
+            assert!((v - 5.0).abs() < 1e-6, "(2·3 + 1·9)/3 = 5, got {v}");
+        }
+        // Noise is added pre-normalization.
+        let noisy = vec![3.0f32; m.dim];
+        let out = nm.aggregate(&stack, &coef, &noisy).unwrap();
+        for v in &out {
+            assert!((v - 6.0).abs() < 1e-6, "(15 + 3)/3 = 6, got {v}");
+        }
+    }
+
+    #[test]
+    fn aggregate_zero_sum_errors() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let stack = vec![0.0f32; m.clients * m.dim];
+        let coef = vec![0.0f32; m.clients];
+        let noise = vec![0.0f32; m.dim];
+        assert!(nm.aggregate(&stack, &coef, &noise).is_err());
+    }
+
+    #[test]
+    fn evaluate_reports_sane_ranges() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let (w, x, y) = random_case(&m, m.eval_size, 9);
+        let e = nm.evaluate(&w, &x, &y).unwrap();
+        assert!(e.loss.is_finite() && e.loss > 0.0);
+        assert!((0.0..=1.0).contains(&e.accuracy));
+    }
+
+    #[test]
+    fn grad_probe_shape_and_argmax() {
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let (w, x, y) = random_case(&m, m.probe_batch, 2);
+        assert_eq!(nm.grad_probe(&w, &x, &y).unwrap().len(), m.dim);
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0); // ties break low
+    }
+}

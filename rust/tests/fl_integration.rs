@@ -102,9 +102,9 @@ fn sync_baselines_round_time_within_latency_bounds() {
     if !have_artifacts() {
         return;
     }
-    for algo in [Algorithm::LocalSgd, Algorithm::Cotaf] {
+    for algo in ["local_sgd", "cotaf"] {
         let mut c = quick_cfg();
-        c.algorithm = algo;
+        c.algorithm = Algorithm::parse(algo).unwrap();
         let run = fl::run(&c).unwrap();
         let mut last = 0.0;
         for r in &run.records {
@@ -112,8 +112,7 @@ fn sync_baselines_round_time_within_latency_bounds() {
             last = r.sim_time;
             assert!(
                 dur >= c.latency_lo && dur <= c.latency_hi,
-                "{:?} round duration {dur} outside [{}, {}]",
-                algo,
+                "{algo} round duration {dur} outside [{}, {}]",
                 c.latency_lo,
                 c.latency_hi
             );
@@ -134,14 +133,14 @@ fn all_algorithms_learn_on_shared_context() {
     let ctx = TrainContext::build(&engine, &base).unwrap();
 
     let chance = 1.0 / base.synth.classes as f32;
-    for algo in [Algorithm::Paota, Algorithm::LocalSgd, Algorithm::Cotaf] {
+    for algo in ["paota", "local_sgd", "cotaf"] {
         let mut cfg = base.clone();
-        cfg.algorithm = algo;
+        cfg.algorithm = Algorithm::parse(algo).unwrap();
         let run = fl::run_with_context(&ctx, &cfg).unwrap();
         let acc = run.final_accuracy().unwrap();
         assert!(
             acc > chance + 0.08,
-            "{algo:?} did not beat chance after 15 rounds: {acc}"
+            "{algo} did not beat chance after 15 rounds: {acc}"
         );
         // Probe loss must have fallen below the ln(C) start.
         let probe = run.records.last().unwrap().probe_loss.unwrap();
@@ -218,7 +217,7 @@ fn fedasync_extension_runs_and_learns() {
         return;
     }
     let mut cfg = Config::default();
-    cfg.algorithm = Algorithm::FedAsync;
+    cfg.algorithm = Algorithm::parse("fedasync").unwrap();
     cfg.rounds = 20;
     cfg.eval_every = 19;
     let run = fl::run(&cfg).unwrap();

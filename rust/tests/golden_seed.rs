@@ -11,7 +11,12 @@
 //! dropped the last partial window's accumulated staleness; the
 //! coordinator fixes that, and so does the reference).
 //!
-//! Tests are skipped with a loud eprintln when artifacts are missing.
+//! The suite **never self-skips**: with the AOT artifacts present it runs
+//! at paper scale on the PJRT backend; without them it runs on the
+//! pure-Rust reference kernel (`artifacts_dir = native`) at a reduced
+//! geometry — the equivalence contract (coordinator vs seed round loops
+//! over the *same* `ctx.rt`) is backend-agnostic, so artifact-free CI
+//! exercises it on every push.
 
 use paota::channel::Mac;
 use paota::config::{Algorithm, Config, LatencyKind, PowerCapMode};
@@ -25,18 +30,24 @@ use paota::sim::VirtualClock;
 use paota::util::{vecmath, Rng};
 
 fn have_artifacts() -> bool {
-    let ok = ModelRuntime::default_dir().join("manifest.txt").exists();
-    if !ok {
-        eprintln!("SKIP: run `make artifacts` first");
-    }
-    ok
+    ModelRuntime::default_dir().join("manifest.txt").exists()
 }
 
-fn quick_cfg(algo: Algorithm) -> Config {
+fn quick_cfg(algo: &str) -> Config {
     let mut c = Config::default();
-    c.algorithm = algo;
+    c.algorithm = Algorithm::parse(algo).unwrap();
     c.rounds = 4;
     c.eval_every = 2;
+    if !have_artifacts() {
+        // Artifact-free environment: the native reference kernel at a
+        // geometry small enough for debug-mode CI.
+        eprintln!("golden_seed: no AOT artifacts — using the native reference kernel");
+        c.artifacts_dir = "native".into();
+        c.synth.side = 10; // d_in = 100
+        c.partition.clients = 24;
+        c.partition.sizes = vec![60, 120];
+        c.partition.test_size = 80;
+    }
     c
 }
 
@@ -542,58 +553,40 @@ fn ref_fedasync(ctx: &TrainContext, cfg: &Config) -> RefRun {
 
 #[test]
 fn paota_matches_seed_trainer() {
-    if !have_artifacts() {
-        return;
-    }
-    run_case(&quick_cfg(Algorithm::Paota), ref_paota);
+    run_case(&quick_cfg("paota"), ref_paota);
 }
 
 #[test]
 fn local_sgd_matches_seed_trainer() {
-    if !have_artifacts() {
-        return;
-    }
-    run_case(&quick_cfg(Algorithm::LocalSgd), ref_local_sgd);
+    run_case(&quick_cfg("local_sgd"), ref_local_sgd);
 }
 
 #[test]
 fn cotaf_matches_seed_trainer() {
-    if !have_artifacts() {
-        return;
-    }
-    run_case(&quick_cfg(Algorithm::Cotaf), ref_cotaf);
+    run_case(&quick_cfg("cotaf"), ref_cotaf);
 }
 
 #[test]
 fn centralized_matches_seed_trainer() {
-    if !have_artifacts() {
-        return;
-    }
-    run_case(&quick_cfg(Algorithm::Centralized), ref_centralized);
+    run_case(&quick_cfg("centralized"), ref_centralized);
 }
 
 #[test]
 fn fedasync_matches_seed_trainer() {
-    if !have_artifacts() {
-        return;
-    }
     // rounds = 5 leaves a tail beyond the last arrival so the trailing
     // window flush (the fixed-staleness path) is exercised too.
-    let mut cfg = quick_cfg(Algorithm::FedAsync);
+    let mut cfg = quick_cfg("fedasync");
     cfg.rounds = 5;
     run_case(&cfg, ref_fedasync);
 }
 
 #[test]
 fn fedasync_coalesced_ties_match_sequential_reference() {
-    if !have_artifacts() {
-        return;
-    }
     // Homogeneous latency makes ALL K clients finish at identical
     // timestamps: the coordinator coalesces each tie into one batched
     // `train_many` call, the reference serves them strictly one by one —
     // the streams must still agree bit-for-bit (within f32 tolerance).
-    let mut cfg = quick_cfg(Algorithm::FedAsync);
+    let mut cfg = quick_cfg("fedasync");
     cfg.latency_kind = LatencyKind::Homogeneous;
     cfg.latency_lo = 6.0;
     cfg.latency_hi = 6.0;
