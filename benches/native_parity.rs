@@ -1,0 +1,107 @@
+//! Native-kernel parity bench: the pure-Rust reference kernel
+//! (`runtime::native`) vs the AOT PJRT artifacts on the **paper geometry**
+//! (d = 784→10→10→10 MLP, K = 100, eval 1000), op by op, with the
+//! native/PJRT time ratio the ROADMAP asks for — if the ratio is small
+//! enough (~2×), `artifacts_dir = native` can become the no-toolchain
+//! quickstart default.
+//!
+//! Without artifacts the native side still runs (absolute numbers only)
+//! and the comparison is skipped loudly, so this works from a fresh
+//! checkout.
+
+use paota::benchlib::{section, Bench, Measurement};
+use paota::config::Config;
+use paota::runtime::{Engine, ModelRuntime};
+use paota::util::Rng;
+
+struct Inputs {
+    w: Vec<f32>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    ex: Vec<f32>,
+    ey: Vec<f32>,
+    stack: Vec<f32>,
+    coef: Vec<f32>,
+    noise: Vec<f32>,
+}
+
+fn inputs(rt: &ModelRuntime) -> Inputs {
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(3);
+    let mut w = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut w, 0.05);
+    let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    rng.fill_normal(&mut xs, 0.5);
+    let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    for r in 0..(m.local_steps * m.batch) {
+        ys[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+    let mut ex = vec![0.0f32; m.eval_size * m.d_in];
+    rng.fill_normal(&mut ex, 0.5);
+    let mut ey = vec![0.0f32; m.eval_size * m.classes];
+    for r in 0..m.eval_size {
+        ey[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+    let mut stack = vec![0.0f32; m.clients * m.dim];
+    rng.fill_normal(&mut stack, 0.05);
+    let coef = vec![1.0f32; m.clients];
+    let mut noise = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut noise, 0.01);
+    Inputs { w, xs, ys, ex, ey, stack, coef, noise }
+}
+
+/// Time the three coordinator-hot-path ops on one backend.
+fn measure(tag: &str, rt: &ModelRuntime) -> Vec<Measurement> {
+    let m = rt.manifest().clone();
+    let i = inputs(rt);
+    let b = Bench::new(tag);
+    vec![
+        b.iter(&format!("local_train(M={},B={})", m.local_steps, m.batch), || {
+            rt.local_train(&i.w, &i.xs, &i.ys, 0.1).unwrap();
+        }),
+        b.iter(&format!("aggregate(K={})", m.clients), || {
+            rt.aggregate(&i.stack, &i.coef, &i.noise).unwrap();
+        }),
+        b.iter(&format!("evaluate(E={})", m.eval_size), || {
+            rt.evaluate(&i.w, &i.ex, &i.ey).unwrap();
+        }),
+    ]
+}
+
+fn main() {
+    let cfg = Config::default(); // the paper geometry
+    let native = ModelRuntime::native_for(&cfg).unwrap();
+    let m = native.manifest().clone();
+
+    section(&format!(
+        "native reference kernel (paper geometry: dim = {}, K = {}, eval = {})",
+        m.dim, m.clients, m.eval_size
+    ));
+    let native_times = measure("native", &native);
+
+    if !ModelRuntime::default_dir().join("manifest.txt").exists() {
+        eprintln!(
+            "SKIP parity ratio: no AOT artifacts (run `make artifacts` to \
+             compare against the PJRT backend)"
+        );
+        return;
+    }
+
+    let engine = Engine::cpu().unwrap();
+    let pjrt = ModelRuntime::load(&engine, &ModelRuntime::default_dir()).unwrap();
+    section("AOT PJRT artifacts (same geometry)");
+    let pjrt_times = measure("pjrt", &pjrt);
+
+    section("parity: native time / pjrt time (lower = native closer)");
+    let mut worst = 0.0f64;
+    for (n, p) in native_times.iter().zip(&pjrt_times) {
+        let ratio = n.mean.as_secs_f64() / p.mean.as_secs_f64().max(1e-12);
+        worst = worst.max(ratio);
+        let op = n.name.trim_start_matches("native/");
+        println!("parity/{op:<40} {ratio:.2}x");
+    }
+    println!(
+        "parity/worst-op ratio: {worst:.2}x  (ROADMAP: ≲2x ⇒ make `native` the \
+         quickstart default)"
+    );
+}

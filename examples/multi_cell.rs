@@ -1,0 +1,89 @@
+//! The `fl::topology` aggregation tree end-to-end: grouped AirComp in a
+//! single cell (`air_fedga`), then a 2-cell hierarchy with cloud mixing —
+//! all on one shared data context, so the three curves are directly
+//! comparable.
+//!
+//! ```bash
+//! cargo run --release --offline --example multi_cell
+//! ```
+//!
+//! Everything here is plain config surface: `--algo air_fedga` +
+//! `--groups N` selects grouped aggregation, `--cells N --mixing cloud`
+//! a hierarchy (`fl::run` routes through `topology::multi_cell`
+//! automatically). The only API beyond that is `MultiCellRunner`, used
+//! below to read the per-cell record streams next to the merged one.
+//!
+//! Runs on the AOT artifacts when present, else on the pure-Rust native
+//! kernel — so this example works from a fresh checkout.
+
+use anyhow::Result;
+use paota::config::{Algorithm, Config};
+use paota::fl::topology::{multi_cell, MixingKind, PartitionerKind};
+use paota::fl::{self, TrainContext};
+use paota::runtime::Engine;
+
+fn main() -> Result<()> {
+    let mut base = Config::default();
+    base.rounds = 8;
+    base.eval_every = 2;
+
+    let manifest = paota::runtime::ModelRuntime::default_dir().join("manifest.txt");
+    if !manifest.exists() {
+        println!("(no AOT artifacts — running on the native reference kernel)\n");
+        base.artifacts_dir = "native".into();
+        base.synth.side = 10;
+        base.partition.clients = 24;
+        base.partition.sizes = vec![60, 120];
+        base.partition.test_size = 100;
+    }
+
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, &base)?;
+
+    // 1. Flat PAOTA — the baseline every topology competes against.
+    let flat = fl::run_with_context(&ctx, &base)?;
+    println!(
+        "flat paota             final accuracy: {:.2}%",
+        flat.final_accuracy().unwrap_or(0.0) * 100.0
+    );
+
+    // 2. Grouped AirComp: one OTA pass per group, fired on readiness.
+    let mut grouped = base.clone();
+    grouped.algorithm = Algorithm::parse("air_fedga")?;
+    grouped.topology.groups = 4;
+    grouped.topology.partitioner = PartitionerKind::Latency;
+    let air = fl::run_with_context(&ctx, &grouped)?;
+    println!(
+        "air_fedga (4 groups)   final accuracy: {:.2}%",
+        air.final_accuracy().unwrap_or(0.0) * 100.0
+    );
+
+    // 3. Two cells with cloud FedAvg every 2 slots. `fl::run_with_context`
+    //    would dispatch this too; MultiCellRunner exposes the per-cell
+    //    streams next to the merged one.
+    let mut hier = base.clone();
+    hier.topology.cells = 2;
+    hier.topology.mixing = MixingKind::Cloud;
+    hier.topology.mixing_every = 2;
+    let out = multi_cell::run(&ctx, &hier)?;
+    println!(
+        "hier 2-cell (cloud/2)  final accuracy: {:.2}%\n",
+        out.merged.final_accuracy().unwrap_or(0.0) * 100.0
+    );
+
+    println!("round  time(s)  cell0-up  cell1-up  merged-up  merged-acc");
+    for rec in &out.merged.records {
+        let r = rec.round;
+        println!(
+            "{:>5}  {:>7.0}  {:>8}  {:>8}  {:>9}  {}",
+            r,
+            rec.sim_time,
+            out.cells[0].records[r].participants,
+            out.cells[1].records[r].participants,
+            rec.participants,
+            rec.eval
+                .map_or("      -".to_string(), |e| format!("{:>9.2}%", e.accuracy * 100.0)),
+        );
+    }
+    Ok(())
+}

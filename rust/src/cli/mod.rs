@@ -36,7 +36,7 @@ pub enum Command {
     /// Table I: rounds & time to target accuracies.
     Table1,
     /// Ablations: `beta`, `dt`, `omega`, `latency`, `solver`,
-    /// `scheduling`.
+    /// `scheduling`, `topology`, `replicates`.
     Ablation(String),
     /// Print the effective config and exit.
     ShowConfig,
@@ -71,6 +71,8 @@ COMMANDS:
     fig4          test accuracy vs rounds & time (paper Fig. 4)
     table1        time/rounds to target accuracy (paper Table I)
     ablation X    X ∈ beta | dt | omega | latency | solver | scheduling
+                      | topology (cells × groups vs flat, fl::topology)
+                      | replicates (seed grid → mean ± std curves)
     show-config   print the effective configuration (re-parseable `key = value`)
     help          this text
 
@@ -84,13 +86,18 @@ HARNESS FLAGS:
 
 CONFIG KEYS (defaults = paper §IV-A):
     seed rounds algo delta_t latency_lo latency_hi latency_kind
-    latency_slow latency_slow_frac participants lr
+    latency_slow latency_slow_frac latency_sigma
+    latency_ge_enter latency_ge_exit participants lr
     p_max power_cap_mode omega fedasync_gamma force_beta
     solver mip_max_k pla_segments mip_max_nodes
     dinkelbach_eps dinkelbach_iters l_smooth epsilon2
     bandwidth_hz n0 clients max_classes test_size sizes
-    pixel_noise label_noise jitter eval_every artifacts_dir
+    cells groups group_partitioner mixing mixing_every
+    group_ready_frac group_mix
+    side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
+    (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
+    (topology: cells>1 = hierarchical multi-cell; --algo air_fedga = grouped)
     (artifacts_dir=native selects the pure-Rust reference kernel)
 ",
         names.join("|")
@@ -117,7 +124,10 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         "table1" => Command::Table1,
         "ablation" => {
             let Some(which) = it.next() else {
-                bail!("ablation requires an argument (beta|dt|omega|latency|solver|scheduling)");
+                bail!(
+                    "ablation requires an argument \
+                     (beta|dt|omega|latency|solver|scheduling|topology|replicates)"
+                );
             };
             Command::Ablation(which.clone())
         }

@@ -115,6 +115,12 @@ pub enum LatencyKind {
     Uniform,
     Homogeneous,
     Bimodal,
+    /// Heavy-tailed lognormal (median `(lo+hi)/2`, shape `latency_sigma`).
+    Lognormal,
+    /// Time-correlated two-state Gilbert–Elliott chain (`latency_lo` fast,
+    /// `latency_slow` slow, `latency_ge_enter`/`latency_ge_exit`
+    /// transition probabilities).
+    GilbertElliott,
 }
 
 impl LatencyKind {
@@ -123,6 +129,8 @@ impl LatencyKind {
             "uniform" => LatencyKind::Uniform,
             "homogeneous" | "constant" => LatencyKind::Homogeneous,
             "bimodal" => LatencyKind::Bimodal,
+            "lognormal" | "log_normal" => LatencyKind::Lognormal,
+            "gilbert_elliott" | "gilbert-elliott" | "ge" => LatencyKind::GilbertElliott,
             other => bail!("unknown latency model {other:?}"),
         })
     }
@@ -133,6 +141,47 @@ impl LatencyKind {
             LatencyKind::Uniform => "uniform",
             LatencyKind::Homogeneous => "homogeneous",
             LatencyKind::Bimodal => "bimodal",
+            LatencyKind::Lognormal => "lognormal",
+            LatencyKind::GilbertElliott => "gilbert_elliott",
+        }
+    }
+}
+
+/// Aggregation-topology configuration (`fl::topology`): how the flat
+/// fleet is bent into an aggregation tree. The defaults describe the
+/// paper's single-cell, ungrouped deployment, so every pre-topology
+/// config keeps its exact meaning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyConfig {
+    /// Number of cells (parameter servers). 1 = flat single-cell; > 1
+    /// routes the run through `fl::topology::multi_cell`.
+    pub cells: usize,
+    /// Groups per fleet for the grouped-AirComp policy (`air_fedga`).
+    pub groups: usize,
+    /// How clients are assigned to groups/cells.
+    pub partitioner: crate::fl::topology::PartitionerKind,
+    /// Inter-cell mixing scheme (multi-cell runs only).
+    pub mixing: crate::fl::topology::MixingKind,
+    /// Mixing cadence: merge cell models every `mixing_every` ΔT slots.
+    pub mixing_every: usize,
+    /// Fraction of a group's members that must be ready before the group
+    /// fires its AirComp pass (1.0 = wait for the whole group).
+    pub group_ready_frac: f64,
+    /// Base server-side merge rate of one group aggregate (staleness-
+    /// discounted per round; see `fl::topology::air_fedga`).
+    pub group_mix: f64,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        Self {
+            cells: 1,
+            groups: 1,
+            partitioner: crate::fl::topology::PartitionerKind::RoundRobin,
+            mixing: crate::fl::topology::MixingKind::Cloud,
+            mixing_every: 5,
+            group_ready_frac: 1.0,
+            group_mix: 0.5,
         }
     }
 }
@@ -157,6 +206,12 @@ pub struct Config {
     /// Bimodal ablation: slow-device latency and draw fraction.
     pub latency_slow: f64,
     pub latency_slow_frac: f64,
+    /// Lognormal shape σ (heavy-tail severity; median stays (lo+hi)/2).
+    pub latency_sigma: f64,
+    /// Gilbert–Elliott transition probabilities per draw:
+    /// fast→slow (`enter`) and slow→fast (`exit`).
+    pub latency_ge_enter: f64,
+    pub latency_ge_exit: f64,
     /// Participants per round for the synchronous baselines ("equal number
     /// of participating clients" fairness rule, §IV-B). 0 = all clients.
     pub participants: usize,
@@ -198,6 +253,8 @@ pub struct Config {
     pub synth: SynthConfig,
     /// Partition (K clients etc.).
     pub partition: PartitionConfig,
+    /// Aggregation topology (cells / groups / inter-cell mixing).
+    pub topology: TopologyConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -216,6 +273,9 @@ impl Default for Config {
             latency_kind: LatencyKind::Uniform,
             latency_slow: 30.0,
             latency_slow_frac: 0.2,
+            latency_sigma: 0.6,
+            latency_ge_enter: 0.1,
+            latency_ge_exit: 0.3,
             participants: 0,
             lr: 0.2,
             p_max: 15.0,
@@ -234,6 +294,7 @@ impl Default for Config {
             channel: ChannelConfig::default(),
             synth: SynthConfig::default(),
             partition: PartitionConfig::default(),
+            topology: TopologyConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -261,6 +322,18 @@ impl Config {
             "latency_kind" | "latency_model" => self.latency_kind = LatencyKind::parse(value)?,
             "latency_slow" => self.latency_slow = p(key, value)?,
             "latency_slow_frac" => self.latency_slow_frac = p(key, value)?,
+            "latency_sigma" => self.latency_sigma = p(key, value)?,
+            "latency_ge_enter" => self.latency_ge_enter = p(key, value)?,
+            "latency_ge_exit" => self.latency_ge_exit = p(key, value)?,
+            "cells" => self.topology.cells = p(key, value)?,
+            "groups" => self.topology.groups = p(key, value)?,
+            "group_partitioner" | "partitioner" => {
+                self.topology.partitioner = crate::fl::topology::PartitionerKind::parse(value)?
+            }
+            "mixing" => self.topology.mixing = crate::fl::topology::MixingKind::parse(value)?,
+            "mixing_every" => self.topology.mixing_every = p(key, value)?,
+            "group_ready_frac" => self.topology.group_ready_frac = p(key, value)?,
+            "group_mix" => self.topology.group_mix = p(key, value)?,
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -300,6 +373,7 @@ impl Config {
                     bail!("sizes must be non-empty");
                 }
             }
+            "side" => self.synth.side = p(key, value)?,
             "pixel_noise" => self.synth.pixel_noise = p(key, value)?,
             "label_noise" => self.synth.label_noise = p(key, value)?,
             "jitter" => self.synth.jitter = p(key, value)?,
@@ -354,6 +428,51 @@ impl Config {
         if self.eval_every == 0 {
             bail!("eval_every must be ≥ 1");
         }
+        if self.latency_kind == LatencyKind::Lognormal {
+            if self.latency_sigma <= 0.0 {
+                bail!("latency_sigma must be positive for the lognormal model");
+            }
+            if self.latency_lo + self.latency_hi <= 0.0 {
+                bail!(
+                    "the lognormal latency median is (latency_lo + latency_hi)/2, \
+                     which must be positive"
+                );
+            }
+        }
+        if !(0.0..=1.0).contains(&self.latency_ge_enter)
+            || !(0.0..=1.0).contains(&self.latency_ge_exit)
+        {
+            bail!("latency_ge_enter/latency_ge_exit must be probabilities in [0,1]");
+        }
+        let t = &self.topology;
+        if t.cells == 0 {
+            bail!("cells must be ≥ 1");
+        }
+        if t.cells > self.partition.clients {
+            bail!("cells exceeds client count (a cell would be empty)");
+        }
+        if t.groups == 0 {
+            bail!("groups must be ≥ 1");
+        }
+        if t.groups > self.partition.clients {
+            bail!("groups exceeds client count (a group would be empty)");
+        }
+        if t.mixing_every == 0 {
+            bail!("mixing_every must be ≥ 1");
+        }
+        if !(t.group_ready_frac > 0.0 && t.group_ready_frac <= 1.0) {
+            bail!("group_ready_frac must be in (0,1]");
+        }
+        if !(t.group_mix > 0.0 && t.group_mix <= 1.0) {
+            bail!("group_mix must be in (0,1]");
+        }
+        if t.cells > 1 && self.algorithm.name() == "air_fedga" {
+            bail!(
+                "multi-cell topology drives a flat per-cell policy; nest grouped \
+                 AirComp via `groups` inside a single cell instead of combining \
+                 cells > 1 with air_fedga"
+            );
+        }
         Ok(())
     }
 
@@ -371,6 +490,16 @@ impl Config {
                 fast: self.latency_lo,
                 slow: self.latency_slow,
                 slow_frac: self.latency_slow_frac,
+            },
+            LatencyKind::Lognormal => crate::sim::LatencyModel::Lognormal {
+                mu: ((self.latency_lo + self.latency_hi) / 2.0).ln(),
+                sigma: self.latency_sigma,
+            },
+            LatencyKind::GilbertElliott => crate::sim::LatencyModel::GilbertElliott {
+                fast: self.latency_lo,
+                slow: self.latency_slow,
+                p_enter: self.latency_ge_enter,
+                p_exit: self.latency_ge_exit,
             },
         }
     }
@@ -412,6 +541,9 @@ impl Config {
         kv("latency_kind", self.latency_kind.name().to_string());
         kv("latency_slow", self.latency_slow.to_string());
         kv("latency_slow_frac", self.latency_slow_frac.to_string());
+        kv("latency_sigma", self.latency_sigma.to_string());
+        kv("latency_ge_enter", self.latency_ge_enter.to_string());
+        kv("latency_ge_exit", self.latency_ge_exit.to_string());
         kv("participants", self.participants.to_string());
         kv("lr", self.lr.to_string());
         kv("p_max", self.p_max.to_string());
@@ -444,6 +576,14 @@ impl Config {
                 .collect::<Vec<_>>()
                 .join(","),
         );
+        kv("cells", self.topology.cells.to_string());
+        kv("groups", self.topology.groups.to_string());
+        kv("group_partitioner", self.topology.partitioner.name().to_string());
+        kv("mixing", self.topology.mixing.name().to_string());
+        kv("mixing_every", self.topology.mixing_every.to_string());
+        kv("group_ready_frac", self.topology.group_ready_frac.to_string());
+        kv("group_mix", self.topology.group_mix.to_string());
+        kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
         kv("jitter", self.synth.jitter.to_string());
@@ -539,6 +679,60 @@ mod tests {
     }
 
     #[test]
+    fn topology_validation() {
+        let mut c = Config::default();
+        c.topology.cells = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.topology.groups = c.partition.clients + 1;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.topology.group_ready_frac = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.topology.mixing_every = 0;
+        assert!(c.validate().is_err());
+        // Lognormal needs a positive median and shape.
+        let mut c = Config::default();
+        c.latency_kind = LatencyKind::Lognormal;
+        c.latency_lo = -20.0;
+        c.latency_hi = 10.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.latency_kind = LatencyKind::Lognormal;
+        c.latency_sigma = 0.0;
+        assert!(c.validate().is_err());
+        // Multi-cell composes a *flat* per-cell policy.
+        let mut c = Config::default();
+        c.algorithm = Algorithm::parse("air_fedga").unwrap();
+        c.topology.cells = 2;
+        assert!(c.validate().is_err());
+        c.topology.cells = 1;
+        c.topology.groups = 5;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn latency_kind_roundtrip_and_models() {
+        for kind in ["uniform", "homogeneous", "bimodal", "lognormal", "gilbert_elliott"] {
+            assert_eq!(LatencyKind::parse(kind).unwrap().name(), kind);
+        }
+        assert_eq!(LatencyKind::parse("ge").unwrap(), LatencyKind::GilbertElliott);
+        let mut c = Config::default();
+        c.latency_kind = LatencyKind::Lognormal;
+        let crate::sim::LatencyModel::Lognormal { mu, sigma } = c.latency() else {
+            panic!("wrong model");
+        };
+        assert!((mu - 10.0f64.ln()).abs() < 1e-12);
+        assert_eq!(sigma, 0.6);
+        c.latency_kind = LatencyKind::GilbertElliott;
+        assert!(matches!(
+            c.latency(),
+            crate::sim::LatencyModel::GilbertElliott { .. }
+        ));
+    }
+
+    #[test]
     fn algorithm_parse_aliases() {
         assert_eq!(Algorithm::parse("FedAvg").unwrap().name(), "local_sgd");
         assert_eq!(Algorithm::parse("central").unwrap().name(), "centralized");
@@ -573,6 +767,17 @@ mod tests {
         c.set("n0", "-74").unwrap();
         c.set("dinkelbach_eps", "0.000001").unwrap();
         c.set("artifacts_dir", "native").unwrap();
+        c.set("cells", "3").unwrap();
+        c.set("groups", "4").unwrap();
+        c.set("group_partitioner", "latency").unwrap();
+        c.set("mixing", "gossip").unwrap();
+        c.set("mixing_every", "2").unwrap();
+        c.set("group_ready_frac", "0.75").unwrap();
+        c.set("group_mix", "0.4").unwrap();
+        c.set("side", "12").unwrap();
+        c.set("latency_sigma", "0.9").unwrap();
+        c.set("latency_ge_enter", "0.2").unwrap();
+        c.set("latency_ge_exit", "0.4").unwrap();
 
         std::fs::write(&path, c.to_kv_string()).unwrap();
         let mut back = Config::default();
@@ -583,6 +788,13 @@ mod tests {
         assert_eq!(back.algorithm.name(), "fedasync");
         assert_eq!(back.force_beta, Some(0.25));
         assert_eq!(back.partition.sizes, vec![100, 200]);
+        assert_eq!(back.topology.cells, 3);
+        assert_eq!(
+            back.topology.partitioner,
+            crate::fl::topology::PartitionerKind::Latency
+        );
+        assert_eq!(back.topology.mixing, crate::fl::topology::MixingKind::Gossip);
+        assert_eq!(back.synth.side, 12);
 
         // The default config round-trips too.
         let d = Config::default();

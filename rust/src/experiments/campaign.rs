@@ -29,9 +29,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Algorithm, Config};
 use crate::fl::{self, RunResult, TrainContext};
-use crate::metrics::{write_curves_csv, write_records_csv, Curve};
+use crate::metrics::{write_csv_lines, write_curves_csv, write_records_csv, Curve};
 use crate::runtime::Engine;
 
 /// A named config-delta: one run of a campaign.
@@ -118,6 +118,37 @@ impl Campaign {
     /// Declare a batch of prepared scenarios.
     pub fn scenarios(mut self, list: impl IntoIterator<Item = Scenario>) -> Self {
         self.scenarios.extend(list);
+        self
+    }
+
+    /// Declare the **cartesian product** of the axes as scenarios — the
+    /// paper-grade sweep shape (algorithms × noise levels × seeds) in one
+    /// call. Scenario names are the axis labels joined with `|`
+    /// (`"PAOTA|n0=-74|seed=43"`), which is exactly what
+    /// [`replicate_key`] strips the seed part from, so a `seeds` axis
+    /// plus a [`MeanStdCurves`] sink yields mean ± std curves per
+    /// non-seed combination.
+    pub fn grid(mut self, axes: Vec<GridAxis>) -> Self {
+        let mut combos: Vec<(String, Config)> = vec![(String::new(), self.base.clone())];
+        for axis in &axes {
+            let mut next = Vec::with_capacity(combos.len() * axis.variants.len().max(1));
+            for (name, cfg) in &combos {
+                for (label, delta) in &axis.variants {
+                    let mut c = cfg.clone();
+                    delta(&mut c);
+                    let combined = if name.is_empty() {
+                        label.clone()
+                    } else {
+                        format!("{name}|{label}")
+                    };
+                    next.push((combined, c));
+                }
+            }
+            combos = next;
+        }
+        for (name, cfg) in combos {
+            self.scenarios.push(Scenario::from_config(name, cfg));
+        }
         self
     }
 
@@ -251,6 +282,159 @@ pub fn records_csv_path(dir: &Path, prefix: &str, algorithm: &str) -> PathBuf {
     dir.join(format!("{prefix}_{algorithm}.csv"))
 }
 
+/// One axis of a [`Campaign::grid`] product: an ordered list of labeled
+/// config deltas. Compose axes freely; the named constructors cover the
+/// common dimensions (algorithms, seed replicates, channel-noise levels).
+#[derive(Default)]
+pub struct GridAxis {
+    variants: Vec<(String, Box<dyn Fn(&mut Config)>)>,
+}
+
+impl GridAxis {
+    /// An empty axis (add variants with [`GridAxis::variant`]). An axis
+    /// left empty annihilates the product — zero scenarios.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one labeled delta.
+    pub fn variant(
+        mut self,
+        label: impl Into<String>,
+        delta: impl Fn(&mut Config) + 'static,
+    ) -> Self {
+        self.variants.push((label.into(), Box::new(delta)));
+        self
+    }
+
+    /// An axis over registered algorithms, labeled by their registry
+    /// labels. Errors on names no factory claims.
+    pub fn algorithms(names: &[&str]) -> Result<Self> {
+        let mut axis = Self::new();
+        for name in names {
+            let algo = Algorithm::parse(name)?;
+            let label = crate::fl::registry::label(algo.name());
+            axis = axis.variant(label, move |c: &mut Config| c.algorithm = algo.clone());
+        }
+        Ok(axis)
+    }
+
+    /// A seed-replicate axis (labels `seed=<n>`, the convention
+    /// [`replicate_key`] recognizes). Campaign contexts are shared, so
+    /// replicates re-run the *training* streams on fixed data.
+    pub fn seeds(seeds: &[u64]) -> Self {
+        let mut axis = Self::new();
+        for &seed in seeds {
+            axis = axis.variant(format!("seed={seed}"), move |c: &mut Config| c.seed = seed);
+        }
+        axis
+    }
+
+    /// A channel-noise axis (labels `n0=<dBm/Hz>`).
+    pub fn noise_levels(n0s: &[f64]) -> Self {
+        let mut axis = Self::new();
+        for &n0 in n0s {
+            axis = axis.variant(format!("n0={n0}"), move |c: &mut Config| {
+                c.channel.n0_dbm_per_hz = n0
+            });
+        }
+        axis
+    }
+}
+
+/// The replicate-grouping key of a scenario name: the name with any
+/// `seed=<...>` segments (as produced by [`GridAxis::seeds`]) removed, so
+/// `"PAOTA|n0=-74|seed=43"` and `"PAOTA|n0=-74|seed=44"` aggregate
+/// together. A name that is *only* a seed label collapses to
+/// `"replicates"`.
+pub fn replicate_key(name: &str) -> String {
+    let kept: Vec<&str> = name
+        .split('|')
+        .map(str::trim)
+        .filter(|part| !part.starts_with("seed="))
+        .collect();
+    if kept.is_empty() {
+        "replicates".to_string()
+    } else {
+        kept.join("|")
+    }
+}
+
+/// Observer aggregating seed replicates into **mean ± std curves** — one
+/// `series,round,time_s,mean,std,n` CSV row per replicate group and
+/// evaluated round (std = sample standard deviation, 0 for n = 1).
+/// Groups are scenario names modulo their `seed=<n>` segment
+/// ([`replicate_key`]); pair with [`Campaign::grid`] + [`GridAxis::seeds`].
+pub struct MeanStdCurves {
+    path: PathBuf,
+    kind: CurveKind,
+}
+
+impl MeanStdCurves {
+    pub fn accuracy(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), kind: CurveKind::Accuracy }
+    }
+
+    pub fn loss_gap(path: impl Into<PathBuf>, f_star: f64) -> Self {
+        Self { path: path.into(), kind: CurveKind::LossGap { f_star } }
+    }
+}
+
+impl RunObserver for MeanStdCurves {
+    fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> Result<()> {
+        // Group curves by replicate key, preserving first-seen order.
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: std::collections::HashMap<String, Vec<Curve>> =
+            std::collections::HashMap::new();
+        for r in results {
+            let curve = match self.kind {
+                CurveKind::Accuracy => Curve::accuracy(&r.name, &r.run),
+                CurveKind::LossGap { f_star } => Curve::loss_gap(&r.name, &r.run, f_star),
+            };
+            let key = replicate_key(&r.name);
+            if !groups.contains_key(&key) {
+                order.push(key.clone());
+            }
+            groups.entry(key).or_default().push(curve);
+        }
+
+        let mut rows = Vec::new();
+        for key in &order {
+            let curves = &groups[key];
+            let mut rounds: Vec<usize> = curves
+                .iter()
+                .flat_map(|c| c.points.iter().map(|p| p.0))
+                .collect();
+            rounds.sort_unstable();
+            rounds.dedup();
+            for round in rounds {
+                let mut vals = Vec::new();
+                let mut time_sum = 0.0f64;
+                for c in curves {
+                    if let Some(p) = c.points.iter().find(|p| p.0 == round) {
+                        vals.push(p.2);
+                        time_sum += p.1;
+                    }
+                }
+                let n = vals.len();
+                let mean = vals.iter().sum::<f64>() / n as f64;
+                let std = if n > 1 {
+                    (vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                        / (n as f64 - 1.0))
+                        .sqrt()
+                } else {
+                    0.0
+                };
+                rows.push(format!(
+                    "{key},{round},{:.1},{mean:.6},{std:.6},{n}",
+                    time_sum / n as f64
+                ));
+            }
+        }
+        write_csv_lines(&self.path, "series,round,time_s,mean,std,n", rows)
+    }
+}
+
 /// The config fields a [`TrainContext`] is built from. Scenarios sharing
 /// a campaign context must agree on all of them.
 fn context_fingerprint(cfg: &Config) -> String {
@@ -323,6 +507,53 @@ mod tests {
         let s = Scenario::new("more rounds", &base, |c| c.rounds = 123);
         assert_eq!(s.cfg.rounds, 123);
         assert_eq!(base.rounds, Config::default().rounds);
+    }
+
+    #[test]
+    fn grid_builds_the_full_product_in_order() {
+        let campaign = Campaign::new("grid", Config::default()).grid(vec![
+            GridAxis::algorithms(&["paota", "cotaf"]).unwrap(),
+            GridAxis::noise_levels(&[-174.0, -74.0]),
+            GridAxis::seeds(&[1, 2]),
+        ]);
+        let names: Vec<&str> = campaign.scenarios.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), 8);
+        assert_eq!(names[0], "PAOTA|n0=-174|seed=1");
+        assert_eq!(names[1], "PAOTA|n0=-174|seed=2");
+        assert_eq!(names[7], "COTAF|n0=-74|seed=2");
+        let s = &campaign.scenarios[7];
+        assert_eq!(s.cfg.algorithm.name(), "cotaf");
+        assert_eq!(s.cfg.channel.n0_dbm_per_hz, -74.0);
+        assert_eq!(s.cfg.seed, 2);
+        // Unknown algorithm names fail at declaration time.
+        assert!(GridAxis::algorithms(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn replicate_key_strips_only_seed_segments() {
+        assert_eq!(replicate_key("PAOTA|n0=-74|seed=43"), "PAOTA|n0=-74");
+        assert_eq!(replicate_key("PAOTA"), "PAOTA");
+        assert_eq!(replicate_key("seed=7"), "replicates");
+        assert_eq!(replicate_key("a|seed=1|b"), "a|b");
+    }
+
+    #[test]
+    fn mean_std_curves_aggregate_replicates() {
+        let dir = std::env::temp_dir().join("paota_meanstd_test");
+        let path = dir.join("meanstd.csv");
+        let results = vec![
+            fake_result("PAOTA|seed=1", "paota", 0.5),
+            fake_result("PAOTA|seed=2", "paota", 0.7),
+            fake_result("COTAF|seed=1", "cotaf", 0.4),
+        ];
+        let mut sink = MeanStdCurves::accuracy(&path);
+        sink.on_campaign_end(&results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "series,round,time_s,mean,std,n");
+        // mean(0.5, 0.7) = 0.6, sample std = 0.1414..., n = 2.
+        assert!(lines[1].starts_with("PAOTA,0,8.0,0.600000,0.141421,2"), "{}", lines[1]);
+        assert!(lines[2].starts_with("COTAF,0,8.0,0.400000,0.000000,1"), "{}", lines[2]);
     }
 
     fn tiny_native_base() -> Config {

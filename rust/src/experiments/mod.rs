@@ -26,8 +26,8 @@ use std::path::Path;
 use anyhow::Result;
 
 pub use campaign::{
-    records_csv_path, Campaign, CurveKind, CurvesCsv, RecordsCsv, RunObserver, Scenario,
-    ScenarioResult,
+    records_csv_path, replicate_key, Campaign, CurveKind, CurvesCsv, GridAxis, MeanStdCurves,
+    RecordsCsv, RunObserver, Scenario, ScenarioResult,
 };
 
 use crate::config::{Algorithm, Config};
@@ -111,9 +111,13 @@ pub fn table1(base: &Config, out_dir: &Path, targets: &[f64]) -> Result<()> {
     Ok(())
 }
 
-/// Ablations (DESIGN.md A1–A4 plus `scheduling`): each sweeps one knob of
-/// the PAOTA family and prints final accuracy + time-to-70%.
+/// Ablations (DESIGN.md A1–A4 plus `scheduling`, `topology`,
+/// `replicates`): each sweeps one knob of the PAOTA family and prints
+/// final accuracy + time-to-70%.
 pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
+    if which == "replicates" {
+        return replicates_ablation(base, out_dir);
+    }
     let engine = Engine::cpu()?;
     let ctx = TrainContext::build(&engine, base)?;
     let scenarios = ablation_scenarios(which, base)?;
@@ -126,6 +130,29 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
         .observe(CurvesCsv::accuracy(out_dir.join(format!("ablation_{which}.csv"))))
         .run_with_context(&ctx)?;
     println!("# wrote {}/ablation_{which}.csv", out_dir.display());
+    Ok(())
+}
+
+/// `ablation replicates` — the paper-grade error-bar harness: a
+/// [`Campaign::grid`] of algorithms × seed replicates whose
+/// [`MeanStdCurves`] sink emits mean ± std accuracy curves per
+/// algorithm. Three replicates by default (`--seed` shifts the set).
+fn replicates_ablation(base: &Config, out_dir: &Path) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, base)?;
+    let seeds: Vec<u64> = (0..3).map(|i| base.seed + i).collect();
+
+    println!("# Ablation `replicates` — {} seeds per algorithm", seeds.len());
+    println!("variant,final_acc,best_acc,time_to_70%_s,mean_staleness");
+    Campaign::new("ablation_replicates", base.clone())
+        .grid(vec![
+            GridAxis::algorithms(&["paota", "local_sgd", "cotaf"])?,
+            GridAxis::seeds(&seeds),
+        ])
+        .observe(AblationStdout)
+        .observe(MeanStdCurves::accuracy(out_dir.join("ablation_replicates.csv")))
+        .run_with_context(&ctx)?;
+    println!("# wrote {}/ablation_replicates.csv", out_dir.display());
     Ok(())
 }
 
@@ -203,16 +230,86 @@ fn ablation_scenarios(which: &str, base: &Config) -> Result<Vec<Scenario>> {
                 }),
             ]
         }
+        // Aggregation-topology sweep (`fl::topology`): flat PAOTA vs
+        // grouped AirComp (Air-FedGA, two profile partitioners + the
+        // size baseline) vs ≥2-cell hierarchies (cloud & gossip mixing),
+        // plus the heavy-tailed / time-correlated arrival processes the
+        // grouping is meant to absorb — one declarative campaign.
+        "topology" => {
+            let air = Algorithm::parse("air_fedga").expect("built-in policy");
+            let k = base.partition.clients;
+            let groups = (k / 3).clamp(2, 5);
+            // Every variant sets its algorithm explicitly (a user-supplied
+            // --algo must never leak into the comparison set).
+            let flat = || {
+                let mut c = base.clone();
+                c.algorithm = paota.clone();
+                c.topology = Default::default();
+                c
+            };
+            let grouped = |part: crate::fl::topology::PartitionerKind| {
+                let mut c = flat();
+                c.algorithm = air.clone();
+                c.topology.groups = groups;
+                c.topology.partitioner = part;
+                c
+            };
+            let cells = |n: usize, mixing: crate::fl::topology::MixingKind| {
+                let mut c = flat();
+                c.topology.cells = n.min(k);
+                c.topology.mixing = mixing;
+                c.topology.mixing_every = 2;
+                c
+            };
+            vec![
+                ("paota_flat".into(), flat()),
+                (
+                    format!("air_fedga_rr_g{groups}"),
+                    grouped(crate::fl::topology::PartitionerKind::RoundRobin),
+                ),
+                (
+                    format!("air_fedga_latency_g{groups}"),
+                    grouped(crate::fl::topology::PartitionerKind::Latency),
+                ),
+                (
+                    format!("air_fedga_channel_g{groups}"),
+                    grouped(crate::fl::topology::PartitionerKind::Channel),
+                ),
+                (
+                    "hier_2cell_cloud".into(),
+                    cells(2, crate::fl::topology::MixingKind::Cloud),
+                ),
+                (
+                    "hier_3cell_gossip".into(),
+                    cells(3, crate::fl::topology::MixingKind::Gossip),
+                ),
+                ("paota_flat_lognormal".into(), {
+                    let mut c = flat();
+                    c.latency_kind = crate::config::LatencyKind::Lognormal;
+                    c
+                }),
+                (format!("air_fedga_latency_g{groups}_ge"), {
+                    let mut c = grouped(crate::fl::topology::PartitionerKind::Latency);
+                    c.latency_kind = crate::config::LatencyKind::GilbertElliott;
+                    c
+                }),
+            ]
+        }
         other => anyhow::bail!(
-            "unknown ablation {other:?} (beta|dt|omega|latency|solver|scheduling)"
+            "unknown ablation {other:?} \
+             (beta|dt|omega|latency|solver|scheduling|topology|replicates)"
         ),
     };
     Ok(variants
         .into_iter()
         .map(|(name, mut cfg)| {
-            // Every ablation runs the PAOTA family: variants that did not
-            // explicitly pick ca_paota are pinned to the paper's scheme.
-            let keep = which == "scheduling" && cfg.algorithm.name() == "ca_paota";
+            // Every ablation runs the PAOTA family: only the variants that
+            // deliberately picked an extension scheme (scheduling →
+            // ca_paota, topology → air_fedga) keep it; everything else —
+            // including a user-supplied --algo on the base config — is
+            // pinned to the paper's algorithm.
+            let keep = (which == "scheduling" && cfg.algorithm.name() == "ca_paota")
+                || (which == "topology" && cfg.algorithm.name() == "air_fedga");
             if !keep {
                 cfg.algorithm = paota.clone();
             }
@@ -372,13 +469,77 @@ mod tests {
     #[test]
     fn ablation_scenario_sets_match_the_published_variants() {
         let base = Config::default();
-        for (which, count) in
-            [("beta", 3), ("dt", 4), ("omega", 3), ("latency", 3), ("solver", 2), ("scheduling", 3)]
-        {
+        for (which, count) in [
+            ("beta", 3),
+            ("dt", 4),
+            ("omega", 3),
+            ("latency", 3),
+            ("solver", 2),
+            ("scheduling", 3),
+            ("topology", 8),
+        ] {
             let s = ablation_scenarios(which, &base).unwrap();
             assert_eq!(s.len(), count, "ablation {which}");
         }
         assert!(ablation_scenarios("nope", &base).is_err());
+    }
+
+    #[test]
+    fn topology_ablation_spans_flat_grouped_and_hierarchical() {
+        let base = Config::default();
+        let s = ablation_scenarios("topology", &base).unwrap();
+        // Flat PAOTA reference.
+        assert_eq!(s[0].cfg.algorithm.name(), "paota");
+        assert_eq!(s[0].cfg.topology.cells, 1);
+        // Grouped AirComp with ≥ 2 distinct partitioners.
+        let partitioners: std::collections::BTreeSet<&str> = s
+            .iter()
+            .filter(|x| x.cfg.algorithm.name() == "air_fedga")
+            .map(|x| x.cfg.topology.partitioner.name())
+            .collect();
+        assert!(partitioners.len() >= 2, "{partitioners:?}");
+        for x in s.iter().filter(|x| x.cfg.algorithm.name() == "air_fedga") {
+            assert!(x.cfg.topology.groups >= 2, "{}", x.name);
+            assert_eq!(x.cfg.topology.cells, 1, "{}", x.name);
+        }
+        // ≥ 2-cell hierarchical runs on a flat per-cell policy.
+        let hier: Vec<&Scenario> = s.iter().filter(|x| x.cfg.topology.cells > 1).collect();
+        assert!(hier.len() >= 2);
+        for x in &hier {
+            assert_eq!(x.cfg.algorithm.name(), "paota", "{}", x.name);
+            x.cfg.validate().unwrap();
+        }
+        // The richer arrival processes ride along.
+        assert!(s
+            .iter()
+            .any(|x| x.cfg.latency_kind == crate::config::LatencyKind::Lognormal));
+        assert!(s
+            .iter()
+            .any(|x| x.cfg.latency_kind == crate::config::LatencyKind::GilbertElliott));
+        for x in &s {
+            x.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn user_algo_on_the_base_config_never_leaks_into_ablation_variants() {
+        // `repro ablation X --algo <extension>` must not re-route the
+        // comparison set: knob ablations stay pure paota, and the
+        // topology set keeps its declared per-variant algorithms.
+        for user_algo in ["ca_paota", "air_fedga", "fedasync"] {
+            let mut base = Config::default();
+            base.algorithm = Algorithm::parse(user_algo).unwrap();
+            for which in ["beta", "dt", "omega", "latency", "solver"] {
+                for s in ablation_scenarios(which, &base).unwrap() {
+                    assert_eq!(s.cfg.algorithm.name(), "paota", "{which}/{}", s.name);
+                }
+            }
+            for s in ablation_scenarios("topology", &base).unwrap() {
+                let want = if s.name.starts_with("air_fedga") { "air_fedga" } else { "paota" };
+                assert_eq!(s.cfg.algorithm.name(), want, "topology/{}", s.name);
+                s.cfg.validate().unwrap();
+            }
+        }
     }
 
     #[test]

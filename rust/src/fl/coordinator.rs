@@ -25,16 +25,20 @@
 //! continuous-time FedAsync extension, whose simultaneous arrivals are
 //! coalesced into one batch — shares the parallel PJRT pool.
 //!
-//! Adding a scheme (grouped AirComp à la Air-FedGA, channel-aware client
-//! scheduling, multi-cell variants) means writing a policy struct, not a
-//! new round loop.
+//! Adding a scheme means writing a policy struct, not a new round loop —
+//! grouped AirComp ([`crate::fl::topology::air_fedga`], via
+//! [`RoundAction::GroupAggregate`]) and channel-aware scheduling
+//! (`ca_paota`) both landed that way. Multi-cell hierarchies drive
+//! several coordinators step-wise ([`Coordinator::begin_periodic`] /
+//! [`Coordinator::step_periodic`]) and mix their models between slots
+//! ([`crate::fl::topology::multi_cell`]).
 
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{Algorithm, Config};
 use crate::runtime::EvalOut;
 use crate::sim::events::EventQueue;
-use crate::sim::{LatencyModel, VirtualClock};
+use crate::sim::{LatencySampler, VirtualClock};
 use crate::util::{vecmath, Rng};
 
 use super::{RoundRecord, RunResult, TrainContext};
@@ -114,6 +118,27 @@ pub struct Upload {
     pub delta: Vec<f32>,
 }
 
+/// One group's AirComp pass inside a [`RoundAction::GroupAggregate`]:
+/// which uploads transmit together, with what coefficients and receiver
+/// noise, and how strongly the resulting group aggregate is merged into
+/// the global model.
+#[derive(Debug, Clone)]
+pub struct GroupPass {
+    /// Indices into this round's `uploads` slice. Across all passes every
+    /// upload must appear exactly once (disjoint cover — enforced).
+    pub members: Vec<usize>,
+    /// AirComp coefficient per member (pairs with `members`).
+    pub coefs: Vec<f32>,
+    /// Pre-normalization receiver AWGN for this pass' own OTA
+    /// transmission (empty = lossless uplink).
+    pub noise: Vec<f32>,
+    /// Server-side merge weight μ_g of this group's aggregate; the merge
+    /// is `w ← (1 − Σ_g μ_g)·w + Σ_g μ_g·y_g`, so Σ μ_g must be ≤ 1.
+    pub mix: f64,
+    /// Mean transmit power of this pass (telemetry).
+    pub mean_power: f64,
+}
+
 /// What the policy tells the coordinator to do with a round's uploads.
 #[derive(Debug, Clone)]
 pub enum RoundAction {
@@ -134,6 +159,11 @@ pub enum RoundAction {
     Mix { gammas: Vec<f64> },
     /// Adopt the single upload's weights as the new global model.
     Adopt,
+    /// Hierarchical grouped AirComp (Air-FedGA): one `stack`/`coef`
+    /// kernel pass per group — each group transmits over the air on its
+    /// own — then an asynchronous server-side merge of the group
+    /// aggregates, `w ← (1 − Σ_g μ_g)·w + Σ_g μ_g·y_g`.
+    GroupAggregate { passes: Vec<GroupPass> },
     /// Leave the global model untouched this round.
     Skip { mean_power: f64 },
 }
@@ -207,6 +237,12 @@ impl Telemetry {
     /// True once all `rounds` records are in.
     pub fn is_complete(&self) -> bool {
         self.records.len() >= self.rounds
+    }
+
+    /// The records emitted so far (multi-cell runners merge these
+    /// mid-run).
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
     }
 
     /// Append one round's record. Windows must be contiguous and monotone
@@ -341,7 +377,7 @@ pub fn run(
 pub struct Coordinator<'a> {
     ctx: &'a TrainContext,
     cfg: &'a Config,
-    latency: LatencyModel,
+    latency: LatencySampler,
     clock: VirtualClock,
     /// Client-finished arrivals, keyed by virtual finish time.
     queue: EventQueue<usize>,
@@ -368,7 +404,7 @@ impl<'a> Coordinator<'a> {
         Self {
             ctx,
             cfg,
-            latency: cfg.latency(),
+            latency: LatencySampler::new(cfg.latency(), k),
             clock: VirtualClock::new(),
             queue: EventQueue::new(),
             slots: Vec::new(),
@@ -393,12 +429,37 @@ impl<'a> Coordinator<'a> {
             RoundTiming::Continuous => self.drive_continuous(policy)?,
             RoundTiming::SingleNode => self.drive_single_node(policy)?,
         }
+        Ok(self.into_result(Algorithm::raw(policy.name())))
+    }
+
+    /// Consume the coordinator into its run result (used by `run` and by
+    /// step-wise drivers like `fl::topology::multi_cell`).
+    pub fn into_result(self, algorithm: Algorithm) -> RunResult {
         let Coordinator { telemetry, w_g, .. } = self;
-        Ok(RunResult {
-            algorithm: Algorithm::raw(policy.name()),
+        RunResult {
+            algorithm,
             records: telemetry.into_records(),
             final_weights: w_g,
-        })
+        }
+    }
+
+    /// The current global model (step-wise drivers read it to mix cells).
+    pub fn global_weights(&self) -> &[f32] {
+        &self.w_g
+    }
+
+    /// Replace the current global model (inter-cell mixing). Clients
+    /// already training keep their recorded base — exactly a real
+    /// hierarchical PS, which pushes the mixed model only at the next
+    /// dispatch.
+    pub fn set_global_weights(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.dim, "global model dimension mismatch");
+        self.w_g.copy_from_slice(w);
+    }
+
+    /// The records emitted so far.
+    pub fn records(&self) -> &[RoundRecord] {
+        self.telemetry.records()
     }
 
     /// All clients start training on w_g^0 at t = 0 (b_k^1 = 1 ∀k).
@@ -411,52 +472,71 @@ impl<'a> Coordinator<'a> {
             })
             .collect();
         for client in 0..self.k {
-            let finish = self.latency.draw(&mut self.rngs.latency);
+            let finish = self.latency.draw(client, &mut self.rngs.latency);
             self.slots[client].finish_time = finish;
             self.queue.push(finish, client);
         }
     }
 
+    /// Spawn the fleet for step-wise periodic driving (call once, then
+    /// [`Coordinator::step_periodic`] for rounds `0..cfg.rounds` in
+    /// order). `run` does this internally; multi-cell runners interleave
+    /// the steps of several coordinators to mix between slots.
+    pub fn begin_periodic(&mut self) {
+        self.spawn_fleet();
+    }
+
     /// PAOTA-style time-triggered slots: every round closes after exactly
     /// ΔT virtual seconds, aggregating whatever finished inside it.
     fn drive_periodic(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
-        self.spawn_fleet();
+        self.begin_periodic();
         for round in 0..self.cfg.rounds {
-            let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
-            while let Some((_, client)) = self.queue.pop_until(slot_end) {
-                self.pending.push(client);
-            }
-            // Client-index order keeps the per-purpose streams aligned
-            // with a deterministic scan over the fleet.
-            self.pending.sort_unstable();
-            let offered = std::mem::take(&mut self.pending);
-            let chosen = policy.select_participants(&offered, &mut self.rngs);
-            self.pending = offered.into_iter().filter(|c| !chosen.contains(c)).collect();
-
-            let mut uploads = self.train_uploads(round, &chosen, policy, true)?;
-            let action = if uploads.is_empty() {
-                RoundAction::Skip { mean_power: 0.0 }
-            } else {
-                policy.on_uploads(round, &self.w_g, &uploads, &mut self.rngs)?
-            };
-            let stats = self.apply_round_action(action, &mut uploads, policy)?;
-
-            // Uploaders restart from the fresh global model at the next
-            // slot boundary.
-            for up in &uploads {
-                let finish = slot_end + self.latency.draw(&mut self.rngs.latency);
-                self.slots[up.client] = ClientSlot {
-                    base_round: round + 1,
-                    base_weights: self.w_g.clone(),
-                    finish_time: finish,
-                };
-                self.queue.push(finish, up.client);
-            }
-
-            self.clock.advance_to(slot_end);
-            self.close_round(policy, round, slot_end, stats)?;
+            self.step_periodic(policy, round)?;
         }
         Ok(())
+    }
+
+    /// One ΔT slot of the periodic schedule: collect arrivals, let the
+    /// policy pick and aggregate, restart uploaders, close the round.
+    /// Rounds must be stepped contiguously from 0 (telemetry asserts).
+    pub fn step_periodic(
+        &mut self,
+        policy: &mut dyn AggregationPolicy,
+        round: usize,
+    ) -> Result<()> {
+        let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
+        while let Some((_, client)) = self.queue.pop_until(slot_end) {
+            self.pending.push(client);
+        }
+        // Client-index order keeps the per-purpose streams aligned
+        // with a deterministic scan over the fleet.
+        self.pending.sort_unstable();
+        let offered = std::mem::take(&mut self.pending);
+        let chosen = policy.select_participants(&offered, &mut self.rngs);
+        self.pending = offered.into_iter().filter(|c| !chosen.contains(c)).collect();
+
+        let mut uploads = self.train_uploads(round, &chosen, policy, true)?;
+        let action = if uploads.is_empty() {
+            RoundAction::Skip { mean_power: 0.0 }
+        } else {
+            policy.on_uploads(round, &self.w_g, &uploads, &mut self.rngs)?
+        };
+        let stats = self.apply_round_action(action, &mut uploads, policy)?;
+
+        // Uploaders restart from the fresh global model at the next
+        // slot boundary.
+        for up in &uploads {
+            let finish = slot_end + self.latency.draw(up.client, &mut self.rngs.latency);
+            self.slots[up.client] = ClientSlot {
+                base_round: round + 1,
+                base_weights: self.w_g.clone(),
+                finish_time: finish,
+            };
+            self.queue.push(finish, up.client);
+        }
+
+        self.clock.advance_to(slot_end);
+        self.close_round(policy, round, slot_end, stats)
     }
 
     /// Synchronous cohorts: the PS waits for everyone it scheduled, so
@@ -466,8 +546,8 @@ impl<'a> Coordinator<'a> {
         for round in 0..self.cfg.rounds {
             let chosen = policy.select_participants(&fleet, &mut self.rngs);
             let mut round_time = 0.0f64;
-            for _ in &chosen {
-                round_time = round_time.max(self.latency.draw(&mut self.rngs.latency));
+            for &client in &chosen {
+                round_time = round_time.max(self.latency.draw(client, &mut self.rngs.latency));
             }
             let mut uploads = self.train_uploads(round, &chosen, policy, false)?;
             let action = if uploads.is_empty() {
@@ -551,7 +631,7 @@ impl<'a> Coordinator<'a> {
                 std::mem::swap(&mut self.w_g, &mut self.scratch);
                 stats.absorb(up);
 
-                let finish = t + self.latency.draw(&mut self.rngs.latency);
+                let finish = t + self.latency.draw(up.client, &mut self.rngs.latency);
                 self.slots[up.client] = ClientSlot {
                     base_round: window,
                     base_weights: self.w_g.clone(),
@@ -637,6 +717,61 @@ impl<'a> Coordinator<'a> {
                 self.w_g = std::mem::take(&mut uploads[0].weights);
             }
             RoundAction::Mix { .. } => bail!("Mix is only valid under Continuous timing"),
+            RoundAction::GroupAggregate { passes } => {
+                ensure!(!passes.is_empty(), "GroupAggregate needs at least one pass");
+                let mut covered = vec![false; uploads.len()];
+                let mut total_mix = 0.0f64;
+                let mut power_sum = 0.0f64;
+                // Σ_g μ_g·y_g, accumulated across the per-group passes.
+                let mut blended = vec![0.0f32; self.dim];
+                for pass in &passes {
+                    ensure!(!pass.members.is_empty(), "empty group pass");
+                    ensure!(
+                        pass.coefs.len() == pass.members.len(),
+                        "one coefficient per pass member"
+                    );
+                    ensure!(pass.mix > 0.0, "group mix weight must be positive");
+                    self.coef.iter_mut().for_each(|c| *c = 0.0);
+                    self.stack.iter_mut().for_each(|v| *v = 0.0);
+                    for (&j, &c) in pass.members.iter().zip(&pass.coefs) {
+                        ensure!(j < uploads.len(), "pass member {j} out of range");
+                        ensure!(
+                            !covered[j],
+                            "upload {j} appears in more than one group pass"
+                        );
+                        covered[j] = true;
+                        let up = &uploads[j];
+                        self.coef[up.client] = c;
+                        self.stack[up.client * self.dim..(up.client + 1) * self.dim]
+                            .copy_from_slice(&up.weights);
+                    }
+                    let noise_ref: &[f32] = if pass.noise.is_empty() {
+                        &self.zero_noise
+                    } else {
+                        &pass.noise
+                    };
+                    let y = self.ctx.rt.aggregate(&self.stack, &self.coef, noise_ref)?;
+                    vecmath::axpy(pass.mix as f32, &y, &mut blended);
+                    total_mix += pass.mix;
+                    power_sum += pass.mean_power * pass.members.len() as f64;
+                }
+                ensure!(
+                    covered.iter().all(|&c| c),
+                    "every upload must belong to exactly one group pass"
+                );
+                ensure!(
+                    total_mix <= 1.0 + 1e-9,
+                    "group mix weights sum to {total_mix} > 1"
+                );
+                stats.mean_power = power_sum / uploads.len() as f64;
+                // w ← (1 − Σμ)·w + Σ_g μ_g·y_g.
+                self.scratch.copy_from_slice(&self.w_g);
+                vecmath::scale(&mut self.w_g, (1.0 - total_mix) as f32);
+                vecmath::axpy(1.0, &blended, &mut self.w_g);
+                // `blended` is free now — reuse it for the movement report.
+                vecmath::sub(&self.w_g, &self.scratch, &mut blended);
+                policy.on_global_delta(&blended);
+            }
             RoundAction::Aggregate {
                 coefs,
                 noise,

@@ -23,6 +23,15 @@
 //! * [`fedasync`]    — fully-asynchronous per-arrival mixing (extension).
 //! * [`ca_paota`]    — PAOTA with channel/gradient-aware participant
 //!   scheduling (extension, after arXiv 2212.00491).
+//! * [`topology::air_fedga`] — grouping-asynchronous AirComp: per-group
+//!   `stack`/`coef` passes fired on group readiness (extension, after
+//!   arXiv 2507.05704).
+//!
+//! Above the flat fleet, [`topology`] bends the same core into an
+//! **aggregation tree**: `Config`'s `[topology]` surface selects client
+//! groups (`air_fedga`) and multi-cell hierarchies — [`run`] routes
+//! through [`topology::multi_cell`] whenever `cells > 1`, so campaigns
+//! sweep cells × groups declaratively.
 //!
 //! Every run emits the same [`RoundRecord`] stream so the experiment
 //! harness ([`crate::experiments`] campaigns) can overlay algorithms
@@ -44,10 +53,11 @@ pub mod fedasync;
 pub mod local_sgd;
 pub mod paota;
 pub mod registry;
+pub mod topology;
 
 pub use coordinator::{
-    AggregationPolicy, Coordinator, RngStreams, RoundAction, RoundTiming, Telemetry, Upload,
-    WindowStats,
+    AggregationPolicy, Coordinator, GroupPass, RngStreams, RoundAction, RoundTiming, Telemetry,
+    Upload, WindowStats,
 };
 
 use anyhow::{bail, Context as _, Result};
@@ -306,7 +316,27 @@ pub fn run(cfg: &Config) -> Result<RunResult> {
 
 /// Run against a pre-built context (lets the harness reuse data+runtime
 /// across algorithm sweeps — same partition, same probe, same test set).
+///
+/// Topology dispatch: `cells > 1` routes through the hierarchical
+/// [`topology::multi_cell`] runner and returns its merged (cloud-level)
+/// stream, so multi-cell scenarios drop into every harness — CLI runs,
+/// campaigns, figures — unchanged.
 pub fn run_with_context(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
+    // `groups` only feeds policies that read the group map (air_fedga out
+    // of the box). Warn instead of erroring so downstream grouped
+    // policies registered via `registry` keep the knob available.
+    if cfg.topology.groups > 1 && cfg.algorithm.name() != "air_fedga" {
+        crate::warn_!(
+            "topology.groups = {} is set but --algo {} does not consume the \
+             group map (of the built-ins only air_fedga does) — the setting \
+             has no effect on this run",
+            cfg.topology.groups,
+            cfg.algorithm.name()
+        );
+    }
+    if cfg.topology.cells > 1 {
+        return Ok(topology::multi_cell::run(ctx, cfg)?.merged);
+    }
     let mut policy = build_policy(ctx, cfg)?;
     coordinator::run(ctx, cfg, policy.as_mut())
 }

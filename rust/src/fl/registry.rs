@@ -67,7 +67,7 @@ impl PolicyRegistry {
     }
 
     /// A registry pre-seeded with the five reproduction policies plus the
-    /// channel-aware scheduling extension.
+    /// channel-aware scheduling and grouped-AirComp extensions.
     pub fn with_builtins() -> Self {
         let mut r = Self::new();
         let seed = "seeding built-in policy";
@@ -94,6 +94,10 @@ impl PolicyRegistry {
         .expect(seed);
         r.register("ca_paota", "CA-PAOTA", &["ca-paota", "channel_aware"], |ctx, cfg| {
             Box::new(super::ca_paota::CaPaota::new(ctx, cfg)) as Box<dyn AggregationPolicy>
+        })
+        .expect(seed);
+        r.register("air_fedga", "Air-FedGA", &["air-fedga", "airfedga", "grouped"], |ctx, cfg| {
+            Box::new(super::topology::AirFedGa::new(ctx, cfg)) as Box<dyn AggregationPolicy>
         })
         .expect(seed);
         r
@@ -307,10 +311,19 @@ mod tests {
         let r = PolicyRegistry::with_builtins();
         assert_eq!(
             r.names(),
-            vec!["ca_paota", "centralized", "cotaf", "fedasync", "local_sgd", "paota"]
+            vec![
+                "air_fedga",
+                "ca_paota",
+                "centralized",
+                "cotaf",
+                "fedasync",
+                "local_sgd",
+                "paota"
+            ]
         );
         assert_eq!(r.label("paota"), "PAOTA");
         assert_eq!(r.label("fedavg"), "Local SGD");
+        assert_eq!(r.label("grouped"), "Air-FedGA");
     }
 
     #[test]
@@ -326,7 +339,9 @@ mod tests {
         let r = PolicyRegistry::with_builtins();
         let msg = r.canonical("nope").unwrap_err().to_string();
         assert!(msg.contains("unknown algorithm"), "{msg}");
-        for name in ["paota", "local_sgd", "cotaf", "centralized", "fedasync", "ca_paota"] {
+        for name in
+            ["paota", "local_sgd", "cotaf", "centralized", "fedasync", "ca_paota", "air_fedga"]
+        {
             assert!(msg.contains(name), "{msg} missing {name}");
         }
     }

@@ -1,0 +1,158 @@
+//! Air-FedGA (arXiv 2507.05704) — grouping-asynchronous AirComp as an
+//! [`AggregationPolicy`] on the coordinator's periodic timing.
+//!
+//! The fleet is partitioned once into `cfg.topology.groups` groups (see
+//! [`GroupMap`]). Each ΔT slot:
+//!
+//! 1. **Group readiness** ([`AggregationPolicy::select_participants`]):
+//!    a group *fires* when at least `group_ready_frac` of its members
+//!    have finished local training (1.0 = the whole group, the paper's
+//!    setting). Ready members of non-fired groups stay pending — they
+//!    wait for their group, not for the fleet, which is the whole point:
+//!    a straggler only delays its own group.
+//! 2. **Per-group OTA pass** ([`AggregationPolicy::on_uploads`] →
+//!    [`RoundAction::GroupAggregate`]): every fired group transmits its
+//!    members' models in one AirComp `stack`/`coef` pass of its own, with
+//!    its own receiver-noise draw and staleness-discounted coefficients
+//!    `p_max·ρ(s_k)` (ρ = Ω/(s+Ω), eq. (25) of the PAOTA paper).
+//! 3. **Asynchronous group merge**: the server folds the group aggregates
+//!    into the global model, `w ← (1 − Σ_g μ_g)·w + Σ_g μ_g·y_g`, with
+//!    `μ_g = group_mix · ρ(s̄_g)` discounted by the group's mean staleness
+//!    (and normalized if the fired groups' weights exceed 1).
+//!
+//! Degenerate corner: with `groups = 1` and `group_ready_frac → 0` this
+//! collapses to per-slot semi-async aggregation — the flat regime; the
+//! mechanism's value shows up under heterogeneous fleets, where the
+//! `latency` partitioner isolates stragglers into their own group.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::channel::Mac;
+use crate::config::Config;
+use crate::power::staleness_factor;
+
+use super::super::coordinator::{
+    AggregationPolicy, GroupPass, RngStreams, RoundAction, RoundTiming, Upload,
+};
+use super::super::TrainContext;
+use super::group::GroupMap;
+
+/// Grouping-asynchronous over-the-air aggregation.
+pub struct AirFedGa {
+    map: GroupMap,
+    mac: Mac,
+    omega: f64,
+    p_max: f64,
+    ready_frac: f64,
+    group_mix: f64,
+    dim: usize,
+}
+
+impl AirFedGa {
+    /// Build from a validated config (`Config::validate` guarantees
+    /// `1 ≤ groups ≤ clients`).
+    pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
+        let map = GroupMap::build(
+            ctx.clients(),
+            cfg.topology.groups,
+            cfg.topology.partitioner,
+            cfg.seed,
+        )
+        .expect("validated topology config");
+        Self {
+            map,
+            mac: Mac::new(cfg.channel),
+            omega: cfg.omega,
+            p_max: cfg.p_max,
+            ready_frac: cfg.topology.group_ready_frac,
+            group_mix: cfg.topology.group_mix,
+            dim: ctx.dim(),
+        }
+    }
+
+    /// The fleet partition this policy aggregates over.
+    pub fn group_map(&self) -> &GroupMap {
+        &self.map
+    }
+
+    /// Members a group needs ready before it fires.
+    fn quorum(&self, group: usize) -> usize {
+        let size = self.map.group(group).len();
+        ((self.ready_frac * size as f64).ceil() as usize).clamp(1, size)
+    }
+}
+
+impl AggregationPolicy for AirFedGa {
+    fn name(&self) -> &str {
+        "air_fedga"
+    }
+
+    fn timing(&self) -> RoundTiming {
+        RoundTiming::Periodic
+    }
+
+    fn select_participants(&mut self, offered: &[usize], _rngs: &mut RngStreams) -> Vec<usize> {
+        let mut ready = vec![0usize; self.map.num_groups()];
+        for &c in offered {
+            ready[self.map.group_of(c)] += 1;
+        }
+        let fired: Vec<bool> = (0..self.map.num_groups())
+            .map(|g| ready[g] >= self.quorum(g))
+            .collect();
+        offered
+            .iter()
+            .copied()
+            .filter(|&c| fired[self.map.group_of(c)])
+            .collect()
+    }
+
+    fn on_uploads(
+        &mut self,
+        _round: usize,
+        _global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        // Bucket upload indices by group (BTreeMap: deterministic group
+        // order for the per-pass channel-noise draws).
+        let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (j, up) in uploads.iter().enumerate() {
+            buckets.entry(self.map.group_of(up.client)).or_default().push(j);
+        }
+
+        let mut passes = Vec::with_capacity(buckets.len());
+        for members in buckets.into_values() {
+            let coefs: Vec<f32> = members
+                .iter()
+                .map(|&j| (self.p_max * staleness_factor(uploads[j].staleness, self.omega)) as f32)
+                .collect();
+            let mean_power =
+                coefs.iter().map(|&c| c as f64).sum::<f64>() / members.len() as f64;
+            // Each group is its own OTA transmission → its own AWGN draw.
+            let noise = self.mac.channel_noise(&mut rngs.channel, self.dim);
+            let mean_staleness = members
+                .iter()
+                .map(|&j| uploads[j].staleness as f64)
+                .sum::<f64>()
+                / members.len() as f64;
+            let mix = self.group_mix * self.omega / (mean_staleness + self.omega);
+            passes.push(GroupPass {
+                members,
+                coefs,
+                noise,
+                mix,
+                mean_power,
+            });
+        }
+        // Keep the merge convex when many groups fire at once.
+        let total: f64 = passes.iter().map(|p| p.mix).sum();
+        if total > 1.0 {
+            for p in &mut passes {
+                p.mix /= total;
+            }
+        }
+        Ok(RoundAction::GroupAggregate { passes })
+    }
+}

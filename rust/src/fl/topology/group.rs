@@ -1,0 +1,242 @@
+//! Fleet → group assignment: the [`GroupMap`] every topology layer hangs
+//! off, built by one of three deterministic partitioners.
+//!
+//! The simulator has no persistent per-device latency/channel traces (the
+//! per-round draws are i.i.d. streams), so the profile-based partitioners
+//! derive a fixed per-client *profile score* from the master seed — a
+//! stand-in for the device/link profiling data a real deployment would
+//! cluster on — and group clients with adjacent scores. What matters for
+//! the mechanism is the structure this induces: groups are stable,
+//! disjoint, non-empty, and reproducible from the seed alone.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::Rng;
+
+/// Per-client profile-score streams (derived from the master seed;
+/// disjoint from the coordinator's run-time streams in
+/// [`crate::fl::coordinator::streams`]).
+mod streams {
+    /// Device compute-latency profile.
+    pub const LATENCY_PROFILE: u64 = 0x70_1a7;
+    /// Uplink channel-quality profile.
+    pub const CHANNEL_PROFILE: u64 = 0x70_c4a2;
+}
+
+/// How clients are assigned to groups (and cells).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionerKind {
+    /// Client `c` → group `c mod G`: balanced, profile-blind (the
+    /// "by size" baseline).
+    RoundRobin,
+    /// Contiguous chunks of clients sorted by a seed-derived compute-
+    /// latency profile score — groups of similar device speed, so one
+    /// straggler only delays its own (slow) group.
+    Latency,
+    /// Contiguous chunks sorted by a seed-derived channel-quality profile
+    /// score — groups of similar uplink SNR, the Air-FedGA alignment
+    /// criterion.
+    Channel,
+}
+
+impl PartitionerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "round_robin" | "roundrobin" | "rr" | "size" => PartitionerKind::RoundRobin,
+            "latency" => PartitionerKind::Latency,
+            "channel" => PartitionerKind::Channel,
+            other => bail!("unknown group partitioner {other:?} (round_robin|latency|channel)"),
+        })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerKind::RoundRobin => "round_robin",
+            PartitionerKind::Latency => "latency",
+            PartitionerKind::Channel => "channel",
+        }
+    }
+}
+
+/// A disjoint, exhaustive, non-empty partition of the fleet into named
+/// groups. Construction enforces the invariants every consumer relies
+/// on: every client appears in exactly one group, and no group is empty.
+#[derive(Debug, Clone)]
+pub struct GroupMap {
+    groups: Vec<Vec<usize>>,
+    /// client → group index.
+    assignment: Vec<usize>,
+}
+
+impl GroupMap {
+    /// Partition `clients` into `n_groups` with the given partitioner.
+    /// Deterministic in `(clients, n_groups, how, seed)`.
+    pub fn build(
+        clients: usize,
+        n_groups: usize,
+        how: PartitionerKind,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(clients > 0, "group map needs at least one client");
+        ensure!(n_groups > 0, "group map needs at least one group");
+        ensure!(
+            n_groups <= clients,
+            "{n_groups} groups over {clients} clients would leave a group empty"
+        );
+
+        let mut groups = vec![Vec::new(); n_groups];
+        match how {
+            PartitionerKind::RoundRobin => {
+                for c in 0..clients {
+                    groups[c % n_groups].push(c);
+                }
+            }
+            PartitionerKind::Latency | PartitionerKind::Channel => {
+                let tag = match how {
+                    PartitionerKind::Latency => streams::LATENCY_PROFILE,
+                    _ => streams::CHANNEL_PROFILE,
+                };
+                let mut rng = Rng::with_stream(seed, tag);
+                let mut scored: Vec<(f64, usize)> =
+                    (0..clients).map(|c| (rng.f64(), c)).collect();
+                // Total order: score first, client id as the tiebreak.
+                scored.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+                });
+                // Balanced contiguous chunks: the first `rem` groups get
+                // one extra client.
+                let base = clients / n_groups;
+                let rem = clients % n_groups;
+                let mut it = scored.into_iter().map(|(_, c)| c);
+                for (g, group) in groups.iter_mut().enumerate() {
+                    let size = base + usize::from(g < rem);
+                    group.extend(it.by_ref().take(size));
+                    group.sort_unstable();
+                }
+            }
+        }
+
+        let mut assignment = vec![usize::MAX; clients];
+        for (g, group) in groups.iter().enumerate() {
+            ensure!(!group.is_empty(), "partitioner produced an empty group");
+            for &c in group {
+                ensure!(c < clients, "client {c} out of range");
+                ensure!(
+                    assignment[c] == usize::MAX,
+                    "client {c} assigned to two groups"
+                );
+                assignment[c] = g;
+            }
+        }
+        ensure!(
+            assignment.iter().all(|&g| g != usize::MAX),
+            "partitioner left a client unassigned"
+        );
+        Ok(Self { groups, assignment })
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of clients covered.
+    pub fn num_clients(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// The members of group `g`, in ascending client order for
+    /// round-robin/profile chunks.
+    pub fn group(&self, g: usize) -> &[usize] {
+        &self.groups[g]
+    }
+
+    /// All groups.
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    /// The group `client` belongs to.
+    pub fn group_of(&self, client: usize) -> usize {
+        self.assignment[client]
+    }
+
+    /// Display name of group `g` (telemetry/debug).
+    pub fn name(&self, g: usize) -> String {
+        format!("g{g}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KINDS: [PartitionerKind; 3] = [
+        PartitionerKind::RoundRobin,
+        PartitionerKind::Latency,
+        PartitionerKind::Channel,
+    ];
+
+    #[test]
+    fn every_client_in_exactly_one_group() {
+        for kind in KINDS {
+            for (clients, groups) in [(1, 1), (7, 3), (24, 4), (100, 5), (10, 10)] {
+                let map = GroupMap::build(clients, groups, kind, 42).unwrap();
+                assert_eq!(map.num_groups(), groups);
+                assert_eq!(map.num_clients(), clients);
+                let mut seen = vec![0usize; clients];
+                for g in 0..groups {
+                    assert!(!map.group(g).is_empty(), "{kind:?} {clients}x{groups}: empty g{g}");
+                    for &c in map.group(g) {
+                        seen[c] += 1;
+                        assert_eq!(map.group_of(c), g);
+                    }
+                }
+                assert!(seen.iter().all(|&n| n == 1), "{kind:?}: {seen:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_are_balanced() {
+        for kind in KINDS {
+            let map = GroupMap::build(23, 4, kind, 1).unwrap();
+            let mut sizes: Vec<usize> = map.groups().iter().map(Vec::len).collect();
+            sizes.sort_unstable();
+            assert_eq!(sizes, vec![5, 6, 6, 6]);
+        }
+    }
+
+    #[test]
+    fn empty_and_oversized_group_counts_rejected() {
+        assert!(GroupMap::build(10, 0, PartitionerKind::RoundRobin, 0).is_err());
+        assert!(GroupMap::build(10, 11, PartitionerKind::Latency, 0).is_err());
+        assert!(GroupMap::build(0, 1, PartitionerKind::RoundRobin, 0).is_err());
+        GroupMap::build(10, 10, PartitionerKind::Channel, 0).unwrap();
+    }
+
+    #[test]
+    fn profile_partitioners_are_seed_deterministic_and_seed_sensitive() {
+        for kind in [PartitionerKind::Latency, PartitionerKind::Channel] {
+            let a = GroupMap::build(40, 4, kind, 7).unwrap();
+            let b = GroupMap::build(40, 4, kind, 7).unwrap();
+            assert_eq!(a.groups(), b.groups());
+            let c = GroupMap::build(40, 4, kind, 8).unwrap();
+            assert_ne!(a.groups(), c.groups(), "{kind:?} ignored the seed");
+        }
+        // The two profiles are independent streams.
+        let lat = GroupMap::build(40, 4, PartitionerKind::Latency, 7).unwrap();
+        let chan = GroupMap::build(40, 4, PartitionerKind::Channel, 7).unwrap();
+        assert_ne!(lat.groups(), chan.groups());
+    }
+
+    #[test]
+    fn partitioner_kind_roundtrip() {
+        for kind in KINDS {
+            assert_eq!(PartitionerKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(PartitionerKind::parse("rr").unwrap(), PartitionerKind::RoundRobin);
+        assert!(PartitionerKind::parse("nope").is_err());
+    }
+}

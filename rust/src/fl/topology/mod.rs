@@ -1,0 +1,53 @@
+//! `fl::topology` — the **aggregation tree** over the flat coordinator
+//! core: grouped AirComp inside a cell, and multi-cell hierarchies above
+//! it.
+//!
+//! PAOTA (the source paper) aggregates one flat fleet at one parameter
+//! server. This module composes that core into the deployment shapes the
+//! Air-FEEL literature targets (Air-FedGA, arXiv 2507.05704; the Air-FEEL
+//! overview, arXiv 2208.05643) without touching the round loop:
+//!
+//! ```text
+//!                 cloud / gossip fabric          (InterCellMixing)
+//!                /         |         \
+//!           cell 0      cell 1      cell 2       (MultiCellRunner:
+//!          Coordinator Coordinator Coordinator    one per cell, lock-step
+//!            |    \       |    \      |           ΔT slots, shared
+//!          g0      g1   g0      g1   g0  g1       TrainContext/TrainPool)
+//!         clients ...   clients ...  clients      (GroupMap partition)
+//! ```
+//!
+//! * **Layer 1 — groups** ([`group`], [`air_fedga`]): a [`GroupMap`]
+//!   partitions the fleet (by size, or by seed-derived latency/channel
+//!   profiles), and the registered `air_fedga` policy fires one AirComp
+//!   `stack`/`coef` pass per group *when that group's members are ready*,
+//!   merging the group aggregates asynchronously with staleness-
+//!   discounted weights ([`crate::fl::coordinator::RoundAction::GroupAggregate`]).
+//! * **Layer 2 — cells** ([`multi_cell`]): a [`MultiCellRunner`] drives
+//!   one [`Coordinator`](crate::fl::Coordinator) per cell over disjoint
+//!   client slices of one shared [`TrainContext`](crate::fl::TrainContext)
+//!   (per-cell RNG streams, cell 0 on the base seed), with a pluggable
+//!   [`InterCellMixing`] fabric — cloud FedAvg every K slots, or pairwise
+//!   gossip — and a merged telemetry stream so hierarchical
+//!   [`RoundRecord`](crate::fl::RoundRecord) series stay comparable to
+//!   flat runs.
+//!
+//! Everything is driven from `Config`'s `[topology]` surface (`cells`,
+//! `groups`, `group_partitioner`, `mixing`, `mixing_every`,
+//! `group_ready_frac`, `group_mix`): `fl::run` routes through
+//! [`multi_cell`] whenever `cells > 1`, `--algo air_fedga` selects
+//! grouped AirComp, and `repro ablation topology` sweeps cells × groups
+//! against flat PAOTA from one declarative campaign. Degeneracy contract:
+//! a 1-cell/1-group topology is **bitwise** the flat run at the same seed
+//! (`tests/golden_seed.rs`).
+
+pub mod air_fedga;
+pub mod group;
+pub mod multi_cell;
+
+pub use air_fedga::AirFedGa;
+pub use group::{GroupMap, PartitionerKind};
+pub use multi_cell::{
+    CloudFedAvg, InterCellMixing, MixingKind, MultiCellResult, MultiCellRunner, NoMixing,
+    PairwiseGossip,
+};

@@ -1,0 +1,468 @@
+//! Multi-cell hierarchical AirComp: several [`Coordinator`]s — one per
+//! cell, each owning a disjoint slice of the fleet — advance in lock-step
+//! ΔT slots over **one shared [`TrainContext`]** (same data partition,
+//! same PJRT/native train pool), with a pluggable [`InterCellMixing`]
+//! policy merging the cell models between slots.
+//!
+//! Determinism: cell 0 runs on the base seed (so a 1-cell run is
+//! *bitwise* the flat run — covered by `tests/golden_seed.rs`), every
+//! further cell derives an independent seed, and each cell's coordinator
+//! keeps its own per-purpose RNG streams. Client → cell assignment is a
+//! [`GroupMap`] built with the configured partitioner.
+//!
+//! Telemetry: per-cell [`RunResult`]s keep the canonical stream shape,
+//! and a **merged** stream (participant-weighted window stats; eval of
+//! the cloud model — the uniform mean of the cell models) makes
+//! hierarchical runs directly comparable to flat ones in campaigns.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{Algorithm, Config};
+use crate::fl::coordinator::{
+    AggregationPolicy, Coordinator, RngStreams, RoundAction, RoundTiming, Telemetry, Upload,
+    WindowStats,
+};
+use crate::fl::{registry, RunResult, TrainContext};
+use crate::util::Rng;
+
+use super::group::GroupMap;
+
+/// Inter-cell model-mixing policy: called after every closed ΔT slot
+/// with each cell's current global model; mutate the slice in place to
+/// mix. Implementations decide their own cadence.
+pub trait InterCellMixing {
+    /// Display name (telemetry/debug).
+    fn name(&self) -> &str;
+
+    /// Whether this policy will act after slot `round` closes — lets the
+    /// runner skip the per-cell model snapshot/write-back entirely on
+    /// off-cadence rounds. Defaults to always.
+    fn mixes_at(&self, round: usize) -> bool {
+        let _ = round;
+        true
+    }
+
+    /// `round` is the slot that just closed (0-based); `cells[c]` is cell
+    /// `c`'s current global model.
+    fn mix(&mut self, round: usize, cells: &mut [Vec<f32>]);
+}
+
+/// Cloud FedAvg: every `every` slots, replace every cell model with the
+/// fleet-uniform mean — a two-level hierarchy with a lossless backhaul.
+#[derive(Debug, Clone)]
+pub struct CloudFedAvg {
+    pub every: usize,
+}
+
+impl InterCellMixing for CloudFedAvg {
+    fn name(&self) -> &str {
+        "cloud"
+    }
+
+    fn mixes_at(&self, round: usize) -> bool {
+        (round + 1) % self.every == 0
+    }
+
+    fn mix(&mut self, round: usize, cells: &mut [Vec<f32>]) {
+        if cells.len() < 2 || (round + 1) % self.every != 0 {
+            return;
+        }
+        let mean = mean_models(cells);
+        for cell in cells.iter_mut() {
+            cell.copy_from_slice(&mean);
+        }
+    }
+}
+
+/// Decentralized pairwise gossip: every `every` slots, neighboring cells
+/// (on a ring whose origin rotates each mixing event) average pairwise —
+/// no cloud, information diffuses in O(cells) mixing events.
+#[derive(Debug, Clone)]
+pub struct PairwiseGossip {
+    pub every: usize,
+}
+
+impl InterCellMixing for PairwiseGossip {
+    fn name(&self) -> &str {
+        "gossip"
+    }
+
+    fn mixes_at(&self, round: usize) -> bool {
+        (round + 1) % self.every == 0
+    }
+
+    fn mix(&mut self, round: usize, cells: &mut [Vec<f32>]) {
+        let n = cells.len();
+        if n < 2 || (round + 1) % self.every != 0 {
+            return;
+        }
+        // Rotate the pairing origin so every adjacency is exercised.
+        let offset = ((round + 1) / self.every) % n;
+        let mut k = 0;
+        while k + 1 < n {
+            let i = (offset + k) % n;
+            let j = (offset + k + 1) % n;
+            let mid: Vec<f32> = cells[i]
+                .iter()
+                .zip(&cells[j])
+                .map(|(&a, &b)| ((a as f64 + b as f64) * 0.5) as f32)
+                .collect();
+            cells[i].copy_from_slice(&mid);
+            cells[j].copy_from_slice(&mid);
+            k += 2;
+        }
+    }
+}
+
+/// No inter-cell communication (isolated cells; ablation baseline).
+#[derive(Debug, Clone)]
+pub struct NoMixing;
+
+impl InterCellMixing for NoMixing {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn mixes_at(&self, _round: usize) -> bool {
+        false
+    }
+
+    fn mix(&mut self, _round: usize, _cells: &mut [Vec<f32>]) {}
+}
+
+/// Config-selectable inter-cell mixing scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixingKind {
+    None,
+    Cloud,
+    Gossip,
+}
+
+impl MixingKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" => MixingKind::None,
+            "cloud" | "fedavg" => MixingKind::Cloud,
+            "gossip" | "pairwise" => MixingKind::Gossip,
+            other => anyhow::bail!("unknown mixing scheme {other:?} (none|cloud|gossip)"),
+        })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixingKind::None => "none",
+            MixingKind::Cloud => "cloud",
+            MixingKind::Gossip => "gossip",
+        }
+    }
+
+    /// Instantiate the mixing policy at cadence `every`.
+    pub fn build(&self, every: usize) -> Box<dyn InterCellMixing> {
+        match self {
+            MixingKind::None => Box::new(NoMixing),
+            MixingKind::Cloud => Box::new(CloudFedAvg { every }),
+            MixingKind::Gossip => Box::new(PairwiseGossip { every }),
+        }
+    }
+}
+
+/// A complete hierarchical run: every cell's canonical record stream plus
+/// the merged (cloud-level) stream campaigns compare against flat runs.
+#[derive(Debug, Clone)]
+pub struct MultiCellResult {
+    pub cells: Vec<RunResult>,
+    pub merged: RunResult,
+}
+
+/// Restricts a flat policy to one cell's members: `offered` is
+/// intersected with the membership mask before the inner policy selects.
+/// With a single all-member cell the filter is the identity, so the
+/// 1-cell hierarchy stays bitwise the flat run.
+struct CellPolicy {
+    inner: Box<dyn AggregationPolicy>,
+    member: Vec<bool>,
+}
+
+impl CellPolicy {
+    fn new(inner: Box<dyn AggregationPolicy>, members: &[usize], clients: usize) -> Self {
+        let mut member = vec![false; clients];
+        for &c in members {
+            member[c] = true;
+        }
+        Self { inner, member }
+    }
+}
+
+impl AggregationPolicy for CellPolicy {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn timing(&self) -> RoundTiming {
+        self.inner.timing()
+    }
+
+    fn batch_stream(&self) -> u64 {
+        self.inner.batch_stream()
+    }
+
+    fn needs_deltas(&self) -> bool {
+        self.inner.needs_deltas()
+    }
+
+    fn select_participants(&mut self, offered: &[usize], rngs: &mut RngStreams) -> Vec<usize> {
+        let mine: Vec<usize> = offered.iter().copied().filter(|&c| self.member[c]).collect();
+        self.inner.select_participants(&mine, rngs)
+    }
+
+    fn make_job(
+        &self,
+        client: usize,
+        base: &[f32],
+        ctx: &TrainContext,
+        batch_rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.inner.make_job(client, base, ctx, batch_rng)
+    }
+
+    fn on_uploads(
+        &mut self,
+        round: usize,
+        global: &[f32],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<RoundAction> {
+        self.inner.on_uploads(round, global, uploads, rngs)
+    }
+
+    fn on_global_delta(&mut self, delta: &[f32]) {
+        self.inner.on_global_delta(delta);
+    }
+}
+
+/// Drives `cfg.topology.cells` coordinators in lock-step with the
+/// config's mixing policy (override via [`MultiCellRunner::with_mixing`]).
+pub struct MultiCellRunner<'a> {
+    ctx: &'a TrainContext,
+    cfg: &'a Config,
+    mixing: Box<dyn InterCellMixing>,
+}
+
+impl<'a> MultiCellRunner<'a> {
+    pub fn new(ctx: &'a TrainContext, cfg: &'a Config) -> Self {
+        let mixing = cfg.topology.mixing.build(cfg.topology.mixing_every);
+        Self { ctx, cfg, mixing }
+    }
+
+    /// Swap in a custom inter-cell mixing policy.
+    pub fn with_mixing(mut self, mixing: Box<dyn InterCellMixing>) -> Self {
+        self.mixing = mixing;
+        self
+    }
+
+    pub fn run(mut self) -> Result<MultiCellResult> {
+        run_with_mixing(self.ctx, self.cfg, self.mixing.as_mut())
+    }
+}
+
+/// Run the hierarchical topology the config describes (config-selected
+/// mixing).
+pub fn run(ctx: &TrainContext, cfg: &Config) -> Result<MultiCellResult> {
+    MultiCellRunner::new(ctx, cfg).run()
+}
+
+/// Run with an explicit mixing policy.
+pub fn run_with_mixing(
+    ctx: &TrainContext,
+    cfg: &Config,
+    mixing: &mut dyn InterCellMixing,
+) -> Result<MultiCellResult> {
+    cfg.validate()?;
+    let n = cfg.topology.cells;
+    let map = GroupMap::build(ctx.clients(), n, cfg.topology.partitioner, cfg.seed)?;
+
+    // Per-cell configs: cell 0 keeps the base seed (the 1-cell degeneracy
+    // contract), every further cell derives an independent one.
+    let cell_cfgs: Vec<Config> = (0..n)
+        .map(|c| {
+            let mut cc = cfg.clone();
+            if c > 0 {
+                cc.seed = cfg.seed ^ (c as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            }
+            cc
+        })
+        .collect();
+
+    let mut policies: Vec<Box<dyn AggregationPolicy>> = Vec::with_capacity(n);
+    for (c, cc) in cell_cfgs.iter().enumerate() {
+        let inner = registry::build(cfg.algorithm.name(), ctx, cc)?;
+        ensure!(
+            inner.timing() == RoundTiming::Periodic,
+            "multi-cell topology drives periodic-timing policies; {:?} is not",
+            inner.name()
+        );
+        policies.push(Box::new(CellPolicy::new(inner, map.group(c), ctx.clients())));
+    }
+    let mut coords: Vec<Coordinator> = cell_cfgs
+        .iter()
+        .zip(&policies)
+        .map(|(cc, p)| Coordinator::new(ctx, cc, p.batch_stream()))
+        .collect();
+    for coord in &mut coords {
+        coord.begin_periodic();
+    }
+
+    // The merged (cloud-level) stream only exists for true hierarchies;
+    // a 1-cell run's merged stream IS its cell stream.
+    let mut merged_tel = (n > 1).then(|| Telemetry::new(cfg.rounds, cfg.eval_every));
+
+    for round in 0..cfg.rounds {
+        for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
+            coord.step_periodic(policy.as_mut(), round)?;
+        }
+        if n > 1 && mixing.mixes_at(round) {
+            let mut models: Vec<Vec<f32>> =
+                coords.iter().map(|c| c.global_weights().to_vec()).collect();
+            mixing.mix(round, &mut models);
+            for (coord, model) in coords.iter_mut().zip(&models) {
+                coord.set_global_weights(model);
+            }
+        }
+        if let Some(tel) = merged_tel.as_mut() {
+            let slot_end = (round as f64 + 1.0) * cfg.delta_t;
+            let mut stats = WindowStats::default();
+            let mut power_weighted = 0.0f64;
+            for coord in &coords {
+                let rec = &coord.records()[round];
+                if rec.participants > 0 {
+                    stats.uploads += rec.participants;
+                    stats.loss_sum += rec.train_loss as f64 * rec.participants as f64;
+                    stats.staleness_sum += rec.mean_staleness * rec.participants as f64;
+                    power_weighted += rec.mean_power * rec.participants as f64;
+                }
+            }
+            if stats.uploads > 0 {
+                stats.mean_power = power_weighted / stats.uploads as f64;
+            }
+            // Cloud model: uniform mean of the (post-mixing) cell models.
+            let (eval, probe) = if tel.should_eval(round) {
+                let cloud = mean_cell_models(&coords);
+                (Some(ctx.evaluate(&cloud)?), Some(ctx.probe_loss(&cloud)?))
+            } else {
+                (None, None)
+            };
+            tel.record(round, slot_end, stats, eval, probe);
+        }
+    }
+
+    let cells: Vec<RunResult> = coords
+        .into_iter()
+        .zip(&policies)
+        .map(|(coord, p)| coord.into_result(Algorithm::raw(p.name())))
+        .collect();
+    let merged = match merged_tel {
+        None => cells[0].clone(),
+        Some(tel) => {
+            let mut final_weights = vec![0.0f64; cells[0].final_weights.len()];
+            for cell in &cells {
+                for (acc, &v) in final_weights.iter_mut().zip(&cell.final_weights) {
+                    *acc += v as f64;
+                }
+            }
+            let inv = 1.0 / cells.len() as f64;
+            RunResult {
+                algorithm: cfg.algorithm.clone(),
+                records: tel.into_records(),
+                final_weights: final_weights.iter().map(|&a| (a * inv) as f32).collect(),
+            }
+        }
+    };
+    Ok(MultiCellResult { cells, merged })
+}
+
+/// f64-accumulated uniform mean of a model set.
+fn mean_models(models: &[Vec<f32>]) -> Vec<f32> {
+    let dim = models[0].len();
+    let mut acc = vec![0.0f64; dim];
+    for model in models {
+        for (a, &v) in acc.iter_mut().zip(model) {
+            *a += v as f64;
+        }
+    }
+    let inv = 1.0 / models.len() as f64;
+    acc.iter().map(|&a| (a * inv) as f32).collect()
+}
+
+/// Uniform mean of the coordinators' current global models.
+fn mean_cell_models(coords: &[Coordinator<'_>]) -> Vec<f32> {
+    let models: Vec<Vec<f32>> = coords.iter().map(|c| c.global_weights().to_vec()).collect();
+    mean_models(&models)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_fedavg_replaces_all_with_mean_on_cadence() {
+        let mut m = CloudFedAvg { every: 2 };
+        let mut cells = vec![vec![0.0f32, 2.0], vec![4.0f32, 6.0]];
+        m.mix(0, &mut cells); // slot 1: off-cadence
+        assert_eq!(cells[0], vec![0.0, 2.0]);
+        m.mix(1, &mut cells); // slot 2: mix
+        assert_eq!(cells[0], vec![2.0, 4.0]);
+        assert_eq!(cells[0], cells[1]);
+    }
+
+    #[test]
+    fn gossip_averages_disjoint_pairs_and_rotates() {
+        let mut m = PairwiseGossip { every: 1 };
+        let mut cells = vec![vec![0.0f32], vec![8.0f32], vec![100.0f32]];
+        // round 0 → offset 1: pair (1,2); cell 0 sits out.
+        m.mix(0, &mut cells);
+        assert_eq!(cells[0], vec![0.0]);
+        assert_eq!(cells[1], vec![54.0]);
+        assert_eq!(cells[2], vec![54.0]);
+        // round 1 → offset 2: pair (2,0).
+        m.mix(1, &mut cells);
+        assert_eq!(cells[0], vec![27.0]);
+        assert_eq!(cells[2], vec![27.0]);
+        assert_eq!(cells[1], vec![54.0]);
+    }
+
+    #[test]
+    fn single_cell_mixing_is_identity() {
+        let mut cells = vec![vec![1.0f32, 2.0]];
+        CloudFedAvg { every: 1 }.mix(0, &mut cells);
+        PairwiseGossip { every: 1 }.mix(0, &mut cells);
+        NoMixing.mix(0, &mut cells);
+        assert_eq!(cells[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mixing_kind_roundtrip_and_build() {
+        for kind in [MixingKind::None, MixingKind::Cloud, MixingKind::Gossip] {
+            assert_eq!(MixingKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.build(3).name(), kind.name());
+        }
+        assert_eq!(MixingKind::parse("fedavg").unwrap(), MixingKind::Cloud);
+        assert!(MixingKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn mixes_at_matches_the_cadence() {
+        // The runner snapshots cell models only when mixes_at says so —
+        // it must agree with each policy's internal cadence guard.
+        let cloud = CloudFedAvg { every: 3 };
+        assert!(!cloud.mixes_at(0));
+        assert!(!cloud.mixes_at(1));
+        assert!(cloud.mixes_at(2));
+        assert!(cloud.mixes_at(5));
+        let gossip = PairwiseGossip { every: 2 };
+        assert!(!gossip.mixes_at(0));
+        assert!(gossip.mixes_at(1));
+        assert!(!NoMixing.mixes_at(0));
+        assert!(!NoMixing.mixes_at(7));
+    }
+}

@@ -22,10 +22,30 @@ pub enum LatencyModel {
     /// Two device classes: fast clients at `fast`, a `slow_frac` fraction
     /// of draws at `slow` (severe-straggler ablation).
     Bimodal { fast: f64, slow: f64, slow_frac: f64 },
+    /// Heavy-tailed: `ln X ~ N(mu, sigma²)` — a small set of draws lands
+    /// far out in the tail, the straggler regime the topology ablation
+    /// stresses (median `e^mu`, mean `e^{mu+sigma²/2}`).
+    Lognormal { mu: f64, sigma: f64 },
+    /// Time-correlated two-state Gilbert–Elliott chain: each client is
+    /// either `fast` or `slow` and *stays* in its state across rounds
+    /// (`p_enter` = P(fast→slow), `p_exit` = P(slow→fast) per draw).
+    ///
+    /// The per-client Markov state lives in [`LatencySampler`];
+    /// [`LatencyModel::draw`] on this variant samples the *stationary
+    /// marginal* (state-free approximation) for callers without per-client
+    /// state.
+    GilbertElliott {
+        fast: f64,
+        slow: f64,
+        p_enter: f64,
+        p_exit: f64,
+    },
 }
 
 impl LatencyModel {
-    /// Draw one per-round latency.
+    /// Draw one per-round latency (stateless; for the time-correlated
+    /// Gilbert–Elliott variant this is the stationary marginal — use a
+    /// [`LatencySampler`] for the actual per-client chain).
     pub fn draw(&self, rng: &mut Rng) -> f64 {
         match *self {
             LatencyModel::Uniform { lo, hi } => rng.uniform(lo, hi),
@@ -41,10 +61,23 @@ impl LatencyModel {
                     fast
                 }
             }
+            LatencyModel::Lognormal { mu, sigma } => (mu + sigma * rng.normal()).exp(),
+            LatencyModel::GilbertElliott {
+                fast,
+                slow,
+                p_enter,
+                p_exit,
+            } => {
+                if rng.f64() < stationary_slow(p_enter, p_exit) {
+                    slow
+                } else {
+                    fast
+                }
+            }
         }
     }
 
-    /// Mean latency (closed form).
+    /// Mean latency (closed form; Gilbert–Elliott: stationary mean).
     pub fn mean(&self) -> f64 {
         match *self {
             LatencyModel::Uniform { lo, hi } => (lo + hi) / 2.0,
@@ -54,6 +87,76 @@ impl LatencyModel {
                 slow,
                 slow_frac,
             } => fast * (1.0 - slow_frac) + slow * slow_frac,
+            LatencyModel::Lognormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            LatencyModel::GilbertElliott {
+                fast,
+                slow,
+                p_enter,
+                p_exit,
+            } => {
+                let pi_slow = stationary_slow(p_enter, p_exit);
+                fast * (1.0 - pi_slow) + slow * pi_slow
+            }
+        }
+    }
+}
+
+/// Stationary probability of the slow state of a Gilbert–Elliott chain
+/// (`0` when the chain never enters it).
+fn stationary_slow(p_enter: f64, p_exit: f64) -> f64 {
+    if p_enter + p_exit <= 0.0 {
+        0.0
+    } else {
+        p_enter / (p_enter + p_exit)
+    }
+}
+
+/// Per-client latency sampler: wraps a [`LatencyModel`] with the
+/// per-client Markov state the time-correlated Gilbert–Elliott variant
+/// needs. Every client starts in the fast state; each draw first advances
+/// that client's chain (one uniform draw), then emits the state's value.
+///
+/// For the stateless variants this delegates to [`LatencyModel::draw`]
+/// with an identical RNG-consumption pattern, so swapping the sampler in
+/// for a bare model is bit-transparent.
+#[derive(Debug, Clone)]
+pub struct LatencySampler {
+    model: LatencyModel,
+    /// Per-client "currently slow" flag (Gilbert–Elliott only).
+    slow_state: Vec<bool>,
+}
+
+impl LatencySampler {
+    pub fn new(model: LatencyModel, clients: usize) -> Self {
+        Self {
+            model,
+            slow_state: vec![false; clients],
+        }
+    }
+
+    pub fn model(&self) -> &LatencyModel {
+        &self.model
+    }
+
+    /// Draw `client`'s next per-round latency.
+    pub fn draw(&mut self, client: usize, rng: &mut Rng) -> f64 {
+        match self.model {
+            LatencyModel::GilbertElliott {
+                fast,
+                slow,
+                p_enter,
+                p_exit,
+            } => {
+                let u = rng.f64();
+                let state = &mut self.slow_state[client];
+                *state = if *state { u >= p_exit } else { u < p_enter };
+                if *state {
+                    slow
+                } else {
+                    fast
+                }
+            }
+            ref m => m.draw(rng),
         }
     }
 }
@@ -134,6 +237,110 @@ mod tests {
         let slow = (0..n).filter(|_| m.draw(&mut rng) == 30.0).count();
         assert!((slow as f64 / n as f64 - 0.2).abs() < 0.01);
         assert!((m.mean() - (2.0 * 0.8 + 30.0 * 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lognormal_median_mean_and_heavy_tail() {
+        // median 10 s, sigma 0.6 — the topology-ablation setting.
+        let mu = 10.0f64.ln();
+        let m = LatencyModel::Lognormal { mu, sigma: 0.6 };
+        assert!((m.mean() - (mu + 0.18).exp()).abs() < 1e-12);
+        let mut rng = Rng::new(7);
+        let n = 50_000;
+        let mut below_median = 0usize;
+        let mut beyond_3x = 0usize;
+        for _ in 0..n {
+            let l = m.draw(&mut rng);
+            assert!(l > 0.0);
+            if l < 10.0 {
+                below_median += 1;
+            }
+            if l > 30.0 {
+                beyond_3x += 1;
+            }
+        }
+        assert!((below_median as f64 / n as f64 - 0.5).abs() < 0.01);
+        // Heavy tail: a non-negligible mass lands beyond 3× the median
+        // (U(5,15) puts exactly zero mass there).
+        assert!(beyond_3x > n / 200, "tail too light: {beyond_3x}/{n}");
+    }
+
+    #[test]
+    fn gilbert_elliott_sampler_is_time_correlated() {
+        let model = LatencyModel::GilbertElliott {
+            fast: 5.0,
+            slow: 30.0,
+            p_enter: 0.1,
+            p_exit: 0.3,
+        };
+        // Stationary: π_slow = 0.1/0.4 = 0.25.
+        assert!((model.mean() - (5.0 * 0.75 + 30.0 * 0.25)).abs() < 1e-12);
+
+        let mut s = LatencySampler::new(model, 1);
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let mut prev_slow = false;
+        let mut slow_count = 0usize;
+        let mut stay_slow = 0usize;
+        let mut slow_pairs = 0usize;
+        for i in 0..n {
+            let l = s.draw(0, &mut rng);
+            let is_slow = l == 30.0;
+            if is_slow {
+                slow_count += 1;
+            }
+            if i > 0 && prev_slow {
+                slow_pairs += 1;
+                if is_slow {
+                    stay_slow += 1;
+                }
+            }
+            prev_slow = is_slow;
+        }
+        // Occupancy matches the stationary distribution...
+        assert!((slow_count as f64 / n as f64 - 0.25).abs() < 0.02);
+        // ...but consecutive draws are correlated: P(slow | slow) = 0.7,
+        // far above the marginal 0.25.
+        let p_stay = stay_slow as f64 / slow_pairs as f64;
+        assert!((p_stay - 0.7).abs() < 0.03, "P(slow|slow) = {p_stay}");
+    }
+
+    #[test]
+    fn gilbert_elliott_states_are_per_client() {
+        let model = LatencyModel::GilbertElliott {
+            fast: 1.0,
+            slow: 9.0,
+            p_enter: 1.0, // enter slow immediately...
+            p_exit: 0.0,  // ...and never leave.
+        };
+        let mut s = LatencySampler::new(model, 2);
+        let mut rng = Rng::new(3);
+        assert_eq!(s.draw(0, &mut rng), 9.0);
+        // Client 1 starts fast regardless of client 0's chain, and with
+        // p_enter = 1 transitions on its first draw too.
+        assert_eq!(s.draw(1, &mut rng), 9.0);
+        assert_eq!(s.draw(0, &mut rng), 9.0);
+    }
+
+    #[test]
+    fn sampler_is_bit_transparent_for_stateless_models() {
+        for model in [
+            LatencyModel::Uniform { lo: 5.0, hi: 15.0 },
+            LatencyModel::Homogeneous { value: 7.0 },
+            LatencyModel::Bimodal {
+                fast: 2.0,
+                slow: 30.0,
+                slow_frac: 0.2,
+            },
+            LatencyModel::Lognormal { mu: 2.0, sigma: 0.5 },
+        ] {
+            let mut a = Rng::new(99);
+            let mut b = Rng::new(99);
+            let mut s = LatencySampler::new(model, 4);
+            for client in [0usize, 3, 1, 1] {
+                assert_eq!(s.draw(client, &mut a), model.draw(&mut b));
+            }
+        }
     }
 
     #[test]

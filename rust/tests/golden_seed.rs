@@ -581,6 +581,52 @@ fn fedasync_matches_seed_trainer() {
 }
 
 #[test]
+fn one_cell_one_group_hierarchy_is_bitwise_flat_paota() {
+    // The topology degeneracy contract: a hierarchical run with cells = 1
+    // and groups = 1 (the config defaults) must be BITWISE identical to
+    // the flat paota run at the same seed — same weights bit patterns,
+    // same record stream. Cell 0 runs on the base seed and an all-member
+    // cell filter is the identity, so any drift here means the step-wise
+    // coordinator API or the cell plumbing changed the RNG/flow.
+    let cfg = quick_cfg("paota");
+    assert_eq!(cfg.topology.cells, 1);
+    assert_eq!(cfg.topology.groups, 1);
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, &cfg).unwrap();
+    let flat = fl::run_with_context(&ctx, &cfg).unwrap();
+    let hier = fl::topology::multi_cell::run(&ctx, &cfg).unwrap();
+    assert_eq!(hier.cells.len(), 1);
+    for (tag, run) in [("cell0", &hier.cells[0]), ("merged", &hier.merged)] {
+        assert_eq!(run.final_weights, flat.final_weights, "{tag}: weights drifted");
+        assert_eq!(run.records.len(), flat.records.len(), "{tag}");
+        for (a, b) in run.records.iter().zip(&flat.records) {
+            let t = format!("{tag} round {}", b.round);
+            assert_eq!(a.round, b.round, "{t}");
+            assert_eq!(a.participants, b.participants, "{t}");
+            assert_eq!(a.sim_time, b.sim_time, "{t}");
+            assert!(
+                a.train_loss == b.train_loss
+                    || (a.train_loss.is_nan() && b.train_loss.is_nan()),
+                "{t}: {} vs {}",
+                a.train_loss,
+                b.train_loss
+            );
+            assert_eq!(a.mean_staleness, b.mean_staleness, "{t}");
+            assert_eq!(a.mean_power, b.mean_power, "{t}");
+            assert_eq!(a.probe_loss, b.probe_loss, "{t}");
+            match (a.eval, b.eval) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.accuracy, y.accuracy, "{t}");
+                    assert_eq!(x.loss, y.loss, "{t}");
+                }
+                _ => panic!("{t}: eval cadence drifted"),
+            }
+        }
+    }
+}
+
+#[test]
 fn fedasync_coalesced_ties_match_sequential_reference() {
     // Homogeneous latency makes ALL K clients finish at identical
     // timestamps: the coordinator coalesces each tie into one batched

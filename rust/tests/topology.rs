@@ -1,0 +1,200 @@
+//! Integration over the `fl::topology` subsystem on the pure-Rust native
+//! kernel: grouped AirComp (`air_fedga`), multi-cell hierarchies, the
+//! topology/replicates ablation campaigns, and the grid helper — all
+//! artifact-free so CI exercises them on every push.
+
+use paota::config::{Algorithm, Config};
+use paota::experiments;
+use paota::fl::topology::{multi_cell, MixingKind, NoMixing, PartitionerKind};
+use paota::fl::{self, TrainContext};
+use paota::runtime::Engine;
+
+/// Small native-kernel config: fast in debug CI, heterogeneous enough
+/// that groups fire on different slots and cells see stragglers.
+fn tiny_cfg() -> Config {
+    let mut c = Config::default();
+    c.rounds = 4;
+    c.eval_every = 2;
+    c.artifacts_dir = "native".into();
+    c.synth.side = 8; // d_in = 64
+    c.partition.clients = 12;
+    c.partition.sizes = vec![40, 80];
+    c.partition.test_size = 48;
+    c
+}
+
+fn build_ctx(cfg: &Config) -> (Engine, TrainContext) {
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, cfg).unwrap();
+    (engine, ctx)
+}
+
+#[test]
+fn air_fedga_is_deterministic_and_diverges_from_flat_paota() {
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::parse("air_fedga").unwrap();
+    cfg.topology.groups = 3;
+    cfg.topology.partitioner = PartitionerKind::Latency;
+
+    let r1 = fl::run(&cfg).unwrap();
+    let r2 = fl::run(&cfg).unwrap();
+    assert_eq!(r1.final_weights, r2.final_weights, "air_fedga not seed-deterministic");
+    assert_eq!(r1.records.len(), cfg.rounds);
+    assert_eq!(r1.algorithm.name(), "air_fedga");
+    for r in &r1.records {
+        assert!(r.participants <= cfg.partition.clients);
+    }
+
+    let mut flat = cfg.clone();
+    flat.algorithm = Algorithm::parse("paota").unwrap();
+    let paota = fl::run(&flat).unwrap();
+    assert_ne!(
+        r1.final_weights, paota.final_weights,
+        "grouped aggregation collapsed to flat paota"
+    );
+}
+
+#[test]
+fn air_fedga_group_readiness_gates_selection() {
+    use paota::fl::coordinator::streams;
+    use paota::fl::RngStreams;
+
+    // 12 clients round-robin over 4 groups: group g = {g, g+4, g+8}.
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::parse("air_fedga").unwrap();
+    cfg.topology.groups = 4;
+    cfg.topology.partitioner = PartitionerKind::RoundRobin;
+    cfg.topology.group_ready_frac = 1.0;
+    let (_engine, ctx) = build_ctx(&cfg);
+
+    let mut strict = fl::build_policy(&ctx, &cfg).unwrap();
+    let mut rngs = RngStreams::new(cfg.seed, streams::BATCH);
+    // Group 0 is fully ready, group 1 only partially: with the
+    // whole-group quorum only group 0 fires, its members kept in
+    // offered order; 1 and 5 wait for client 9.
+    let chosen = strict.select_participants(&[0, 4, 8, 1, 5], &mut rngs);
+    assert_eq!(chosen, vec![0, 4, 8]);
+    // No group is complete → nobody uploads this slot.
+    assert!(strict.select_participants(&[1, 5, 2], &mut rngs).is_empty());
+
+    // Quorum 1 (frac 0.25 of 3 members): every group with any ready
+    // member fires.
+    let mut eager_cfg = cfg.clone();
+    eager_cfg.topology.group_ready_frac = 0.25;
+    let mut eager = fl::build_policy(&ctx, &eager_cfg).unwrap();
+    let chosen = eager.select_participants(&[0, 4, 8, 1, 5], &mut rngs);
+    assert_eq!(chosen, vec![0, 4, 8, 1, 5]);
+
+    // End-to-end the quorum changes the trajectory (both deterministic).
+    let rs = fl::run(&cfg).unwrap();
+    let re = fl::run(&eager_cfg).unwrap();
+    assert_ne!(rs.final_weights, re.final_weights, "quorum had no effect");
+}
+
+#[test]
+fn multi_cell_merges_telemetry_and_counts_every_cell() {
+    let mut cfg = tiny_cfg();
+    cfg.topology.cells = 2;
+    cfg.topology.mixing = MixingKind::Cloud;
+    cfg.topology.mixing_every = 2;
+    let (_engine, ctx) = build_ctx(&cfg);
+
+    let out = multi_cell::run(&ctx, &cfg).unwrap();
+    assert_eq!(out.cells.len(), 2);
+    assert_eq!(out.merged.records.len(), cfg.rounds);
+    for (r, rec) in out.merged.records.iter().enumerate() {
+        let cell_sum: usize = out.cells.iter().map(|c| c.records[r].participants).sum();
+        assert_eq!(rec.participants, cell_sum, "round {r}");
+        assert_eq!(rec.sim_time, (r as f64 + 1.0) * cfg.delta_t, "round {r}");
+        // Merged eval follows the shared cadence.
+        assert_eq!(rec.eval.is_some(), r % cfg.eval_every == 0 || r + 1 == cfg.rounds);
+    }
+    // The dispatch in fl::run_with_context returns the same merged run.
+    let via_dispatch = fl::run_with_context(&ctx, &cfg).unwrap();
+    assert_eq!(via_dispatch.final_weights, out.merged.final_weights);
+    assert_eq!(via_dispatch.records.len(), out.merged.records.len());
+}
+
+#[test]
+fn inter_cell_mixing_changes_the_outcome() {
+    let mut cfg = tiny_cfg();
+    cfg.topology.cells = 2;
+    cfg.topology.mixing = MixingKind::Cloud;
+    cfg.topology.mixing_every = 1;
+    let (_engine, ctx) = build_ctx(&cfg);
+
+    let mixed = multi_cell::run(&ctx, &cfg).unwrap();
+    let isolated = multi_cell::MultiCellRunner::new(&ctx, &cfg)
+        .with_mixing(Box::new(NoMixing))
+        .run()
+        .unwrap();
+    assert_ne!(
+        mixed.merged.final_weights, isolated.merged.final_weights,
+        "cloud mixing had no effect on the cloud model"
+    );
+    // With cloud mixing every slot, the cells end on the same model.
+    assert_eq!(
+        mixed.cells[0].final_weights, mixed.cells[1].final_weights,
+        "cloud FedAvg left the cells apart"
+    );
+    assert_ne!(
+        isolated.cells[0].final_weights, isolated.cells[1].final_weights,
+        "isolated cells converged identically — cell filtering broken?"
+    );
+}
+
+#[test]
+fn multi_cell_rejects_non_periodic_policies() {
+    let mut cfg = tiny_cfg();
+    cfg.topology.cells = 2;
+    cfg.algorithm = Algorithm::parse("local_sgd").unwrap();
+    let (_engine, ctx) = build_ctx(&cfg);
+    let err = multi_cell::run(&ctx, &cfg).unwrap_err().to_string();
+    assert!(err.contains("periodic"), "{err}");
+}
+
+#[test]
+fn topology_ablation_emits_all_series_from_one_campaign() {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join("paota_topology_ablation_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    experiments::ablation("topology", &cfg, &dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("ablation_topology.csv")).unwrap();
+    for series in [
+        "paota_flat",
+        "air_fedga_rr_g4",
+        "air_fedga_latency_g4",
+        "air_fedga_channel_g4",
+        "hier_2cell_cloud",
+        "hier_3cell_gossip",
+        "paota_flat_lognormal",
+        "air_fedga_latency_g4_ge",
+    ] {
+        assert!(text.contains(series), "missing series {series} in:\n{text}");
+    }
+}
+
+#[test]
+fn replicates_ablation_emits_mean_std_error_bars() {
+    let mut cfg = tiny_cfg();
+    cfg.rounds = 2;
+    cfg.eval_every = 1;
+    let dir = std::env::temp_dir().join("paota_replicates_ablation_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    experiments::ablation("replicates", &cfg, &dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("ablation_replicates.csv")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], "series,round,time_s,mean,std,n");
+    // Three algorithms, seed segments stripped, n = 3 replicates each.
+    for series in ["PAOTA", "Local SGD", "COTAF"] {
+        let row = lines
+            .iter()
+            .find(|l| l.starts_with(&format!("{series},")))
+            .unwrap_or_else(|| panic!("no {series} rows in:\n{text}"));
+        assert!(row.ends_with(",3"), "expected 3 replicates: {row}");
+    }
+}
