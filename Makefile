@@ -2,7 +2,7 @@
 
 RUST_DIR := rust
 
-.PHONY: verify build test fmt clippy artifacts
+.PHONY: verify build test fmt clippy artifacts bench
 
 # Everything CI runs: release build, tests, formatting, lints.
 verify: build test fmt clippy
@@ -23,3 +23,10 @@ clippy:
 # python/compile/aot.py).
 artifacts:
 	python3 python/compile/aot.py
+
+# The perf trajectory: native-kernel + pool + campaign benches, recorded
+# to BENCH_native.json at the repo root (methodology in EXPERIMENTS.md).
+# Set PAOTA_BENCH_FAST=1 for a seconds-long smoke run (CI does).
+bench:
+	cd $(RUST_DIR) && PAOTA_BENCH_OUT=$(CURDIR)/BENCH_native.json \
+		cargo bench --bench native_kernel

@@ -1,0 +1,488 @@
+//! The **bench trajectory** recorder: measures the native execution
+//! stack at every level — kernel, pool, full runs, campaigns, PJRT
+//! parity — and writes the numbers to `BENCH_native.json` so subsequent
+//! PRs have a machine-readable baseline to not regress (`make bench`;
+//! methodology in EXPERIMENTS.md).
+//!
+//! Levels measured, all on the paper geometry (784→10→10→10 MLP,
+//! dim 8070, M = 5, B = 32) unless noted:
+//!
+//! 1. **Kernel**: `local_train`/`evaluate` on the register-tiled
+//!    zero-alloc kernel (`linalg::gemm`) vs a verbatim copy of the
+//!    pre-tiling naive triple-loop kernel (kept below as the frozen
+//!    baseline — do not "fix" it).
+//! 2. **Pool**: one `train_many`-sized batch at 1 worker vs N workers
+//!    on the backend-agnostic `TrainPool` (native backend).
+//! 3. **End-to-end**: PAOTA rounds/sec through the full coordinator.
+//! 4. **Campaign**: scenarios/sec at `--jobs 1` vs `--jobs N` (the
+//!    parallel campaign engine; results are bitwise identical, only
+//!    wall-clock may differ).
+//! 5. **Parity**: native/PJRT time ratio per op, when AOT artifacts are
+//!    present (else recorded as unavailable).
+//!
+//! `PAOTA_BENCH_FAST=1` shrinks every workload for CI smoke runs;
+//! `PAOTA_BENCH_OUT` overrides the JSON output path.
+
+use std::time::Instant;
+
+use paota::benchlib::{section, Bench, Measurement};
+use paota::config::{Algorithm, Config};
+use paota::experiments::{Campaign, GridAxis};
+use paota::fl::{self, TrainContext};
+use paota::runtime::{Engine, Manifest, ModelRuntime, NativeModel, TrainPool};
+use paota::util::Rng;
+
+// ---------------------------------------------------------------------
+// Frozen baseline: the pre-tiling naive kernel (PR 2/3 vintage). A
+// verbatim port of the old `runtime::native` triple loops, kept here so
+// the recorded kernel speedup always compares against the same code.
+// ---------------------------------------------------------------------
+
+mod naive {
+    use paota::runtime::Manifest;
+
+    pub struct NaiveModel {
+        pub m: Manifest,
+    }
+
+    struct Params<'a> {
+        w1: &'a [f32],
+        b1: &'a [f32],
+        w2: &'a [f32],
+        b2: &'a [f32],
+        w3: &'a [f32],
+        b3: &'a [f32],
+    }
+
+    fn split<'a>(m: &Manifest, w: &'a [f32]) -> Params<'a> {
+        let (d, h, c) = (m.d_in, m.hidden, m.classes);
+        let s1 = d * h;
+        let s2 = s1 + h;
+        let s3 = s2 + h * h;
+        let s4 = s3 + h;
+        let s5 = s4 + h * c;
+        let s6 = s5 + c;
+        Params {
+            w1: &w[..s1],
+            b1: &w[s1..s2],
+            w2: &w[s2..s3],
+            b2: &w[s3..s4],
+            w3: &w[s4..s5],
+            b3: &w[s5..s6],
+        }
+    }
+
+    fn affine(x: &[f32], w: &[f32], b: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * d_out];
+        for i in 0..n {
+            let row = &mut out[i * d_out..(i + 1) * d_out];
+            row.copy_from_slice(b);
+            let xr = &x[i * d_in..(i + 1) * d_in];
+            for (k, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in row.iter_mut().zip(wr) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        out
+    }
+
+    fn relu(z: &mut [f32]) {
+        for v in z.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    fn softmax_ce(logits: &[f32], y: &[f32], n: usize, c: usize) -> (f32, Vec<f32>) {
+        let mut d = vec![0.0f32; n * c];
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            let lr = &logits[i * c..(i + 1) * c];
+            let yr = &y[i * c..(i + 1) * c];
+            let dr = &mut d[i * c..(i + 1) * c];
+            let max = lr.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for (dv, &lv) in dr.iter_mut().zip(lr) {
+                let e = (lv - max).exp();
+                *dv = e;
+                sum += e;
+            }
+            for (dv, &yv) in dr.iter_mut().zip(yr) {
+                let p = *dv / sum;
+                if yv > 0.0 {
+                    loss -= f64::from(yv) * f64::from(p.max(1e-30).ln());
+                }
+                *dv = (p - yv) / n as f32;
+            }
+        }
+        ((loss / n as f64) as f32, d)
+    }
+
+    fn grad_affine(
+        a: &[f32],
+        dz: &[f32],
+        n: usize,
+        d_in: usize,
+        d_out: usize,
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) {
+        for i in 0..n {
+            let ar = &a[i * d_in..(i + 1) * d_in];
+            let dr = &dz[i * d_out..(i + 1) * d_out];
+            for (g, &dv) in gb.iter_mut().zip(dr) {
+                *g += dv;
+            }
+            for (k, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let gr = &mut gw[k * d_out..(k + 1) * d_out];
+                for (g, &dv) in gr.iter_mut().zip(dr) {
+                    *g += av * dv;
+                }
+            }
+        }
+    }
+
+    fn backprop_masked(
+        dz: &[f32],
+        w: &[f32],
+        a: &[f32],
+        n: usize,
+        d_in: usize,
+        d_out: usize,
+    ) -> Vec<f32> {
+        let mut dx = vec![0.0f32; n * d_in];
+        for i in 0..n {
+            let dr = &dz[i * d_out..(i + 1) * d_out];
+            let ar = &a[i * d_in..(i + 1) * d_in];
+            let xr = &mut dx[i * d_in..(i + 1) * d_in];
+            for (k, x) in xr.iter_mut().enumerate() {
+                if ar[k] <= 0.0 {
+                    continue;
+                }
+                let wr = &w[k * d_out..(k + 1) * d_out];
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in dr.iter().zip(wr) {
+                    acc += dv * wv;
+                }
+                *x = acc;
+            }
+        }
+        dx
+    }
+
+    impl NaiveModel {
+        fn loss_and_grad(&self, w: &[f32], x: &[f32], y: &[f32], n: usize) -> (f32, Vec<f32>) {
+            let p = split(&self.m, w);
+            let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
+            let mut a1 = affine(x, p.w1, p.b1, n, d, h);
+            relu(&mut a1);
+            let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
+            relu(&mut a2);
+            let logits = affine(&a2, p.w3, p.b3, n, h, c);
+            let (loss, dz3) = softmax_ce(&logits, y, n, c);
+
+            let mut g = vec![0.0f32; self.m.dim];
+            {
+                let (gw1, rest) = g.split_at_mut(d * h);
+                let (gb1, rest) = rest.split_at_mut(h);
+                let (gw2, rest) = rest.split_at_mut(h * h);
+                let (gb2, rest) = rest.split_at_mut(h);
+                let (gw3, gb3) = rest.split_at_mut(h * c);
+                grad_affine(&a2, &dz3, n, h, c, gw3, gb3);
+                let dz2 = backprop_masked(&dz3, p.w3, &a2, n, h, c);
+                grad_affine(&a1, &dz2, n, h, h, gw2, gb2);
+                let dz1 = backprop_masked(&dz2, p.w2, &a1, n, h, h);
+                grad_affine(x, &dz1, n, d, h, gw1, gb1);
+            }
+            (loss, g)
+        }
+
+        pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> (Vec<f32>, f32) {
+            let m = &self.m;
+            let b = m.batch;
+            let mut w_cur = w.to_vec();
+            let mut loss_sum = 0.0f64;
+            for step in 0..m.local_steps {
+                let x = &xs[step * b * m.d_in..(step + 1) * b * m.d_in];
+                let y = &ys[step * b * m.classes..(step + 1) * b * m.classes];
+                let (loss, g) = self.loss_and_grad(&w_cur, x, y, b);
+                loss_sum += f64::from(loss);
+                for (wv, gv) in w_cur.iter_mut().zip(&g) {
+                    *wv -= lr * gv;
+                }
+            }
+            (w_cur, (loss_sum / m.local_steps as f64) as f32)
+        }
+
+        pub fn evaluate(&self, w: &[f32], x: &[f32], y: &[f32], n: usize) -> f32 {
+            let p = split(&self.m, w);
+            let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
+            let mut a1 = affine(x, p.w1, p.b1, n, d, h);
+            relu(&mut a1);
+            let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
+            relu(&mut a2);
+            let logits = affine(&a2, p.w3, p.b3, n, h, c);
+            softmax_ce(&logits, y, n, c).0
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------
+
+struct Inputs {
+    w: Vec<f32>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    ex: Vec<f32>,
+    ey: Vec<f32>,
+}
+
+fn inputs(m: &Manifest, seed: u64) -> Inputs {
+    let mut rng = Rng::new(seed);
+    let mut w = vec![0.0f32; m.dim];
+    rng.fill_normal(&mut w, 0.05);
+    let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
+    rng.fill_normal(&mut xs, 0.5);
+    let mut ys = vec![0.0f32; m.local_steps * m.batch * m.classes];
+    for r in 0..(m.local_steps * m.batch) {
+        ys[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+    let mut ex = vec![0.0f32; m.eval_size * m.d_in];
+    rng.fill_normal(&mut ex, 0.5);
+    let mut ey = vec![0.0f32; m.eval_size * m.classes];
+    for r in 0..m.eval_size {
+        ey[r * m.classes + rng.index(m.classes)] = 1.0;
+    }
+    Inputs { w, xs, ys, ex, ey }
+}
+
+fn secs(m: &Measurement) -> f64 {
+    m.mean.as_secs_f64()
+}
+
+/// JSON number that tolerates NaN/inf (emitted as null).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PAOTA_BENCH_FAST").is_ok();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1)
+        .max(2);
+
+    // Paper geometry via the native-config derivation (d_in = 784,
+    // hidden = 10, K = 100).
+    let mut paper = Config::default();
+    paper.artifacts_dir = "native".into();
+    let m = ModelRuntime::native_for(&paper).unwrap().manifest().clone();
+
+    // 1. Kernel: tiled vs the frozen naive baseline. ------------------
+    section(&format!(
+        "kernel: naive triple-loop vs linalg::gemm tiled (dim = {}, M = {}, B = {})",
+        m.dim, m.local_steps, m.batch
+    ));
+    let i = inputs(&m, 3);
+    let naive = naive::NaiveModel { m: m.clone() };
+    let tiled = NativeModel::new(m.clone());
+    let b = Bench::new("kernel");
+    let naive_train = b.iter("naive/local_train", || {
+        std::hint::black_box(naive.local_train(&i.w, &i.xs, &i.ys, 0.1));
+    });
+    let tiled_train = b.iter("tiled/local_train", || {
+        std::hint::black_box(tiled.local_train(&i.w, &i.xs, &i.ys, 0.1).unwrap());
+    });
+    let naive_eval = b.iter("naive/evaluate", || {
+        std::hint::black_box(naive.evaluate(&i.w, &i.ex, &i.ey, m.eval_size));
+    });
+    let tiled_eval = b.iter("tiled/evaluate", || {
+        std::hint::black_box(tiled.evaluate(&i.w, &i.ex, &i.ey).unwrap());
+    });
+    let kernel_speedup = secs(&naive_train) / secs(&tiled_train).max(1e-12);
+    let eval_speedup = secs(&naive_eval) / secs(&tiled_eval).max(1e-12);
+    println!("kernel/local_train speedup: {kernel_speedup:.2}x  (target ≥ 2x)");
+    println!("kernel/evaluate    speedup: {eval_speedup:.2}x");
+
+    // 2. Pool: 1 worker vs N workers on one batch. --------------------
+    let batch_jobs = if fast { 8 } else { 30 };
+    section(&format!(
+        "pool: train_many batch of {batch_jobs} at 1 vs {workers} workers (native backend)"
+    ));
+    let mut rng = Rng::new(17);
+    let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..batch_jobs)
+        .map(|_| {
+            let j = inputs(&m, rng.next_u64());
+            (j.w, j.xs, j.ys)
+        })
+        .collect();
+    let pool1 = TrainPool::native(m.clone(), 1).unwrap();
+    let pool_n = TrainPool::native(m.clone(), workers).unwrap();
+    // Hand-rolled timing: `run_batch` consumes its jobs, and cloning the
+    // ~16 MB batch is a constant that must stay OUTSIDE the timed window
+    // (it would attenuate the recorded speedup toward 1 on both sides).
+    let time_batch = |pool: &TrainPool, label: &str| -> f64 {
+        pool.run_batch(jobs.clone(), 0.1).unwrap(); // warmup
+        let reps = if fast { 3 } else { 10 };
+        let mut total = 0.0f64;
+        for _ in 0..reps {
+            let batch = jobs.clone();
+            let t0 = Instant::now();
+            pool.run_batch(batch, 0.1).unwrap();
+            total += t0.elapsed().as_secs_f64();
+        }
+        let mean = total / reps as f64;
+        println!("pool/{label:<38} time: [{mean:.6}s]  ({reps} reps)");
+        mean
+    };
+    let t1 = time_batch(&pool1, "1-worker");
+    let tn = time_batch(&pool_n, &format!("{workers}-workers"));
+    let pool_speedup = t1 / tn.max(1e-12);
+    println!("pool speedup at {workers} workers: {pool_speedup:.2}x  (target > 1.5x on ≥ 4 cores)");
+
+    // 3. End-to-end PAOTA rounds/sec. ---------------------------------
+    let rounds = if fast { 3 } else { 12 };
+    section(&format!("end-to-end: PAOTA {rounds} rounds, K = {} (native)", m.clients));
+    paper.rounds = rounds;
+    paper.eval_every = rounds; // eval twice (round 0 + final): measure training
+    paper.perf.workers = workers;
+    let ctx = TrainContext::new(&paper).unwrap();
+    let t0 = Instant::now();
+    fl::run_with_context(&ctx, &paper).unwrap();
+    let e2e = t0.elapsed().as_secs_f64();
+    let rounds_per_sec = rounds as f64 / e2e.max(1e-12);
+    println!("rounds/sec: {rounds_per_sec:.2}  ({rounds} rounds in {e2e:.2}s)");
+
+    // 4. Campaign: serial vs parallel scenarios. ----------------------
+    let scen_rounds = if fast { 2 } else { 6 };
+    let seeds: Vec<u64> = (0..if fast { 4 } else { 8 }).map(|i| 42 + i).collect();
+    section(&format!(
+        "campaign: {} seed-replicate scenarios × {scen_rounds} rounds, --jobs 1 vs --jobs {workers}",
+        seeds.len()
+    ));
+    let mut tiny = Config::default();
+    tiny.artifacts_dir = "native".into();
+    tiny.synth.side = 8;
+    tiny.partition.clients = 12;
+    tiny.partition.sizes = vec![40, 80];
+    tiny.partition.test_size = 48;
+    tiny.rounds = scen_rounds;
+    tiny.eval_every = scen_rounds;
+    tiny.algorithm = Algorithm::parse("paota").unwrap();
+    // The shared context (dataset synthesis, partition, probe) is a
+    // constant both modes pay once in real use — build it OUTSIDE the
+    // timed window and time `run_with_context` only, after a warmup, so
+    // the recorded speedup reflects scenario execution alone.
+    let mut ctx_cfg = tiny.clone();
+    ctx_cfg.perf.workers = 1; // isolate scenario-level parallelism
+    let campaign_ctx = TrainContext::new(&ctx_cfg).unwrap();
+    let make_campaign = |jobs: usize| {
+        let mut base = ctx_cfg.clone();
+        base.perf.campaign_jobs = jobs;
+        Campaign::new("bench", base).grid(vec![GridAxis::seeds(&seeds)])
+    };
+    let time_campaign = |jobs: usize| -> f64 {
+        make_campaign(jobs).run_with_context(&campaign_ctx).unwrap(); // warmup
+        let reps = if fast { 2 } else { 4 };
+        let mut total = 0.0f64;
+        for _ in 0..reps {
+            let campaign = make_campaign(jobs);
+            let t0 = Instant::now();
+            campaign.run_with_context(&campaign_ctx).unwrap();
+            total += t0.elapsed().as_secs_f64();
+        }
+        total / reps as f64
+    };
+    let serial_s = time_campaign(1);
+    let parallel_s = time_campaign(workers);
+    let campaign_speedup = serial_s / parallel_s.max(1e-12);
+    let scenarios_per_sec = seeds.len() as f64 / parallel_s.max(1e-12);
+    println!(
+        "campaign: serial {serial_s:.2}s, parallel {parallel_s:.2}s → {campaign_speedup:.2}x, \
+         {scenarios_per_sec:.2} scenarios/sec"
+    );
+
+    // 5. Parity vs PJRT (optional). -----------------------------------
+    let artifacts_dir = ModelRuntime::default_dir();
+    let parity = if artifacts_dir.join("manifest.txt").exists() {
+        section("parity: native vs PJRT (same geometry)");
+        let engine = Engine::cpu().unwrap();
+        let pjrt = ModelRuntime::load(&engine, &artifacts_dir).unwrap();
+        let pm = pjrt.manifest().clone();
+        let pi = inputs(&pm, 3);
+        let nat = NativeModel::new(pm.clone());
+        let bpar = Bench::new("parity");
+        let nt = bpar.iter("native_local_train", || {
+            std::hint::black_box(nat.local_train(&pi.w, &pi.xs, &pi.ys, 0.1).unwrap());
+        });
+        let pt = bpar.iter("pjrt_local_train", || {
+            std::hint::black_box(pjrt.local_train(&pi.w, &pi.xs, &pi.ys, 0.1).unwrap());
+        });
+        let ratio = secs(&nt) / secs(&pt).max(1e-12);
+        println!("parity/local_train native/pjrt: {ratio:.2}x  (≲2x ⇒ native quickstart default)");
+        Some(ratio)
+    } else {
+        eprintln!("parity: no AOT artifacts — ratio recorded as unavailable");
+        None
+    };
+
+    // BENCH_native.json --------------------------------------------------
+    let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_native.json".into());
+    let json = format!(
+        "{{\n  \"schema\": \"paota-bench-native/1\",\n  \"fast_mode\": {fast},\n  \
+         \"workers\": {workers},\n  \
+         \"geometry\": {{\"d_in\": {}, \"hidden\": {}, \"classes\": {}, \"dim\": {}, \
+         \"local_steps\": {}, \"batch\": {}, \"clients\": {}}},\n  \
+         \"kernel\": {{\"naive_local_train_s\": {}, \"tiled_local_train_s\": {}, \
+         \"local_train_speedup\": {}, \"naive_evaluate_s\": {}, \"tiled_evaluate_s\": {}, \
+         \"evaluate_speedup\": {}}},\n  \
+         \"pool\": {{\"batch_jobs\": {batch_jobs}, \"t_1worker_s\": {}, \"t_nworkers_s\": {}, \
+         \"speedup\": {}}},\n  \
+         \"end_to_end\": {{\"rounds\": {rounds}, \"seconds\": {}, \"rounds_per_sec\": {}}},\n  \
+         \"campaign\": {{\"scenarios\": {}, \"serial_s\": {}, \"parallel_s\": {}, \
+         \"speedup\": {}, \"scenarios_per_sec\": {}}},\n  \
+         \"parity\": {{\"available\": {}, \"local_train_native_over_pjrt\": {}}}\n}}\n",
+        m.d_in,
+        m.hidden,
+        m.classes,
+        m.dim,
+        m.local_steps,
+        m.batch,
+        m.clients,
+        jnum(secs(&naive_train)),
+        jnum(secs(&tiled_train)),
+        jnum(kernel_speedup),
+        jnum(secs(&naive_eval)),
+        jnum(secs(&tiled_eval)),
+        jnum(eval_speedup),
+        jnum(t1),
+        jnum(tn),
+        jnum(pool_speedup),
+        jnum(e2e),
+        jnum(rounds_per_sec),
+        seeds.len(),
+        jnum(serial_s),
+        jnum(parallel_s),
+        jnum(campaign_speedup),
+        jnum(scenarios_per_sec),
+        parity.is_some(),
+        parity.map_or("null".to_string(), jnum),
+    );
+    std::fs::write(&out_path, json).unwrap();
+    println!("\nwrote {out_path}");
+}

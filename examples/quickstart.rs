@@ -1,13 +1,21 @@
-//! Quickstart: the smallest end-to-end PAOTA run.
+//! Quickstart: the smallest end-to-end PAOTA run — **no toolchain, no
+//! artifacts**:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
+//! cargo run --release --offline --example quickstart
 //! ```
 //!
 //! Builds the paper's setting (K = 100 non-IID clients, ΔT = 8 s periodic
 //! aggregation, Rayleigh MAC at N₀ = −174 dBm/Hz), trains for 20 rounds,
 //! and prints the accuracy curve. Everything below the `fl::run` call is
 //! plain telemetry — that one call is the whole public API for a run.
+//!
+//! The default backend here is the pure-Rust reference kernel
+//! (`artifacts_dir = native`, register-tiled GEMM + the parallel train
+//! pool) so the example runs from a fresh checkout; the recorded
+//! native/PJRT parity ratio lives in BENCH_native.json (`make bench`,
+//! methodology in EXPERIMENTS.md). To run on the AOT PJRT artifacts
+//! instead: `make artifacts` and drop the `artifacts_dir` line below.
 
 use anyhow::Result;
 use paota::config::Config;
@@ -15,12 +23,17 @@ use paota::fl;
 
 fn main() -> Result<()> {
     let mut cfg = Config::default(); // = the paper's §IV-A setting
+    cfg.artifacts_dir = "native".into(); // zero-setup backend (see above)
     cfg.rounds = 20;
     cfg.eval_every = 2;
 
     println!(
-        "PAOTA quickstart: K={} clients, ΔT={}s, N0={} dBm/Hz, {} rounds",
-        cfg.partition.clients, cfg.delta_t, cfg.channel.n0_dbm_per_hz, cfg.rounds
+        "PAOTA quickstart: K={} clients, ΔT={}s, N0={} dBm/Hz, {} rounds, {} workers",
+        cfg.partition.clients,
+        cfg.delta_t,
+        cfg.channel.n0_dbm_per_hz,
+        cfg.rounds,
+        cfg.perf.workers
     );
 
     let run = fl::run(&cfg)?;

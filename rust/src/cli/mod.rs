@@ -83,6 +83,8 @@ HARNESS FLAGS:
     --out DIR            CSV output directory (default: results)
     --log-level L        debug|info|warn|error (or PAOTA_LOG env)
     --f-star-rounds N    centralized rounds for the F(w*) estimate (default 400)
+    --jobs N             run N campaign scenarios concurrently
+                         (alias for campaign_jobs; needs artifacts_dir=native)
 
 CONFIG KEYS (defaults = paper §IV-A):
     seed rounds algo delta_t latency_lo latency_hi latency_kind
@@ -93,12 +95,14 @@ CONFIG KEYS (defaults = paper §IV-A):
     dinkelbach_eps dinkelbach_iters l_smooth epsilon2
     bandwidth_hz n0 clients max_classes test_size sizes
     cells groups group_partitioner mixing mixing_every
-    group_ready_frac group_mix
+    group_ready_frac group_mix workers campaign_jobs
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
     (topology: cells>1 = hierarchical multi-cell; --algo air_fedga = grouped)
     (artifacts_dir=native selects the pure-Rust reference kernel)
+    (perf: workers = train-pool threads, default PAOTA_WORKERS or auto;
+     campaign_jobs/--jobs = concurrent scenarios — both bitwise-neutral)
 ",
         names.join("|")
     )
@@ -210,6 +214,15 @@ mod tests {
             assert!(h.contains(name), "help text missing {name}");
         }
         assert!(h.contains("aliases: localsgd, fedavg"), "{h}");
+    }
+
+    #[test]
+    fn jobs_flag_maps_to_campaign_jobs() {
+        let cli = parse(&args(&["fig4", "--jobs", "4", "--workers", "2"])).unwrap();
+        assert_eq!(cli.config.perf.campaign_jobs, 4);
+        assert_eq!(cli.config.perf.workers, 2);
+        // Zero is rejected at parse time (validation runs there).
+        assert!(parse(&args(&["run", "--jobs", "0"])).is_err());
     }
 
     #[test]

@@ -186,6 +186,34 @@ impl Default for TopologyConfig {
     }
 }
 
+/// Execution-parallelism knobs (`[perf]`): how hard the host machine is
+/// driven. **Neither knob affects numerics** — parallel execution is
+/// bitwise identical to serial (per-run RNG streams derive only from the
+/// config seed; see `runtime::pool` and `experiments::campaign`), so
+/// these are pure wall-clock levers and are *not* context-defining for
+/// campaigns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Worker threads in the local-training pool (1 = in-line
+    /// sequential execution). Default: the `PAOTA_WORKERS` environment
+    /// variable if set, else `min(available_parallelism, 8)`.
+    pub workers: usize,
+    /// Concurrent scenarios per campaign (`--jobs` on the CLI; 1 =
+    /// serial). Parallel campaigns require the thread-safe native
+    /// backend (`artifacts_dir = native`); on PJRT the setting degrades
+    /// to serial with a warning.
+    pub campaign_jobs: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        Self {
+            workers: crate::runtime::TrainPool::default_workers(),
+            campaign_jobs: 1,
+        }
+    }
+}
+
 /// Full experiment configuration. Field defaults reproduce the paper.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -255,6 +283,8 @@ pub struct Config {
     pub partition: PartitionConfig,
     /// Aggregation topology (cells / groups / inter-cell mixing).
     pub topology: TopologyConfig,
+    /// Execution parallelism (pool workers / campaign jobs).
+    pub perf: PerfConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -295,6 +325,7 @@ impl Default for Config {
             synth: SynthConfig::default(),
             partition: PartitionConfig::default(),
             topology: TopologyConfig::default(),
+            perf: PerfConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -334,6 +365,8 @@ impl Config {
             "mixing_every" => self.topology.mixing_every = p(key, value)?,
             "group_ready_frac" => self.topology.group_ready_frac = p(key, value)?,
             "group_mix" => self.topology.group_mix = p(key, value)?,
+            "workers" => self.perf.workers = p(key, value)?,
+            "campaign_jobs" | "jobs" => self.perf.campaign_jobs = p(key, value)?,
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -466,6 +499,12 @@ impl Config {
         if !(t.group_mix > 0.0 && t.group_mix <= 1.0) {
             bail!("group_mix must be in (0,1]");
         }
+        if self.perf.workers == 0 {
+            bail!("workers must be ≥ 1 (1 = sequential)");
+        }
+        if self.perf.campaign_jobs == 0 {
+            bail!("campaign_jobs must be ≥ 1 (1 = serial)");
+        }
         if t.cells > 1 && self.algorithm.name() == "air_fedga" {
             bail!(
                 "multi-cell topology drives a flat per-cell policy; nest grouped \
@@ -583,6 +622,8 @@ impl Config {
         kv("mixing_every", self.topology.mixing_every.to_string());
         kv("group_ready_frac", self.topology.group_ready_frac.to_string());
         kv("group_mix", self.topology.group_mix.to_string());
+        kv("workers", self.perf.workers.to_string());
+        kv("campaign_jobs", self.perf.campaign_jobs.to_string());
         kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
@@ -657,6 +698,30 @@ mod tests {
         let mut c = Config::default();
         c.eval_every = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn perf_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.set("workers", "3").unwrap();
+        c.set("campaign_jobs", "4").unwrap();
+        assert_eq!(c.perf.workers, 3);
+        assert_eq!(c.perf.campaign_jobs, 4);
+        // `--jobs` is the CLI-facing alias.
+        c.set("jobs", "2").unwrap();
+        assert_eq!(c.perf.campaign_jobs, 2);
+        c.validate().unwrap();
+        // Zero is rejected: 1 is the explicit "sequential/serial" value.
+        let mut c = Config::default();
+        c.set("workers", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("jobs", "0").unwrap();
+        assert!(c.validate().is_err());
+        // Defaults are sane and machine-derived.
+        let d = Config::default();
+        assert!(d.perf.workers >= 1);
+        assert_eq!(d.perf.campaign_jobs, 1);
     }
 
     #[test]
@@ -775,6 +840,8 @@ mod tests {
         c.set("group_ready_frac", "0.75").unwrap();
         c.set("group_mix", "0.4").unwrap();
         c.set("side", "12").unwrap();
+        c.set("workers", "5").unwrap();
+        c.set("jobs", "3").unwrap();
         c.set("latency_sigma", "0.9").unwrap();
         c.set("latency_ge_enter", "0.2").unwrap();
         c.set("latency_ge_exit", "0.4").unwrap();

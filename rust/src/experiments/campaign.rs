@@ -24,15 +24,32 @@
 //! ([`CurvesCsv`], [`RecordsCsv`]); figure-specific stdout tables are
 //! small observers next to their campaign declarations in
 //! [`crate::experiments`].
+//!
+//! # Parallel execution & observer replay
+//!
+//! Scenarios are independent given the shared context, so with
+//! `perf.campaign_jobs > 1` (CLI `--jobs N`) the engine fans them out
+//! over a pool of worker threads — requires the thread-safe native
+//! backend (`artifacts_dir = native`; a PJRT campaign degrades to serial
+//! with a warning). Determinism is preserved *exactly*: each run's RNG
+//! streams derive only from its own config seed, finished
+//! [`ScenarioResult`]s are buffered, and the [`RunObserver`] hooks are
+//! **replayed on the campaign thread in declaration order** once every
+//! run completed — `start(s₀), end(s₀), start(s₁), end(s₁), …` — so
+//! every CSV and stdout table is byte-identical to the serial path
+//! (covered by `tests/golden_seed.rs`). The only observable difference:
+//! under parallel execution `on_scenario_start` fires after the runs, at
+//! replay time, rather than just before each run starts.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::config::{Algorithm, Config};
 use crate::fl::{self, RunResult, TrainContext};
 use crate::metrics::{write_csv_lines, write_curves_csv, write_records_csv, Curve};
-use crate::runtime::Engine;
 
 /// A named config-delta: one run of a campaign.
 pub struct Scenario {
@@ -158,10 +175,11 @@ impl Campaign {
         self
     }
 
-    /// Build the shared context from the base config and run.
+    /// Build the shared context from the base config and run. Engine
+    /// construction is lazy ([`TrainContext::new`]): a native-backend
+    /// campaign never touches the PJRT path.
     pub fn run(self) -> Result<Vec<ScenarioResult>> {
-        let engine = Engine::cpu()?;
-        let ctx = TrainContext::build(&engine, &self.base)?;
+        let ctx = TrainContext::new(&self.base)?;
         self.run_with_context(&ctx)
     }
 
@@ -189,26 +207,121 @@ impl Campaign {
                 );
             }
         }
+
+        let mut jobs = self
+            .base
+            .perf
+            .campaign_jobs
+            .max(1)
+            .min(self.scenarios.len().max(1));
+        if jobs > 1 && !ctx.rt.is_native() {
+            crate::warn_!(
+                "campaign_jobs = {jobs} needs the thread-safe native backend \
+                 (artifacts_dir = native); the PJRT client is pinned to its \
+                 creating thread — running scenarios serially"
+            );
+            jobs = 1;
+        }
+
         let mut results = Vec::with_capacity(self.scenarios.len());
-        for scenario in &self.scenarios {
-            for obs in self.observers.iter_mut() {
-                obs.on_scenario_start(scenario)?;
+        if jobs > 1 {
+            // Runs complete in any order; observers are then REPLAYED on
+            // this thread in strict declaration order with the serial
+            // hook interleaving — start(s0), end(s0), start(s1), … — so
+            // every sink's output bytes match the serial path. The only
+            // observable difference: `on_scenario_start` fires at replay
+            // time, after the runs, not just before each run starts.
+            let runs = Self::run_scenarios_parallel(ctx, &self.scenarios, jobs);
+            for (scenario, run) in self.scenarios.iter().zip(runs) {
+                let run = run?;
+                for obs in self.observers.iter_mut() {
+                    obs.on_scenario_start(scenario)?;
+                }
+                for obs in self.observers.iter_mut() {
+                    obs.on_scenario_end(scenario, &run)?;
+                }
+                results.push(ScenarioResult {
+                    name: scenario.name.clone(),
+                    cfg: scenario.cfg.clone(),
+                    run,
+                });
             }
-            crate::info!("running {} ({} rounds)...", scenario.name, scenario.cfg.rounds);
-            let run = fl::run_with_context(ctx, &scenario.cfg)?;
-            for obs in self.observers.iter_mut() {
-                obs.on_scenario_end(scenario, &run)?;
+        } else {
+            // Serial: fail-fast, hooks fire as each scenario runs.
+            for scenario in &self.scenarios {
+                for obs in self.observers.iter_mut() {
+                    obs.on_scenario_start(scenario)?;
+                }
+                crate::info!("running {} ({} rounds)...", scenario.name, scenario.cfg.rounds);
+                let run = fl::run_with_context(ctx, &scenario.cfg)?;
+                for obs in self.observers.iter_mut() {
+                    obs.on_scenario_end(scenario, &run)?;
+                }
+                results.push(ScenarioResult {
+                    name: scenario.name.clone(),
+                    cfg: scenario.cfg.clone(),
+                    run,
+                });
             }
-            results.push(ScenarioResult {
-                name: scenario.name.clone(),
-                cfg: scenario.cfg.clone(),
-                run,
-            });
         }
         for obs in self.observers.iter_mut() {
             obs.on_campaign_end(&results)?;
         }
         Ok(results)
+    }
+
+    /// Fan the scenarios out over `jobs` worker threads sharing `ctx`
+    /// (native backend: `TrainContext` is `Sync` and the train pool
+    /// accepts concurrent batches). Work-steals by atomic index so long
+    /// and short scenarios pack; results land in declaration order.
+    ///
+    /// Fail-fast is approximate: a failed scenario stops workers from
+    /// *claiming* further scenarios (in-flight ones finish), and since
+    /// indices are claimed monotonically every unclaimed slot sits
+    /// strictly after some failed one — the replay loop therefore always
+    /// surfaces a real error, never a skipped-scenario placeholder.
+    fn run_scenarios_parallel(
+        ctx: &TrainContext,
+        scenarios: &[Scenario],
+        jobs: usize,
+    ) -> Vec<Result<RunResult>> {
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<Result<RunResult>>>> =
+            scenarios.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(scenario) = scenarios.get(i) else {
+                        break;
+                    };
+                    crate::info!(
+                        "running {} ({} rounds)...",
+                        scenario.name,
+                        scenario.cfg.rounds
+                    );
+                    let run = fl::run_with_context(ctx, &scenario.cfg);
+                    if run.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(run);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner().unwrap_or_else(|e| e.into_inner()).unwrap_or_else(|| {
+                    Err(anyhow::anyhow!(
+                        "scenario skipped: an earlier scenario failed"
+                    ))
+                })
+            })
+            .collect()
     }
 }
 

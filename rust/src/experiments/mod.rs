@@ -33,7 +33,6 @@ pub use campaign::{
 use crate::config::{Algorithm, Config};
 use crate::fl::{centralized, registry, RunResult, TrainContext};
 use crate::metrics::{format_table1, time_to_accuracy, write_csv_lines, Curve};
-use crate::runtime::Engine;
 
 /// Pretty label for a registered policy name (plots/tables).
 pub fn label(name: &str) -> String {
@@ -56,8 +55,7 @@ fn compared_scenarios(base: &Config) -> Vec<Scenario> {
 /// config's noise level (run once with `--n0 -174` and once with
 /// `--n0 -74` to reproduce 3a/3b).
 pub fn fig3(base: &Config, out_dir: &Path, f_star_rounds: usize) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, base)?;
+    let ctx = TrainContext::new(base)?;
 
     crate::info!("estimating F(w*) ({f_star_rounds} centralized rounds)...");
     let f_star = centralized::estimate_f_star(&ctx, base, f_star_rounds)? as f64;
@@ -81,8 +79,7 @@ pub fn fig3(base: &Config, out_dir: &Path, f_star_rounds: usize) -> Result<()> {
 /// **Fig. 4** — test accuracy vs communication rounds (4a) and vs
 /// training time (4b).
 pub fn fig4(base: &Config, out_dir: &Path) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, base)?;
+    let ctx = TrainContext::new(base)?;
 
     Campaign::new("fig4", base.clone())
         .scenarios(compared_scenarios(base))
@@ -96,8 +93,7 @@ pub fn fig4(base: &Config, out_dir: &Path) -> Result<()> {
 
 /// **Table I** — rounds & virtual time to target accuracies.
 pub fn table1(base: &Config, out_dir: &Path, targets: &[f64]) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, base)?;
+    let ctx = TrainContext::new(base)?;
 
     Campaign::new("table1", base.clone())
         .scenarios(compared_scenarios(base))
@@ -118,8 +114,7 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
     if which == "replicates" {
         return replicates_ablation(base, out_dir);
     }
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, base)?;
+    let ctx = TrainContext::new(base)?;
     let scenarios = ablation_scenarios(which, base)?;
 
     println!("# Ablation `{which}` — PAOTA variants");
@@ -138,8 +133,7 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
 /// [`MeanStdCurves`] sink emits mean ± std accuracy curves per
 /// algorithm. Three replicates by default (`--seed` shifts the set).
 fn replicates_ablation(base: &Config, out_dir: &Path) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, base)?;
+    let ctx = TrainContext::new(base)?;
     let seeds: Vec<u64> = (0..3).map(|i| base.seed + i).collect();
 
     println!("# Ablation `replicates` — {} seeds per algorithm", seeds.len());

@@ -297,7 +297,13 @@ pub struct ClientSlot {
 /// An FL algorithm, reduced to its decisions. Everything else — the round
 /// loop, the clock, client scheduling, batched training, telemetry — is
 /// the [`Coordinator`]'s.
-pub trait AggregationPolicy {
+///
+/// `Send` is a supertrait: multi-cell runners step one coordinator (and
+/// its policy) per worker thread when the backend allows it
+/// ([`crate::fl::topology::multi_cell`]). Policies are plain decision
+/// state — every built-in is trivially `Send`; a policy that needs
+/// thread-bound state should own it per call instead.
+pub trait AggregationPolicy: Send {
     /// Canonical registry name of this policy (tags [`RunResult`], debug
     /// logs and CSV filenames; see [`crate::fl::registry`]).
     fn name(&self) -> &str;

@@ -9,8 +9,9 @@
 //! queue, per-client base-model slots, the deterministic per-purpose RNG
 //! streams, the reusable AirComp stack/coefficient buffers, and the
 //! [`Telemetry`](coordinator::Telemetry) recorder; local training always
-//! fans out through [`TrainContext::train_many`] (the parallel PJRT
-//! pool). Policies only decide *who* uploads, *what* the server does with
+//! fans out through [`TrainContext::train_many`] (the backend-agnostic
+//! worker pool — per-thread PJRT engines or per-thread native models).
+//! Policies only decide *who* uploads, *what* the server does with
 //! the uploads, and *when* aggregation fires. Registered out of the box:
 //!
 //! * [`paota`]       — periodic semi-asynchronous AirComp with per-round
@@ -113,12 +114,20 @@ impl RunResult {
 
 /// Everything a trainer needs: the compiled runtime, the partitioned data,
 /// flattened eval tensors, and a fixed train-loss probe.
+///
+/// `TrainContext` is `Sync`: the native backend is thread-safe end to
+/// end, and the PJRT executables sit behind a thread-ownership guard
+/// ([`crate::runtime::ThreadBound`]) — parallel drivers (campaign
+/// scenario workers, concurrently stepped cells) check
+/// [`ModelRuntime::is_native`] and fall back to serial execution on
+/// PJRT, so the guard never trips.
 pub struct TrainContext {
     pub rt: ModelRuntime,
     pub partition: Partition,
     /// Parallel local-training pool (§Perf): participants' independent
-    /// `local_train` executions fan out over per-thread PJRT engines.
-    /// `None` when `PAOTA_WORKERS=1` or spawning failed (sequential path).
+    /// `local_train` executions fan out over per-thread backends (PJRT
+    /// engines or native models). `None` when `perf.workers = 1` or
+    /// spawning failed (sequential path).
     pub pool: Option<crate::runtime::TrainPool>,
     /// Seed the model init derives from (the config's master seed).
     pub init_seed: u64,
@@ -129,20 +138,49 @@ pub struct TrainContext {
     /// estimator of the global objective `F(w)` used by the Fig. 3 curves.
     pub probe_x: Vec<f32>,
     pub probe_y: Vec<f32>,
+    /// Keeps a [`TrainContext::new`]-built PJRT engine alive for the
+    /// lifetime of its compiled executables. `None` on the native
+    /// backend, or when the engine is owned externally
+    /// ([`TrainContext::build`]).
+    _engine: Option<crate::runtime::ThreadBound<Engine>>,
 }
 
 impl TrainContext {
-    /// Build data + runtime from a config. `engine` outlives the context.
+    /// Build a context straight from a config, constructing a PJRT
+    /// engine **only if the config needs one**: with
+    /// `artifacts_dir = native` no PJRT state is ever touched, so
+    /// native-only environments (CI, fresh checkouts) stay entirely on
+    /// the pure-Rust path.
+    pub fn new(cfg: &Config) -> Result<Self> {
+        if crate::runtime::is_native_dir(&cfg.artifacts_dir) {
+            Self::assemble(None, cfg)
+        } else {
+            let engine = Engine::cpu()?;
+            let mut ctx = Self::assemble(Some(&engine), cfg)?;
+            ctx._engine = Some(crate::runtime::ThreadBound::new(engine));
+            Ok(ctx)
+        }
+    }
+
+    /// Build data + runtime from a config on an externally owned engine
+    /// (`engine` must outlive the context).
     ///
     /// `artifacts_dir = native` selects the pure-Rust reference kernel
     /// (geometry derived from the config) instead of the AOT PJRT
-    /// artifacts — same API, no artifacts required.
+    /// artifacts — same API, no artifacts required. Prefer
+    /// [`TrainContext::new`], which skips engine construction entirely
+    /// on the native path.
     pub fn build(engine: &Engine, cfg: &Config) -> Result<Self> {
+        Self::assemble(Some(engine), cfg)
+    }
+
+    fn assemble(engine: Option<&Engine>, cfg: &Config) -> Result<Self> {
         cfg.validate()?;
         let native = crate::runtime::is_native_dir(&cfg.artifacts_dir);
         let rt = if native {
             ModelRuntime::native_for(cfg)?
         } else {
+            let engine = engine.context("internal: PJRT artifacts need an engine")?;
             ModelRuntime::load(engine, &cfg.artifacts_dir).context(
                 "loading AOT artifacts (run `make artifacts`, or set \
                  artifacts_dir=native for the pure-Rust reference kernel)",
@@ -190,11 +228,17 @@ impl TrainContext {
             probe_y[row * classes + pooled.y[i] as usize] = 1.0;
         }
 
-        let workers = crate::runtime::TrainPool::default_workers();
-        // The native reference kernel runs in-process and sequentially —
-        // no per-thread PJRT engines to spawn.
-        let pool = if workers > 1 && !native {
-            match crate::runtime::TrainPool::new(&cfg.artifacts_dir, workers) {
+        // Backend-agnostic fan-out: both model backends ride the same
+        // pool abstraction (per-thread PJRT engines / per-thread native
+        // models). `perf.workers = 1` keeps the in-line sequential path.
+        let workers = cfg.perf.workers.max(1);
+        let pool = if workers > 1 {
+            let built = if native {
+                crate::runtime::TrainPool::native(rt.manifest().clone(), workers)
+            } else {
+                crate::runtime::TrainPool::pjrt(&cfg.artifacts_dir, workers)
+            };
+            match built {
                 Ok(p) => Some(p),
                 Err(e) => {
                     crate::warn_!("train pool unavailable, running sequentially: {e:#}");
@@ -214,6 +258,7 @@ impl TrainContext {
             test_y,
             probe_x,
             probe_y,
+            _engine: None,
         })
     }
 
@@ -307,10 +352,10 @@ impl TrainContext {
     }
 }
 
-/// Run the algorithm selected by the config.
+/// Run the algorithm selected by the config. Engine construction is
+/// lazy: `artifacts_dir = native` never touches the PJRT path.
 pub fn run(cfg: &Config) -> Result<RunResult> {
-    let engine = Engine::cpu()?;
-    let ctx = TrainContext::build(&engine, cfg)?;
+    let ctx = TrainContext::new(cfg)?;
     run_with_context(&ctx, cfg)
 }
 
@@ -346,4 +391,35 @@ pub fn run_with_context(ctx: &TrainContext, cfg: &Config) -> Result<RunResult> {
 /// immediately buildable here; nothing in this module enumerates them.
 pub fn build_policy(ctx: &TrainContext, cfg: &Config) -> Result<Box<dyn AggregationPolicy>> {
     registry::build(cfg.algorithm.name(), ctx, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_context_is_sync_and_send() {
+        // The whole parallel execution layer (campaign scenario workers,
+        // concurrently stepped cells) rests on this bound; a new `!Sync`
+        // field would silently force everything back to serial.
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<TrainContext>();
+    }
+
+    #[test]
+    fn native_context_builds_without_any_engine() {
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = "native".into();
+        cfg.synth.side = 6;
+        cfg.partition.clients = 4;
+        cfg.partition.sizes = vec![20];
+        cfg.partition.test_size = 12;
+        cfg.perf.workers = 2;
+        let ctx = TrainContext::new(&cfg).unwrap();
+        assert!(ctx.rt.is_native());
+        assert!(ctx.pool.is_some(), "native pool should spawn at workers > 1");
+        cfg.perf.workers = 1;
+        let seq = TrainContext::new(&cfg).unwrap();
+        assert!(seq.pool.is_none());
+    }
 }

@@ -14,6 +14,15 @@
 //! and a **merged** stream (participant-weighted window stats; eval of
 //! the cloud model — the uniform mean of the cell models) makes
 //! hierarchical runs directly comparable to flat ones in campaigns.
+//!
+//! Parallelism: between mixing points the cells are fully independent —
+//! each owns its coordinator, policy and RNG streams. On the thread-safe
+//! native backend with `perf.workers > 1` every slot steps all cells
+//! **concurrently** (one scoped thread per cell; training jobs from all
+//! cells funnel into the one shared train pool), which is bitwise
+//! identical to the serial sweep because no state crosses cells until
+//! the runner mixes models after the step (`tests/golden_seed.rs`
+//! asserts the equivalence).
 
 use anyhow::{ensure, Result};
 
@@ -317,9 +326,28 @@ pub fn run_with_mixing(
     // a 1-cell run's merged stream IS its cell stream.
     let mut merged_tel = (n > 1).then(|| Telemetry::new(cfg.rounds, cfg.eval_every));
 
+    // Cells inside one slot are independent between mixing points; step
+    // them concurrently when the backend is thread-safe and the config
+    // asked for parallelism at all. Bitwise-identical either way.
+    let parallel_cells = n > 1 && ctx.rt.is_native() && cfg.perf.workers > 1;
+
     for round in 0..cfg.rounds {
-        for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
-            coord.step_periodic(policy.as_mut(), round)?;
+        if parallel_cells {
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::with_capacity(n);
+                for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
+                    let cell = scope.spawn(move || coord.step_periodic(policy.as_mut(), round));
+                    handles.push(cell);
+                }
+                for handle in handles {
+                    handle.join().expect("cell thread panicked")?;
+                }
+                Ok(())
+            })?;
+        } else {
+            for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
+                coord.step_periodic(policy.as_mut(), round)?;
+            }
         }
         if n > 1 && mixing.mixes_at(round) {
             let mut models: Vec<Vec<f32>> =

@@ -1,0 +1,465 @@
+//! Register-tiled f32 GEMM kernels for the native model backend
+//! (`runtime::native`) — the hot path of every `local_train`, `evaluate`
+//! and `grad_probe` call when `artifacts_dir = native`.
+//!
+//! # The bitwise-determinism contract: tile i/j, never k
+//!
+//! Every routine here computes exactly the same floating-point result,
+//! bit for bit, as the naive triple loop it replaced. That works because
+//! blocking is applied **only to output rows and columns** — independent
+//! elements — while each output element's reduction runs over its k
+//! (respectively i or j) index in the original ascending order, one
+//! partial sum per element, never split into tiles that would be
+//! re-combined. Splitting a reduction reassociates floating-point
+//! addition and changes low bits; splitting the *outputs* cannot.
+//! Concretely:
+//!
+//! * [`affine_into`]: `out[i][j]` accumulates `x[i][k]·w[k][j]` with k
+//!   ascending. Rows are processed four at a time so each `w` row is
+//!   loaded once per row block instead of once per row (¼ the memory
+//!   traffic on the skinny paper-geometry matrices), but the four rows
+//!   are four *independent* accumulators.
+//! * [`grad_affine_acc`]: `gw[k][j]` accumulates `a[i][k]·dz[i][j]` with
+//!   i ascending. The i-reduction is register-blocked four rows at a
+//!   time, and inside a block the four contributions are added to the
+//!   accumulator **sequentially in i order** (`t += c0; t += c1; …`,
+//!   never a pairwise tree), so the addition order is untouched.
+//! * [`backprop_relu_into`]: `dx[i][k]` reduces `dz[i][j]·w[k][j]` with
+//!   j ascending; four k-outputs share one pass over the `dz` row.
+//!
+//! The naive kernels also skipped multiply-accumulates whose left factor
+//! was exactly `0.0` (ReLU activations are ~half zeros, and `+= 0.0·w`
+//! is not a bitwise no-op on a `-0.0` accumulator). The blocked paths
+//! preserve those skips: a block whose four lane factors are all nonzero
+//! takes the branch-free fast path; any zero lane falls back to per-lane
+//! guarded updates in the same lane order.
+//!
+//! All routines write into **caller-provided buffers** — no allocation
+//! here; `runtime::native` owns per-thread scratch so steady-state
+//! training allocates nothing in the kernel.
+
+/// Dense affine map `out[n, d_out] = x[n, d_in] · w[d_in, d_out] + b`,
+/// with `w` row-major by input dimension (fan-in convention). `out` is
+/// fully overwritten.
+pub fn affine_into(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    assert_eq!(out.len(), n * d_out, "affine_into: out shape");
+    assert_eq!(x.len(), n * d_in, "affine_into: x shape");
+    assert_eq!(w.len(), d_in * d_out, "affine_into: w shape");
+    assert_eq!(b.len(), d_out, "affine_into: b shape");
+    if n == 0 || d_out == 0 {
+        return;
+    }
+    if d_in == 0 {
+        for row in out.chunks_exact_mut(d_out) {
+            row.copy_from_slice(b);
+        }
+        return;
+    }
+
+    let nb = n - n % 4;
+    let (x_blocks, x_tail) = x.split_at(nb * d_in);
+    let (out_blocks, out_tail) = out.split_at_mut(nb * d_out);
+    for (xb, ob) in x_blocks
+        .chunks_exact(4 * d_in)
+        .zip(out_blocks.chunks_exact_mut(4 * d_out))
+    {
+        let (x0, xr) = xb.split_at(d_in);
+        let (x1, xr) = xr.split_at(d_in);
+        let (x2, x3) = xr.split_at(d_in);
+        let (r0, or) = ob.split_at_mut(d_out);
+        let (r1, or) = or.split_at_mut(d_out);
+        let (r2, r3) = or.split_at_mut(d_out);
+        r0.copy_from_slice(b);
+        r1.copy_from_slice(b);
+        r2.copy_from_slice(b);
+        r3.copy_from_slice(b);
+        for (k, wr) in w.chunks_exact(d_out).enumerate() {
+            let (v0, v1, v2, v3) = (x0[k], x1[k], x2[k], x3[k]);
+            if v0 != 0.0 && v1 != 0.0 && v2 != 0.0 && v3 != 0.0 {
+                // Four independent output rows share one pass over wr.
+                for ((((o0, o1), o2), o3), &wv) in r0
+                    .iter_mut()
+                    .zip(r1.iter_mut())
+                    .zip(r2.iter_mut())
+                    .zip(r3.iter_mut())
+                    .zip(wr)
+                {
+                    *o0 += v0 * wv;
+                    *o1 += v1 * wv;
+                    *o2 += v2 * wv;
+                    *o3 += v3 * wv;
+                }
+            } else {
+                axpy_nonzero(r0, v0, wr);
+                axpy_nonzero(r1, v1, wr);
+                axpy_nonzero(r2, v2, wr);
+                axpy_nonzero(r3, v3, wr);
+            }
+        }
+    }
+    // Remainder rows: the original single-row loop.
+    for (xr_, orow) in x_tail
+        .chunks_exact(d_in)
+        .zip(out_tail.chunks_exact_mut(d_out))
+    {
+        orow.copy_from_slice(b);
+        for (k, wr) in w.chunks_exact(d_out).enumerate() {
+            axpy_nonzero(orow, xr_[k], wr);
+        }
+    }
+}
+
+/// `row += v · wr` unless `v == 0.0` (the naive kernels' skip, kept for
+/// bit-identity on `-0.0` accumulators and for ReLU-sparse inputs).
+#[inline]
+fn axpy_nonzero(row: &mut [f32], v: f32, wr: &[f32]) {
+    if v != 0.0 {
+        for (o, &wv) in row.iter_mut().zip(wr) {
+            *o += v * wv;
+        }
+    }
+}
+
+/// Accumulate the affine-layer weight/bias gradients:
+/// `gw[d_in, d_out] += aᵀ·dz` and `gb[d_out] += Σ_i dz[i]`, with the
+/// i-reduction of every output element running in ascending i order.
+pub fn grad_affine_acc(
+    gw: &mut [f32],
+    gb: &mut [f32],
+    a: &[f32],
+    dz: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    assert_eq!(gw.len(), d_in * d_out, "grad_affine_acc: gw shape");
+    assert_eq!(gb.len(), d_out, "grad_affine_acc: gb shape");
+    assert_eq!(a.len(), n * d_in, "grad_affine_acc: a shape");
+    assert_eq!(dz.len(), n * d_out, "grad_affine_acc: dz shape");
+    if n == 0 || d_out == 0 {
+        return;
+    }
+
+    // Bias gradient: i ascending (separated from the weight loop; the
+    // per-element accumulation order is identical to the fused original).
+    for dr in dz.chunks_exact(d_out) {
+        for (g, &dv) in gb.iter_mut().zip(dr) {
+            *g += dv;
+        }
+    }
+    if d_in == 0 {
+        return;
+    }
+
+    let nb = n - n % 4;
+    for (ab, db) in a[..nb * d_in]
+        .chunks_exact(4 * d_in)
+        .zip(dz[..nb * d_out].chunks_exact(4 * d_out))
+    {
+        let (a0, ar) = ab.split_at(d_in);
+        let (a1, ar) = ar.split_at(d_in);
+        let (a2, a3) = ar.split_at(d_in);
+        let (d0, dr) = db.split_at(d_out);
+        let (d1, dr) = dr.split_at(d_out);
+        let (d2, d3) = dr.split_at(d_out);
+        for (k, gr) in gw.chunks_exact_mut(d_out).enumerate() {
+            let (v0, v1, v2, v3) = (a0[k], a1[k], a2[k], a3[k]);
+            if v0 != 0.0 && v1 != 0.0 && v2 != 0.0 && v3 != 0.0 {
+                // One load/store of gr for four i contributions, added
+                // sequentially in i order (no pairwise tree).
+                for ((((g, &c0), &c1), &c2), &c3) in
+                    gr.iter_mut().zip(d0).zip(d1).zip(d2).zip(d3)
+                {
+                    let mut t = *g;
+                    t += v0 * c0;
+                    t += v1 * c1;
+                    t += v2 * c2;
+                    t += v3 * c3;
+                    *g = t;
+                }
+            } else {
+                axpy_nonzero(gr, v0, d0);
+                axpy_nonzero(gr, v1, d1);
+                axpy_nonzero(gr, v2, d2);
+                axpy_nonzero(gr, v3, d3);
+            }
+        }
+    }
+    // Remainder rows, i ascending after the blocks.
+    for (ar_, dr_) in a[nb * d_in..]
+        .chunks_exact(d_in)
+        .zip(dz[nb * d_out..].chunks_exact(d_out))
+    {
+        for (k, gr) in gw.chunks_exact_mut(d_out).enumerate() {
+            axpy_nonzero(gr, ar_[k], dr_);
+        }
+    }
+}
+
+/// Backprop through an affine layer and its preceding ReLU:
+/// `dx[n, d_in] = (dz[n, d_out] · wᵀ) ⊙ (a > 0)`, where `a` is the ReLU
+/// *output* that fed the layer. `dx` is fully overwritten (masked
+/// entries get `0.0`); each dot product runs over j ascending.
+pub fn backprop_relu_into(
+    dx: &mut [f32],
+    dz: &[f32],
+    w: &[f32],
+    a: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    assert_eq!(dx.len(), n * d_in, "backprop_relu_into: dx shape");
+    assert_eq!(dz.len(), n * d_out, "backprop_relu_into: dz shape");
+    assert_eq!(w.len(), d_in * d_out, "backprop_relu_into: w shape");
+    assert_eq!(a.len(), n * d_in, "backprop_relu_into: a shape");
+    if n == 0 || d_in == 0 {
+        return;
+    }
+    if d_out == 0 {
+        // Empty reduction: every (masked or not) entry is exactly 0.0.
+        dx.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+
+    let kb = d_in - d_in % 4;
+    for ((xrow, arow), dr) in dx
+        .chunks_exact_mut(d_in)
+        .zip(a.chunks_exact(d_in))
+        .zip(dz.chunks_exact(d_out))
+    {
+        let (xblk, xtail) = xrow.split_at_mut(kb);
+        let (ablk, atail) = arow.split_at(kb);
+        // Four k-outputs share one pass over the dz row.
+        for ((x4, a4), w4) in xblk
+            .chunks_exact_mut(4)
+            .zip(ablk.chunks_exact(4))
+            .zip(w[..kb * d_out].chunks_exact(4 * d_out))
+        {
+            let (w0, wr) = w4.split_at(d_out);
+            let (w1, wr) = wr.split_at(d_out);
+            let (w2, w3) = wr.split_at(d_out);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for ((((&dv, &u0), &u1), &u2), &u3) in dr.iter().zip(w0).zip(w1).zip(w2).zip(w3) {
+                s0 += dv * u0;
+                s1 += dv * u1;
+                s2 += dv * u2;
+                s3 += dv * u3;
+            }
+            x4[0] = if a4[0] <= 0.0 { 0.0 } else { s0 };
+            x4[1] = if a4[1] <= 0.0 { 0.0 } else { s1 };
+            x4[2] = if a4[2] <= 0.0 { 0.0 } else { s2 };
+            x4[3] = if a4[3] <= 0.0 { 0.0 } else { s3 };
+        }
+        // Remainder outputs: the original per-element dot product.
+        for ((x, &av), wr) in xtail
+            .iter_mut()
+            .zip(atail)
+            .zip(w[kb * d_out..].chunks_exact(d_out))
+        {
+            if av <= 0.0 {
+                *x = 0.0;
+            } else {
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in dr.iter().zip(wr) {
+                    acc += dv * wv;
+                }
+                *x = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    // Naive references — verbatim ports of the pre-tiling triple loops
+    // the blocked kernels must match bit for bit.
+
+    fn naive_affine(x: &[f32], w: &[f32], b: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * d_out];
+        for i in 0..n {
+            let row = &mut out[i * d_out..(i + 1) * d_out];
+            row.copy_from_slice(b);
+            let xr = &x[i * d_in..(i + 1) * d_in];
+            for (k, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in row.iter_mut().zip(wr) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        out
+    }
+
+    fn naive_grad_affine(
+        a: &[f32],
+        dz: &[f32],
+        n: usize,
+        d_in: usize,
+        d_out: usize,
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) {
+        for i in 0..n {
+            let ar = &a[i * d_in..(i + 1) * d_in];
+            let dr = &dz[i * d_out..(i + 1) * d_out];
+            for (g, &dv) in gb.iter_mut().zip(dr) {
+                *g += dv;
+            }
+            for (k, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let gr = &mut gw[k * d_out..(k + 1) * d_out];
+                for (g, &dv) in gr.iter_mut().zip(dr) {
+                    *g += av * dv;
+                }
+            }
+        }
+    }
+
+    fn naive_backprop(
+        dz: &[f32],
+        w: &[f32],
+        a: &[f32],
+        n: usize,
+        d_in: usize,
+        d_out: usize,
+    ) -> Vec<f32> {
+        let mut dx = vec![0.0f32; n * d_in];
+        for i in 0..n {
+            let dr = &dz[i * d_out..(i + 1) * d_out];
+            let ar = &a[i * d_in..(i + 1) * d_in];
+            let xr = &mut dx[i * d_in..(i + 1) * d_in];
+            for (k, x) in xr.iter_mut().enumerate() {
+                if ar[k] <= 0.0 {
+                    continue;
+                }
+                let wr = &w[k * d_out..(k + 1) * d_out];
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in dr.iter().zip(wr) {
+                    acc += dv * wv;
+                }
+                *x = acc;
+            }
+        }
+        dx
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Random case with zeros scattered in (the ReLU regime) plus a few
+    /// `-0.0` bias entries to pin the skip semantics.
+    fn case(n: usize, d_in: usize, d_out: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * d_in];
+        rng.fill_normal(&mut x, 1.0);
+        for v in x.iter_mut() {
+            if *v < -0.4 {
+                *v = 0.0; // sparse lanes exercise the guarded path
+            }
+        }
+        let mut w = vec![0.0f32; d_in * d_out];
+        rng.fill_normal(&mut w, 0.5);
+        let mut b = vec![0.0f32; d_out];
+        rng.fill_normal(&mut b, 0.1);
+        if !b.is_empty() {
+            b[0] = -0.0;
+        }
+        (x, w, b)
+    }
+
+    #[test]
+    fn affine_matches_naive_bitwise_over_odd_shapes() {
+        for &(n, d_in, d_out) in &[(1, 3, 2), (4, 8, 10), (5, 7, 3), (9, 784, 10), (6, 1, 1)] {
+            let (x, w, b) = case(n, d_in, d_out, 7 + n as u64);
+            let want = naive_affine(&x, &w, &b, n, d_in, d_out);
+            let mut got = vec![f32::NAN; n * d_out]; // must be fully overwritten
+            affine_into(&mut got, &x, &w, &b, n, d_in, d_out);
+            assert_eq!(bits(&got), bits(&want), "n={n} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn grad_affine_matches_naive_bitwise() {
+        for &(n, d_in, d_out) in &[(1, 2, 3), (4, 10, 10), (7, 784, 10), (8, 5, 4)] {
+            let (a, _, _) = case(n, d_in, d_out, 31 + n as u64);
+            let mut rng = Rng::new(91 + n as u64);
+            let mut dz = vec![0.0f32; n * d_out];
+            rng.fill_normal(&mut dz, 0.3);
+            let mut gw_want = vec![0.0f32; d_in * d_out];
+            let mut gb_want = vec![-0.0f32; d_out];
+            naive_grad_affine(&a, &dz, n, d_in, d_out, &mut gw_want, &mut gb_want);
+            let mut gw = vec![0.0f32; d_in * d_out];
+            let mut gb = vec![-0.0f32; d_out];
+            grad_affine_acc(&mut gw, &mut gb, &a, &dz, n, d_in, d_out);
+            assert_eq!(bits(&gw), bits(&gw_want), "gw n={n} d_in={d_in} d_out={d_out}");
+            assert_eq!(bits(&gb), bits(&gb_want), "gb n={n}");
+        }
+    }
+
+    #[test]
+    fn grad_affine_accumulates_on_top_of_existing_gradient() {
+        let (a, _, _) = case(4, 6, 3, 5);
+        let mut rng = Rng::new(6);
+        let mut dz = vec![0.0f32; 4 * 3];
+        rng.fill_normal(&mut dz, 0.3);
+        let mut gw_want = vec![0.25f32; 6 * 3];
+        let mut gb_want = vec![0.5f32; 3];
+        naive_grad_affine(&a, &dz, 4, 6, 3, &mut gw_want, &mut gb_want);
+        let mut gw = vec![0.25f32; 6 * 3];
+        let mut gb = vec![0.5f32; 3];
+        grad_affine_acc(&mut gw, &mut gb, &a, &dz, 4, 6, 3);
+        assert_eq!(bits(&gw), bits(&gw_want));
+        assert_eq!(bits(&gb), bits(&gb_want));
+    }
+
+    #[test]
+    fn backprop_matches_naive_bitwise_and_masks_nonpositive() {
+        for &(n, d_in, d_out) in &[(1, 4, 2), (3, 10, 10), (5, 9, 3), (2, 13, 7)] {
+            let mut rng = Rng::new(17 + n as u64);
+            let mut a = vec![0.0f32; n * d_in];
+            rng.fill_normal(&mut a, 1.0);
+            for v in a.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0; // ReLU output: zeros must mask
+                }
+            }
+            let mut dz = vec![0.0f32; n * d_out];
+            rng.fill_normal(&mut dz, 0.4);
+            let mut w = vec![0.0f32; d_in * d_out];
+            rng.fill_normal(&mut w, 0.5);
+            let want = naive_backprop(&dz, &w, &a, n, d_in, d_out);
+            let mut got = vec![f32::NAN; n * d_in]; // fully overwritten incl. masked
+            backprop_relu_into(&mut got, &dz, &w, &a, n, d_in, d_out);
+            assert_eq!(bits(&got), bits(&want), "n={n} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes_are_safe() {
+        let mut out: Vec<f32> = Vec::new();
+        affine_into(&mut out, &[], &[], &[], 0, 0, 0);
+        let mut gw: Vec<f32> = Vec::new();
+        let mut gb: Vec<f32> = Vec::new();
+        grad_affine_acc(&mut gw, &mut gb, &[], &[], 0, 0, 0);
+        let mut dx: Vec<f32> = Vec::new();
+        backprop_relu_into(&mut dx, &[], &[], &[], 0, 0, 0);
+    }
+}

@@ -1,15 +1,24 @@
-//! Dense linear algebra substrate (f64), hand-rolled for the offline build.
+//! Dense linear algebra substrate, hand-rolled for the offline build.
 //!
-//! Exactly what the paper's power-control pipeline (§III-B) needs:
+//! Two layers live here:
 //!
-//! * [`Matrix`] — small dense row-major matrix with the usual ops.
-//! * [`cholesky`] — `G = LLᵀ`, giving the nonsingular `M₁ = Lᵀ` with
-//!   `G = M₁ᵀM₁` used by the Dinkelbach transform (eq. (28)).
-//! * [`jacobi_eigen`] — cyclic Jacobi eigendecomposition of a symmetric
-//!   matrix, giving the orthogonal `M₂` with `M₂ᵀSM₂ = N = diag(nᵢ)`
-//!   (eq. (29)).
-//! * [`lu_solve`] / [`Matrix::inverse`] — for `M⁻¹z` in problem P4.
+//! * **f64 factorizations** ([`matrix`]) — exactly what the paper's
+//!   power-control pipeline (§III-B) needs:
+//!   * [`Matrix`] — small dense row-major matrix with the usual ops.
+//!   * [`cholesky`] — `G = LLᵀ`, giving the nonsingular `M₁ = Lᵀ` with
+//!     `G = M₁ᵀM₁` used by the Dinkelbach transform (eq. (28)).
+//!   * [`jacobi_eigen`] — cyclic Jacobi eigendecomposition of a symmetric
+//!     matrix, giving the orthogonal `M₂` with `M₂ᵀSM₂ = N = diag(nᵢ)`
+//!     (eq. (29)).
+//!   * [`lu_solve`] / [`Matrix::inverse`] — for `M⁻¹z` in problem P4.
+//!
+//! * **f32 GEMM kernels** ([`gemm`]) — the register-tiled, zero-alloc
+//!   affine/gradient/backprop routines behind the native model backend's
+//!   hot path, blocked over output rows/columns only so results stay
+//!   bit-identical to the naive triple loops (see the module docs for
+//!   the "tile i/j, never k" contract).
 
+pub mod gemm;
 pub mod matrix;
 
 pub use matrix::{cholesky, jacobi_eigen, lu_solve, Matrix};

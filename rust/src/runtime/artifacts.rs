@@ -125,16 +125,22 @@ pub struct EvalOut {
     pub accuracy: f32,
 }
 
+/// The four compiled PJRT entry points. `!Send` (the executables are
+/// `Rc`-backed), hence held behind [`super::ThreadBound`] so the runtime
+/// — and everything holding it — is `Sync` while PJRT use stays pinned
+/// to its creating thread.
+struct PjrtExecs {
+    local_train: Exec,
+    evaluate: Exec,
+    aggregate: Exec,
+    grad_probe: Exec,
+}
+
 /// The execution backend behind a [`ModelRuntime`]: AOT-compiled PJRT
 /// executables (the default) or the pure-Rust reference kernel
 /// ([`super::native`], selected with `artifacts_dir = native`).
 enum Backend {
-    Pjrt {
-        local_train: Exec,
-        evaluate: Exec,
-        aggregate: Exec,
-        grad_probe: Exec,
-    },
+    Pjrt(super::ThreadBound<PjrtExecs>),
     Native(super::native::NativeModel),
 }
 
@@ -153,12 +159,12 @@ impl ModelRuntime {
         };
         Ok(Self {
             manifest,
-            backend: Backend::Pjrt {
+            backend: Backend::Pjrt(super::ThreadBound::new(PjrtExecs {
                 local_train: load("local_train")?,
                 evaluate: load("evaluate")?,
                 aggregate: load("aggregate")?,
                 grad_probe: load("grad_probe")?,
-            },
+            })),
         })
     }
 
@@ -202,6 +208,14 @@ impl ModelRuntime {
         &self.manifest
     }
 
+    /// Whether this runtime runs the pure-Rust reference kernel. The
+    /// native backend is `Send + Sync`; the parallel campaign and
+    /// multi-cell paths require it (PJRT is pinned to its creating
+    /// thread) and fall back to serial execution otherwise.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native(_))
+    }
+
     /// M local SGD steps: `w ← w − η ∇F_k(w; D_k^τ)` for τ = 1..M.
     ///
     /// `xs` is `[M, B, d_in]` flat, `ys` is `[M, B, classes]` flat one-hot.
@@ -213,7 +227,7 @@ impl ModelRuntime {
         self.check_len("local_train.ys", ys, m.local_steps * m.batch * m.classes)?;
         let exec = match &self.backend {
             Backend::Native(nm) => return nm.local_train(w, xs, ys, lr),
-            Backend::Pjrt { local_train, .. } => local_train,
+            Backend::Pjrt(execs) => &execs.get().local_train,
         };
         let lr_v = [lr];
         let out = exec.run(&[
@@ -237,7 +251,7 @@ impl ModelRuntime {
         self.check_len("evaluate.y", y, m.eval_size * m.classes)?;
         let exec = match &self.backend {
             Backend::Native(nm) => return nm.evaluate(w, x, y),
-            Backend::Pjrt { evaluate, .. } => evaluate,
+            Backend::Pjrt(execs) => &execs.get().evaluate,
         };
         let out = exec.run(&[
             Input::new(w, &[m.dim as i64]),
@@ -260,7 +274,7 @@ impl ModelRuntime {
         self.check_len("aggregate.noise", noise, m.dim)?;
         let exec = match &self.backend {
             Backend::Native(nm) => return nm.aggregate(w_stack, coef, noise),
-            Backend::Pjrt { aggregate, .. } => aggregate,
+            Backend::Pjrt(execs) => &execs.get().aggregate,
         };
         let out = exec.run(&[
             Input::new(w_stack, &[m.clients as i64, m.dim as i64]),
@@ -279,7 +293,7 @@ impl ModelRuntime {
         self.check_len("grad_probe.y", y, m.probe_batch * m.classes)?;
         let exec = match &self.backend {
             Backend::Native(nm) => return nm.grad_probe(w, x, y),
-            Backend::Pjrt { grad_probe, .. } => grad_probe,
+            Backend::Pjrt(execs) => &execs.get().grad_probe,
         };
         let out = exec.run(&[
             Input::new(w, &[m.dim as i64]),

@@ -11,16 +11,29 @@
 //!   (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
 //!   `execute`), flat `f32` in/out.
 //! * [`native`] — a pure-Rust reference kernel implementing the same four
-//!   entry points in-process; selected with `artifacts_dir = native` so
-//!   artifact-free environments (CI, fresh checkouts) still run the full
-//!   coordinator stack, including the golden-seed equivalence suite.
+//!   entry points in-process on the register-tiled
+//!   [`crate::linalg::gemm`] routines; selected with
+//!   `artifacts_dir = native` so artifact-free environments (CI, fresh
+//!   checkouts) still run the full coordinator stack. `Send + Sync` —
+//!   the thread-safe backend every parallel execution path requires.
 //! * [`artifacts`] — the manifest parser plus [`artifacts::ModelRuntime`],
 //!   the typed façade the FL layer calls (`local_train`, `evaluate`,
 //!   `aggregate`, `grad_probe`), dispatching to either backend.
+//! * [`pool`] — the backend-agnostic worker pool fanning out
+//!   `local_train` jobs across threads (per-thread PJRT engines or
+//!   per-thread native models), safe to drive from several threads at
+//!   once.
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`): each worker thread builds its
-//! own [`pjrt::Engine`]. Compilation of the paper-scale artifacts takes
-//! milliseconds, so per-thread engines are cheap.
+//! # Thread ownership
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`). Pool workers therefore build
+//! their own [`pjrt::Engine`] each (compilation of the paper-scale
+//! artifacts takes milliseconds). The façade-level executables are held
+//! behind [`ThreadBound`], which makes the containing types `Sync` for
+//! the parallel campaign/multi-cell machinery while enforcing at runtime
+//! that PJRT is only ever *used* from the thread that built it — those
+//! parallel paths check [`artifacts::ModelRuntime::is_native`] first and
+//! fall back to serial execution on the PJRT backend.
 
 pub mod artifacts;
 pub mod native;
@@ -36,4 +49,117 @@ pub use pool::TrainPool;
 /// kernel instead of on-disk AOT artifacts.
 pub fn is_native_dir(dir: &std::path::Path) -> bool {
     dir.as_os_str() == "native"
+}
+
+/// Moves a `!Send` value (the PJRT client/executables) behind a
+/// thread-ownership check so the *containing* type can be `Sync`.
+///
+/// Every access goes through [`ThreadBound::get`], which panics when
+/// called from any thread other than the one that constructed the
+/// value, and [`Drop`] only runs the inner destructor on the owner
+/// thread — an off-thread drop **leaks** the value (with a loud
+/// warning) rather than racing the non-atomic `Rc` refcounts inside
+/// the PJRT client. The parallel execution paths never hit either
+/// guard: they gate on [`artifacts::ModelRuntime::is_native`], so a
+/// PJRT-backed context is shareable but only ever *used* (and dropped)
+/// serially, from its creating thread.
+pub struct ThreadBound<T> {
+    value: std::mem::ManuallyDrop<T>,
+    owner: std::thread::ThreadId,
+}
+
+impl<T> ThreadBound<T> {
+    pub fn new(value: T) -> Self {
+        Self {
+            value: std::mem::ManuallyDrop::new(value),
+            owner: std::thread::current().id(),
+        }
+    }
+
+    /// The inner value. Panics off the owner thread.
+    pub fn get(&self) -> &T {
+        assert!(
+            std::thread::current().id() == self.owner,
+            "PJRT backend touched from a non-owner thread — parallel \
+             execution requires `artifacts_dir = native`"
+        );
+        &self.value
+    }
+}
+
+impl<T> Drop for ThreadBound<T> {
+    fn drop(&mut self) {
+        if std::thread::current().id() == self.owner {
+            // SAFETY: dropped exactly once, here, on the owner thread.
+            unsafe { std::mem::ManuallyDrop::drop(&mut self.value) }
+        } else {
+            // Dropping an Rc-backed PJRT value off its owner thread
+            // would race the refcounts; leaking is the only sound exit.
+            crate::warn_!(
+                "ThreadBound value dropped off its owner thread — leaking \
+                 it (move PJRT-backed contexts back to their creating \
+                 thread, or use artifacts_dir = native)"
+            );
+        }
+    }
+}
+
+// SAFETY: the inner value is only reachable through `get`, and the
+// destructor only runs through `Drop` — both check that the calling
+// thread is the constructing thread (off-thread drop leaks instead), so
+// the `!Send` inner value is never touched from any other thread.
+unsafe impl<T> Send for ThreadBound<T> {}
+unsafe impl<T> Sync for ThreadBound<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_bound_serves_its_owner_thread() {
+        let tb = ThreadBound::new(41);
+        assert_eq!(*tb.get() + 1, 42);
+    }
+
+    #[test]
+    fn thread_bound_panics_off_thread() {
+        let tb = ThreadBound::new(7);
+        let caught = std::thread::scope(|s| {
+            s.spawn(|| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| *tb.get())).is_err()
+            })
+            .join()
+            .unwrap()
+        });
+        assert!(caught, "off-thread access must panic");
+        assert_eq!(*tb.get(), 7); // owner still fine
+    }
+
+    #[test]
+    fn thread_bound_off_thread_drop_leaks_instead_of_running_destructor() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        struct NoisyDrop(Arc<AtomicBool>);
+        impl Drop for NoisyDrop {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+
+        let dropped = Arc::new(AtomicBool::new(false));
+        let tb = ThreadBound::new(NoisyDrop(Arc::clone(&dropped)));
+        std::thread::scope(|s| {
+            s.spawn(move || drop(tb));
+        });
+        assert!(
+            !dropped.load(Ordering::SeqCst),
+            "inner destructor must not run off the owner thread"
+        );
+
+        // On-thread drop still runs the destructor.
+        let dropped_here = Arc::new(AtomicBool::new(false));
+        drop(ThreadBound::new(NoisyDrop(Arc::clone(&dropped_here))));
+        assert!(dropped_here.load(Ordering::SeqCst));
+    }
 }

@@ -19,12 +19,30 @@
 //! not float-identical to the PJRT backend — which is all the
 //! equivalence suite needs, since it compares two drivers over the *same*
 //! backend.
+//!
+//! # Execution model (§Perf)
+//!
+//! The hot path runs on the register-tiled GEMM kernels in
+//! [`crate::linalg::gemm`] (blocked over output rows/columns only, so
+//! every bit matches the naive triple loops they replaced — see that
+//! module's "tile i/j, never k" contract) over **per-thread scratch
+//! buffers**: after warm-up a `local_train`/`evaluate`/`grad_probe` call
+//! allocates nothing but its returned output. Scratch is `thread_local`,
+//! which keeps [`NativeModel`] `Send + Sync` — the backend-agnostic
+//! [`super::pool::TrainPool`], parallel campaigns and concurrent
+//! multi-cell stepping all drive it from several threads at once, each
+//! thread on its own buffers.
+
+use std::cell::RefCell;
 
 use anyhow::{ensure, Result};
 
+use crate::linalg::gemm;
+
 use super::artifacts::{EvalOut, Manifest, TrainOut};
 
-/// The in-process model backend.
+/// The in-process model backend. Stateless apart from its geometry
+/// (scratch is per-thread), hence freely shared across threads.
 pub struct NativeModel {
     m: Manifest,
 }
@@ -57,25 +75,45 @@ fn split<'a>(m: &Manifest, w: &'a [f32]) -> Params<'a> {
     }
 }
 
-/// `out[n, d_out] = x[n, d_in] · w[d_in, d_out] + b` (w row-major by
-/// input dimension, matching the init layout's fan-in convention).
-fn affine(x: &[f32], w: &[f32], b: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * d_out];
-    for i in 0..n {
-        let row = &mut out[i * d_out..(i + 1) * d_out];
-        row.copy_from_slice(b);
-        let xr = &x[i * d_in..(i + 1) * d_in];
-        for (k, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[k * d_out..(k + 1) * d_out];
-            for (o, &wv) in row.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
+/// Reusable per-thread buffers for the forward/backward pass. Grow-only,
+/// sized for the largest row count seen on this thread, so steady-state
+/// training performs zero allocations inside the kernel.
+#[derive(Default)]
+struct Scratch {
+    a1: Vec<f32>,
+    a2: Vec<f32>,
+    logits: Vec<f32>,
+    dz3: Vec<f32>,
+    dz2: Vec<f32>,
+    dz1: Vec<f32>,
+    g: Vec<f32>,
+    w: Vec<f32>,
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
     }
-    out
+}
+
+impl Scratch {
+    fn ensure(&mut self, m: &Manifest, rows: usize) {
+        grow(&mut self.a1, rows * m.hidden);
+        grow(&mut self.a2, rows * m.hidden);
+        grow(&mut self.logits, rows * m.classes);
+        grow(&mut self.dz3, rows * m.classes);
+        grow(&mut self.dz2, rows * m.hidden);
+        grow(&mut self.dz1, rows * m.hidden);
+        grow(&mut self.g, m.dim);
+        grow(&mut self.w, m.dim);
+    }
+}
+
+thread_local! {
+    /// One scratch set per thread: pool workers, parallel campaign
+    /// scenarios and concurrently stepped cells never contend, and
+    /// `NativeModel` itself stays `Sync`.
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
 }
 
 fn relu(z: &mut [f32]) {
@@ -86,15 +124,16 @@ fn relu(z: &mut [f32]) {
     }
 }
 
-/// Softmax cross-entropy over `logits[n, c]` against one-hot `y`.
-/// Returns `(mean loss, d_logits = (p − y)/n)`.
-fn softmax_ce(logits: &[f32], y: &[f32], n: usize, c: usize) -> (f32, Vec<f32>) {
-    let mut d = vec![0.0f32; n * c];
+/// Softmax cross-entropy over `logits[n, c]` against one-hot `y`, with
+/// `d_logits = (p − y)/n` written into the caller's `d` buffer.
+/// Returns the mean loss.
+fn softmax_ce_into(logits: &[f32], y: &[f32], n: usize, c: usize, d: &mut [f32]) -> f32 {
     let mut loss = 0.0f64;
-    for i in 0..n {
-        let lr = &logits[i * c..(i + 1) * c];
-        let yr = &y[i * c..(i + 1) * c];
-        let dr = &mut d[i * c..(i + 1) * c];
+    for ((lr, yr), dr) in logits
+        .chunks_exact(c)
+        .zip(y.chunks_exact(c))
+        .zip(d.chunks_exact_mut(c))
+    {
         let max = lr.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let mut sum = 0.0f32;
         for (dv, &lv) in dr.iter_mut().zip(lr) {
@@ -110,65 +149,7 @@ fn softmax_ce(logits: &[f32], y: &[f32], n: usize, c: usize) -> (f32, Vec<f32>) 
             *dv = (p - yv) / n as f32;
         }
     }
-    ((loss / n as f64) as f32, d)
-}
-
-/// Accumulate `gw += aᵀ·dz` and `gb += Σ_i dz_i` for one affine layer.
-fn grad_affine(
-    a: &[f32],
-    dz: &[f32],
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-    gw: &mut [f32],
-    gb: &mut [f32],
-) {
-    for i in 0..n {
-        let ar = &a[i * d_in..(i + 1) * d_in];
-        let dr = &dz[i * d_out..(i + 1) * d_out];
-        for (g, &dv) in gb.iter_mut().zip(dr) {
-            *g += dv;
-        }
-        for (k, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let gr = &mut gw[k * d_out..(k + 1) * d_out];
-            for (g, &dv) in gr.iter_mut().zip(dr) {
-                *g += av * dv;
-            }
-        }
-    }
-}
-
-/// `dx[n, d_in] = (dz[n, d_out] · wᵀ) ⊙ (a > 0)` — backprop through an
-/// affine layer and its preceding ReLU (whose output was `a`).
-fn backprop_masked(
-    dz: &[f32],
-    w: &[f32],
-    a: &[f32],
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-) -> Vec<f32> {
-    let mut dx = vec![0.0f32; n * d_in];
-    for i in 0..n {
-        let dr = &dz[i * d_out..(i + 1) * d_out];
-        let ar = &a[i * d_in..(i + 1) * d_in];
-        let xr = &mut dx[i * d_in..(i + 1) * d_in];
-        for (k, x) in xr.iter_mut().enumerate() {
-            if ar[k] <= 0.0 {
-                continue;
-            }
-            let wr = &w[k * d_out..(k + 1) * d_out];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in dr.iter().zip(wr) {
-                acc += dv * wv;
-            }
-            *x = acc;
-        }
-    }
-    dx
+    (loss / n as f64) as f32
 }
 
 fn argmax(v: &[f32]) -> usize {
@@ -186,80 +167,112 @@ impl NativeModel {
         Self { m }
     }
 
-    fn logits(&self, w: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-        let p = split(&self.m, w);
+    /// Forward pass over `n` rows into the scratch activations
+    /// (`s.a1`, `s.a2`, `s.logits`; each `[..n*width]` fully overwritten).
+    fn forward(&self, s: &mut Scratch, w: &[f32], x: &[f32], n: usize) {
         let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
-        let mut a1 = affine(x, p.w1, p.b1, n, d, h);
-        relu(&mut a1);
-        let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
-        relu(&mut a2);
-        affine(&a2, p.w3, p.b3, n, h, c)
+        let p = split(&self.m, w);
+        let Scratch { a1, a2, logits, .. } = s;
+        gemm::affine_into(&mut a1[..n * h], x, p.w1, p.b1, n, d, h);
+        relu(&mut a1[..n * h]);
+        gemm::affine_into(&mut a2[..n * h], &a1[..n * h], p.w2, p.b2, n, h, h);
+        relu(&mut a2[..n * h]);
+        gemm::affine_into(&mut logits[..n * c], &a2[..n * h], p.w3, p.b3, n, h, c);
     }
 
-    /// Mean softmax-CE loss and full flat gradient on one batch.
-    fn loss_and_grad(&self, w: &[f32], x: &[f32], y: &[f32], n: usize) -> (f32, Vec<f32>) {
-        let p = split(&self.m, w);
+    /// Mean softmax-CE loss on one batch; the full flat gradient is left
+    /// in `s.g[..dim]` (fully overwritten).
+    fn loss_and_grad_into(&self, s: &mut Scratch, w: &[f32], x: &[f32], y: &[f32], n: usize) -> f32 {
+        self.forward(s, w, x, n);
         let (d, h, c) = (self.m.d_in, self.m.hidden, self.m.classes);
-        let mut a1 = affine(x, p.w1, p.b1, n, d, h);
-        relu(&mut a1);
-        let mut a2 = affine(&a1, p.w2, p.b2, n, h, h);
-        relu(&mut a2);
-        let logits = affine(&a2, p.w3, p.b3, n, h, c);
-        let (loss, dz3) = softmax_ce(&logits, y, n, c);
+        let p = split(&self.m, w);
+        let Scratch {
+            a1,
+            a2,
+            logits,
+            dz3,
+            dz2,
+            dz1,
+            g,
+            ..
+        } = s;
+        let loss = softmax_ce_into(&logits[..n * c], y, n, c, &mut dz3[..n * c]);
 
-        let mut g = vec![0.0f32; self.m.dim];
-        {
-            let (gw1, rest) = g.split_at_mut(d * h);
-            let (gb1, rest) = rest.split_at_mut(h);
-            let (gw2, rest) = rest.split_at_mut(h * h);
-            let (gb2, rest) = rest.split_at_mut(h);
-            let (gw3, gb3) = rest.split_at_mut(h * c);
-            grad_affine(&a2, &dz3, n, h, c, gw3, gb3);
-            let dz2 = backprop_masked(&dz3, p.w3, &a2, n, h, c);
-            grad_affine(&a1, &dz2, n, h, h, gw2, gb2);
-            let dz1 = backprop_masked(&dz2, p.w2, &a1, n, h, h);
-            grad_affine(x, &dz1, n, d, h, gw1, gb1);
-        }
-        (loss, g)
+        let g = &mut g[..self.m.dim];
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let (gw1, rest) = g.split_at_mut(d * h);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, rest) = rest.split_at_mut(h * h);
+        let (gb2, rest) = rest.split_at_mut(h);
+        let (gw3, gb3) = rest.split_at_mut(h * c);
+        gemm::grad_affine_acc(gw3, gb3, &a2[..n * h], &dz3[..n * c], n, h, c);
+        gemm::backprop_relu_into(&mut dz2[..n * h], &dz3[..n * c], p.w3, &a2[..n * h], n, h, c);
+        gemm::grad_affine_acc(gw2, gb2, &a1[..n * h], &dz2[..n * h], n, h, h);
+        gemm::backprop_relu_into(&mut dz1[..n * h], &dz2[..n * h], p.w2, &a1[..n * h], n, h, h);
+        gemm::grad_affine_acc(gw1, gb1, x, &dz1[..n * h], n, d, h);
+        loss
+    }
+
+    /// Mean loss + owned flat gradient (diagnostics/tests; the training
+    /// loop uses [`NativeModel::loss_and_grad_into`] without the copy).
+    fn loss_and_grad(&self, w: &[f32], x: &[f32], y: &[f32], n: usize) -> (f32, Vec<f32>) {
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.ensure(&self.m, n);
+            let loss = self.loss_and_grad_into(s, w, x, y, n);
+            (loss, s.g[..self.m.dim].to_vec())
+        })
     }
 
     /// M local SGD steps; `xs`/`ys` hold the M pre-sampled minibatches.
     pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<TrainOut> {
         let m = &self.m;
         let b = m.batch;
-        let mut w_cur = w.to_vec();
-        let mut loss_sum = 0.0f64;
-        for step in 0..m.local_steps {
-            let x = &xs[step * b * m.d_in..(step + 1) * b * m.d_in];
-            let y = &ys[step * b * m.classes..(step + 1) * b * m.classes];
-            let (loss, g) = self.loss_and_grad(&w_cur, x, y, b);
-            loss_sum += f64::from(loss);
-            for (wv, gv) in w_cur.iter_mut().zip(&g) {
-                *wv -= lr * gv;
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.ensure(m, b);
+            // The evolving weights live outside the scratch borrow so the
+            // gradient pass can read them while writing scratch.
+            let mut w_cur = std::mem::take(&mut s.w);
+            w_cur[..m.dim].copy_from_slice(w);
+            let mut loss_sum = 0.0f64;
+            for step in 0..m.local_steps {
+                let x = &xs[step * b * m.d_in..(step + 1) * b * m.d_in];
+                let y = &ys[step * b * m.classes..(step + 1) * b * m.classes];
+                let loss = self.loss_and_grad_into(s, &w_cur[..m.dim], x, y, b);
+                loss_sum += f64::from(loss);
+                for (wv, gv) in w_cur[..m.dim].iter_mut().zip(&s.g[..m.dim]) {
+                    *wv -= lr * gv;
+                }
             }
-        }
-        Ok(TrainOut {
-            weights: w_cur,
-            loss: (loss_sum / m.local_steps as f64) as f32,
+            let out = TrainOut {
+                weights: w_cur[..m.dim].to_vec(),
+                loss: (loss_sum / m.local_steps as f64) as f32,
+            };
+            s.w = w_cur;
+            Ok(out)
         })
     }
 
     /// Test loss + accuracy over the baked eval-set shape.
     pub fn evaluate(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<EvalOut> {
         let (n, c) = (self.m.eval_size, self.m.classes);
-        let logits = self.logits(w, x, n);
-        let (loss, _d) = softmax_ce(&logits, y, n, c);
-        let mut correct = 0usize;
-        for i in 0..n {
-            let lr = &logits[i * c..(i + 1) * c];
-            let yr = &y[i * c..(i + 1) * c];
-            if argmax(lr) == argmax(yr) {
-                correct += 1;
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.ensure(&self.m, n);
+            self.forward(s, w, x, n);
+            let Scratch { logits, dz3, .. } = s;
+            let loss = softmax_ce_into(&logits[..n * c], y, n, c, &mut dz3[..n * c]);
+            let mut correct = 0usize;
+            for (lr, yr) in logits[..n * c].chunks_exact(c).zip(y.chunks_exact(c)) {
+                if argmax(lr) == argmax(yr) {
+                    correct += 1;
+                }
             }
-        }
-        Ok(EvalOut {
-            loss,
-            accuracy: correct as f32 / n as f32,
+            Ok(EvalOut {
+                loss,
+                accuracy: correct as f32 / n as f32,
+            })
         })
     }
 
@@ -385,6 +398,40 @@ mod tests {
     }
 
     #[test]
+    fn repeated_calls_reuse_scratch_and_stay_deterministic() {
+        // The per-thread scratch must be invisible: same inputs → same
+        // bits on every call, including after a *larger* model resized the
+        // buffers in between.
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let rows = m.local_steps * m.batch;
+        let (w, xs, ys) = random_case(&m, rows, 21);
+        let first = nm.local_train(&w, &xs, &ys, 0.1).unwrap();
+
+        let mut big = tiny_manifest();
+        big.d_in = 9;
+        big.eval_size = 11;
+        big.dim = big.d_in * big.hidden
+            + big.hidden
+            + big.hidden * big.hidden
+            + big.hidden
+            + big.hidden * big.classes
+            + big.classes;
+        let other = NativeModel::new(big.clone());
+        let (bw, bx, by) = random_case(&big, big.eval_size, 3);
+        other.evaluate(&bw, &bx, &by).unwrap();
+
+        let again = nm.local_train(&w, &xs, &ys, 0.1).unwrap();
+        assert_eq!(first.loss.to_bits(), again.loss.to_bits());
+        let same = first
+            .weights
+            .iter()
+            .zip(&again.weights)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "scratch reuse perturbed the weights");
+    }
+
+    #[test]
     fn aggregate_is_the_coef_weighted_mean() {
         let m = tiny_manifest();
         let nm = NativeModel::new(m.clone());
@@ -435,5 +482,11 @@ mod tests {
         assert_eq!(nm.grad_probe(&w, &x, &y).unwrap().len(), m.dim);
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0); // ties break low
+    }
+
+    #[test]
+    fn native_model_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeModel>();
     }
 }

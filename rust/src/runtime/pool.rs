@@ -1,62 +1,142 @@
-//! Parallel local-training pool (§Perf, L3).
+//! Backend-agnostic parallel local-training pool (§Perf, L3).
 //!
 //! ~84% of a PAOTA round is the participants' `local_train` executions,
-//! which are independent — but `PjRtClient` is `Rc`-backed (not `Send`),
-//! so the pool spawns N worker threads that each build their *own* PJRT
-//! engine and compile the `local_train` artifact once. Jobs are
-//! distributed over a shared channel; results carry the submission index
-//! so callers get deterministic, order-preserving output regardless of
-//! completion order (bit-identical to the sequential path: each job's
-//! numerics are self-contained).
+//! which are independent. The pool spawns N worker threads, each owning
+//! its **own backend instance**:
 //!
-//! Worker count defaults to `min(available_parallelism, 8)`; set
-//! `PAOTA_WORKERS=1` to force the sequential path (used by the perf bench
+//! * **PJRT** ([`TrainPool::pjrt`]) — `PjRtClient` is `Rc`-backed (not
+//!   `Send`), so every worker builds its own engine and compiles the
+//!   `local_train` artifact once (milliseconds at paper scale).
+//! * **Native** ([`TrainPool::native`]) — the pure-Rust
+//!   [`NativeModel`](super::NativeModel) is `Send + Sync` and carries
+//!   only its geometry; each worker gets a clone and its own
+//!   thread-local scratch buffers.
+//!
+//! # Execution model
+//!
+//! Jobs flow through one shared MPMC-style channel; each
+//! [`TrainPool::run_batch`] call carries its **own reply channel**, so
+//! the pool is safe to drive from several threads at once (parallel
+//! campaign scenarios, concurrently stepped cells) without results
+//! crossing between batches — `TrainPool` is `Sync`. Results carry the
+//! submission index, so callers get deterministic, order-preserving
+//! output regardless of completion order: the parallel path is
+//! **bit-identical** to the sequential one because each job's numerics
+//! are self-contained (covered by `tests/golden_seed.rs`).
+//!
+//! Worker count comes from the `[perf]` config section
+//! (`Config::perf.workers`); its default is `PAOTA_WORKERS` or
+//! `min(available_parallelism, 8)` — set `workers = 1` (or
+//! `PAOTA_WORKERS=1`) to force the sequential path (the perf bench does,
 //! to measure the speedup).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use super::artifacts::TrainOut;
-use super::pjrt::{Engine, Input};
+use super::artifacts::{Manifest, TrainOut};
+use super::native::NativeModel;
+use super::pjrt::{Engine, Exec, Input};
 
-/// One local-training job.
+/// One local-training job, with the reply channel of the batch it
+/// belongs to.
 struct Job {
     idx: usize,
     w: Vec<f32>,
     xs: Vec<f32>,
     ys: Vec<f32>,
     lr: f32,
+    reply: Sender<JobResult>,
 }
 
-/// Worker → caller result.
+/// Worker → batch-owner result.
 struct JobResult {
     idx: usize,
     out: Result<TrainOut>,
 }
 
-/// A pool of PJRT workers dedicated to the `local_train` artifact.
+/// What a worker thread builds its model from.
+#[derive(Clone)]
+enum Backend {
+    /// Compile `local_train.hlo.txt` from this directory on a fresh
+    /// per-thread engine.
+    Pjrt { dir: PathBuf, m: Manifest },
+    /// Instantiate the in-process reference kernel at this geometry.
+    Native(Manifest),
+}
+
+/// A worker's ready-to-run model.
+enum WorkerModel {
+    Pjrt {
+        // Engine must outlive the executable it compiled.
+        _engine: Engine,
+        exe: Exec,
+        m: Manifest,
+    },
+    Native(NativeModel),
+}
+
+impl WorkerModel {
+    fn build(backend: Backend) -> Result<Self> {
+        match backend {
+            Backend::Native(m) => Ok(WorkerModel::Native(NativeModel::new(m))),
+            Backend::Pjrt { dir, m } => {
+                let engine = Engine::cpu()?;
+                let exe = engine
+                    .load_hlo_text(&dir.join("local_train.hlo.txt"))
+                    .context("pool worker compiling local_train")?;
+                Ok(WorkerModel::Pjrt {
+                    _engine: engine,
+                    exe,
+                    m,
+                })
+            }
+        }
+    }
+
+    fn train(&self, job: &Job) -> Result<TrainOut> {
+        match self {
+            WorkerModel::Native(nm) => nm.local_train(&job.w, &job.xs, &job.ys, job.lr),
+            WorkerModel::Pjrt { exe, m, .. } => {
+                let lr_v = [job.lr];
+                let got = exe.run(&[
+                    Input::new(&job.w, &[m.dim as i64]),
+                    Input::new(
+                        &job.xs,
+                        &[m.local_steps as i64, m.batch as i64, m.d_in as i64],
+                    ),
+                    Input::new(
+                        &job.ys,
+                        &[m.local_steps as i64, m.batch as i64, m.classes as i64],
+                    ),
+                    Input::new(&lr_v, &[]),
+                ])?;
+                anyhow::ensure!(got.len() == 2, "local_train arity");
+                let loss = *got[1].first().context("local_train loss scalar")?;
+                Ok(TrainOut {
+                    weights: got.into_iter().next().unwrap(),
+                    loss,
+                })
+            }
+        }
+    }
+}
+
+/// A pool of worker threads dedicated to `local_train` jobs, on either
+/// model backend. `Sync`: concurrent [`TrainPool::run_batch`] calls are
+/// safe and never mix results.
 pub struct TrainPool {
-    jobs: Sender<Job>,
-    results: Receiver<JobResult>,
+    jobs: Mutex<Sender<Job>>,
     workers: usize,
     _threads: Vec<std::thread::JoinHandle<()>>,
 }
 
-/// Geometry a worker needs to validate/shape inputs.
-#[derive(Clone, Copy)]
-struct Geom {
-    dim: usize,
-    local_steps: usize,
-    batch: usize,
-    d_in: usize,
-    classes: usize,
-}
-
 impl TrainPool {
-    /// Number of workers chosen for this machine (≥ 1).
+    /// Default worker count for this machine (≥ 1): `PAOTA_WORKERS` if
+    /// set, else `min(available_parallelism, 8)`. This seeds the `[perf]`
+    /// config section's `workers` default.
     pub fn default_workers() -> usize {
         if let Ok(v) = std::env::var("PAOTA_WORKERS") {
             if let Ok(n) = v.parse::<usize>() {
@@ -69,102 +149,41 @@ impl TrainPool {
     }
 
     /// Spawn `workers` threads, each compiling `local_train.hlo.txt` from
-    /// `artifacts_dir` on its own engine.
-    pub fn new(artifacts_dir: &std::path::Path, workers: usize) -> Result<Self> {
-        let manifest = super::Manifest::load(artifacts_dir)?;
-        let geom = Geom {
-            dim: manifest.dim,
-            local_steps: manifest.local_steps,
-            batch: manifest.batch,
-            d_in: manifest.d_in,
-            classes: manifest.classes,
-        };
+    /// `artifacts_dir` on its own PJRT engine.
+    pub fn pjrt(artifacts_dir: &Path, workers: usize) -> Result<Self> {
+        let m = Manifest::load(artifacts_dir)?;
+        Self::spawn(
+            Backend::Pjrt {
+                dir: artifacts_dir.to_path_buf(),
+                m,
+            },
+            workers,
+        )
+    }
+
+    /// Spawn `workers` threads on the pure-Rust reference kernel at the
+    /// given geometry (no artifacts, no PJRT).
+    pub fn native(manifest: Manifest, workers: usize) -> Result<Self> {
+        manifest.validate()?;
+        Self::spawn(Backend::Native(manifest), workers)
+    }
+
+    fn spawn(backend: Backend, workers: usize) -> Result<Self> {
         let workers = workers.max(1);
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let (res_tx, res_rx) = channel::<JobResult>();
-
         let mut threads = Vec::with_capacity(workers);
-        let dir: PathBuf = artifacts_dir.to_path_buf();
         for worker_id in 0..workers {
             let job_rx = Arc::clone(&job_rx);
-            let res_tx = res_tx.clone();
-            let dir = dir.clone();
+            let backend = backend.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("paota-train-{worker_id}"))
-                .spawn(move || {
-                    // Each worker owns its engine + executable.
-                    let built = (|| -> Result<_> {
-                        let engine = Engine::cpu()?;
-                        let exe = engine
-                            .load_hlo_text(&dir.join("local_train.hlo.txt"))
-                            .context("pool worker compiling local_train")?;
-                        Ok((engine, exe))
-                    })();
-                    let (_engine, exe) = match built {
-                        Ok(pair) => pair,
-                        Err(e) => {
-                            // Surface the failure on the first job instead
-                            // of dying silently.
-                            while let Ok(job) = job_rx.lock().unwrap().recv() {
-                                let _ = res_tx.send(JobResult {
-                                    idx: job.idx,
-                                    out: Err(anyhow::anyhow!(
-                                        "pool worker failed to initialize: {e:#}"
-                                    )),
-                                });
-                            }
-                            return;
-                        }
-                    };
-                    loop {
-                        let job = match job_rx.lock().unwrap().recv() {
-                            Ok(j) => j,
-                            Err(_) => return, // pool dropped
-                        };
-                        let out = (|| -> Result<TrainOut> {
-                            let lr_v = [job.lr];
-                            let got = exe.run(&[
-                                Input::new(&job.w, &[geom.dim as i64]),
-                                Input::new(
-                                    &job.xs,
-                                    &[
-                                        geom.local_steps as i64,
-                                        geom.batch as i64,
-                                        geom.d_in as i64,
-                                    ],
-                                ),
-                                Input::new(
-                                    &job.ys,
-                                    &[
-                                        geom.local_steps as i64,
-                                        geom.batch as i64,
-                                        geom.classes as i64,
-                                    ],
-                                ),
-                                Input::new(&lr_v, &[]),
-                            ])?;
-                            anyhow::ensure!(got.len() == 2, "local_train arity");
-                            let loss = *got[1]
-                                .first()
-                                .context("local_train loss scalar")?;
-                            Ok(TrainOut {
-                                weights: got.into_iter().next().unwrap(),
-                                loss,
-                            })
-                        })();
-                        if res_tx.send(JobResult { idx: job.idx, out }).is_err() {
-                            return;
-                        }
-                    }
-                })
+                .spawn(move || worker_loop(backend, &job_rx))
                 .context("spawning pool worker")?;
             threads.push(handle);
         }
-
         Ok(Self {
-            jobs: job_tx,
-            results: res_rx,
+            jobs: Mutex::new(job_tx),
             workers,
             _threads: threads,
         })
@@ -175,24 +194,66 @@ impl TrainPool {
     }
 
     /// Run a batch of local-training jobs; returns outputs in submission
-    /// order. Inputs are `(w, xs, ys)` with the artifact's fixed shapes.
+    /// order, bit-identical to running them sequentially. Inputs are
+    /// `(w, xs, ys)` with the backend's fixed shapes. Callable
+    /// concurrently from several threads: every batch collects on its
+    /// own private reply channel.
     pub fn run_batch(
         &self,
         jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
         lr: f32,
     ) -> Result<Vec<TrainOut>> {
         let n = jobs.len();
-        for (idx, (w, xs, ys)) in jobs.into_iter().enumerate() {
-            self.jobs
-                .send(Job { idx, w, xs, ys, lr })
-                .context("pool submit (workers died?)")?;
+        let (reply_tx, reply_rx) = channel::<JobResult>();
+        {
+            let tx = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            for (idx, (w, xs, ys)) in jobs.into_iter().enumerate() {
+                tx.send(Job {
+                    idx,
+                    w,
+                    xs,
+                    ys,
+                    lr,
+                    reply: reply_tx.clone(),
+                })
+                .map_err(|_| anyhow!("pool submit (workers died?)"))?;
+            }
         }
+        drop(reply_tx);
         let mut out: Vec<Option<TrainOut>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            let res = self.results.recv().context("pool collect")?;
+            let res = reply_rx.recv().context("pool collect (worker died?)")?;
             out[res.idx] = Some(res.out?);
         }
-        Ok(out.into_iter().map(|o| o.unwrap()).collect())
+        Ok(out.into_iter().map(|o| o.expect("every index replied")).collect())
+    }
+}
+
+/// Worker body: build the backend model once, then serve jobs until the
+/// pool (the job sender) is dropped. A failed build surfaces the error on
+/// every subsequently received job instead of dying silently.
+fn worker_loop(backend: Backend, jobs: &Mutex<Receiver<Job>>) {
+    let recv = || -> Option<Job> {
+        jobs.lock().unwrap_or_else(|e| e.into_inner()).recv().ok()
+    };
+    let model = match WorkerModel::build(backend) {
+        Ok(model) => model,
+        Err(e) => {
+            let msg = format!("pool worker failed to initialize: {e:#}");
+            while let Some(job) = recv() {
+                let _ = job.reply.send(JobResult {
+                    idx: job.idx,
+                    out: Err(anyhow!("{msg}")),
+                });
+            }
+            return;
+        }
+    };
+    while let Some(job) = recv() {
+        let out = model.train(&job);
+        // A dropped reply receiver means that batch's owner bailed early
+        // (e.g. on another job's error) — keep serving other batches.
+        let _ = job.reply.send(JobResult { idx: job.idx, out });
     }
 }
 
@@ -212,7 +273,7 @@ mod tests {
         }
     }
 
-    fn job(m: &crate::runtime::Manifest, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    fn job(m: &Manifest, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut w = vec![0.0f32; m.dim];
         rng.fill_normal(&mut w, 0.05);
         let mut xs = vec![0.0f32; m.local_steps * m.batch * m.d_in];
@@ -224,13 +285,28 @@ mod tests {
         (w, xs, ys)
     }
 
+    fn tiny_manifest() -> Manifest {
+        let (d, h, c) = (6usize, 10usize, 3usize);
+        Manifest {
+            d_in: d,
+            hidden: h,
+            classes: c,
+            dim: d * h + h + h * h + h + h * c + c,
+            local_steps: 2,
+            batch: 4,
+            clients: 5,
+            eval_size: 6,
+            probe_batch: 4,
+        }
+    }
+
     #[test]
     fn pool_matches_sequential_runtime_bitwise() {
         let Some(dir) = artifacts() else { return };
         let engine = Engine::cpu().unwrap();
         let rt = ModelRuntime::load(&engine, &dir).unwrap();
         let m = rt.manifest().clone();
-        let pool = TrainPool::new(&dir, 3).unwrap();
+        let pool = TrainPool::pjrt(&dir, 3).unwrap();
 
         let mut rng = Rng::new(42);
         let jobs: Vec<_> = (0..7).map(|_| job(&m, &mut rng)).collect();
@@ -252,7 +328,7 @@ mod tests {
         let engine = Engine::cpu().unwrap();
         let rt = ModelRuntime::load(&engine, &dir).unwrap();
         let m = rt.manifest().clone();
-        let pool = TrainPool::new(&dir, 4).unwrap();
+        let pool = TrainPool::pjrt(&dir, 4).unwrap();
 
         // Jobs with distinct, recognizable losses (different label layouts).
         let mut rng = Rng::new(7);
@@ -273,7 +349,7 @@ mod tests {
     #[test]
     fn single_worker_pool_works() {
         let Some(dir) = artifacts() else { return };
-        let pool = TrainPool::new(&dir, 1).unwrap();
+        let pool = TrainPool::pjrt(&dir, 1).unwrap();
         assert_eq!(pool.workers(), 1);
         let engine = Engine::cpu().unwrap();
         let rt = ModelRuntime::load(&engine, &dir).unwrap();
@@ -282,5 +358,66 @@ mod tests {
         let out = pool.run_batch(vec![job(&m, &mut rng)], 0.1).unwrap();
         assert_eq!(out.len(), 1);
         assert!(out[0].loss.is_finite());
+    }
+
+    #[test]
+    fn native_pool_matches_sequential_kernel_bitwise() {
+        // Runs everywhere (no artifacts needed): the native backend of
+        // the same pool must be bit-identical to in-line execution.
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let pool = TrainPool::native(m.clone(), 3).unwrap();
+        let mut rng = Rng::new(11);
+        let jobs: Vec<_> = (0..9).map(|_| job(&m, &mut rng)).collect();
+        let seq: Vec<TrainOut> = jobs
+            .iter()
+            .map(|(w, xs, ys)| nm.local_train(w, xs, ys, 0.1).unwrap())
+            .collect();
+        let par = pool.run_batch(jobs, 0.1).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(&par) {
+            assert_eq!(s.loss.to_bits(), p.loss.to_bits());
+            let same = s
+                .weights
+                .iter()
+                .zip(&p.weights)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "pool path drifted from the sequential kernel");
+        }
+    }
+
+    #[test]
+    fn native_pool_serves_concurrent_batches_without_crossing() {
+        // Two threads drive the SAME pool at once; each batch must get
+        // exactly its own results (per-batch reply channels).
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let pool = TrainPool::native(m.clone(), 2).unwrap();
+        let mut rng_a = Rng::new(100);
+        let mut rng_b = Rng::new(200);
+        let jobs_a: Vec<_> = (0..6).map(|_| job(&m, &mut rng_a)).collect();
+        let jobs_b: Vec<_> = (0..5).map(|_| job(&m, &mut rng_b)).collect();
+        let want_a: Vec<f32> = jobs_a
+            .iter()
+            .map(|(w, xs, ys)| nm.local_train(w, xs, ys, 0.1).unwrap().loss)
+            .collect();
+        let want_b: Vec<f32> = jobs_b
+            .iter()
+            .map(|(w, xs, ys)| nm.local_train(w, xs, ys, 0.1).unwrap().loss)
+            .collect();
+        let (got_a, got_b) = std::thread::scope(|s| {
+            let ha = s.spawn(|| pool.run_batch(jobs_a, 0.1).unwrap());
+            let hb = s.spawn(|| pool.run_batch(jobs_b, 0.1).unwrap());
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        let losses = |v: Vec<TrainOut>| v.into_iter().map(|t| t.loss).collect::<Vec<_>>();
+        assert_eq!(losses(got_a), want_a);
+        assert_eq!(losses(got_b), want_b);
+    }
+
+    #[test]
+    fn train_pool_is_sync() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<TrainPool>();
     }
 }

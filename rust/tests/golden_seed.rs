@@ -626,6 +626,225 @@ fn one_cell_one_group_hierarchy_is_bitwise_flat_paota() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Parallel ≡ serial: the perf layer must be bitwise invisible. Runs on
+// the native backend everywhere (no artifacts needed). CI re-runs this
+// group with PAOTA_WORKERS=2 (`cargo test --test golden_seed parallel`).
+// ---------------------------------------------------------------------
+
+/// A small native-backend config regardless of whether AOT artifacts are
+/// present (the parallel suite wants the thread-safe backend).
+fn native_cfg(algo: &str) -> Config {
+    let mut c = Config::default();
+    c.algorithm = Algorithm::parse(algo).unwrap();
+    c.rounds = 4;
+    c.eval_every = 2;
+    c.artifacts_dir = "native".into();
+    c.synth.side = 8; // d_in = 64
+    c.partition.clients = 12;
+    c.partition.sizes = vec![40, 80];
+    c.partition.test_size = 32;
+    c
+}
+
+fn assert_records_bitwise(tag: &str, got: &fl::RunResult, want: &fl::RunResult) {
+    assert_eq!(got.final_weights.len(), want.final_weights.len(), "{tag}");
+    let same = got
+        .final_weights
+        .iter()
+        .zip(&want.final_weights)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(same, "{tag}: final weights drifted");
+    assert_eq!(got.records.len(), want.records.len(), "{tag}");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        let t = format!("{tag} round {}", b.round);
+        assert_eq!(a.round, b.round, "{t}");
+        assert_eq!(a.participants, b.participants, "{t}");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{t}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{t}");
+        assert_eq!(a.mean_staleness.to_bits(), b.mean_staleness.to_bits(), "{t}");
+        assert_eq!(a.mean_power.to_bits(), b.mean_power.to_bits(), "{t}");
+        assert_eq!(a.probe_loss.map(f32::to_bits), b.probe_loss.map(f32::to_bits), "{t}");
+        match (a.eval, b.eval) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{t}");
+                assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{t}");
+            }
+            _ => panic!("{t}: eval cadence drifted"),
+        }
+    }
+}
+
+#[test]
+fn parallel_native_train_many_is_bitwise_serial() {
+    // The same job batch through a 1-worker (in-line) context and a
+    // multi-worker pool context must produce identical bits in order.
+    let mut serial = native_cfg("paota");
+    serial.perf.workers = 1;
+    let mut par = serial.clone();
+    par.perf.workers = 4;
+    let ctx1 = TrainContext::new(&serial).unwrap();
+    let ctx4 = TrainContext::new(&par).unwrap();
+    assert!(ctx1.pool.is_none());
+    assert!(ctx4.pool.is_some());
+
+    let m = ctx1.rt.manifest().clone();
+    let mut rng = Rng::new(9);
+    let w0 = ctx1.init_weights();
+    let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..9)
+        .map(|i| {
+            let (xs, ys) = ctx1.partition.clients[i % ctx1.clients()].sample_batches(
+                m.local_steps,
+                m.batch,
+                &mut rng,
+            );
+            (w0.clone(), xs, ys)
+        })
+        .collect();
+    let a = ctx1.train_many(jobs.clone(), 0.1).unwrap();
+    let b = ctx4.train_many(jobs, 0.1).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        let same = x
+            .weights
+            .iter()
+            .zip(&y.weights)
+            .all(|(p, q)| p.to_bits() == q.to_bits());
+        assert!(same, "pooled training drifted from sequential");
+    }
+}
+
+#[test]
+fn parallel_native_full_run_matches_serial_bitwise() {
+    // Whole-run equivalence: workers = 1 vs workers = 4 configs differ
+    // only in the perf section, so records and weights must be bitwise
+    // identical for every policy timing class.
+    for algo in ["paota", "local_sgd", "fedasync"] {
+        let mut serial = native_cfg(algo);
+        serial.perf.workers = 1;
+        let mut par = serial.clone();
+        par.perf.workers = 4;
+        let ctx1 = TrainContext::new(&serial).unwrap();
+        let ctx4 = TrainContext::new(&par).unwrap();
+        let a = fl::run_with_context(&ctx1, &serial).unwrap();
+        let b = fl::run_with_context(&ctx4, &par).unwrap();
+        assert_records_bitwise(&format!("{algo} workers=4 vs 1"), &b, &a);
+    }
+}
+
+#[test]
+fn parallel_campaign_csv_bytes_match_serial() {
+    use paota::experiments::{Campaign, CurvesCsv, RecordsCsv};
+
+    let base = native_cfg("paota");
+    let run_campaign = |jobs: usize, dir: &std::path::Path| {
+        let _ = std::fs::remove_dir_all(dir);
+        let mut b = base.clone();
+        b.perf.campaign_jobs = jobs;
+        Campaign::new("bytes", b)
+            .scenario("PAOTA", |_| {})
+            .scenario("Local SGD", |c| {
+                c.algorithm = Algorithm::parse("local_sgd").unwrap()
+            })
+            .scenario("seed 7", |c| c.seed = 7)
+            .scenario("seed 8", |c| c.seed = 8)
+            .observe(CurvesCsv::accuracy(dir.join("curves.csv")))
+            .observe(RecordsCsv::new(dir.to_path_buf(), "bytes"))
+            .run()
+            .unwrap();
+    };
+    let d1 = std::env::temp_dir().join("paota_par_campaign_serial");
+    let d2 = std::env::temp_dir().join("paota_par_campaign_jobs3");
+    run_campaign(1, &d1);
+    run_campaign(3, &d2);
+    for file in ["curves.csv", "bytes_paota.csv", "bytes_local_sgd.csv"] {
+        let a = std::fs::read(d1.join(file)).unwrap();
+        let b = std::fs::read(d2.join(file)).unwrap();
+        assert_eq!(a, b, "{file}: parallel campaign changed the output bytes");
+    }
+}
+
+#[test]
+fn parallel_multi_cell_cells_match_serial_stepping() {
+    // Cells inside one slot step concurrently when workers > 1; the
+    // hierarchy's per-cell and merged streams must not move by a bit.
+    let mut cfg = native_cfg("paota");
+    cfg.rounds = 5;
+    cfg.topology.cells = 3;
+    cfg.topology.mixing_every = 2;
+    let mut serial = cfg.clone();
+    serial.perf.workers = 1;
+    let mut par = cfg.clone();
+    par.perf.workers = 4;
+    let ctx_s = TrainContext::new(&serial).unwrap();
+    let ctx_p = TrainContext::new(&par).unwrap();
+    let a = fl::topology::multi_cell::run(&ctx_s, &serial).unwrap();
+    let b = fl::topology::multi_cell::run(&ctx_p, &par).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (i, (x, y)) in b.cells.iter().zip(&a.cells).enumerate() {
+        assert_records_bitwise(&format!("cell {i}"), x, y);
+    }
+    assert_records_bitwise("merged", &b.merged, &a.merged);
+}
+
+#[test]
+fn parallel_campaign_replays_observers_in_declaration_order() {
+    use paota::experiments::{Campaign, RunObserver, RunResult, Scenario, ScenarioResult};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    // Property: for any scenario count and job count, the observer hook
+    // sequence is exactly the serial one — start(s0), end(s0), start(s1),
+    // end(s1), …, campaign_end — regardless of completion order.
+    struct OrderProbe {
+        log: Rc<RefCell<Vec<String>>>,
+    }
+    impl RunObserver for OrderProbe {
+        fn on_scenario_start(&mut self, scenario: &Scenario) -> anyhow::Result<()> {
+            self.log.borrow_mut().push(format!("start:{}", scenario.name));
+            Ok(())
+        }
+        fn on_scenario_end(&mut self, scenario: &Scenario, _run: &RunResult) -> anyhow::Result<()> {
+            self.log.borrow_mut().push(format!("end:{}", scenario.name));
+            Ok(())
+        }
+        fn on_campaign_end(&mut self, results: &[ScenarioResult]) -> anyhow::Result<()> {
+            self.log.borrow_mut().push(format!("campaign_end:{}", results.len()));
+            Ok(())
+        }
+    }
+
+    for &count in &[1usize, 2, 5, 8] {
+        for &jobs in &[1usize, 2, 3] {
+            let mut base = native_cfg("paota");
+            base.rounds = 2;
+            base.eval_every = 2;
+            base.perf.campaign_jobs = jobs;
+            let names: Vec<String> = (0..count).map(|i| format!("s{i}")).collect();
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let mut campaign = Campaign::new("order", base.clone());
+            for (i, name) in names.iter().enumerate() {
+                // Varying seeds vary each run's wall-clock, shuffling the
+                // parallel completion order.
+                let seed = 100 + ((i as u64 * 37) % 11);
+                campaign = campaign.scenario(name.clone(), move |c| c.seed = seed);
+            }
+            campaign = campaign.observe(OrderProbe { log: Rc::clone(&log) });
+            campaign.run().unwrap();
+
+            let mut want: Vec<String> = Vec::new();
+            for name in &names {
+                want.push(format!("start:{name}"));
+                want.push(format!("end:{name}"));
+            }
+            want.push(format!("campaign_end:{count}"));
+            assert_eq!(*log.borrow(), want, "count={count} jobs={jobs}");
+        }
+    }
+}
+
 #[test]
 fn fedasync_coalesced_ties_match_sequential_reference() {
     // Homogeneous latency makes ALL K clients finish at identical
