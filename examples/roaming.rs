@@ -1,0 +1,86 @@
+//! `fl::mobility` end to end: clients roam a 3-cell hierarchy under a
+//! Markov cell-transition model, and the handover policy decides what
+//! happens to their in-flight updates — compare the frozen fleet against
+//! `deliver`/`forward`/`drop` roaming on one shared data context.
+//!
+//! ```bash
+//! cargo run --release --offline --example roaming
+//! ```
+//!
+//! Everything is plain config surface: `--cells 3 --mobility markov
+//! --handover forward` does the same from the `repro` CLI (and
+//! `repro ablation mobility` sweeps the whole grid). The only API beyond
+//! that is `MultiCellRunner`, used below to read the applied-handover
+//! telemetry (`MobilityStats`) next to the merged learning curve.
+//!
+//! Runs on the AOT artifacts when present, else on the pure-Rust native
+//! kernel — so this example works from a fresh checkout.
+
+use anyhow::Result;
+use paota::config::Config;
+use paota::fl::mobility::{self, HandoverPolicy, MobilityKind};
+use paota::fl::topology::{multi_cell, MixingKind};
+use paota::fl::TrainContext;
+use paota::runtime::Engine;
+
+fn main() -> Result<()> {
+    let mut base = Config::default();
+    base.rounds = 8;
+    base.eval_every = 2;
+    base.topology.cells = 3;
+    base.topology.mixing = MixingKind::Cloud;
+    base.topology.mixing_every = 2;
+    base.mobility.dwell_mean = 2.0;
+
+    let manifest = paota::runtime::ModelRuntime::default_dir().join("manifest.txt");
+    if !manifest.exists() {
+        println!("(no AOT artifacts — running on the native reference kernel)\n");
+        base.artifacts_dir = "native".into();
+        base.synth.side = 10;
+        base.partition.clients = 24;
+        base.partition.sizes = vec![60, 120];
+        base.partition.test_size = 100;
+    }
+
+    let engine = Engine::cpu()?;
+    let ctx = TrainContext::build(&engine, &base)?;
+
+    // Intended churn is a pure function of the config — print it first.
+    let mut markov = base.clone();
+    markov.mobility.kind = MobilityKind::Markov;
+    let trace = mobility::trace(&markov)?;
+    println!(
+        "markov intent: {} moves over {} slots (dwell_mean = {} slots)\n",
+        trace.total_moves, base.rounds, base.mobility.dwell_mean
+    );
+
+    println!("variant           final-acc  handovers  delivered  arrivals/cell");
+    let run = |name: &str, kind: MobilityKind, policy: HandoverPolicy| -> Result<()> {
+        let mut cfg = base.clone();
+        cfg.mobility.kind = kind;
+        cfg.mobility.handover = policy;
+        let out = multi_cell::run(&ctx, &cfg)?;
+        let arrivals = out
+            .mobility
+            .arrivals
+            .iter()
+            .map(|a| a.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        println!(
+            "{name:<17} {:>8.2}%  {:>9}  {:>9}  {arrivals}",
+            out.merged.final_accuracy().unwrap_or(0.0) * 100.0,
+            out.mobility.handovers,
+            out.mobility.delivered,
+        );
+        Ok(())
+    };
+
+    run("static", MobilityKind::Static, HandoverPolicy::Deliver)?;
+    run("markov/deliver", MobilityKind::Markov, HandoverPolicy::Deliver)?;
+    run("markov/forward", MobilityKind::Markov, HandoverPolicy::Forward)?;
+    run("markov/drop", MobilityKind::Markov, HandoverPolicy::Drop)?;
+    run("waypoint/forward", MobilityKind::Waypoint, HandoverPolicy::Forward)?;
+
+    Ok(())
+}

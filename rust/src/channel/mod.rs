@@ -51,6 +51,17 @@ impl ChannelConfig {
     pub fn noise_power(&self) -> f64 {
         self.bandwidth_hz * dbm_to_watts(self.n0_dbm_per_hz)
     }
+
+    /// This channel with the noise floor shifted by `delta_db` dB — the
+    /// per-cell residence scope of `fl::mobility`: each cell serves its
+    /// residents from its own `ChannelConfig`, so a client's effective
+    /// uplink is re-drawn from the *new* cell's scope the moment it hands
+    /// over (`mobility.cell_noise_spread_db` spreads cells around the
+    /// configured N₀; 0 dB keeps every cell on the base channel).
+    pub fn with_n0_offset(mut self, delta_db: f64) -> Self {
+        self.n0_dbm_per_hz += delta_db;
+        self
+    }
 }
 
 /// Per-round state of the MAC uplink.
@@ -149,6 +160,18 @@ mod tests {
         };
         let ratio = loud.noise_power() / quiet.noise_power();
         assert!((ratio - 1e10).abs() / 1e10 < 1e-9);
+    }
+
+    #[test]
+    fn n0_offset_shifts_noise_power_multiplicatively() {
+        let base = ChannelConfig::default();
+        let hot = base.with_n0_offset(10.0);
+        assert_eq!(hot.bandwidth_hz, base.bandwidth_hz);
+        assert!((hot.n0_dbm_per_hz - (base.n0_dbm_per_hz + 10.0)).abs() < 1e-12);
+        // +10 dB = 10× the noise power; 0 dB is the identity.
+        let ratio = hot.noise_power() / base.noise_power();
+        assert!((ratio - 10.0).abs() < 1e-9, "ratio={ratio}");
+        assert_eq!(base.with_n0_offset(0.0), base);
     }
 
     #[test]

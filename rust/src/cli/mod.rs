@@ -36,7 +36,7 @@ pub enum Command {
     /// Table I: rounds & time to target accuracies.
     Table1,
     /// Ablations: `beta`, `dt`, `omega`, `latency`, `solver`,
-    /// `scheduling`, `topology`, `replicates`.
+    /// `scheduling`, `topology`, `mobility`, `replicates`.
     Ablation(String),
     /// Print the effective config and exit.
     ShowConfig,
@@ -72,6 +72,7 @@ COMMANDS:
     table1        time/rounds to target accuracy (paper Table I)
     ablation X    X ∈ beta | dt | omega | latency | solver | scheduling
                       | topology (cells × groups vs flat, fl::topology)
+                      | mobility (roaming × handover policies, fl::mobility)
                       | replicates (seed grid → mean ± std curves)
     show-config   print the effective configuration (re-parseable `key = value`)
     help          this text
@@ -95,11 +96,15 @@ CONFIG KEYS (defaults = paper §IV-A):
     dinkelbach_eps dinkelbach_iters l_smooth epsilon2
     bandwidth_hz n0 clients max_classes test_size sizes
     cells groups group_partitioner mixing mixing_every
-    group_ready_frac group_mix workers campaign_jobs
+    group_ready_frac group_mix group_power workers campaign_jobs
+    mobility dwell_mean handover handover_every cell_noise_spread_db
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
-    (topology: cells>1 = hierarchical multi-cell; --algo air_fedga = grouped)
+    (topology: cells>1 = hierarchical multi-cell; --algo air_fedga = grouped,
+     flat or nested inside cells; group_power: dinkelbach|discounted)
+    (mobility: static|markov|waypoint over cells>1; handover:
+     deliver|forward|drop for in-flight updates at cell handover)
     (artifacts_dir=native selects the pure-Rust reference kernel)
     (perf: workers = train-pool threads, default PAOTA_WORKERS or auto;
      campaign_jobs/--jobs = concurrent scenarios — both bitwise-neutral)
@@ -130,7 +135,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             let Some(which) = it.next() else {
                 bail!(
                     "ablation requires an argument \
-                     (beta|dt|omega|latency|solver|scheduling|topology|replicates)"
+                     (beta|dt|omega|latency|solver|scheduling|topology|mobility|replicates)"
                 );
             };
             Command::Ablation(which.clone())
@@ -223,6 +228,42 @@ mod tests {
         assert_eq!(cli.config.perf.workers, 2);
         // Zero is rejected at parse time (validation runs there).
         assert!(parse(&args(&["run", "--jobs", "0"])).is_err());
+    }
+
+    #[test]
+    fn mobility_keys_parse_from_the_cli() {
+        let cli = parse(&args(&[
+            "run",
+            "--cells",
+            "3",
+            "--mobility",
+            "markov",
+            "--handover",
+            "forward",
+            "--dwell_mean",
+            "2.5",
+            "--handover_every",
+            "2",
+            "--cell_noise_spread_db",
+            "6",
+            "--group_power",
+            "discounted",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.mobility.kind, crate::fl::mobility::MobilityKind::Markov);
+        assert_eq!(
+            cli.config.mobility.handover,
+            crate::fl::mobility::HandoverPolicy::Forward
+        );
+        assert_eq!(cli.config.mobility.dwell_mean, 2.5);
+        assert_eq!(cli.config.mobility.handover_every, 2);
+        assert_eq!(cli.config.mobility.cell_noise_spread_db, 6.0);
+        assert_eq!(
+            cli.config.topology.group_power,
+            crate::fl::topology::GroupPowerMode::Discounted
+        );
+        // Validation runs at parse time: roaming needs cells ≥ 2.
+        assert!(parse(&args(&["run", "--mobility", "waypoint"])).is_err());
     }
 
     #[test]

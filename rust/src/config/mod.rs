@@ -170,6 +170,11 @@ pub struct TopologyConfig {
     /// Base server-side merge rate of one group aggregate (staleness-
     /// discounted per round; see `fl::topology::air_fedga`).
     pub group_mix: f64,
+    /// How `air_fedga` sets per-member transmit powers inside a group
+    /// pass: `dinkelbach` runs the paper's Theorem-1 program per group
+    /// (noise term scoped to that group's OTA pass), `discounted` is the
+    /// legacy staleness-discounted `p_max`.
+    pub group_power: crate::fl::topology::GroupPowerMode,
 }
 
 impl Default for TopologyConfig {
@@ -182,6 +187,45 @@ impl Default for TopologyConfig {
             mixing_every: 5,
             group_ready_frac: 1.0,
             group_mix: 0.5,
+            group_power: crate::fl::topology::GroupPowerMode::Dinkelbach,
+        }
+    }
+}
+
+/// Client-mobility configuration (`fl::mobility`): how the client → cell
+/// assignment moves over simulated time, and what happens to in-flight
+/// work at handover. The defaults describe a frozen fleet, so every
+/// pre-mobility config keeps its exact (bitwise) meaning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MobilityConfig {
+    /// Mobility model: `static` (nobody moves), `markov` (cell-transition
+    /// chain), `waypoint` (random-waypoint over a cell grid).
+    pub kind: crate::fl::mobility::MobilityKind,
+    /// Mean cell-residence time in ΔT slots (markov dwell / waypoint
+    /// speed scale).
+    pub dwell_mean: f64,
+    /// What happens to a mover's in-flight update: `deliver` (lands OTA
+    /// in the old cell, move deferred), `forward` (carried with accrued
+    /// staleness), `drop` (discarded).
+    pub handover: crate::fl::mobility::HandoverPolicy,
+    /// Consult the mobility model every `handover_every` ΔT slots (1 =
+    /// every slot boundary; set to `mixing_every` to hand over only at
+    /// mixing points).
+    pub handover_every: usize,
+    /// Residence-coupled channel scope: cells' noise floors are spread
+    /// linearly over `±cell_noise_spread_db/2` dB around the configured
+    /// N₀ (0 = all cells share the base channel).
+    pub cell_noise_spread_db: f64,
+}
+
+impl Default for MobilityConfig {
+    fn default() -> Self {
+        Self {
+            kind: crate::fl::mobility::MobilityKind::Static,
+            dwell_mean: 4.0,
+            handover: crate::fl::mobility::HandoverPolicy::Deliver,
+            handover_every: 1,
+            cell_noise_spread_db: 0.0,
         }
     }
 }
@@ -283,6 +327,8 @@ pub struct Config {
     pub partition: PartitionConfig,
     /// Aggregation topology (cells / groups / inter-cell mixing).
     pub topology: TopologyConfig,
+    /// Client mobility (roaming model / handover policy).
+    pub mobility: MobilityConfig,
     /// Execution parallelism (pool workers / campaign jobs).
     pub perf: PerfConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
@@ -325,6 +371,7 @@ impl Default for Config {
             synth: SynthConfig::default(),
             partition: PartitionConfig::default(),
             topology: TopologyConfig::default(),
+            mobility: MobilityConfig::default(),
             perf: PerfConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
@@ -365,6 +412,18 @@ impl Config {
             "mixing_every" => self.topology.mixing_every = p(key, value)?,
             "group_ready_frac" => self.topology.group_ready_frac = p(key, value)?,
             "group_mix" => self.topology.group_mix = p(key, value)?,
+            "group_power" => {
+                self.topology.group_power = crate::fl::topology::GroupPowerMode::parse(value)?
+            }
+            "mobility" | "mobility_kind" => {
+                self.mobility.kind = crate::fl::mobility::MobilityKind::parse(value)?
+            }
+            "dwell_mean" => self.mobility.dwell_mean = p(key, value)?,
+            "handover" | "handover_policy" => {
+                self.mobility.handover = crate::fl::mobility::HandoverPolicy::parse(value)?
+            }
+            "handover_every" => self.mobility.handover_every = p(key, value)?,
+            "cell_noise_spread_db" => self.mobility.cell_noise_spread_db = p(key, value)?,
             "workers" => self.perf.workers = p(key, value)?,
             "campaign_jobs" | "jobs" => self.perf.campaign_jobs = p(key, value)?,
             "force_beta" => {
@@ -505,11 +564,17 @@ impl Config {
         if self.perf.campaign_jobs == 0 {
             bail!("campaign_jobs must be ≥ 1 (1 = serial)");
         }
-        if t.cells > 1 && self.algorithm.name() == "air_fedga" {
+        let mob = &self.mobility;
+        if mob.dwell_mean <= 0.0 {
+            bail!("dwell_mean must be positive (slots of mean cell residence)");
+        }
+        if mob.handover_every == 0 {
+            bail!("handover_every must be ≥ 1");
+        }
+        if mob.kind != crate::fl::mobility::MobilityKind::Static && t.cells < 2 {
             bail!(
-                "multi-cell topology drives a flat per-cell policy; nest grouped \
-                 AirComp via `groups` inside a single cell instead of combining \
-                 cells > 1 with air_fedga"
+                "mobility = {} needs a multi-cell topology (cells ≥ 2) to roam over",
+                mob.kind.name()
             );
         }
         Ok(())
@@ -622,6 +687,12 @@ impl Config {
         kv("mixing_every", self.topology.mixing_every.to_string());
         kv("group_ready_frac", self.topology.group_ready_frac.to_string());
         kv("group_mix", self.topology.group_mix.to_string());
+        kv("group_power", self.topology.group_power.name().to_string());
+        kv("mobility", self.mobility.kind.name().to_string());
+        kv("dwell_mean", self.mobility.dwell_mean.to_string());
+        kv("handover", self.mobility.handover.name().to_string());
+        kv("handover_every", self.mobility.handover_every.to_string());
+        kv("cell_noise_spread_db", self.mobility.cell_noise_spread_db.to_string());
         kv("workers", self.perf.workers.to_string());
         kv("campaign_jobs", self.perf.campaign_jobs.to_string());
         kv("side", self.synth.side.to_string());
@@ -767,14 +838,51 @@ mod tests {
         c.latency_kind = LatencyKind::Lognormal;
         c.latency_sigma = 0.0;
         assert!(c.validate().is_err());
-        // Multi-cell composes a *flat* per-cell policy.
+        // Multi-cell now composes with grouped AirComp: each cell builds
+        // its GroupMap over its own member slice.
         let mut c = Config::default();
         c.algorithm = Algorithm::parse("air_fedga").unwrap();
         c.topology.cells = 2;
-        assert!(c.validate().is_err());
-        c.topology.cells = 1;
         c.topology.groups = 5;
         c.validate().unwrap();
+        c.topology.cells = 1;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn mobility_validation_and_keys() {
+        use crate::fl::mobility::{HandoverPolicy, MobilityKind};
+        let mut c = Config::default();
+        c.set("cells", "3").unwrap();
+        c.set("mobility", "markov").unwrap();
+        c.set("dwell_mean", "2.5").unwrap();
+        c.set("handover", "forward").unwrap();
+        c.set("handover_every", "2").unwrap();
+        c.set("cell_noise_spread_db", "6").unwrap();
+        assert_eq!(c.mobility.kind, MobilityKind::Markov);
+        assert_eq!(c.mobility.dwell_mean, 2.5);
+        assert_eq!(c.mobility.handover, HandoverPolicy::Forward);
+        assert_eq!(c.mobility.handover_every, 2);
+        assert_eq!(c.mobility.cell_noise_spread_db, 6.0);
+        c.validate().unwrap();
+
+        // Roaming needs a multi-cell tree.
+        let mut c = Config::default();
+        c.set("mobility", "waypoint").unwrap();
+        assert!(c.validate().is_err());
+        c.set("cells", "2").unwrap();
+        c.validate().unwrap();
+        // Degenerate knobs rejected.
+        let mut c = Config::default();
+        c.set("dwell_mean", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("handover_every", "0").unwrap();
+        assert!(c.validate().is_err());
+        // Unknown model / policy names rejected at set time.
+        assert!(Config::default().set("mobility", "teleport").is_err());
+        assert!(Config::default().set("handover", "nope").is_err());
+        assert!(Config::default().set("group_power", "nope").is_err());
     }
 
     #[test]
@@ -839,6 +947,12 @@ mod tests {
         c.set("mixing_every", "2").unwrap();
         c.set("group_ready_frac", "0.75").unwrap();
         c.set("group_mix", "0.4").unwrap();
+        c.set("group_power", "discounted").unwrap();
+        c.set("mobility", "markov").unwrap();
+        c.set("dwell_mean", "2.5").unwrap();
+        c.set("handover", "drop").unwrap();
+        c.set("handover_every", "3").unwrap();
+        c.set("cell_noise_spread_db", "4").unwrap();
         c.set("side", "12").unwrap();
         c.set("workers", "5").unwrap();
         c.set("jobs", "3").unwrap();

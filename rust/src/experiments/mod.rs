@@ -107,7 +107,7 @@ pub fn table1(base: &Config, out_dir: &Path, targets: &[f64]) -> Result<()> {
     Ok(())
 }
 
-/// Ablations (DESIGN.md A1–A4 plus `scheduling`, `topology`,
+/// Ablations (DESIGN.md A1–A4 plus `scheduling`, `topology`, `mobility`,
 /// `replicates`): each sweeps one knob of the PAOTA family and prints
 /// final accuracy + time-to-70%.
 pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
@@ -116,6 +116,12 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
     }
     let ctx = TrainContext::new(base)?;
     let scenarios = ablation_scenarios(which, base)?;
+    // The mobility sweep's churn sidecar is a pure function of the
+    // scenario configs (model replay, no training), so it is byte-stable
+    // across `--jobs`; write it up front, next to the accuracy CSV.
+    if which == "mobility" {
+        write_mobility_churn(&scenarios, out_dir)?;
+    }
 
     println!("# Ablation `{which}` — PAOTA variants");
     println!("variant,final_acc,best_acc,time_to_70%_s,mean_staleness");
@@ -125,7 +131,37 @@ pub fn ablation(which: &str, base: &Config, out_dir: &Path) -> Result<()> {
         .observe(CurvesCsv::accuracy(out_dir.join(format!("ablation_{which}.csv"))))
         .run_with_context(&ctx)?;
     println!("# wrote {}/ablation_{which}.csv", out_dir.display());
+    if which == "mobility" {
+        println!("# wrote {}/ablation_mobility_churn.csv", out_dir.display());
+    }
     Ok(())
+}
+
+/// The mobility ablation's churn CSV: intended (model-level) handover
+/// activity per scenario — `series,round,moves,members_per_cell` with
+/// the per-cell member counts slash-joined (`members_per_cell` always
+/// sums to K: the conservation property). Replayed from the configs via
+/// [`crate::fl::mobility::trace`] — no training involved.
+fn write_mobility_churn(scenarios: &[Scenario], out_dir: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    for s in scenarios {
+        let t = crate::fl::mobility::trace(&s.cfg)?;
+        for (round, (moves, members)) in
+            t.per_round_moves.iter().zip(&t.per_round_members).enumerate()
+        {
+            let cells = members
+                .iter()
+                .map(|m| m.to_string())
+                .collect::<Vec<_>>()
+                .join("/");
+            rows.push(format!("{},{round},{moves},{cells}", s.name));
+        }
+    }
+    write_csv_lines(
+        &out_dir.join("ablation_mobility_churn.csv"),
+        "series,round,moves,members_per_cell",
+        rows,
+    )
 }
 
 /// `ablation replicates` — the paper-grade error-bar harness: a
@@ -289,9 +325,50 @@ fn ablation_scenarios(which: &str, base: &Config) -> Result<Vec<Scenario>> {
                 }),
             ]
         }
+        // Client roaming over a 3-cell tree (`fl::mobility`): the frozen
+        // baseline vs markov/waypoint trajectories under each handover
+        // policy, plus one residence-coupled channel variant — all paota
+        // per cell, cloud mixing, one declarative campaign (with a churn
+        // sidecar CSV replayed from the mobility models).
+        "mobility" => {
+            use crate::fl::mobility::{HandoverPolicy, MobilityKind};
+            let cells = 3usize.min(base.partition.clients);
+            let roam = |kind: MobilityKind, policy: HandoverPolicy| {
+                let mut c = base.clone();
+                c.algorithm = paota.clone();
+                c.topology = Default::default();
+                c.mobility = Default::default();
+                c.topology.cells = cells;
+                c.topology.mixing = crate::fl::topology::MixingKind::Cloud;
+                c.topology.mixing_every = 2;
+                c.mobility.kind = kind;
+                c.mobility.handover = policy;
+                c.mobility.dwell_mean = 2.0;
+                c.mobility.handover_every = 1;
+                c
+            };
+            let mut variants =
+                vec![("static".to_string(), roam(MobilityKind::Static, HandoverPolicy::Deliver))];
+            for kind in [MobilityKind::Markov, MobilityKind::Waypoint] {
+                for policy in
+                    [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop]
+                {
+                    variants.push((
+                        format!("{}_{}", kind.name(), policy.name()),
+                        roam(kind, policy),
+                    ));
+                }
+            }
+            variants.push(("markov_deliver_snr6".to_string(), {
+                let mut c = roam(MobilityKind::Markov, HandoverPolicy::Deliver);
+                c.mobility.cell_noise_spread_db = 6.0;
+                c
+            }));
+            variants
+        }
         other => anyhow::bail!(
             "unknown ablation {other:?} \
-             (beta|dt|omega|latency|solver|scheduling|topology|replicates)"
+             (beta|dt|omega|latency|solver|scheduling|topology|mobility|replicates)"
         ),
     };
     Ok(variants
@@ -471,11 +548,44 @@ mod tests {
             ("solver", 2),
             ("scheduling", 3),
             ("topology", 8),
+            ("mobility", 8),
         ] {
             let s = ablation_scenarios(which, &base).unwrap();
             assert_eq!(s.len(), count, "ablation {which}");
         }
         assert!(ablation_scenarios("nope", &base).is_err());
+    }
+
+    #[test]
+    fn mobility_ablation_spans_models_and_handover_policies() {
+        use crate::fl::mobility::{HandoverPolicy, MobilityKind};
+        let base = Config::default();
+        let s = ablation_scenarios("mobility", &base).unwrap();
+        // The frozen baseline leads; every variant is valid multi-cell
+        // paota on the same 3-cell tree.
+        assert_eq!(s[0].name, "static");
+        assert_eq!(s[0].cfg.mobility.kind, MobilityKind::Static);
+        for x in &s {
+            assert_eq!(x.cfg.algorithm.name(), "paota", "{}", x.name);
+            assert_eq!(x.cfg.topology.cells, 3, "{}", x.name);
+            x.cfg.validate().unwrap();
+        }
+        // Both roaming models × all three handover policies appear.
+        for kind in [MobilityKind::Markov, MobilityKind::Waypoint] {
+            for policy in
+                [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop]
+            {
+                assert!(
+                    s.iter().any(|x| x.cfg.mobility.kind == kind
+                        && x.cfg.mobility.handover == policy),
+                    "missing {}/{}",
+                    kind.name(),
+                    policy.name()
+                );
+            }
+        }
+        // The residence-coupled channel variant rides along.
+        assert!(s.iter().any(|x| x.cfg.mobility.cell_noise_spread_db != 0.0));
     }
 
     #[test]

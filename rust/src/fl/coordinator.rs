@@ -294,6 +294,27 @@ pub struct ClientSlot {
     pub finish_time: f64,
 }
 
+/// A roaming client's scheduling state, lifted out of one cell's
+/// coordinator by [`Coordinator::detach_client`] so a multi-cell runner
+/// can hand it to another cell (`fl::mobility`'s `forward` handover
+/// policy re-installs it verbatim via [`Coordinator::admit_client`];
+/// `drop` discards it and re-spawns fresh with
+/// [`Coordinator::admit_fresh`]).
+#[derive(Debug, Clone)]
+pub struct DetachedClient {
+    /// The client's slot (base round/weights and scheduled finish) at
+    /// detach time.
+    pub slot: ClientSlot,
+    /// The client had finished training and sat in the ready-pending set
+    /// (its upload had not been served yet).
+    pub was_ready: bool,
+    /// The client's queued finish event, if it was still training.
+    pub queued_finish: Option<f64>,
+    /// Gilbert–Elliott residence state of the client's latency chain
+    /// (carried across the hop — the chain belongs to the device).
+    pub latency_slow: bool,
+}
+
 /// An FL algorithm, reduced to its decisions. Everything else — the round
 /// loop, the clock, client scheduling, batched training, telemetry — is
 /// the [`Coordinator`]'s.
@@ -367,6 +388,16 @@ pub trait AggregationPolicy: Send {
     /// (PAOTA keeps it as the similarity reference direction).
     fn on_global_delta(&mut self, delta: &[f32]) {
         let _ = delta;
+    }
+
+    /// The fleet slice this policy aggregates over changed — called by
+    /// hierarchical runners when a cell's membership is (re)established or
+    /// churns under handover (`fl::mobility`). `members` is the sorted
+    /// list of client ids now attached. Flat policies ignore it; grouped
+    /// policies (`air_fedga`) rebuild their [`crate::fl::topology::GroupMap`]
+    /// over the slice.
+    fn on_membership(&mut self, members: &[usize]) {
+        let _ = members;
     }
 }
 
@@ -466,6 +497,90 @@ impl<'a> Coordinator<'a> {
     /// The records emitted so far.
     pub fn records(&self) -> &[RoundRecord] {
         self.telemetry.records()
+    }
+
+    /// The global round whose model `client` currently trains from —
+    /// bumped to `round + 1` whenever its upload is served. Multi-cell
+    /// runners watch this to detect a landed upload (`deliver` handover
+    /// completes only after the stale update landed in the old cell).
+    pub fn client_base_round(&self, client: usize) -> usize {
+        self.slots[client].base_round
+    }
+
+    /// Detach a roaming client from this cell's scheduling: its queued
+    /// finish event and/or ready-pending entry are removed (no other
+    /// client's slot, stream or event moves), and its scheduling state is
+    /// returned for the handover policy to carry, forward or drop.
+    ///
+    /// Safe to call for a client this cell never served (the ghost
+    /// presence every cell holds from [`Coordinator::spawn_fleet`]): the
+    /// returned state then describes that ghost.
+    pub fn detach_client(&mut self, client: usize) -> DetachedClient {
+        let queued_finish = self.queue.remove_first(|&c| c == client).map(|(t, _)| t);
+        let was_ready = self.pending.iter().any(|&c| c == client);
+        self.pending.retain(|&c| c != client);
+        DetachedClient {
+            slot: self.slots[client].clone(),
+            was_ready,
+            queued_finish,
+            latency_slow: self.latency.slow_state(client),
+        }
+    }
+
+    /// Detach a roaming client whose in-flight work is being *discarded*
+    /// (`drop` handover, `deliver` completion): purge its queue event and
+    /// pending entry and return only the device's latency-chain state —
+    /// no base-model clone, unlike [`Coordinator::detach_client`].
+    pub fn detach_client_discarding(&mut self, client: usize) -> bool {
+        self.purge_client(client);
+        self.latency.slow_state(client)
+    }
+
+    /// Admit a roaming client carrying its previous cell's state
+    /// (`forward` handover): the slot — base round, base weights, finish
+    /// time — is installed verbatim, so staleness keeps accruing across
+    /// the hop (rounds are global in lock-step hierarchies, and
+    /// `base_round` is preserved, so `round − base_round` is monotone in
+    /// `round`). An in-flight training job keeps its finish event; a
+    /// ready-but-unserved upload lands in this cell's pending set and is
+    /// offered at the next slot. Any ghost presence the client had here is
+    /// purged first.
+    pub fn admit_client(&mut self, client: usize, d: DetachedClient) {
+        self.purge_client(client);
+        self.latency.set_slow_state(client, d.latency_slow);
+        if let Some(t) = d.queued_finish {
+            self.queue.push(t, client);
+        } else if d.was_ready {
+            self.pending.push(client);
+        }
+        self.slots[client] = d.slot;
+    }
+
+    /// Admit a roaming client fresh (`drop` handover, and the tail of
+    /// `deliver`): whatever it was *training* elsewhere is gone; it
+    /// restarts from this cell's current global model at the boundary of
+    /// slot `round`, with a latency draw from this cell's stream. The
+    /// Gilbert–Elliott residence state still rides along
+    /// (`latency_slow`) — the chain belongs to the device, not to the
+    /// discarded work. Any ghost presence is purged first.
+    pub fn admit_fresh(&mut self, client: usize, round: usize, latency_slow: bool) {
+        self.purge_client(client);
+        self.latency.set_slow_state(client, latency_slow);
+        let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
+        let finish = slot_end + self.latency.draw(client, &mut self.rngs.latency);
+        self.slots[client] = ClientSlot {
+            base_round: round + 1,
+            base_weights: self.w_g.clone(),
+            finish_time: finish,
+        };
+        self.queue.push(finish, client);
+    }
+
+    /// Remove every trace of `client` from the event queue and pending
+    /// set (admit prologue).
+    fn purge_client(&mut self, client: usize) {
+        self.queue.remove_all(|&c| c == client);
+        self.pending.retain(|&c| c != client);
     }
 
     /// All clients start training on w_g^0 at t = 0 (b_k^1 = 1 ∀k).

@@ -1,0 +1,659 @@
+//! `fl::mobility` — client roaming over the multi-cell tree: the
+//! client → cell assignment becomes a **function of simulated time**.
+//!
+//! PR-3's [`crate::fl::topology`] froze the [`GroupMap`] at construction;
+//! this subsystem makes it roam. Three parts (the Air-FEEL overview,
+//! arXiv 2208.05643, names device mobility/handover as the next
+//! deployment axis; Air-FedGA, arXiv 2507.05704, shows grouping must
+//! track device state):
+//!
+//! 1. **Mobility models** ([`MobilityModel`]): seed-deterministic
+//!    per-client trajectories over the cell set —
+//!    * `static` — the PR-3 degeneracy: nobody ever moves, and a run is
+//!      **bitwise** the frozen-assignment run (`tests/mobility.rs`);
+//!    * `markov` — per-client cell-transition chain with exponential
+//!      dwell times (mean `mobility.dwell_mean` slots), uniform target
+//!      over the other cells;
+//!    * `waypoint` — random-waypoint motion on the unit square with
+//!      cells on a grid; the **nearest-cell rule** yields the
+//!      assignment, so geometry (not a transition matrix) drives churn.
+//!    Every client's trajectory derives from its own RNG stream
+//!    `(seed, client)`, so trajectories are reproducible per client and
+//!    independent of how often the runner observes them
+//!    (`handover_every` changes *when* moves are applied, never *where*
+//!    clients go).
+//! 2. **Handover protocol** — applied by
+//!    [`crate::fl::topology::multi_cell`] at slot boundaries (every
+//!    `mobility.handover_every` slots): the runner detaches movers from
+//!    the old cell's event queue ([`crate::fl::Coordinator::detach_client`])
+//!    and re-admits them under a [`HandoverPolicy`]:
+//!    * [`HandoverPolicy::Deliver`] — the in-flight update still lands
+//!      OTA in the old cell; the membership flip is deferred until that
+//!      upload is served, then the client respawns fresh in the new cell;
+//!    * [`HandoverPolicy::Forward`] — the in-flight state is carried to
+//!      the new cell verbatim (base round/weights, finish event), so
+//!      staleness keeps accruing across the hop;
+//!    * [`HandoverPolicy::Drop`] — the in-flight work is discarded and
+//!      the client respawns fresh in the new cell.
+//! 3. **Residence-coupled channels** — each cell serves its residents
+//!    from its own [`crate::channel::ChannelConfig`] scope
+//!    (`mobility.cell_noise_spread_db` spreads the per-cell noise floors
+//!    around the configured N₀), and the Gilbert–Elliott latency state
+//!    rides along on admit, so roaming actually changes the physical
+//!    layer a client sees.
+//!
+//! [`trace`] replays a config's mobility model without any training —
+//! churn (moves per slot, per-cell membership) is a pure function of the
+//! config, which is what the `repro ablation mobility` campaign records
+//! next to the learning curves, and [`MobilityStats`] reports what the
+//! runner actually applied (deliver defers, so applied churn can lag
+//! intended churn).
+
+use anyhow::{ensure, Result};
+
+use crate::config::Config;
+use crate::util::Rng;
+
+use super::topology::GroupMap;
+
+/// Per-client trajectory stream tag (disjoint from the coordinator's
+/// run-time streams and the partitioner's profile streams).
+pub mod streams {
+    /// Mobility-model trajectory draws.
+    pub const MOBILITY: u64 = 0x30_b117;
+}
+
+/// Config-selectable mobility model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MobilityKind {
+    /// Nobody moves — the frozen PR-3 assignment (bitwise degeneracy).
+    Static,
+    /// Per-client cell-transition chain with exponential dwell times.
+    Markov,
+    /// Random-waypoint motion over a cell grid; nearest cell serves.
+    Waypoint,
+}
+
+impl MobilityKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "static" | "none" | "off" => MobilityKind::Static,
+            "markov" => MobilityKind::Markov,
+            "waypoint" | "rwp" => MobilityKind::Waypoint,
+            other => anyhow::bail!("unknown mobility model {other:?} (static|markov|waypoint)"),
+        })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MobilityKind::Static => "static",
+            MobilityKind::Markov => "markov",
+            MobilityKind::Waypoint => "waypoint",
+        }
+    }
+}
+
+/// What happens to a roaming client's in-flight work at handover.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandoverPolicy {
+    /// The stale update still lands OTA in the old cell; the client moves
+    /// only after it is served (membership flip deferred).
+    Deliver,
+    /// The in-flight state is carried to the new cell with staleness
+    /// accrued across the hop.
+    Forward,
+    /// The in-flight work is discarded; the client respawns fresh in the
+    /// new cell.
+    Drop,
+}
+
+impl HandoverPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "deliver" => HandoverPolicy::Deliver,
+            "forward" | "carry" => HandoverPolicy::Forward,
+            "drop" | "discard" => HandoverPolicy::Drop,
+            other => anyhow::bail!("unknown handover policy {other:?} (deliver|forward|drop)"),
+        })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HandoverPolicy::Deliver => "deliver",
+            HandoverPolicy::Forward => "forward",
+            HandoverPolicy::Drop => "drop",
+        }
+    }
+}
+
+/// A time-varying client → cell assignment. Implementations advance
+/// per-client state slot by slot; the runner calls [`advance_to`] with
+/// non-decreasing slot indices (slot 0 is the construction state — the
+/// initial [`GroupMap`] assignment, so every model starts exactly where
+/// the static partition put the fleet).
+///
+/// [`advance_to`]: MobilityModel::advance_to
+pub trait MobilityModel: Send {
+    /// Display name (telemetry/debug).
+    fn name(&self) -> &str;
+
+    /// Advance the trajectories to the boundary of `slot` — the
+    /// assignment in force for slots `slot..`. Must be called with
+    /// non-decreasing `slot`; intermediate slots are stepped internally,
+    /// so the trajectory is independent of the observation cadence.
+    fn advance_to(&mut self, slot: usize);
+
+    /// The current client → cell assignment.
+    fn assignment(&self) -> &[usize];
+}
+
+/// Derive client `c`'s private trajectory RNG from the master seed.
+fn client_rng(seed: u64, client: usize) -> Rng {
+    let mix = (client as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    Rng::with_stream(seed ^ mix, streams::MOBILITY)
+}
+
+/// The degenerate model: the initial assignment, forever.
+pub struct StaticMobility {
+    assignment: Vec<usize>,
+}
+
+impl StaticMobility {
+    pub fn new(initial: &GroupMap) -> Self {
+        Self {
+            assignment: (0..initial.num_clients()).map(|c| initial.group_of(c)).collect(),
+        }
+    }
+}
+
+impl MobilityModel for StaticMobility {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn advance_to(&mut self, _slot: usize) {}
+
+    fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+}
+
+/// Per-client cell-transition chain: each client dwells in its cell for
+/// `ceil(Exp(mean = dwell_mean))` slots, then jumps to a uniformly random
+/// *other* cell and redraws its dwell. Each client owns its RNG stream,
+/// so trajectories are seed-deterministic per client.
+pub struct MarkovMobility {
+    cells: usize,
+    dwell_mean: f64,
+    assignment: Vec<usize>,
+    dwell_left: Vec<usize>,
+    rngs: Vec<Rng>,
+    slot: usize,
+}
+
+impl MarkovMobility {
+    pub fn new(initial: &GroupMap, cells: usize, dwell_mean: f64, seed: u64) -> Self {
+        let k = initial.num_clients();
+        let mut rngs: Vec<Rng> = (0..k).map(|c| client_rng(seed, c)).collect();
+        let dwell_left = rngs.iter_mut().map(|r| Self::draw_dwell(r, dwell_mean)).collect();
+        Self {
+            cells,
+            dwell_mean,
+            assignment: (0..k).map(|c| initial.group_of(c)).collect(),
+            dwell_left,
+            rngs,
+            slot: 0,
+        }
+    }
+
+    fn draw_dwell(rng: &mut Rng, mean: f64) -> usize {
+        (rng.exponential(1.0 / mean).ceil() as usize).max(1)
+    }
+}
+
+impl MobilityModel for MarkovMobility {
+    fn name(&self) -> &str {
+        "markov"
+    }
+
+    fn advance_to(&mut self, slot: usize) {
+        while self.slot < slot {
+            self.slot += 1;
+            for c in 0..self.assignment.len() {
+                self.dwell_left[c] -= 1;
+                if self.dwell_left[c] == 0 {
+                    // Uniform over the other cells.
+                    let draw = self.rngs[c].index(self.cells - 1);
+                    let cur = self.assignment[c];
+                    self.assignment[c] = if draw >= cur { draw + 1 } else { draw };
+                    self.dwell_left[c] = Self::draw_dwell(&mut self.rngs[c], self.dwell_mean);
+                }
+            }
+        }
+    }
+
+    fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+}
+
+/// Random-waypoint motion on the unit square. Cells sit on a
+/// `ceil(√n) × ⌈n/cols⌉` grid; each client starts at its initial cell's
+/// center, walks toward a uniformly drawn waypoint at a speed of one
+/// grid spacing per `dwell_mean` slots, and draws a new waypoint on
+/// arrival. The serving cell is the **nearest** cell center (ties break
+/// to the lowest index), so churn emerges from geometry.
+pub struct WaypointMobility {
+    centers: Vec<(f64, f64)>,
+    pos: Vec<(f64, f64)>,
+    target: Vec<(f64, f64)>,
+    speed: f64,
+    assignment: Vec<usize>,
+    rngs: Vec<Rng>,
+    slot: usize,
+}
+
+impl WaypointMobility {
+    pub fn new(initial: &GroupMap, cells: usize, dwell_mean: f64, seed: u64) -> Self {
+        let centers = Self::grid_centers(cells);
+        let k = initial.num_clients();
+        let mut rngs: Vec<Rng> = (0..k).map(|c| client_rng(seed, c)).collect();
+        let pos: Vec<(f64, f64)> = (0..k).map(|c| centers[initial.group_of(c)]).collect();
+        let target: Vec<(f64, f64)> = rngs.iter_mut().map(|r| (r.f64(), r.f64())).collect();
+        let (cols, _) = Self::grid_dims(cells);
+        Self {
+            centers,
+            pos,
+            target,
+            speed: (1.0 / cols as f64) / dwell_mean,
+            assignment: (0..k).map(|c| initial.group_of(c)).collect(),
+            rngs,
+            slot: 0,
+        }
+    }
+
+    /// Near-square grid shape: `(cols, rows)` — the single definition
+    /// both the geometry ([`WaypointMobility::grid_centers`]) and the
+    /// speed scale (one grid spacing per `dwell_mean` slots) derive from.
+    fn grid_dims(cells: usize) -> (usize, usize) {
+        let cols = ((cells as f64).sqrt().ceil() as usize).max(1);
+        (cols, cells.div_ceil(cols))
+    }
+
+    /// Cell centers on a near-square grid over the unit square.
+    fn grid_centers(cells: usize) -> Vec<(f64, f64)> {
+        let (cols, rows) = Self::grid_dims(cells);
+        (0..cells)
+            .map(|j| {
+                let (col, row) = (j % cols, j / cols);
+                (
+                    (col as f64 + 0.5) / cols as f64,
+                    (row as f64 + 0.5) / rows as f64,
+                )
+            })
+            .collect()
+    }
+
+    fn nearest_cell(centers: &[(f64, f64)], p: (f64, f64)) -> usize {
+        let mut best = 0usize;
+        let mut best_d2 = f64::INFINITY;
+        for (j, &(cx, cy)) in centers.iter().enumerate() {
+            let (dx, dy) = (p.0 - cx, p.1 - cy);
+            let d2 = dx * dx + dy * dy;
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = j;
+            }
+        }
+        best
+    }
+}
+
+impl MobilityModel for WaypointMobility {
+    fn name(&self) -> &str {
+        "waypoint"
+    }
+
+    fn advance_to(&mut self, slot: usize) {
+        while self.slot < slot {
+            self.slot += 1;
+            for c in 0..self.pos.len() {
+                let (px, py) = self.pos[c];
+                let (tx, ty) = self.target[c];
+                let (dx, dy) = (tx - px, ty - py);
+                let dist = (dx * dx + dy * dy).sqrt();
+                if dist <= self.speed {
+                    // Arrive this slot; a new waypoint next slot.
+                    self.pos[c] = (tx, ty);
+                    self.target[c] = (self.rngs[c].f64(), self.rngs[c].f64());
+                } else {
+                    let step = self.speed / dist;
+                    self.pos[c] = (px + dx * step, py + dy * step);
+                }
+                self.assignment[c] = Self::nearest_cell(&self.centers, self.pos[c]);
+            }
+        }
+    }
+
+    fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+}
+
+/// Instantiate the mobility model the config selects, anchored at the
+/// initial cell partition (slot 0 ≡ `initial`).
+pub fn build_model(cfg: &Config, initial: &GroupMap) -> Result<Box<dyn MobilityModel>> {
+    let cells = cfg.topology.cells;
+    ensure!(
+        initial.num_groups() == cells,
+        "mobility model expects the cell partition ({} groups != {} cells)",
+        initial.num_groups(),
+        cells
+    );
+    // Same rule as Config::validate — enforced here too so replay paths
+    // that skip validation (mobility::trace on raw configs) error cleanly
+    // instead of panicking in a cells-1 transition draw.
+    ensure!(
+        cfg.mobility.kind == MobilityKind::Static || cells >= 2,
+        "mobility = {} needs a multi-cell topology (cells ≥ 2) to roam over",
+        cfg.mobility.kind.name()
+    );
+    let dwell = cfg.mobility.dwell_mean;
+    let model: Box<dyn MobilityModel> = match cfg.mobility.kind {
+        MobilityKind::Static => Box::new(StaticMobility::new(initial)),
+        MobilityKind::Markov => Box::new(MarkovMobility::new(initial, cells, dwell, cfg.seed)),
+        MobilityKind::Waypoint => Box::new(WaypointMobility::new(initial, cells, dwell, cfg.seed)),
+    };
+    Ok(model)
+}
+
+/// Advance `model` per the handover cadence after slot `round` closed:
+/// on-cadence boundaries advance the trajectories to slot `round + 1`
+/// and return the target assignment now in force; off-cadence slots
+/// return `None` without touching the model. The single definition of
+/// "when does the runner look at the model", shared by the live
+/// [`crate::fl::topology::multi_cell`] sweep and the training-free
+/// [`trace`] replay — which is what keeps the churn sidecar's intent
+/// equal to applied churn for the immediate handover policies
+/// (`tests/mobility.rs`).
+pub fn advanced_target<'m>(
+    cfg: &Config,
+    model: &'m mut dyn MobilityModel,
+    round: usize,
+) -> Option<&'m [usize]> {
+    if (round + 1) % cfg.mobility.handover_every != 0 {
+        return None;
+    }
+    model.advance_to(round + 1);
+    Some(model.assignment())
+}
+
+/// What the runner actually applied: handover churn as it landed on the
+/// coordinators (the `deliver` policy defers flips until the stale
+/// upload is served, so applied churn can lag the model's intent in
+/// [`trace`]).
+#[derive(Debug, Clone, Default)]
+pub struct MobilityStats {
+    /// Applied membership flips (all policies).
+    pub handovers: usize,
+    /// `deliver`-policy moves completed after their upload landed.
+    pub delivered: usize,
+    /// Per-cell counts of clients that roamed **in**.
+    pub arrivals: Vec<usize>,
+    /// Per-cell counts of clients that roamed **out**.
+    pub departures: Vec<usize>,
+    /// Applied membership flips per round (len = rounds).
+    pub per_round_moves: Vec<usize>,
+    /// Per-round per-cell member counts after that round's sweep
+    /// (`per_round_members[r][cell]`; every row sums to K — the
+    /// conservation property `tests/mobility.rs` asserts).
+    pub per_round_members: Vec<Vec<usize>>,
+    /// Handover count per client.
+    pub per_client: Vec<usize>,
+}
+
+impl MobilityStats {
+    pub fn new(cells: usize, clients: usize) -> Self {
+        Self {
+            arrivals: vec![0; cells],
+            departures: vec![0; cells],
+            per_client: vec![0; clients],
+            ..Self::default()
+        }
+    }
+
+    /// Record one applied membership flip.
+    pub fn record_move(&mut self, client: usize, from: usize, to: usize) {
+        self.handovers += 1;
+        self.departures[from] += 1;
+        self.arrivals[to] += 1;
+        self.per_client[client] += 1;
+        if let Some(last) = self.per_round_moves.last_mut() {
+            *last += 1;
+        }
+    }
+}
+
+/// Model-level churn of a config, replayed without any training: which
+/// clients the model *wants* where, per slot. Pure function of the
+/// config (models are seed-deterministic), so this is reproducible
+/// independent of `--jobs`/workers — the `repro ablation mobility`
+/// churn CSV is written from it.
+#[derive(Debug, Clone)]
+pub struct MobilityTrace {
+    /// Intended moves at each observed boundary (len = rounds; zero on
+    /// off-cadence slots).
+    pub per_round_moves: Vec<usize>,
+    /// `per_round_members[r][cell]`: intended member count after the
+    /// boundary of slot r+1.
+    pub per_round_members: Vec<Vec<usize>>,
+    /// Total intended moves over the horizon.
+    pub total_moves: usize,
+    /// Intended moves per client.
+    pub per_client_moves: Vec<usize>,
+}
+
+/// Replay the config's mobility model over its round horizon (no
+/// training, no coordinators — model-level intent only).
+pub fn trace(cfg: &Config) -> Result<MobilityTrace> {
+    let k = cfg.partition.clients;
+    let cells = cfg.topology.cells;
+    let map = GroupMap::build(k, cells, cfg.topology.partitioner, cfg.seed)?;
+    let mut model = build_model(cfg, &map)?;
+    let mut assignment: Vec<usize> = model.assignment().to_vec();
+    let mut out = MobilityTrace {
+        per_round_moves: Vec::with_capacity(cfg.rounds),
+        per_round_members: Vec::with_capacity(cfg.rounds),
+        total_moves: 0,
+        per_client_moves: vec![0; k],
+    };
+    for round in 0..cfg.rounds {
+        let mut moves = 0usize;
+        if let Some(target) = advanced_target(cfg, model.as_mut(), round) {
+            for c in 0..k {
+                if target[c] != assignment[c] {
+                    moves += 1;
+                    out.per_client_moves[c] += 1;
+                    assignment[c] = target[c];
+                }
+            }
+        }
+        let mut members = vec![0usize; cells];
+        for &cell in &assignment {
+            members[cell] += 1;
+        }
+        out.per_round_moves.push(moves);
+        out.per_round_members.push(members);
+        out.total_moves += moves;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::topology::PartitionerKind;
+
+    fn map(clients: usize, cells: usize, seed: u64) -> GroupMap {
+        GroupMap::build(clients, cells, PartitionerKind::RoundRobin, seed).unwrap()
+    }
+
+    fn conserved(assignment: &[usize], cells: usize) {
+        assert!(assignment.iter().all(|&a| a < cells), "{assignment:?}");
+    }
+
+    #[test]
+    fn kind_and_policy_roundtrip() {
+        for kind in [MobilityKind::Static, MobilityKind::Markov, MobilityKind::Waypoint] {
+            assert_eq!(MobilityKind::parse(kind.name()).unwrap(), kind);
+        }
+        for pol in [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop] {
+            assert_eq!(HandoverPolicy::parse(pol.name()).unwrap(), pol);
+        }
+        assert_eq!(MobilityKind::parse("rwp").unwrap(), MobilityKind::Waypoint);
+        assert_eq!(HandoverPolicy::parse("carry").unwrap(), HandoverPolicy::Forward);
+        assert!(MobilityKind::parse("teleport").is_err());
+        assert!(HandoverPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn every_model_starts_at_the_initial_partition() {
+        let m = map(17, 3, 5);
+        let want: Vec<usize> = (0..17).map(|c| m.group_of(c)).collect();
+        assert_eq!(StaticMobility::new(&m).assignment(), &want[..]);
+        assert_eq!(MarkovMobility::new(&m, 3, 2.0, 5).assignment(), &want[..]);
+        assert_eq!(WaypointMobility::new(&m, 3, 2.0, 5).assignment(), &want[..]);
+    }
+
+    #[test]
+    fn static_never_moves() {
+        let m = map(10, 2, 1);
+        let mut model = StaticMobility::new(&m);
+        let initial = model.assignment().to_vec();
+        model.advance_to(50);
+        assert_eq!(model.assignment(), &initial[..]);
+    }
+
+    #[test]
+    fn markov_moves_and_is_seed_deterministic() {
+        let m = map(20, 3, 7);
+        let mut a = MarkovMobility::new(&m, 3, 2.0, 7);
+        let mut b = MarkovMobility::new(&m, 3, 2.0, 7);
+        a.advance_to(12);
+        b.advance_to(12);
+        assert_eq!(a.assignment(), b.assignment());
+        conserved(a.assignment(), 3);
+        let initial: Vec<usize> = (0..20).map(|c| m.group_of(c)).collect();
+        assert_ne!(a.assignment(), &initial[..], "nobody moved in 12 slots at dwell 2");
+        // A different seed takes different trajectories.
+        let mut c = MarkovMobility::new(&m, 3, 2.0, 8);
+        c.advance_to(12);
+        assert_ne!(a.assignment(), c.assignment());
+    }
+
+    #[test]
+    fn trajectories_are_independent_of_observation_cadence() {
+        // Observing every slot vs jumping straight to slot 12 must land on
+        // the same assignment — handover_every only changes when moves are
+        // APPLIED, never where clients go.
+        let m = map(16, 4, 3);
+        let builders: [fn(&GroupMap) -> Box<dyn MobilityModel>; 2] = [
+            |m| Box::new(MarkovMobility::new(m, 4, 1.5, 3)),
+            |m| Box::new(WaypointMobility::new(m, 4, 1.5, 3)),
+        ];
+        for build in builders {
+            let mut fine = build(&m);
+            for s in 1..=12 {
+                fine.advance_to(s);
+            }
+            let mut coarse = build(&m);
+            coarse.advance_to(12);
+            assert_eq!(fine.assignment(), coarse.assignment(), "{}", fine.name());
+        }
+    }
+
+    #[test]
+    fn waypoint_moves_by_geometry_and_conserves() {
+        let m = map(24, 4, 11);
+        let mut model = WaypointMobility::new(&m, 4, 1.0, 11);
+        let initial = model.assignment().to_vec();
+        model.advance_to(20);
+        conserved(model.assignment(), 4);
+        assert_ne!(model.assignment(), &initial[..], "fast waypoints never crossed a cell edge");
+    }
+
+    #[test]
+    fn waypoint_grid_covers_all_cells_distinctly() {
+        for cells in 1..=9 {
+            let centers = WaypointMobility::grid_centers(cells);
+            assert_eq!(centers.len(), cells);
+            for (i, a) in centers.iter().enumerate() {
+                assert!(a.0 > 0.0 && a.0 < 1.0 && a.1 > 0.0 && a.1 < 1.0);
+                for b in &centers[i + 1..] {
+                    assert_ne!(a, b, "cells={cells}");
+                }
+            }
+            // Nearest-cell of a center is that cell.
+            for (j, &c) in centers.iter().enumerate() {
+                assert_eq!(WaypointMobility::nearest_cell(&centers, c), j);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_static_is_churn_free() {
+        let mut cfg = Config::default();
+        cfg.partition.clients = 12;
+        cfg.topology.cells = 3;
+        cfg.rounds = 8;
+
+        let quiet = trace(&cfg).unwrap();
+        assert_eq!(quiet.total_moves, 0);
+        assert!(quiet.per_round_moves.iter().all(|&m| m == 0));
+        for members in &quiet.per_round_members {
+            assert_eq!(members.iter().sum::<usize>(), 12);
+        }
+
+        cfg.mobility.kind = MobilityKind::Markov;
+        cfg.mobility.dwell_mean = 1.5;
+        let a = trace(&cfg).unwrap();
+        let b = trace(&cfg).unwrap();
+        assert_eq!(a.per_round_moves, b.per_round_moves);
+        assert_eq!(a.per_round_members, b.per_round_members);
+        assert!(a.total_moves > 0, "markov trace produced no churn");
+        for members in &a.per_round_members {
+            assert_eq!(members.iter().sum::<usize>(), 12, "client lost or duplicated");
+        }
+        assert_eq!(a.per_client_moves.iter().sum::<usize>(), a.total_moves);
+    }
+
+    #[test]
+    fn roaming_over_one_cell_is_a_clean_error() {
+        // Replay paths (trace) run on raw configs that never saw
+        // Config::validate — the model builder must reject roaming over
+        // a single cell instead of panicking in the transition draw.
+        let mut cfg = Config::default();
+        cfg.partition.clients = 4;
+        cfg.topology.cells = 1;
+        cfg.mobility.kind = MobilityKind::Markov;
+        let err = trace(&cfg).unwrap_err().to_string();
+        assert!(err.contains("multi-cell"), "{err}");
+        cfg.mobility.kind = MobilityKind::Static;
+        trace(&cfg).unwrap();
+    }
+
+    #[test]
+    fn stats_accumulate_moves() {
+        let mut s = MobilityStats::new(3, 5);
+        s.per_round_moves.push(0);
+        s.record_move(2, 0, 1);
+        s.record_move(2, 1, 2);
+        assert_eq!(s.handovers, 2);
+        assert_eq!(s.per_client[2], 2);
+        assert_eq!(s.departures, vec![1, 1, 0]);
+        assert_eq!(s.arrivals, vec![0, 1, 1]);
+        assert_eq!(s.per_round_moves, vec![2]);
+    }
+}

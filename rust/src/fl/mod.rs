@@ -32,7 +32,12 @@
 //! **aggregation tree**: `Config`'s `[topology]` surface selects client
 //! groups (`air_fedga`) and multi-cell hierarchies — [`run`] routes
 //! through [`topology::multi_cell`] whenever `cells > 1`, so campaigns
-//! sweep cells × groups declaratively.
+//! sweep cells × groups declaratively. [`mobility`] then makes the
+//! client → cell assignment a function of simulated time: roaming models
+//! (`static`/`markov`/`waypoint`), a handover protocol
+//! (`deliver`/`forward`/`drop` for in-flight updates) and
+//! residence-coupled per-cell channels, all from the `[mobility]` config
+//! surface.
 //!
 //! Every run emits the same [`RoundRecord`] stream so the experiment
 //! harness ([`crate::experiments`] campaigns) can overlay algorithms
@@ -52,6 +57,7 @@ pub mod coordinator;
 pub mod cotaf;
 pub mod fedasync;
 pub mod local_sgd;
+pub mod mobility;
 pub mod paota;
 pub mod registry;
 pub mod topology;

@@ -1,8 +1,11 @@
 //! Air-FedGA (arXiv 2507.05704) — grouping-asynchronous AirComp as an
 //! [`AggregationPolicy`] on the coordinator's periodic timing.
 //!
-//! The fleet is partitioned once into `cfg.topology.groups` groups (see
-//! [`GroupMap`]). Each ΔT slot:
+//! The fleet is partitioned into `cfg.topology.groups` groups (see
+//! [`GroupMap`]) — over the whole fleet for a flat run, or over one
+//! cell's member slice when nested inside a multi-cell hierarchy (the
+//! runner drives [`AggregationPolicy::on_membership`], which also
+//! rebuilds the map after handover churn). Each ΔT slot:
 //!
 //! 1. **Group readiness** ([`AggregationPolicy::select_participants`]):
 //!    a group *fires* when at least `group_ready_frac` of its members
@@ -12,9 +15,16 @@
 //!    a straggler only delays its own group.
 //! 2. **Per-group OTA pass** ([`AggregationPolicy::on_uploads`] →
 //!    [`RoundAction::GroupAggregate`]): every fired group transmits its
-//!    members' models in one AirComp `stack`/`coef` pass of its own, with
-//!    its own receiver-noise draw and staleness-discounted coefficients
-//!    `p_max·ρ(s_k)` (ρ = Ω/(s+Ω), eq. (25) of the PAOTA paper).
+//!    members' models in one AirComp `stack`/`coef` pass of its own,
+//!    with its own receiver-noise draw. Member transmit powers come from
+//!    the configured [`GroupPowerMode`]:
+//!    * [`GroupPowerMode::Dinkelbach`] (default) — the paper's
+//!      Theorem-1 power program (eq. (25)–(27)) run **per group**, with
+//!      the bound's noise term scoped to that group's own OTA pass
+//!      (`K` = the group's size, σ² = this pass' AWGN) — the grouped
+//!      regime of the PAOTA machinery;
+//!    * [`GroupPowerMode::Discounted`] — the legacy staleness-discounted
+//!      `p_max·ρ(s_k)` coefficients (ρ = Ω/(s+Ω), eq. (25) with β = 1).
 //! 3. **Asynchronous group merge**: the server folds the group aggregates
 //!    into the global model, `w ← (1 − Σ_g μ_g)·w + Σ_g μ_g·y_g`, with
 //!    `μ_g = group_mix · ρ(s̄_g)` discounted by the group's mean staleness
@@ -31,13 +41,44 @@ use anyhow::Result;
 
 use crate::channel::Mac;
 use crate::config::Config;
-use crate::power::staleness_factor;
+use crate::power::{
+    solve_power_control, staleness_factor, BoundConstants, ClientFactors, PowerSolverConfig,
+};
+use crate::util::vecmath;
 
 use super::super::coordinator::{
     AggregationPolicy, GroupPass, RngStreams, RoundAction, RoundTiming, Upload,
 };
 use super::super::TrainContext;
-use super::group::GroupMap;
+use super::group::{GroupMap, PartitionerKind};
+
+/// How `air_fedga` allocates member transmit powers inside a group pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupPowerMode {
+    /// Per-group Dinkelbach program (Theorem-1 machinery, noise term
+    /// scoped to the group's own OTA pass).
+    Dinkelbach,
+    /// Staleness-discounted `p_max·ρ(s_k)` (the pre-group-power scheme).
+    Discounted,
+}
+
+impl GroupPowerMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "dinkelbach" | "optimized" => GroupPowerMode::Dinkelbach,
+            "discounted" | "rho" => GroupPowerMode::Discounted,
+            other => anyhow::bail!("unknown group power mode {other:?} (dinkelbach|discounted)"),
+        })
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GroupPowerMode::Dinkelbach => "dinkelbach",
+            GroupPowerMode::Discounted => "discounted",
+        }
+    }
+}
 
 /// Grouping-asynchronous over-the-air aggregation.
 pub struct AirFedGa {
@@ -47,6 +88,17 @@ pub struct AirFedGa {
     p_max: f64,
     ready_frac: f64,
     group_mix: f64,
+    power_mode: GroupPowerMode,
+    /// Group-scoped Dinkelbach inputs (k_total is re-scoped per pass).
+    consts: BoundConstants,
+    solver_cfg: PowerSolverConfig,
+    /// w_g^r − w_g^{r−1}: the similarity reference (Dinkelbach mode).
+    last_delta: Vec<f32>,
+    /// Kept for membership rebuilds.
+    groups_cfg: usize,
+    partitioner: PartitionerKind,
+    seed: u64,
+    clients_total: usize,
     dim: usize,
 }
 
@@ -61,6 +113,7 @@ impl AirFedGa {
             cfg.seed,
         )
         .expect("validated topology config");
+        let dim = ctx.dim();
         Self {
             map,
             mac: Mac::new(cfg.channel),
@@ -68,7 +121,30 @@ impl AirFedGa {
             p_max: cfg.p_max,
             ready_frac: cfg.topology.group_ready_frac,
             group_mix: cfg.topology.group_mix,
-            dim: ctx.dim(),
+            power_mode: cfg.topology.group_power,
+            consts: BoundConstants {
+                l_smooth: cfg.l_smooth,
+                epsilon2: cfg.epsilon2,
+                k_total: ctx.clients(), // re-scoped to the group per pass
+                dim,
+                noise_power: cfg.channel.noise_power(),
+                omega: cfg.omega,
+            },
+            solver_cfg: PowerSolverConfig {
+                solver: cfg.solver,
+                mip_max_k: cfg.mip_max_k,
+                pla_segments: cfg.pla_segments,
+                mip_max_nodes: cfg.mip_max_nodes,
+                dinkelbach_eps: cfg.dinkelbach_eps,
+                dinkelbach_iters: cfg.dinkelbach_iters,
+                force_beta: cfg.force_beta,
+            },
+            last_delta: vec![0.0; dim],
+            groups_cfg: cfg.topology.groups,
+            partitioner: cfg.topology.partitioner,
+            seed: cfg.seed,
+            clients_total: ctx.clients(),
+            dim,
         }
     }
 
@@ -82,6 +158,46 @@ impl AirFedGa {
         let size = self.map.group(group).len();
         ((self.ready_frac * size as f64).ceil() as usize).clamp(1, size)
     }
+
+    /// One pass' member powers under the configured mode. `group` is the
+    /// map group every member of this pass belongs to.
+    fn pass_powers(
+        &self,
+        group: usize,
+        members: &[usize],
+        uploads: &[Upload],
+        rngs: &mut RngStreams,
+    ) -> Result<Vec<f32>> {
+        match self.power_mode {
+            GroupPowerMode::Discounted => {
+                let coefs: Vec<f32> = members
+                    .iter()
+                    .map(|&j| {
+                        (self.p_max * staleness_factor(uploads[j].staleness, self.omega)) as f32
+                    })
+                    .collect();
+                Ok(coefs)
+            }
+            GroupPowerMode::Dinkelbach => {
+                let factors: Vec<ClientFactors> = members
+                    .iter()
+                    .map(|&j| ClientFactors {
+                        stale_rounds: uploads[j].staleness,
+                        cosine: vecmath::cosine(&uploads[j].delta, &self.last_delta),
+                        p_cap: self.p_max,
+                    })
+                    .collect();
+                // The bound's fleet term scoped to THIS group's pass: the
+                // group transmits alone, so its aggregation error sees its
+                // own K and its own receiver noise.
+                let mut consts = self.consts;
+                consts.k_total = self.map.group(group).len();
+                let alloc =
+                    solve_power_control(&factors, &consts, &self.solver_cfg, &mut rngs.opt)?;
+                Ok(alloc.powers.iter().map(|&p| p as f32).collect())
+            }
+        }
+    }
 }
 
 impl AggregationPolicy for AirFedGa {
@@ -91,6 +207,12 @@ impl AggregationPolicy for AirFedGa {
 
     fn timing(&self) -> RoundTiming {
         RoundTiming::Periodic
+    }
+
+    fn needs_deltas(&self) -> bool {
+        // The Dinkelbach program needs the similarity factor θ (cosine of
+        // the update against the last global step).
+        self.power_mode == GroupPowerMode::Dinkelbach
     }
 
     fn select_participants(&mut self, offered: &[usize], _rngs: &mut RngStreams) -> Vec<usize> {
@@ -116,18 +238,15 @@ impl AggregationPolicy for AirFedGa {
         rngs: &mut RngStreams,
     ) -> Result<RoundAction> {
         // Bucket upload indices by group (BTreeMap: deterministic group
-        // order for the per-pass channel-noise draws).
+        // order for the per-pass channel-noise and solver draws).
         let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (j, up) in uploads.iter().enumerate() {
             buckets.entry(self.map.group_of(up.client)).or_default().push(j);
         }
 
         let mut passes = Vec::with_capacity(buckets.len());
-        for members in buckets.into_values() {
-            let coefs: Vec<f32> = members
-                .iter()
-                .map(|&j| (self.p_max * staleness_factor(uploads[j].staleness, self.omega)) as f32)
-                .collect();
+        for (group, members) in buckets {
+            let coefs = self.pass_powers(group, &members, uploads, rngs)?;
             let mean_power =
                 coefs.iter().map(|&c| c as f64).sum::<f64>() / members.len() as f64;
             // Each group is its own OTA transmission → its own AWGN draw.
@@ -154,5 +273,28 @@ impl AggregationPolicy for AirFedGa {
             }
         }
         Ok(RoundAction::GroupAggregate { passes })
+    }
+
+    fn on_global_delta(&mut self, delta: &[f32]) {
+        self.last_delta.copy_from_slice(delta);
+    }
+
+    /// Rebuild the group map over a cell's member slice — called by the
+    /// multi-cell runner at construction and after handover churn. Group
+    /// count is clamped to the slice size; an empty slice keeps the old
+    /// map (the cell offers no one, so the map is never consulted).
+    fn on_membership(&mut self, members: &[usize]) {
+        if members.is_empty() {
+            return;
+        }
+        let groups = self.groups_cfg.clamp(1, members.len());
+        self.map = GroupMap::build_over(
+            members,
+            self.clients_total,
+            groups,
+            self.partitioner,
+            self.seed,
+        )
+        .expect("member slice within the fleet");
     }
 }

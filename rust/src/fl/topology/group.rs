@@ -79,17 +79,38 @@ impl GroupMap {
         seed: u64,
     ) -> Result<Self> {
         ensure!(clients > 0, "group map needs at least one client");
+        let members: Vec<usize> = (0..clients).collect();
+        Self::build_over(&members, clients, n_groups, how, seed)
+    }
+
+    /// Partition an arbitrary **member slice** of a `clients_total`-sized
+    /// fleet into `n_groups` — the nested-topology form: a cell builds
+    /// its group map over its own members only (and rebuilds it after
+    /// handover churn). Profile scores are drawn for the *whole* fleet
+    /// from the same seed-derived streams as [`GroupMap::build`], so a
+    /// client keeps its profile score whichever cell it resides in, and
+    /// `build_over(0..K) ≡ build(K)` exactly. Non-members are left
+    /// unassigned ([`GroupMap::group_of_checked`] returns `None`).
+    pub fn build_over(
+        members: &[usize],
+        clients_total: usize,
+        n_groups: usize,
+        how: PartitionerKind,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(!members.is_empty(), "group map needs at least one member");
         ensure!(n_groups > 0, "group map needs at least one group");
         ensure!(
-            n_groups <= clients,
-            "{n_groups} groups over {clients} clients would leave a group empty"
+            n_groups <= members.len(),
+            "{n_groups} groups over {} members would leave a group empty",
+            members.len()
         );
 
         let mut groups = vec![Vec::new(); n_groups];
         match how {
             PartitionerKind::RoundRobin => {
-                for c in 0..clients {
-                    groups[c % n_groups].push(c);
+                for (i, &c) in members.iter().enumerate() {
+                    groups[i % n_groups].push(c);
                 }
             }
             PartitionerKind::Latency | PartitionerKind::Channel => {
@@ -97,17 +118,25 @@ impl GroupMap {
                     PartitionerKind::Latency => streams::LATENCY_PROFILE,
                     _ => streams::CHANNEL_PROFILE,
                 };
+                // Fleet-wide profile scores (stable per client id), then
+                // restricted to the member slice.
                 let mut rng = Rng::with_stream(seed, tag);
-                let mut scored: Vec<(f64, usize)> =
-                    (0..clients).map(|c| (rng.f64(), c)).collect();
+                let scores: Vec<f64> = (0..clients_total).map(|_| rng.f64()).collect();
+                let mut scored: Vec<(f64, usize)> = members
+                    .iter()
+                    .map(|&c| {
+                        ensure!(c < clients_total, "member {c} out of range");
+                        Ok((scores[c], c))
+                    })
+                    .collect::<Result<_>>()?;
                 // Total order: score first, client id as the tiebreak.
                 scored.sort_by(|a, b| {
                     a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
                 });
                 // Balanced contiguous chunks: the first `rem` groups get
                 // one extra client.
-                let base = clients / n_groups;
-                let rem = clients % n_groups;
+                let base = members.len() / n_groups;
+                let rem = members.len() % n_groups;
                 let mut it = scored.into_iter().map(|(_, c)| c);
                 for (g, group) in groups.iter_mut().enumerate() {
                     let size = base + usize::from(g < rem);
@@ -117,11 +146,11 @@ impl GroupMap {
             }
         }
 
-        let mut assignment = vec![usize::MAX; clients];
+        let mut assignment = vec![usize::MAX; clients_total];
         for (g, group) in groups.iter().enumerate() {
             ensure!(!group.is_empty(), "partitioner produced an empty group");
             for &c in group {
-                ensure!(c < clients, "client {c} out of range");
+                ensure!(c < clients_total, "client {c} out of range");
                 ensure!(
                     assignment[c] == usize::MAX,
                     "client {c} assigned to two groups"
@@ -129,9 +158,10 @@ impl GroupMap {
                 assignment[c] = g;
             }
         }
+        let assigned = assignment.iter().filter(|&&g| g != usize::MAX).count();
         ensure!(
-            assignment.iter().all(|&g| g != usize::MAX),
-            "partitioner left a client unassigned"
+            assigned == members.len(),
+            "partitioner left a member unassigned"
         );
         Ok(Self { groups, assignment })
     }
@@ -157,9 +187,21 @@ impl GroupMap {
         &self.groups
     }
 
-    /// The group `client` belongs to.
+    /// The group `client` belongs to. Panics for a non-member of a map
+    /// built over a slice ([`GroupMap::build_over`]); use
+    /// [`GroupMap::group_of_checked`] when membership is uncertain.
     pub fn group_of(&self, client: usize) -> usize {
-        self.assignment[client]
+        let g = self.assignment[client];
+        assert!(g != usize::MAX, "client {client} is not covered by this group map");
+        g
+    }
+
+    /// The group `client` belongs to, or `None` for a non-member.
+    pub fn group_of_checked(&self, client: usize) -> Option<usize> {
+        match self.assignment.get(client) {
+            Some(&g) if g != usize::MAX => Some(g),
+            _ => None,
+        }
     }
 
     /// Display name of group `g` (telemetry/debug).
@@ -229,6 +271,54 @@ mod tests {
         let lat = GroupMap::build(40, 4, PartitionerKind::Latency, 7).unwrap();
         let chan = GroupMap::build(40, 4, PartitionerKind::Channel, 7).unwrap();
         assert_ne!(lat.groups(), chan.groups());
+    }
+
+    #[test]
+    fn build_over_full_slice_is_exactly_build() {
+        for kind in KINDS {
+            let full = GroupMap::build(24, 4, kind, 9).unwrap();
+            let members: Vec<usize> = (0..24).collect();
+            let over = GroupMap::build_over(&members, 24, 4, kind, 9).unwrap();
+            assert_eq!(full.groups(), over.groups(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn build_over_slice_covers_members_only_and_stays_deterministic() {
+        let members: Vec<usize> = (0..30).step_by(2).collect(); // 15 even clients
+        for kind in KINDS {
+            let a = GroupMap::build_over(&members, 30, 3, kind, 4).unwrap();
+            let b = GroupMap::build_over(&members, 30, 3, kind, 4).unwrap();
+            assert_eq!(a.groups(), b.groups(), "{kind:?} not deterministic");
+            // Every member covered exactly once; non-members uncovered.
+            let mut seen = vec![0usize; 30];
+            for g in 0..a.num_groups() {
+                assert!(!a.group(g).is_empty());
+                for &c in a.group(g) {
+                    seen[c] += 1;
+                    assert_eq!(a.group_of(c), g);
+                }
+            }
+            for c in 0..30 {
+                let want = usize::from(c % 2 == 0);
+                assert_eq!(seen[c], want, "{kind:?} client {c}");
+                assert_eq!(a.group_of_checked(c).is_some(), want == 1);
+            }
+            // Balanced 5/5/5 chunks.
+            let mut sizes: Vec<usize> = a.groups().iter().map(Vec::len).collect();
+            sizes.sort_unstable();
+            assert_eq!(sizes, vec![5, 5, 5], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn build_over_rejects_bad_slices() {
+        assert!(GroupMap::build_over(&[], 10, 1, PartitionerKind::RoundRobin, 0).is_err());
+        assert!(GroupMap::build_over(&[1, 2], 10, 3, PartitionerKind::RoundRobin, 0).is_err());
+        assert!(GroupMap::build_over(&[11], 10, 1, PartitionerKind::Latency, 0).is_err());
+        let m = GroupMap::build_over(&[3, 7, 9], 10, 2, PartitionerKind::Latency, 0).unwrap();
+        assert_eq!(m.num_clients(), 10);
+        assert_eq!(m.group_of_checked(0), None);
     }
 
     #[test]

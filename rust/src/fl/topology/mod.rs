@@ -45,7 +45,7 @@ pub mod air_fedga;
 pub mod group;
 pub mod multi_cell;
 
-pub use air_fedga::AirFedGa;
+pub use air_fedga::{AirFedGa, GroupPowerMode};
 pub use group::{GroupMap, PartitionerKind};
 pub use multi_cell::{
     CloudFedAvg, InterCellMixing, MixingKind, MultiCellResult, MultiCellRunner, NoMixing,

@@ -23,6 +23,19 @@
 //! identical to the serial sweep because no state crosses cells until
 //! the runner mixes models after the step (`tests/golden_seed.rs`
 //! asserts the equivalence).
+//!
+//! Mobility ([`crate::fl::mobility`]): when `cfg.mobility` selects a
+//! roaming model, the runner consults it at slot boundaries (every
+//! `handover_every` slots, on the runner thread — between the concurrent
+//! cell steps, so the sweep is bitwise independent of `workers`/`--jobs`)
+//! and hands movers over between the cells' event queues under the
+//! configured [`HandoverPolicy`]. With `mobility = static` the sweep
+//! finds zero movers and touches nothing — the run is **bitwise** the
+//! frozen-assignment run (`tests/mobility.rs`). Residence-coupled
+//! channels: `mobility.cell_noise_spread_db` spreads the per-cell noise
+//! floors linearly over ±spread/2 dB around the configured N₀, so a
+//! handover re-draws the client's uplink from the new cell's
+//! [`crate::channel::ChannelConfig`] scope.
 
 use anyhow::{ensure, Result};
 
@@ -31,6 +44,7 @@ use crate::fl::coordinator::{
     AggregationPolicy, Coordinator, RngStreams, RoundAction, RoundTiming, Telemetry, Upload,
     WindowStats,
 };
+use crate::fl::mobility::{self, HandoverPolicy, MobilityStats};
 use crate::fl::{registry, RunResult, TrainContext};
 use crate::util::Rng;
 
@@ -177,17 +191,23 @@ impl MixingKind {
 }
 
 /// A complete hierarchical run: every cell's canonical record stream plus
-/// the merged (cloud-level) stream campaigns compare against flat runs.
+/// the merged (cloud-level) stream campaigns compare against flat runs,
+/// and the handover churn the runner actually applied.
 #[derive(Debug, Clone)]
 pub struct MultiCellResult {
     pub cells: Vec<RunResult>,
     pub merged: RunResult,
+    /// Applied handover telemetry (all-zero for `mobility = static`).
+    pub mobility: MobilityStats,
 }
 
-/// Restricts a flat policy to one cell's members: `offered` is
-/// intersected with the membership mask before the inner policy selects.
-/// With a single all-member cell the filter is the identity, so the
-/// 1-cell hierarchy stays bitwise the flat run.
+/// Restricts a policy to one cell's members: `offered` is intersected
+/// with the membership mask before the inner policy selects. With a
+/// single all-member cell the filter is the identity, so the 1-cell
+/// hierarchy stays bitwise the flat run. The mask is **mutable**: the
+/// mobility sweep flips it at handover and then replays the member slice
+/// into the inner policy ([`AggregationPolicy::on_membership`]) so
+/// grouped policies re-partition over the churned slice.
 struct CellPolicy {
     inner: Box<dyn AggregationPolicy>,
     member: Vec<bool>,
@@ -195,11 +215,33 @@ struct CellPolicy {
 
 impl CellPolicy {
     fn new(inner: Box<dyn AggregationPolicy>, members: &[usize], clients: usize) -> Self {
-        let mut member = vec![false; clients];
-        for &c in members {
-            member[c] = true;
-        }
-        Self { inner, member }
+        let mut cell = Self {
+            inner,
+            member: vec![false; clients],
+        };
+        // One membership path for construction and churn alike: set the
+        // mask and scope the inner policy to this cell's slice
+        // (air_fedga builds its group map over the members it serves).
+        cell.on_membership(members);
+        cell
+    }
+
+    fn set_member(&mut self, client: usize, is_member: bool) {
+        self.member[client] = is_member;
+    }
+
+    fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&c| self.member[c]).collect()
+    }
+
+    fn member_count(&self) -> usize {
+        self.member.iter().filter(|&&m| m).count()
+    }
+
+    /// Replay the (churned) member slice into the inner policy.
+    fn refresh_membership(&mut self) {
+        let members = self.members();
+        self.inner.on_membership(&members);
     }
 }
 
@@ -248,6 +290,14 @@ impl AggregationPolicy for CellPolicy {
     fn on_global_delta(&mut self, delta: &[f32]) {
         self.inner.on_global_delta(delta);
     }
+
+    fn on_membership(&mut self, members: &[usize]) {
+        self.member.iter_mut().for_each(|m| *m = false);
+        for &c in members {
+            self.member[c] = true;
+        }
+        self.inner.on_membership(members);
+    }
 }
 
 /// Drives `cfg.topology.cells` coordinators in lock-step with the
@@ -289,29 +339,47 @@ pub fn run_with_mixing(
 ) -> Result<MultiCellResult> {
     cfg.validate()?;
     let n = cfg.topology.cells;
-    let map = GroupMap::build(ctx.clients(), n, cfg.topology.partitioner, cfg.seed)?;
+    let k = ctx.clients();
+    let map = GroupMap::build(k, n, cfg.topology.partitioner, cfg.seed)?;
 
     // Per-cell configs: cell 0 keeps the base seed (the 1-cell degeneracy
-    // contract), every further cell derives an independent one.
+    // contract), every further cell derives an independent one. The
+    // residence-coupled channel scope spreads the cells' noise floors
+    // linearly over ±spread/2 dB around the configured N₀ (spread = 0
+    // keeps every cell bitwise on the base channel).
+    let spread = cfg.mobility.cell_noise_spread_db;
     let cell_cfgs: Vec<Config> = (0..n)
         .map(|c| {
             let mut cc = cfg.clone();
             if c > 0 {
                 cc.seed = cfg.seed ^ (c as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
             }
+            if spread != 0.0 && n > 1 {
+                let offset = spread * (c as f64 / (n as f64 - 1.0) - 0.5);
+                cc.channel = cc.channel.with_n0_offset(offset);
+            }
             cc
         })
         .collect();
 
-    let mut policies: Vec<Box<dyn AggregationPolicy>> = Vec::with_capacity(n);
+    let mut policies: Vec<CellPolicy> = Vec::with_capacity(n);
     for (c, cc) in cell_cfgs.iter().enumerate() {
-        let inner = registry::build(cfg.algorithm.name(), ctx, cc)?;
+        // Policies are built on the BASE seed: the only constructor that
+        // consumes it is air_fedga's profile-scored GroupMap, and profile
+        // scores are device properties — fleet-global, so a client keeps
+        // its score whichever cell it roams to (the `build_over`
+        // stability contract). The coordinator's runtime RNG streams
+        // still derive from the cell-specific seed in `cc`; flat policies
+        // never read the seed, so this is bitwise-invisible to them.
+        let mut pc = cc.clone();
+        pc.seed = cfg.seed;
+        let inner = registry::build(cfg.algorithm.name(), ctx, &pc)?;
         ensure!(
             inner.timing() == RoundTiming::Periodic,
             "multi-cell topology drives periodic-timing policies; {:?} is not",
             inner.name()
         );
-        policies.push(Box::new(CellPolicy::new(inner, map.group(c), ctx.clients())));
+        policies.push(CellPolicy::new(inner, map.group(c), k));
     }
     let mut coords: Vec<Coordinator> = cell_cfgs
         .iter()
@@ -321,6 +389,17 @@ pub fn run_with_mixing(
     for coord in &mut coords {
         coord.begin_periodic();
     }
+
+    // Mobility: the client → cell assignment as a function of slot time.
+    // The model is consulted on the runner thread between slot steps, so
+    // the sweep is bitwise independent of workers/jobs; with the static
+    // model every sweep finds zero movers and mutates nothing.
+    let mut model = mobility::build_model(cfg, &map)?;
+    let mut assignment: Vec<usize> = (0..k).map(|c| map.group_of(c)).collect();
+    // Deliver-policy deferrals: (target cell, base_round at defer time) —
+    // the move completes once the old cell served the stale upload.
+    let mut deferred: Vec<Option<(usize, usize)>> = vec![None; k];
+    let mut mob_stats = MobilityStats::new(n, k);
 
     // The merged (cloud-level) stream only exists for true hierarchies;
     // a 1-cell run's merged stream IS its cell stream.
@@ -336,7 +415,7 @@ pub fn run_with_mixing(
             std::thread::scope(|scope| -> Result<()> {
                 let mut handles = Vec::with_capacity(n);
                 for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
-                    let cell = scope.spawn(move || coord.step_periodic(policy.as_mut(), round));
+                    let cell = scope.spawn(move || coord.step_periodic(policy, round));
                     handles.push(cell);
                 }
                 for handle in handles {
@@ -346,9 +425,19 @@ pub fn run_with_mixing(
             })?;
         } else {
             for (coord, policy) in coords.iter_mut().zip(policies.iter_mut()) {
-                coord.step_periodic(policy.as_mut(), round)?;
+                coord.step_periodic(policy, round)?;
             }
         }
+        handover_sweep(
+            cfg,
+            round,
+            model.as_mut(),
+            &mut coords,
+            &mut policies,
+            &mut assignment,
+            &mut deferred,
+            &mut mob_stats,
+        )?;
         if n > 1 && mixing.mixes_at(round) {
             let mut models: Vec<Vec<f32>> =
                 coords.iter().map(|c| c.global_weights().to_vec()).collect();
@@ -406,7 +495,119 @@ pub fn run_with_mixing(
             }
         }
     };
-    Ok(MultiCellResult { cells, merged })
+    Ok(MultiCellResult {
+        cells,
+        merged,
+        mobility: mob_stats,
+    })
+}
+
+/// One slot boundary of the mobility protocol: complete any deferred
+/// `deliver` moves whose stale upload landed, then (on the
+/// `handover_every` cadence) consult the model and hand new movers over
+/// under the configured policy. Runs strictly between cell steps on the
+/// runner thread — no coordinator is mid-slot — so detaching a mover
+/// never disturbs another client's slot, stream or queued event.
+#[allow(clippy::too_many_arguments)]
+fn handover_sweep(
+    cfg: &Config,
+    round: usize,
+    model: &mut dyn mobility::MobilityModel,
+    coords: &mut [Coordinator],
+    policies: &mut [CellPolicy],
+    assignment: &mut [usize],
+    deferred: &mut [Option<(usize, usize)>],
+    stats: &mut MobilityStats,
+) -> Result<()> {
+    // Apply one membership flip to the masks, the authoritative
+    // assignment, the churn markers and the stats.
+    fn flip(
+        c: usize,
+        from: usize,
+        to: usize,
+        assignment: &mut [usize],
+        policies: &mut [CellPolicy],
+        churned: &mut [bool],
+        stats: &mut MobilityStats,
+    ) {
+        policies[from].set_member(c, false);
+        policies[to].set_member(c, true);
+        assignment[c] = to;
+        churned[from] = true;
+        churned[to] = true;
+        stats.record_move(c, from, to);
+    }
+
+    let k = assignment.len();
+    let n = coords.len();
+    stats.per_round_moves.push(0);
+    let mut churned = vec![false; n];
+
+    // 1. Deferred deliver moves: the old cell bumps the client's base
+    //    round when it serves the upload — the stale update has landed
+    //    OTA there; complete the move with a fresh spawn in the new cell.
+    for c in 0..k {
+        if let Some((to, base_at_defer)) = deferred[c] {
+            let from = assignment[c];
+            if coords[from].client_base_round(c) > base_at_defer {
+                let slow = coords[from].detach_client_discarding(c);
+                coords[to].admit_fresh(c, round, slow);
+                flip(c, from, to, assignment, policies, &mut churned, stats);
+                stats.delivered += 1;
+                deferred[c] = None;
+            }
+        }
+    }
+
+    // 2. New moves, on the handover cadence (one shared cadence rule
+    //    with the trace replay — `mobility::advanced_target`). The model
+    //    advances through every intermediate slot internally, so the
+    //    trajectory itself is cadence-independent.
+    if let Some(target) = mobility::advanced_target(cfg, model, round) {
+        for c in 0..k {
+            let to = target[c];
+            if let Some((_, base)) = deferred[c] {
+                // Retarget (or cancel) an in-progress deliver move.
+                deferred[c] = if to == assignment[c] { None } else { Some((to, base)) };
+                continue;
+            }
+            let from = assignment[c];
+            if to == from {
+                continue;
+            }
+            match cfg.mobility.handover {
+                HandoverPolicy::Deliver => {
+                    deferred[c] = Some((to, coords[from].client_base_round(c)));
+                }
+                HandoverPolicy::Forward => {
+                    let d = coords[from].detach_client(c);
+                    coords[to].admit_client(c, d);
+                    flip(c, from, to, assignment, policies, &mut churned, stats);
+                }
+                HandoverPolicy::Drop => {
+                    let slow = coords[from].detach_client_discarding(c);
+                    coords[to].admit_fresh(c, round, slow);
+                    flip(c, from, to, assignment, policies, &mut churned, stats);
+                }
+            }
+        }
+    }
+
+    // 3. Re-partition churned cells' group maps over their new slices.
+    for (cell, dirty) in churned.iter().enumerate() {
+        if *dirty {
+            policies[cell].refresh_membership();
+        }
+    }
+
+    // 4. Conservation snapshot: the masks must partition the fleet.
+    let members: Vec<usize> = policies.iter().map(|p| p.member_count()).collect();
+    ensure!(
+        members.iter().sum::<usize>() == k,
+        "handover broke fleet conservation: cell members {members:?} != {k} clients"
+    );
+    stats.per_round_members.push(members);
+    Ok(())
 }
 
 /// f64-accumulated uniform mean of a model set.

@@ -94,6 +94,43 @@ impl<T> EventQueue<T> {
         }
     }
 
+    /// Remove and return the earliest-scheduled event whose payload
+    /// matches `pred`, leaving every other entry (and the FIFO order of
+    /// simultaneous events) untouched — the detach primitive for client
+    /// handover ([`crate::fl::Coordinator::detach_client`]).
+    pub fn remove_first(&mut self, pred: impl Fn(&T) -> bool) -> Option<(f64, T)> {
+        let entries = std::mem::take(&mut self.heap).into_sorted_vec();
+        let mut removed = None;
+        let mut kept = Vec::with_capacity(entries.len());
+        // `into_sorted_vec` is ascending by `Ord`, i.e. *latest* first
+        // under our reversed ordering — scan from the back for the
+        // earliest match.
+        for entry in entries.into_iter().rev() {
+            if removed.is_none() && pred(&entry.payload) {
+                removed = Some((entry.time, entry.payload));
+            } else {
+                kept.push(entry);
+            }
+        }
+        self.heap = BinaryHeap::from(kept);
+        removed
+    }
+
+    /// Remove every event whose payload matches `pred` in one pass (one
+    /// heap rebuild, FIFO order of survivors preserved); returns how many
+    /// were dropped. The purge primitive behind handover admits.
+    pub fn remove_all(&mut self, pred: impl Fn(&T) -> bool) -> usize {
+        let before = self.heap.len();
+        let kept: Vec<Entry<T>> = std::mem::take(&mut self.heap)
+            .into_vec()
+            .into_iter()
+            .filter(|e| !pred(&e.payload))
+            .collect();
+        let removed = before - kept.len();
+        self.heap = BinaryHeap::from(kept);
+        removed
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -155,6 +192,50 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn rejects_nan_time() {
         EventQueue::new().push(f64::NAN, 0);
+    }
+
+    #[test]
+    fn remove_first_takes_earliest_match_and_preserves_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "late-a");
+        q.push(1.0, "b");
+        q.push(2.0, "a");
+        q.push(2.0, "a2");
+        // Earliest "a*" match is at t = 2 (payload "a", pushed before "a2").
+        let got = q.remove_first(|p| p.starts_with('a'));
+        assert_eq!(got, Some((2.0, "a")));
+        // Everything else pops in the original time/FIFO order.
+        assert_eq!(q.pop(), Some((1.0, "b")));
+        assert_eq!(q.pop(), Some((2.0, "a2")));
+        assert_eq!(q.pop(), Some((3.0, "late-a")));
+        // No match leaves the queue untouched.
+        let mut q = EventQueue::new();
+        q.push(1.0, 7usize);
+        assert_eq!(q.remove_first(|&p| p == 9), None);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn remove_all_drops_every_match_in_one_pass() {
+        let mut q = EventQueue::new();
+        for i in 0..8 {
+            q.push(i as f64, i);
+        }
+        assert_eq!(q.remove_all(|&p| p % 2 == 0), 4);
+        assert_eq!(q.remove_all(|&p| p % 2 == 0), 0);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn remove_first_keeps_fifo_among_simultaneous_survivors() {
+        let mut q = EventQueue::new();
+        for i in 0..6 {
+            q.push(5.0, i);
+        }
+        assert_eq!(q.remove_first(|&p| p == 3), Some((5.0, 3)));
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![0, 1, 2, 4, 5]);
     }
 
     #[test]

@@ -138,6 +138,23 @@ impl LatencySampler {
         &self.model
     }
 
+    /// The client's current Gilbert–Elliott "slow" flag (always `false`
+    /// for the stateless models). Roaming clients carry this residence
+    /// state across cells (`Coordinator::detach_client` /
+    /// `admit_client`): a device deep in a slow phase stays slow when
+    /// it hands over — the chain is a property of the device, not of the
+    /// serving cell.
+    pub fn slow_state(&self, client: usize) -> bool {
+        self.slow_state[client]
+    }
+
+    /// Rebind the client's Gilbert–Elliott chain state (handover admit).
+    /// A no-op in effect for the stateless models, whose draws ignore the
+    /// flag.
+    pub fn set_slow_state(&mut self, client: usize, slow: bool) {
+        self.slow_state[client] = slow;
+    }
+
     /// Draw `client`'s next per-round latency.
     pub fn draw(&mut self, client: usize, rng: &mut Rng) -> f64 {
         match self.model {

@@ -1,0 +1,349 @@
+//! Integration over the `fl::mobility` subsystem on the pure-Rust native
+//! kernel: the static-degeneracy (bitwise) contract, fleet conservation
+//! under every roaming model × handover policy, forward-handover
+//! staleness monotonicity, worker-count invariance, and the mobility
+//! ablation campaign — all artifact-free so CI exercises them on every
+//! push.
+
+use paota::config::{Algorithm, Config};
+use paota::experiments;
+use paota::fl::coordinator::streams;
+use paota::fl::mobility::{self, HandoverPolicy, MobilityKind};
+use paota::fl::topology::{multi_cell, MixingKind};
+use paota::fl::{Coordinator, RunResult, TrainContext};
+use paota::runtime::Engine;
+
+/// Small 3-cell native-kernel config: fast in debug CI, enough churn at
+/// dwell_mean 1.5 that every handover policy is exercised.
+fn tiny_cfg() -> Config {
+    let mut c = Config::default();
+    c.rounds = 5;
+    c.eval_every = 2;
+    c.artifacts_dir = "native".into();
+    c.synth.side = 8; // d_in = 64
+    c.partition.clients = 12;
+    c.partition.sizes = vec![40, 80];
+    c.partition.test_size = 32;
+    c.topology.cells = 3;
+    c.topology.mixing = MixingKind::Cloud;
+    c.topology.mixing_every = 2;
+    c.mobility.dwell_mean = 1.5;
+    c
+}
+
+fn build_ctx(cfg: &Config) -> (Engine, TrainContext) {
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, cfg).unwrap();
+    (engine, ctx)
+}
+
+fn assert_run_bitwise(tag: &str, got: &RunResult, want: &RunResult) {
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        let t = format!("{tag} round {}", b.round);
+        assert_eq!(a.round, b.round, "{t}");
+        assert_eq!(a.participants, b.participants, "{t}");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{t}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{t}");
+        assert_eq!(a.mean_staleness.to_bits(), b.mean_staleness.to_bits(), "{t}");
+        assert_eq!(a.mean_power.to_bits(), b.mean_power.to_bits(), "{t}");
+    }
+    let same = got
+        .final_weights
+        .iter()
+        .zip(&want.final_weights)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "{tag}: final weights drifted");
+}
+
+#[test]
+fn static_mobility_is_bitwise_the_frozen_multi_cell_run() {
+    // The degeneracy contract: with `mobility = static` the handover
+    // machinery runs (the model is consulted every slot) but finds zero
+    // movers, so the run must be BITWISE the frozen-assignment multi-cell
+    // run — whatever the handover policy or cadence knobs say.
+    let base = tiny_cfg();
+    assert_eq!(base.mobility.kind, MobilityKind::Static);
+    let (_engine, ctx) = build_ctx(&base);
+    let frozen = multi_cell::run(&ctx, &base).unwrap();
+    assert_eq!(frozen.mobility.handovers, 0);
+    assert_eq!(frozen.mobility.delivered, 0);
+    assert!(frozen.mobility.per_round_moves.iter().all(|&m| m == 0));
+
+    for policy in [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop] {
+        for every in [1usize, 3] {
+            let mut cfg = base.clone();
+            cfg.mobility.handover = policy;
+            cfg.mobility.handover_every = every;
+            let got = multi_cell::run(&ctx, &cfg).unwrap();
+            let tag = format!("static/{}/every={every}", policy.name());
+            assert_run_bitwise(&format!("{tag} merged"), &got.merged, &frozen.merged);
+            for (i, (a, b)) in got.cells.iter().zip(&frozen.cells).enumerate() {
+                assert_run_bitwise(&format!("{tag} cell {i}"), a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_client_attached_to_exactly_one_cell_at_every_step() {
+    // The conservation property, across models × handover policies ×
+    // seeds: the runner snapshots per-cell member counts after every
+    // slot's sweep; each row must partition the 12-client fleet.
+    for kind in [MobilityKind::Markov, MobilityKind::Waypoint] {
+        for policy in [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop] {
+            let mut cfg = tiny_cfg();
+            cfg.seed = 42 + policy.name().len() as u64; // vary seeds a bit
+            cfg.mobility.kind = kind;
+            cfg.mobility.handover = policy;
+            let (_engine, ctx) = build_ctx(&cfg);
+            let out = multi_cell::run(&ctx, &cfg).unwrap();
+            let tag = format!("{}/{}", kind.name(), policy.name());
+            assert_eq!(out.mobility.per_round_members.len(), cfg.rounds, "{tag}");
+            for (r, members) in out.mobility.per_round_members.iter().enumerate() {
+                assert_eq!(members.len(), cfg.topology.cells, "{tag} round {r}");
+                assert_eq!(
+                    members.iter().sum::<usize>(),
+                    cfg.partition.clients,
+                    "{tag} round {r}: fleet not conserved ({members:?})"
+                );
+            }
+            // Applied churn bookkeeping is internally consistent.
+            assert_eq!(
+                out.mobility.per_round_moves.iter().sum::<usize>(),
+                out.mobility.handovers,
+                "{tag}"
+            );
+            assert_eq!(
+                out.mobility.arrivals.iter().sum::<usize>(),
+                out.mobility.handovers,
+                "{tag}"
+            );
+            assert_eq!(
+                out.mobility.departures.iter().sum::<usize>(),
+                out.mobility.handovers,
+                "{tag}"
+            );
+            assert_eq!(
+                out.mobility.per_client.iter().sum::<usize>(),
+                out.mobility.handovers,
+                "{tag}"
+            );
+            assert_eq!(out.merged.records.len(), cfg.rounds, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn roaming_is_deterministic_and_changes_the_trajectory() {
+    let mut cfg = tiny_cfg();
+    cfg.mobility.kind = MobilityKind::Markov;
+    cfg.mobility.handover = HandoverPolicy::Forward;
+    let (_engine, ctx) = build_ctx(&cfg);
+    let a = multi_cell::run(&ctx, &cfg).unwrap();
+    let b = multi_cell::run(&ctx, &cfg).unwrap();
+    assert_run_bitwise("markov/forward repeat", &a.merged, &b.merged);
+    assert_eq!(a.mobility.handovers, b.mobility.handovers);
+    assert!(a.mobility.handovers > 0, "dwell_mean 1.5 over 5 slots moved nobody");
+
+    let frozen = {
+        let mut c = cfg.clone();
+        c.mobility.kind = MobilityKind::Static;
+        multi_cell::run(&ctx, &c).unwrap()
+    };
+    assert_ne!(
+        a.merged.final_weights, frozen.merged.final_weights,
+        "roaming changed nothing"
+    );
+}
+
+#[test]
+fn handover_policies_treat_in_flight_work_differently() {
+    // Same trajectory (same seed/model), three in-flight semantics —
+    // the cloud models must diverge.
+    let mut base = tiny_cfg();
+    base.mobility.kind = MobilityKind::Markov;
+    base.mobility.dwell_mean = 1.0; // maximal churn
+    let (_engine, ctx) = build_ctx(&base);
+    let mut finals = Vec::new();
+    for policy in [HandoverPolicy::Deliver, HandoverPolicy::Forward, HandoverPolicy::Drop] {
+        let mut cfg = base.clone();
+        cfg.mobility.handover = policy;
+        let out = multi_cell::run(&ctx, &cfg).unwrap();
+        if policy == HandoverPolicy::Deliver {
+            assert_eq!(
+                out.mobility.delivered, out.mobility.handovers,
+                "every applied deliver move must have delivered its upload first"
+            );
+        } else {
+            assert_eq!(out.mobility.delivered, 0, "{}", policy.name());
+        }
+        finals.push((policy.name(), out.merged.final_weights));
+    }
+    for i in 0..finals.len() {
+        for j in i + 1..finals.len() {
+            assert_ne!(
+                finals[i].1, finals[j].1,
+                "{} and {} produced identical models under heavy churn",
+                finals[i].0, finals[j].0
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_handover_staleness_is_monotone_across_the_hop() {
+    // Unit-level contract behind "staleness accrues across the hop": a
+    // forwarded client keeps its base_round (and base weights), so its
+    // staleness `round − base_round` can only grow while rounds advance.
+    let mut cfg = tiny_cfg();
+    cfg.topology.cells = 1; // plain coordinators, driven by hand
+    let (_engine, ctx) = build_ctx(&cfg);
+    let mut cell_a = Coordinator::new(&ctx, &cfg, streams::BATCH);
+    let mut other = cfg.clone();
+    other.seed ^= 0x9e37_79b9;
+    let mut cell_b = Coordinator::new(&ctx, &other, streams::BATCH);
+    cell_a.begin_periodic();
+    cell_b.begin_periodic();
+
+    let client = 3usize;
+    let base_at_hop = cell_a.client_base_round(client);
+    let d = cell_a.detach_client(client);
+    assert_eq!(d.slot.base_round, base_at_hop);
+    let was_ready = d.was_ready;
+    let queued = d.queued_finish.is_some();
+    assert!(was_ready || queued, "a spawned client is either training or ready");
+
+    // Forward: the new cell sees the same base_round — staleness at any
+    // later round r' is r' − base ≥ r − base for r' ≥ r.
+    cell_b.admit_client(client, d);
+    assert_eq!(cell_b.client_base_round(client), base_at_hop);
+    for later in [base_at_hop + 1, base_at_hop + 4] {
+        assert!(later.saturating_sub(cell_b.client_base_round(client)) >= later - base_at_hop);
+    }
+
+    // Drop/deliver tail: a fresh admit resets the base to the admit
+    // round, discarding the accrued staleness (the carried flag is the
+    // device's Gilbert–Elliott residence state).
+    cell_b.admit_fresh(client, 2, false);
+    assert_eq!(cell_b.client_base_round(client), 3);
+}
+
+#[test]
+fn residence_coupled_channels_change_the_physical_layer() {
+    // Spreading the per-cell noise floors must change the run (clients
+    // now transmit through their resident cell's channel)…
+    let base = tiny_cfg();
+    let (_engine, ctx) = build_ctx(&base);
+    let flat_noise = multi_cell::run(&ctx, &base).unwrap();
+    let mut spread = base.clone();
+    spread.mobility.cell_noise_spread_db = 100.0;
+    let spread_out = multi_cell::run(&ctx, &spread).unwrap();
+    assert_ne!(
+        flat_noise.merged.final_weights, spread_out.merged.final_weights,
+        "cell_noise_spread_db had no effect"
+    );
+    // …and a 0 dB spread is the bitwise identity (covered more broadly by
+    // the static-degeneracy test; asserted directly here).
+    let mut zero = base.clone();
+    zero.mobility.cell_noise_spread_db = 0.0;
+    let z = multi_cell::run(&ctx, &zero).unwrap();
+    assert_run_bitwise("zero spread", &z.merged, &flat_noise.merged);
+}
+
+#[test]
+fn parallel_workers_do_not_move_a_bit_under_roaming() {
+    // The handover sweep runs between the (possibly concurrent) cell
+    // steps; workers must stay bitwise invisible under churn.
+    let mut serial = tiny_cfg();
+    serial.mobility.kind = MobilityKind::Markov;
+    serial.mobility.handover = HandoverPolicy::Forward;
+    serial.perf.workers = 1;
+    let mut par = serial.clone();
+    par.perf.workers = 4;
+    let ctx_s = TrainContext::new(&serial).unwrap();
+    let ctx_p = TrainContext::new(&par).unwrap();
+    let a = multi_cell::run(&ctx_s, &serial).unwrap();
+    let b = multi_cell::run(&ctx_p, &par).unwrap();
+    assert_eq!(a.mobility.handovers, b.mobility.handovers);
+    assert_run_bitwise("workers=4 vs 1 merged", &b.merged, &a.merged);
+    for (i, (x, y)) in b.cells.iter().zip(&a.cells).enumerate() {
+        assert_run_bitwise(&format!("workers=4 vs 1 cell {i}"), x, y);
+    }
+}
+
+#[test]
+fn run_dispatch_routes_roaming_configs_like_any_multi_cell_run() {
+    // `fl::run_with_context` must accept a roaming config unchanged and
+    // return the merged stream.
+    let mut cfg = tiny_cfg();
+    cfg.mobility.kind = MobilityKind::Waypoint;
+    cfg.mobility.handover = HandoverPolicy::Drop;
+    cfg.algorithm = Algorithm::parse("paota").unwrap();
+    let (_engine, ctx) = build_ctx(&cfg);
+    let via_dispatch = paota::fl::run_with_context(&ctx, &cfg).unwrap();
+    let direct = multi_cell::run(&ctx, &cfg).unwrap();
+    assert_run_bitwise("dispatch vs direct", &via_dispatch, &direct.merged);
+}
+
+#[test]
+fn mobility_ablation_emits_accuracy_and_churn_csvs() {
+    let mut cfg = tiny_cfg();
+    cfg.rounds = 3;
+    cfg.topology = Default::default(); // the ablation sets its own tree
+    cfg.mobility = Default::default();
+    let dir = std::env::temp_dir().join("paota_mobility_ablation_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    experiments::ablation("mobility", &cfg, &dir).unwrap();
+    let acc = std::fs::read_to_string(dir.join("ablation_mobility.csv")).unwrap();
+    let churn = std::fs::read_to_string(dir.join("ablation_mobility_churn.csv")).unwrap();
+    for series in [
+        "static",
+        "markov_deliver",
+        "markov_forward",
+        "markov_drop",
+        "waypoint_deliver",
+        "waypoint_forward",
+        "waypoint_drop",
+        "markov_deliver_snr6",
+    ] {
+        assert!(acc.contains(series), "missing series {series} in:\n{acc}");
+        assert!(churn.contains(series), "missing churn series {series} in:\n{churn}");
+    }
+    // Churn schema: series,round,moves,members_per_cell with the member
+    // counts slash-joined and conserving the fleet; the static series
+    // never moves anyone.
+    let lines: Vec<&str> = churn.lines().collect();
+    assert_eq!(lines[0], "series,round,moves,members_per_cell");
+    for line in &lines[1..] {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), 4, "{line}");
+        let members: usize = cols[3].split('/').map(|m| m.parse::<usize>().unwrap()).sum();
+        assert_eq!(members, cfg.partition.clients, "{line}");
+        if cols[0] == "static" {
+            assert_eq!(cols[2], "0", "{line}");
+        }
+    }
+}
+
+#[test]
+fn trace_matches_applied_churn_for_immediate_policies() {
+    // `forward`/`drop` apply every intended move the slot it is decided,
+    // so the runner's applied churn must equal the model-level trace.
+    let mut cfg = tiny_cfg();
+    cfg.mobility.kind = MobilityKind::Markov;
+    cfg.mobility.handover = HandoverPolicy::Forward;
+    let t = mobility::trace(&cfg).unwrap();
+    let (_engine, ctx) = build_ctx(&cfg);
+    let out = multi_cell::run(&ctx, &cfg).unwrap();
+    assert_eq!(out.mobility.handovers, t.total_moves);
+    assert_eq!(out.mobility.per_round_moves, t.per_round_moves);
+    assert_eq!(out.mobility.per_round_members, t.per_round_members);
+    // `deliver` defers: applied churn never exceeds intent.
+    let mut del = cfg.clone();
+    del.mobility.handover = HandoverPolicy::Deliver;
+    let d = multi_cell::run(&ctx, &del).unwrap();
+    assert!(d.mobility.handovers <= t.total_moves);
+}

@@ -5,7 +5,8 @@
 
 use paota::config::{Algorithm, Config};
 use paota::experiments;
-use paota::fl::topology::{multi_cell, MixingKind, NoMixing, PartitionerKind};
+use paota::fl::mobility::{HandoverPolicy, MobilityKind};
+use paota::fl::topology::{multi_cell, GroupPowerMode, MixingKind, NoMixing, PartitionerKind};
 use paota::fl::{self, TrainContext};
 use paota::runtime::Engine;
 
@@ -141,6 +142,87 @@ fn inter_cell_mixing_changes_the_outcome() {
         isolated.cells[0].final_weights, isolated.cells[1].final_weights,
         "isolated cells converged identically — cell filtering broken?"
     );
+}
+
+#[test]
+fn air_fedga_nests_inside_cells_and_survives_churn() {
+    // The composed topology layers: cells > 1 with the grouped policy is
+    // now valid — each cell builds its GroupMap over its own member
+    // slice (and rebuilds it after handover churn).
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::parse("air_fedga").unwrap();
+    cfg.topology.cells = 2;
+    cfg.topology.groups = 3;
+    cfg.topology.group_ready_frac = 0.5;
+    cfg.validate().unwrap(); // the PR-3 restriction is lifted
+    let (_engine, ctx) = build_ctx(&cfg);
+
+    let a = multi_cell::run(&ctx, &cfg).unwrap();
+    let b = multi_cell::run(&ctx, &cfg).unwrap();
+    assert_eq!(a.merged.final_weights, b.merged.final_weights, "nested run not deterministic");
+    assert_eq!(a.merged.records.len(), cfg.rounds);
+    assert_eq!(a.cells.len(), 2);
+
+    // The nested tree is not the flat grouped run (cells actually split
+    // the fleet) and not the flat-policy multi-cell run (groups actually
+    // fire per cell).
+    let mut flat_grouped = cfg.clone();
+    flat_grouped.topology.cells = 1;
+    let fg = fl::run_with_context(&ctx, &flat_grouped).unwrap();
+    assert_ne!(a.merged.final_weights, fg.final_weights);
+    let mut flat_policy = cfg.clone();
+    flat_policy.algorithm = Algorithm::parse("paota").unwrap();
+    let fp = multi_cell::run(&ctx, &flat_policy).unwrap();
+    assert_ne!(a.merged.final_weights, fp.merged.final_weights);
+
+    // With roaming on top, the per-cell maps rebuild after churn and the
+    // run stays deterministic and conserving.
+    let mut roam = cfg.clone();
+    roam.mobility.kind = MobilityKind::Markov;
+    roam.mobility.dwell_mean = 1.0;
+    roam.mobility.handover = HandoverPolicy::Forward;
+    let r1 = multi_cell::run(&ctx, &roam).unwrap();
+    let r2 = multi_cell::run(&ctx, &roam).unwrap();
+    assert_eq!(r1.merged.final_weights, r2.merged.final_weights);
+    assert!(r1.mobility.handovers > 0, "no churn at dwell_mean 1");
+    for members in &r1.mobility.per_round_members {
+        assert_eq!(members.iter().sum::<usize>(), cfg.partition.clients);
+    }
+}
+
+#[test]
+fn group_power_modes_are_distinct_and_deterministic() {
+    // The group-aware power control: the per-group Dinkelbach program
+    // (default) vs the legacy staleness-discounted p_max.
+    for mode in [GroupPowerMode::Dinkelbach, GroupPowerMode::Discounted] {
+        assert_eq!(GroupPowerMode::parse(mode.name()).unwrap(), mode);
+    }
+    assert!(GroupPowerMode::parse("nope").is_err());
+
+    let mut din = tiny_cfg();
+    din.algorithm = Algorithm::parse("air_fedga").unwrap();
+    din.topology.groups = 3;
+    din.topology.group_ready_frac = 0.5;
+    assert_eq!(din.topology.group_power, GroupPowerMode::Dinkelbach);
+    // Similarity-only β pins the optimized powers to p_max·θ — a
+    // different allocation than the discounted p_max·ρ whenever θ ≠ ρ
+    // (θ = 0.5 on the first round's zero reference direction).
+    din.force_beta = Some(0.0);
+    let mut disc = din.clone();
+    disc.topology.group_power = GroupPowerMode::Discounted;
+
+    let d1 = fl::run(&din).unwrap();
+    let d2 = fl::run(&din).unwrap();
+    assert_eq!(d1.final_weights, d2.final_weights, "dinkelbach mode not deterministic");
+    let l1 = fl::run(&disc).unwrap();
+    assert_ne!(
+        d1.final_weights, l1.final_weights,
+        "group power mode had no effect on the trajectory"
+    );
+    // The per-group program respects the power cap in telemetry.
+    for rec in &d1.records {
+        assert!(rec.mean_power <= din.p_max + 1e-9, "round {}", rec.round);
+    }
 }
 
 #[test]
