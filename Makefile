@@ -2,7 +2,7 @@
 
 RUST_DIR := rust
 
-.PHONY: verify build test fmt clippy artifacts bench
+.PHONY: verify build test fmt clippy artifacts bench bench-fleet
 
 # Everything CI runs: release build, tests, formatting, lints.
 verify: build test fmt clippy
@@ -30,3 +30,11 @@ artifacts:
 bench:
 	cd $(RUST_DIR) && PAOTA_BENCH_OUT=$(CURDIR)/BENCH_native.json \
 		cargo bench --bench native_kernel
+
+# Fleet scale-out trajectory: K ∈ {10², 10⁴, 10⁶} periodic-PAOTA runs
+# (rounds/sec + peak RSS) and the indexed-vs-rebuild handover sweep,
+# recorded to BENCH_fleet.json at the repo root. PAOTA_BENCH_FAST=1
+# caps the fleet at K = 10⁴ for CI smoke runs.
+bench-fleet:
+	cd $(RUST_DIR) && PAOTA_BENCH_OUT=$(CURDIR)/BENCH_fleet.json \
+		cargo bench --bench fleet_scale

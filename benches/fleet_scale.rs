@@ -1,0 +1,306 @@
+//! Fleet scale-out benchmark (`make bench-fleet` → `BENCH_fleet.json`).
+//!
+//! Two sections, methodology in EXPERIMENTS.md:
+//!
+//! 1. **Fleet runs** — periodic PAOTA end-to-end at K ∈ {10², 10⁴, 10⁶}
+//!    on the native kernel at a tiny geometry, cohort-sampled so the
+//!    coordinator's stack/coef memory scales with the active cohort
+//!    rather than the fleet. Records setup time, rounds/sec and peak RSS
+//!    (Linux `VmHWM`) per K — the seed's `vec![0.0; K·dim]` round stack
+//!    alone would be 32 GB at K = 10⁶ on the paper model. Ks run in
+//!    ascending order because `VmHWM` is a process-lifetime high-water
+//!    mark.
+//! 2. **Handover sweep** — the `remove_first` + re-`push` pattern the
+//!    multi-cell handover path drives, on the indexed `EventQueue` vs a
+//!    frozen port of the seed's rebuild-the-heap removal (kept below —
+//!    do not "fix" it). The recorded speedup must grow super-linearly
+//!    in K: O(n) scans vs O(log n) tombstones.
+//!
+//! `PAOTA_BENCH_FAST=1` caps the fleet at K = 10⁴ and shrinks the sweep
+//! for CI smoke runs; `PAOTA_BENCH_OUT` overrides the JSON output path.
+
+use std::time::Instant;
+
+use paota::benchlib::section;
+use paota::config::{Algorithm, Config};
+use paota::fl::{self, TrainContext};
+use paota::sim::events::EventQueue;
+use paota::util::Rng;
+
+// ---------------------------------------------------------------------
+// Frozen baseline: the seed's event-queue removal (pre-index vintage) —
+// every removal drains the heap, drops the earliest match, and rebuilds.
+// ---------------------------------------------------------------------
+
+mod seed_queue {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    struct Entry<T> {
+        time: f64,
+        seq: u64,
+        payload: T,
+    }
+
+    impl<T> PartialEq for Entry<T> {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl<T> Eq for Entry<T> {}
+    impl<T> PartialOrd for Entry<T> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<T> Ord for Entry<T> {
+        // Reversed: BinaryHeap is a max-heap, we need earliest-first with
+        // FIFO tie-breaking on the insertion sequence.
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .partial_cmp(&self.time)
+                .unwrap_or(Ordering::Equal)
+                .then(other.seq.cmp(&self.seq))
+        }
+    }
+
+    pub struct SeedQueue<T> {
+        heap: BinaryHeap<Entry<T>>,
+        seq: u64,
+    }
+
+    impl<T: PartialEq> SeedQueue<T> {
+        pub fn new() -> Self {
+            Self {
+                heap: BinaryHeap::new(),
+                seq: 0,
+            }
+        }
+
+        pub fn push(&mut self, time: f64, payload: T) {
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Entry { time, seq, payload });
+        }
+
+        /// O(n) removal: drain, drop the earliest (time, seq) match,
+        /// re-heapify whatever is left.
+        pub fn remove_first(&mut self, key: &T) -> Option<(f64, T)> {
+            let mut entries = std::mem::take(&mut self.heap).into_vec();
+            let mut best: Option<usize> = None;
+            for (i, e) in entries.iter().enumerate() {
+                if e.payload != *key {
+                    continue;
+                }
+                best = match best {
+                    Some(b) => {
+                        let eb = &entries[b];
+                        if e.time < eb.time || (e.time == eb.time && e.seq < eb.seq) {
+                            Some(i)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                    None => Some(i),
+                };
+            }
+            let out = best.map(|i| {
+                let e = entries.swap_remove(i);
+                (e.time, e.payload)
+            });
+            self.heap = BinaryHeap::from(entries);
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------
+
+/// Process peak resident set in MiB (Linux `VmHWM`; null elsewhere).
+fn peak_rss_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb / 1024.0);
+        }
+    }
+    None
+}
+
+/// JSON number that tolerates NaN/inf/unavailable (emitted as null).
+fn jnum(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.6}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Tiny-geometry periodic-PAOTA config for a fleet of `k` with `cohort`
+/// active clients (d_in = 16, 4–8 samples per client: the per-client
+/// footprint has to stay small enough that K = 10⁶ fits in RAM — the
+/// *dataset* is inherently O(K), the coordinator must not be).
+fn fleet_cfg(k: usize, cohort: usize) -> Config {
+    let mut c = Config::default();
+    c.algorithm = Algorithm::parse("paota").unwrap();
+    c.artifacts_dir = "native".into();
+    c.synth.side = 4;
+    c.partition.clients = k;
+    c.partition.sizes = vec![4, 8];
+    c.partition.test_size = 16;
+    c.rounds = 3;
+    c.eval_every = 3;
+    c.fleet.cohort_size = cohort.min(k);
+    c.validate().unwrap();
+    c
+}
+
+struct FleetRun {
+    clients: usize,
+    cohort: usize,
+    rounds: usize,
+    setup_s: f64,
+    run_s: f64,
+    peak_rss_mib: Option<f64>,
+}
+
+fn run_fleet(k: usize, cohort: usize) -> FleetRun {
+    let cfg = fleet_cfg(k, cohort);
+    let t0 = Instant::now();
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let setup_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let out = fl::run_with_context(&ctx, &cfg).unwrap();
+    let run_s = t1.elapsed().as_secs_f64();
+    assert_eq!(out.records.len(), cfg.rounds);
+    let rss = peak_rss_mib();
+    println!(
+        "fleet K={k:<9} cohort={:<6} setup {setup_s:.2}s  run {run_s:.3}s  \
+         ({:.2} rounds/sec)  peak RSS {}",
+        cfg.fleet.cohort_size,
+        cfg.rounds as f64 / run_s.max(1e-12),
+        rss.map_or("n/a".into(), |m| format!("{m:.0} MiB")),
+    );
+    FleetRun {
+        clients: k,
+        cohort: cfg.fleet.cohort_size,
+        rounds: cfg.rounds,
+        setup_s,
+        run_s,
+        peak_rss_mib: rss,
+    }
+}
+
+fn sweep_seed(k: usize, moves: usize) -> f64 {
+    let mut q = seed_queue::SeedQueue::new();
+    let mut rng = Rng::new(k as u64);
+    for c in 0..k {
+        q.push(rng.f64() * 100.0, c);
+    }
+    let t0 = Instant::now();
+    for _ in 0..moves {
+        let c = rng.index(k);
+        let (t, c) = q.remove_first(&c).unwrap();
+        q.push(t + rng.f64(), c);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn sweep_indexed(k: usize, moves: usize) -> f64 {
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(k as u64);
+    for c in 0..k {
+        q.push(rng.f64() * 100.0, c);
+    }
+    let t0 = Instant::now();
+    for _ in 0..moves {
+        let c = rng.index(k);
+        let (t, c) = q.remove_first(&c).unwrap();
+        q.push(t + rng.f64(), c);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let fast = std::env::var("PAOTA_BENCH_FAST").is_ok();
+
+    // 1. Fleet runs, Ks ascending (VmHWM is monotone). ----------------
+    let fleets: &[(usize, usize)] = if fast {
+        &[(100, 100), (10_000, 1_000)]
+    } else {
+        &[(100, 100), (10_000, 1_000), (1_000_000, 1_024)]
+    };
+    section(&format!(
+        "fleet: periodic PAOTA, native kernel, K ∈ {:?} (cohort-sampled)",
+        fleets.iter().map(|&(k, _)| k).collect::<Vec<_>>()
+    ));
+    let runs: Vec<FleetRun> = fleets.iter().map(|&(k, n)| run_fleet(k, n)).collect();
+
+    // 2. Handover sweep: seed rebuild vs indexed removal. -------------
+    let moves = if fast { 2_000 } else { 20_000 };
+    let sweep_ks: &[usize] = &[100, 10_000];
+    section(&format!(
+        "handover sweep: {moves} remove_first+push moves, K ∈ {sweep_ks:?}"
+    ));
+    let mut sweeps = Vec::new();
+    for &k in sweep_ks {
+        let seed_s = sweep_seed(k, moves);
+        let indexed_s = sweep_indexed(k, moves);
+        let speedup = seed_s / indexed_s.max(1e-12);
+        println!(
+            "sweep K={k:<7} seed-rebuild {seed_s:.4}s  indexed {indexed_s:.4}s  \
+             → {speedup:.1}x"
+        );
+        sweeps.push((k, seed_s, indexed_s, speedup));
+    }
+    if sweeps.len() == 2 {
+        let growth = sweeps[1].3 / sweeps[0].3.max(1e-12);
+        println!(
+            "speedup growth {:.1}x from K={} to K={} (super-linear ⇔ > 1)",
+            growth, sweeps[0].0, sweeps[1].0
+        );
+    }
+
+    // BENCH_fleet.json ------------------------------------------------
+    let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_fleet.json".into());
+    let fleet_json = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"clients\": {}, \"cohort\": {}, \"rounds\": {}, \"setup_s\": {}, \
+                 \"run_s\": {}, \"rounds_per_sec\": {}, \"peak_rss_mib\": {}}}",
+                r.clients,
+                r.cohort,
+                r.rounds,
+                jnum(Some(r.setup_s)),
+                jnum(Some(r.run_s)),
+                jnum(Some(r.rounds as f64 / r.run_s.max(1e-12))),
+                jnum(r.peak_rss_mib),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let sweep_json = sweeps
+        .iter()
+        .map(|&(k, seed_s, indexed_s, speedup)| {
+            format!(
+                "{{\"clients\": {k}, \"moves\": {moves}, \"seed_rebuild_s\": {}, \
+                 \"indexed_s\": {}, \"speedup\": {}}}",
+                jnum(Some(seed_s)),
+                jnum(Some(indexed_s)),
+                jnum(Some(speedup)),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let json = format!(
+        "{{\n  \"schema\": \"paota-bench-fleet/1\",\n  \"fast_mode\": {fast},\n  \
+         \"fleet_runs\": [\n    {fleet_json}\n  ],\n  \
+         \"handover_sweep\": [\n    {sweep_json}\n  ]\n}}\n"
+    );
+    std::fs::write(&out_path, json).unwrap();
+    println!("\nwrote {out_path}");
+}

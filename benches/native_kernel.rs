@@ -319,6 +319,54 @@ fn main() {
     println!("kernel/local_train speedup: {kernel_speedup:.2}x  (target ≥ 2x)");
     println!("kernel/evaluate    speedup: {eval_speedup:.2}x");
 
+    // 1b. Wide-geometry weighted-sum sweep: `aggregate` at model widths
+    // far beyond the paper MLP (10⁵–10⁷ parameters, a cohort-sized row
+    // count). The kernel is a streaming coefᵀ·rows + noise reduction, so
+    // this records memory-bandwidth-bound throughput per width.
+    let wide_rows = 8usize;
+    let wide_dims: &[usize] = if fast {
+        &[100_000, 1_000_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    };
+    section(&format!(
+        "kernel: wide-geometry aggregate sweep ({wide_rows} rows, dim ∈ {wide_dims:?})"
+    ));
+    let mut wide_json = String::new();
+    for &dim in wide_dims {
+        let wm = Manifest {
+            d_in: 1,
+            hidden: 1,
+            classes: 1,
+            dim,
+            local_steps: 1,
+            batch: 1,
+            clients: wide_rows,
+            eval_size: 1,
+            probe_batch: 1,
+        };
+        let model = NativeModel::new(wm);
+        let mut rng = Rng::new(dim as u64);
+        let mut stack = vec![0.0f32; wide_rows * dim];
+        rng.fill_normal(&mut stack, 0.05);
+        let coef: Vec<f32> = (0..wide_rows).map(|k| 0.5 + 0.1 * k as f32).collect();
+        let mut noise = vec![0.0f32; dim];
+        rng.fill_normal(&mut noise, 0.01);
+        let bytes = (stack.len() + noise.len() * 2) * std::mem::size_of::<f32>();
+        let meas = b.iter_bytes(&format!("wide/aggregate_dim{dim}"), bytes, || {
+            std::hint::black_box(model.aggregate(&stack, &coef, &noise).unwrap());
+        });
+        let gbps = bytes as f64 / secs(&meas).max(1e-12) / 1e9;
+        if !wide_json.is_empty() {
+            wide_json.push_str(", ");
+        }
+        wide_json.push_str(&format!(
+            "{{\"dim\": {dim}, \"rows\": {wide_rows}, \"mean_s\": {}, \"gb_per_s\": {}}}",
+            jnum(secs(&meas)),
+            jnum(gbps)
+        ));
+    }
+
     // 2. Pool: 1 worker vs N workers on one batch. --------------------
     let batch_jobs = if fast { 8 } else { 30 };
     section(&format!(
@@ -444,13 +492,14 @@ fn main() {
     // BENCH_native.json --------------------------------------------------
     let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_native.json".into());
     let json = format!(
-        "{{\n  \"schema\": \"paota-bench-native/1\",\n  \"fast_mode\": {fast},\n  \
+        "{{\n  \"schema\": \"paota-bench-native/2\",\n  \"fast_mode\": {fast},\n  \
          \"workers\": {workers},\n  \
          \"geometry\": {{\"d_in\": {}, \"hidden\": {}, \"classes\": {}, \"dim\": {}, \
          \"local_steps\": {}, \"batch\": {}, \"clients\": {}}},\n  \
          \"kernel\": {{\"naive_local_train_s\": {}, \"tiled_local_train_s\": {}, \
          \"local_train_speedup\": {}, \"naive_evaluate_s\": {}, \"tiled_evaluate_s\": {}, \
          \"evaluate_speedup\": {}}},\n  \
+         \"wide_aggregate\": [{wide_json}],\n  \
          \"pool\": {{\"batch_jobs\": {batch_jobs}, \"t_1worker_s\": {}, \"t_nworkers_s\": {}, \
          \"speedup\": {}}},\n  \
          \"end_to_end\": {{\"rounds\": {rounds}, \"seconds\": {}, \"rounds_per_sec\": {}}},\n  \

@@ -98,6 +98,7 @@ CONFIG KEYS (defaults = paper §IV-A):
     cells groups group_partitioner mixing mixing_every
     group_ready_frac group_mix group_power workers campaign_jobs
     mobility dwell_mean handover handover_every cell_noise_spread_db
+    cohort_frac cohort_size
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
@@ -108,6 +109,9 @@ CONFIG KEYS (defaults = paper §IV-A):
     (artifacts_dir=native selects the pure-Rust reference kernel)
     (perf: workers = train-pool threads, default PAOTA_WORKERS or auto;
      campaign_jobs/--jobs = concurrent scenarios — both bitwise-neutral)
+    (fleet: cohort_frac/cohort_size sample the active cohort from a large
+     fleet — memory & scheduling scale with the cohort, not clients;
+     defaults = full participation, bitwise-identical to pre-fleet runs)
 ",
         names.join("|")
     )
@@ -264,6 +268,29 @@ mod tests {
         );
         // Validation runs at parse time: roaming needs cells ≥ 2.
         assert!(parse(&args(&["run", "--mobility", "waypoint"])).is_err());
+    }
+
+    #[test]
+    fn fleet_keys_parse_from_the_cli() {
+        let cli = parse(&args(&[
+            "run",
+            "--clients",
+            "1000",
+            "--cohort_frac",
+            "0.1",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.fleet.cohort_frac, 0.1);
+        assert_eq!(cli.config.fleet.effective_cohort(1000), 100);
+        let cli = parse(&args(&["run", "--cohort_size", "25"])).unwrap();
+        assert_eq!(cli.config.fleet.cohort_size, 25);
+        // Validation runs at parse time.
+        assert!(parse(&args(&["run", "--cohort_frac", "0"])).is_err());
+        assert!(parse(&args(&["run", "--cohort_size", "101"])).is_err());
+        // Help advertises the keys.
+        let h = help_text();
+        assert!(h.contains("cohort_frac"), "{h}");
+        assert!(h.contains("cohort_size"), "{h}");
     }
 
     #[test]

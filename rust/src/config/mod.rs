@@ -258,6 +258,48 @@ impl Default for PerfConfig {
     }
 }
 
+/// Fleet-scale knobs (`[fleet]`): how much of a very large client
+/// population actually participates each run. The defaults (full
+/// cohort) keep every pre-fleet config bitwise identical — cohort
+/// sampling consumes zero RNG draws when the cohort covers the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Fraction of the fleet sampled into the active cohort, in (0, 1].
+    /// 1.0 = everyone participates (the paper's setting). Ignored when
+    /// `cohort_size` is set.
+    pub cohort_frac: f64,
+    /// Absolute cohort size; 0 = derive from `cohort_frac`. Takes
+    /// precedence over `cohort_frac` when non-zero.
+    pub cohort_size: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            cohort_frac: 1.0,
+            cohort_size: 0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The number of active clients for a fleet of `k`: `cohort_size`
+    /// (capped at `k`) when set, else `ceil(cohort_frac · k)` clamped to
+    /// `[1, k]`.
+    pub fn effective_cohort(&self, k: usize) -> usize {
+        if self.cohort_size > 0 {
+            return self.cohort_size.min(k);
+        }
+        let n = (self.cohort_frac * k as f64).ceil() as usize;
+        n.clamp(1, k.max(1))
+    }
+
+    /// Whether the cohort covers the whole fleet (the legacy path).
+    pub fn is_full(&self, k: usize) -> bool {
+        self.effective_cohort(k) >= k
+    }
+}
+
 /// Full experiment configuration. Field defaults reproduce the paper.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -331,6 +373,8 @@ pub struct Config {
     pub mobility: MobilityConfig,
     /// Execution parallelism (pool workers / campaign jobs).
     pub perf: PerfConfig,
+    /// Fleet-scale cohort sampling (active participants vs fleet size).
+    pub fleet: FleetConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -373,6 +417,7 @@ impl Default for Config {
             topology: TopologyConfig::default(),
             mobility: MobilityConfig::default(),
             perf: PerfConfig::default(),
+            fleet: FleetConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -426,6 +471,8 @@ impl Config {
             "cell_noise_spread_db" => self.mobility.cell_noise_spread_db = p(key, value)?,
             "workers" => self.perf.workers = p(key, value)?,
             "campaign_jobs" | "jobs" => self.perf.campaign_jobs = p(key, value)?,
+            "cohort_frac" => self.fleet.cohort_frac = p(key, value)?,
+            "cohort_size" => self.fleet.cohort_size = p(key, value)?,
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -577,6 +624,23 @@ impl Config {
                 mob.kind.name()
             );
         }
+        let fleet = &self.fleet;
+        if !(fleet.cohort_frac > 0.0 && fleet.cohort_frac <= 1.0) {
+            bail!("cohort_frac must be in (0,1]");
+        }
+        if fleet.cohort_size > self.partition.clients {
+            bail!(
+                "cohort_size {} exceeds client count {}",
+                fleet.cohort_size,
+                self.partition.clients
+            );
+        }
+        if !fleet.is_full(self.partition.clients) && t.cells > 1 {
+            bail!(
+                "cohort sampling (cohort_frac/cohort_size below the fleet size) \
+                 is only supported on the flat single-cell topology (cells = 1)"
+            );
+        }
         Ok(())
     }
 
@@ -695,6 +759,8 @@ impl Config {
         kv("cell_noise_spread_db", self.mobility.cell_noise_spread_db.to_string());
         kv("workers", self.perf.workers.to_string());
         kv("campaign_jobs", self.perf.campaign_jobs.to_string());
+        kv("cohort_frac", self.fleet.cohort_frac.to_string());
+        kv("cohort_size", self.fleet.cohort_size.to_string());
         kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
@@ -886,6 +952,43 @@ mod tests {
     }
 
     #[test]
+    fn fleet_keys_parse_validate_and_size_the_cohort() {
+        let mut c = Config::default();
+        c.set("cohort_frac", "0.3").unwrap();
+        assert_eq!(c.fleet.cohort_frac, 0.3);
+        c.validate().unwrap();
+        // ceil(0.3 · 100) = 30 active of 100.
+        assert_eq!(c.fleet.effective_cohort(c.partition.clients), 30);
+        assert!(!c.fleet.is_full(c.partition.clients));
+        // cohort_size takes precedence over cohort_frac.
+        c.set("cohort_size", "7").unwrap();
+        assert_eq!(c.fleet.effective_cohort(c.partition.clients), 7);
+        c.validate().unwrap();
+        // The default is the full fleet and consumes no sampling.
+        let d = Config::default();
+        assert!(d.fleet.is_full(d.partition.clients));
+        assert_eq!(d.fleet.effective_cohort(10), 10);
+        // cohort_frac outside (0,1] rejected.
+        let mut c = Config::default();
+        c.set("cohort_frac", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("cohort_frac", "1.5").unwrap();
+        assert!(c.validate().is_err());
+        // cohort_size above the fleet rejected.
+        let mut c = Config::default();
+        c.set("cohort_size", "101").unwrap();
+        assert!(c.validate().is_err());
+        // Partial cohorts don't compose with multi-cell trees (yet).
+        let mut c = Config::default();
+        c.set("cells", "2").unwrap();
+        c.set("cohort_frac", "0.5").unwrap();
+        assert!(c.validate().is_err());
+        c.set("cohort_frac", "1.0").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn latency_kind_roundtrip_and_models() {
         for kind in ["uniform", "homogeneous", "bimodal", "lognormal", "gilbert_elliott"] {
             assert_eq!(LatencyKind::parse(kind).unwrap().name(), kind);
@@ -959,6 +1062,8 @@ mod tests {
         c.set("latency_sigma", "0.9").unwrap();
         c.set("latency_ge_enter", "0.2").unwrap();
         c.set("latency_ge_exit", "0.4").unwrap();
+        c.set("cohort_frac", "0.5").unwrap();
+        c.set("cohort_size", "0").unwrap();
 
         std::fs::write(&path, c.to_kv_string()).unwrap();
         let mut back = Config::default();
@@ -976,6 +1081,8 @@ mod tests {
         );
         assert_eq!(back.topology.mixing, crate::fl::topology::MixingKind::Gossip);
         assert_eq!(back.synth.side, 12);
+        assert_eq!(back.fleet.cohort_frac, 0.5);
+        assert_eq!(back.fleet.cohort_size, 0);
 
         // The default config round-trips too.
         let d = Config::default();

@@ -7,7 +7,10 @@
 //! * the [`VirtualClock`](crate::sim::VirtualClock) and the
 //!   [`EventQueue`](crate::sim::events::EventQueue) of client-finished
 //!   arrivals (the single scheduling driver),
-//! * per-client [`ClientSlot`]s (base round, base weights, finish time),
+//! * struct-of-arrays client scheduler state (base round, refcounted
+//!   base-model snapshot, finish time — [`ClientSlot`] is the by-value
+//!   handover view), with `[fleet]`-sampled cohort participation so
+//!   memory and per-round cost scale with the active cohort,
 //! * deterministic per-purpose RNG streams ([`RngStreams`]),
 //! * the reusable `stack`/`coef`/noise buffers of the AirComp kernel,
 //! * a [`Telemetry`] recorder that buckets uploads into ΔT windows and
@@ -32,6 +35,8 @@
 //! several coordinators step-wise ([`Coordinator::begin_periodic`] /
 //! [`Coordinator::step_periodic`]) and mix their models between slots
 //! ([`crate::fl::topology::multi_cell`]).
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -59,6 +64,11 @@ pub mod streams {
     pub const CHANNEL: u64 = 0xc4a2;
     /// Power-control solver randomness.
     pub const OPT: u64 = 0x0b7;
+    /// Cohort membership sampling for partial-fleet simulation
+    /// (`[fleet]` config keys). Only consumed when the cohort is
+    /// strictly smaller than the fleet, so full-fleet runs are
+    /// bit-unchanged.
+    pub const FLEET: u64 = 0xf1ee7;
 }
 
 /// The coordinator's deterministic per-purpose RNG streams.
@@ -283,15 +293,62 @@ impl Telemetry {
 }
 
 /// Per-client scheduler state (what the client trains from, and when its
-/// current local run finishes).
+/// current local run finishes). `base_weights` is a shared snapshot out
+/// of the coordinator's round-model store: every client restarting from
+/// the same global model holds the same `Arc`, so resident base-model
+/// memory is (distinct base rounds)·dim, not K·dim.
 #[derive(Debug, Clone)]
 pub struct ClientSlot {
     /// Global round (or ΔT window) whose model this client trains from.
     pub base_round: usize,
-    /// The base weights it received.
-    pub base_weights: Vec<f32>,
+    /// The base weights it received (refcounted, shared per base round).
+    pub base_weights: Arc<[f32]>,
     /// Virtual time its current local training finishes.
     pub finish_time: f64,
+}
+
+/// Struct-of-arrays client scheduler state: three dense columns instead
+/// of a `Vec<ClientSlot>`, so fleet-wide scans touch only the column
+/// they need and the base models stay shared `Arc`s.
+#[derive(Debug, Default)]
+struct ClientStates {
+    base_round: Vec<usize>,
+    base: Vec<Arc<[f32]>>,
+    finish: Vec<f64>,
+}
+
+impl ClientStates {
+    /// All K clients on `base` at round 0, finish times unset.
+    fn spawn(k: usize, base: &Arc<[f32]>) -> Self {
+        Self {
+            base_round: vec![0; k],
+            base: vec![base.clone(); k],
+            finish: vec![0.0; k],
+        }
+    }
+
+    fn set(&mut self, client: usize, round: usize, base: Arc<[f32]>, finish: f64) {
+        self.base_round[client] = round;
+        self.base[client] = base;
+        self.finish[client] = finish;
+    }
+
+    /// Materialize one client's state as a by-value [`ClientSlot`]
+    /// (detach/handover snapshot).
+    fn slot(&self, client: usize) -> ClientSlot {
+        ClientSlot {
+            base_round: self.base_round[client],
+            base_weights: self.base[client].clone(),
+            finish_time: self.finish[client],
+        }
+    }
+
+    /// Install a carried slot verbatim (admit after handover).
+    fn install(&mut self, client: usize, s: ClientSlot) {
+        self.base_round[client] = s.base_round;
+        self.base[client] = s.base_weights;
+        self.finish[client] = s.finish_time;
+    }
 }
 
 /// A roaming client's scheduling state, lifted out of one cell's
@@ -418,14 +475,23 @@ pub struct Coordinator<'a> {
     clock: VirtualClock,
     /// Client-finished arrivals, keyed by virtual finish time.
     queue: EventQueue<usize>,
-    slots: Vec<ClientSlot>,
+    states: ClientStates,
+    /// The sampled cohort (sorted client ids). Equals `0..k` unless the
+    /// `[fleet]` keys request a strict subset; only members are spawned,
+    /// so scheduling and buffer cost scale with the cohort.
+    members: Vec<usize>,
     /// Ready clients carried across periodic slots (finished but not yet
     /// scheduled by the policy).
     pending: Vec<usize>,
     rngs: RngStreams,
     telemetry: Telemetry,
     w_g: Vec<f32>,
-    // Reusable flat buffers for the aggregate kernel.
+    /// The round-model store: the shared snapshot of the current `w_g`
+    /// handed to every client restarting before the next global-model
+    /// mutation. Cleared at every `w_g` write.
+    base_cache: Option<Arc<[f32]>>,
+    // Reusable flat buffers for the aggregate kernel, grown to the
+    // round's participant count (never the fleet size).
     stack: Vec<f32>,
     coef: Vec<f32>,
     zero_noise: Vec<f32>,
@@ -438,24 +504,61 @@ impl<'a> Coordinator<'a> {
     pub fn new(ctx: &'a TrainContext, cfg: &'a Config, batch_stream: u64) -> Self {
         let dim = ctx.dim();
         let k = ctx.clients();
+        let cohort = cfg.fleet.effective_cohort(k);
+        let members: Vec<usize> = if cohort >= k {
+            // Full fleet: no sampling draw, so legacy runs are
+            // bit-unchanged.
+            (0..k).collect()
+        } else {
+            let mut rng = Rng::with_stream(cfg.seed, streams::FLEET);
+            let mut m = rng.choose_indices(k, cohort);
+            m.sort_unstable();
+            m
+        };
         Self {
             ctx,
             cfg,
             latency: LatencySampler::new(cfg.latency(), k),
             clock: VirtualClock::new(),
             queue: EventQueue::new(),
-            slots: Vec::new(),
+            states: ClientStates::default(),
+            members,
             pending: Vec::new(),
             rngs: RngStreams::new(cfg.seed, batch_stream),
             telemetry: Telemetry::new(cfg.rounds, cfg.eval_every),
             w_g: ctx.init_weights(),
-            stack: vec![0.0; k * dim],
-            coef: vec![0.0; k],
+            base_cache: None,
+            stack: Vec::new(),
+            coef: Vec::new(),
             zero_noise: vec![0.0; dim],
             scratch: vec![0.0; dim],
             dim,
             k,
         }
+    }
+
+    /// The sampled cohort this coordinator schedules (sorted client
+    /// ids); the whole fleet unless `[fleet]` requested a subset.
+    pub fn cohort(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Shared snapshot of the current global model — the round-model
+    /// store. Everyone restarting between two `w_g` mutations gets the
+    /// same `Arc`.
+    fn base_arc(&mut self) -> Arc<[f32]> {
+        if let Some(a) = &self.base_cache {
+            return a.clone();
+        }
+        let a: Arc<[f32]> = Arc::from(self.w_g.as_slice());
+        self.base_cache = Some(a.clone());
+        a
+    }
+
+    /// The global model changed — drop the shared snapshot so the next
+    /// restart re-materializes it.
+    fn touch_global(&mut self) {
+        self.base_cache = None;
     }
 
     /// Run to completion and yield the record stream + final model.
@@ -492,6 +595,7 @@ impl<'a> Coordinator<'a> {
     pub fn set_global_weights(&mut self, w: &[f32]) {
         assert_eq!(w.len(), self.dim, "global model dimension mismatch");
         self.w_g.copy_from_slice(w);
+        self.touch_global();
     }
 
     /// The records emitted so far.
@@ -504,7 +608,7 @@ impl<'a> Coordinator<'a> {
     /// runners watch this to detect a landed upload (`deliver` handover
     /// completes only after the stale update landed in the old cell).
     pub fn client_base_round(&self, client: usize) -> usize {
-        self.slots[client].base_round
+        self.states.base_round[client]
     }
 
     /// Detach a roaming client from this cell's scheduling: its queued
@@ -516,11 +620,11 @@ impl<'a> Coordinator<'a> {
     /// presence every cell holds from [`Coordinator::spawn_fleet`]): the
     /// returned state then describes that ghost.
     pub fn detach_client(&mut self, client: usize) -> DetachedClient {
-        let queued_finish = self.queue.remove_first(|&c| c == client).map(|(t, _)| t);
+        let queued_finish = self.queue.remove_first(&client).map(|(t, _)| t);
         let was_ready = self.pending.iter().any(|&c| c == client);
         self.pending.retain(|&c| c != client);
         DetachedClient {
-            slot: self.slots[client].clone(),
+            slot: self.states.slot(client),
             was_ready,
             queued_finish,
             latency_slow: self.latency.slow_state(client),
@@ -553,7 +657,7 @@ impl<'a> Coordinator<'a> {
         } else if d.was_ready {
             self.pending.push(client);
         }
-        self.slots[client] = d.slot;
+        self.states.install(client, d.slot);
     }
 
     /// Admit a roaming client fresh (`drop` handover, and the tail of
@@ -567,34 +671,30 @@ impl<'a> Coordinator<'a> {
         self.purge_client(client);
         self.latency.set_slow_state(client, latency_slow);
         let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
+        let base = self.base_arc();
         let finish = slot_end + self.latency.draw(client, &mut self.rngs.latency);
-        self.slots[client] = ClientSlot {
-            base_round: round + 1,
-            base_weights: self.w_g.clone(),
-            finish_time: finish,
-        };
+        self.states.set(client, round + 1, base, finish);
         self.queue.push(finish, client);
     }
 
     /// Remove every trace of `client` from the event queue and pending
     /// set (admit prologue).
     fn purge_client(&mut self, client: usize) {
-        self.queue.remove_all(|&c| c == client);
+        self.queue.remove_all(&client);
         self.pending.retain(|&c| c != client);
     }
 
-    /// All clients start training on w_g^0 at t = 0 (b_k^1 = 1 ∀k).
+    /// All cohort members start training on w_g^0 at t = 0 (b_k^1 = 1).
+    /// One shared base snapshot for the whole fleet; latency draws stay
+    /// in ascending-client order, so full-cohort runs are bit-identical
+    /// to the seed's per-client scan.
     fn spawn_fleet(&mut self) {
-        self.slots = (0..self.k)
-            .map(|_| ClientSlot {
-                base_round: 0,
-                base_weights: self.w_g.clone(),
-                finish_time: 0.0,
-            })
-            .collect();
-        for client in 0..self.k {
+        let base = self.base_arc();
+        self.states = ClientStates::spawn(self.k, &base);
+        for i in 0..self.members.len() {
+            let client = self.members[i];
             let finish = self.latency.draw(client, &mut self.rngs.latency);
-            self.slots[client].finish_time = finish;
+            self.states.finish[client] = finish;
             self.queue.push(finish, client);
         }
     }
@@ -645,14 +745,11 @@ impl<'a> Coordinator<'a> {
         let stats = self.apply_round_action(action, &mut uploads, policy)?;
 
         // Uploaders restart from the fresh global model at the next
-        // slot boundary.
+        // slot boundary — all sharing one snapshot from the store.
+        let base = self.base_arc();
         for up in &uploads {
             let finish = slot_end + self.latency.draw(up.client, &mut self.rngs.latency);
-            self.slots[up.client] = ClientSlot {
-                base_round: round + 1,
-                base_weights: self.w_g.clone(),
-                finish_time: finish,
-            };
+            self.states.set(up.client, round + 1, base.clone(), finish);
             self.queue.push(finish, up.client);
         }
 
@@ -663,7 +760,7 @@ impl<'a> Coordinator<'a> {
     /// Synchronous cohorts: the PS waits for everyone it scheduled, so
     /// the round lasts as long as its slowest participant.
     fn drive_synchronous(&mut self, policy: &mut dyn AggregationPolicy) -> Result<()> {
-        let fleet: Vec<usize> = (0..self.k).collect();
+        let fleet = self.members.clone();
         for round in 0..self.cfg.rounds {
             let chosen = policy.select_participants(&fleet, &mut self.rngs);
             let mut round_time = 0.0f64;
@@ -750,14 +847,12 @@ impl<'a> Coordinator<'a> {
                 vecmath::scale(&mut self.scratch, (1.0 - gamma) as f32);
                 vecmath::axpy(gamma as f32, &up.weights, &mut self.scratch);
                 std::mem::swap(&mut self.w_g, &mut self.scratch);
+                self.touch_global();
                 stats.absorb(up);
 
+                let base = self.base_arc();
                 let finish = t + self.latency.draw(up.client, &mut self.rngs.latency);
-                self.slots[up.client] = ClientSlot {
-                    base_round: window,
-                    base_weights: self.w_g.clone(),
-                    finish_time: finish,
-                };
+                self.states.set(up.client, window, base, finish);
                 self.queue.push(finish, up.client);
             }
         }
@@ -788,7 +883,7 @@ impl<'a> Coordinator<'a> {
         let mut jobs = Vec::with_capacity(chosen.len());
         for &client in chosen {
             let base: &[f32] = if from_slots {
-                &self.slots[client].base_weights
+                &self.states.base[client]
             } else {
                 &self.w_g
             };
@@ -798,8 +893,10 @@ impl<'a> Coordinator<'a> {
         let mut uploads = Vec::with_capacity(chosen.len());
         for (&client, out) in chosen.iter().zip(outs) {
             let (staleness, base): (usize, &[f32]) = if from_slots {
-                let slot = &self.slots[client];
-                (round.saturating_sub(slot.base_round), &slot.base_weights)
+                (
+                    round.saturating_sub(self.states.base_round[client]),
+                    &self.states.base[client],
+                )
             } else {
                 (0, &self.w_g)
             };
@@ -836,6 +933,7 @@ impl<'a> Coordinator<'a> {
             RoundAction::Adopt => {
                 ensure!(uploads.len() == 1, "Adopt expects exactly one upload");
                 self.w_g = std::mem::take(&mut uploads[0].weights);
+                self.touch_global();
             }
             RoundAction::Mix { .. } => bail!("Mix is only valid under Continuous timing"),
             RoundAction::GroupAggregate { passes } => {
@@ -852,26 +950,33 @@ impl<'a> Coordinator<'a> {
                         "one coefficient per pass member"
                     );
                     ensure!(pass.mix > 0.0, "group mix weight must be positive");
-                    self.coef.iter_mut().for_each(|c| *c = 0.0);
-                    self.stack.iter_mut().for_each(|v| *v = 0.0);
-                    for (&j, &c) in pass.members.iter().zip(&pass.coefs) {
+                    for &j in &pass.members {
                         ensure!(j < uploads.len(), "pass member {j} out of range");
                         ensure!(
                             !covered[j],
                             "upload {j} appears in more than one group pass"
                         );
                         covered[j] = true;
-                        let up = &uploads[j];
-                        self.coef[up.client] = c;
-                        self.stack[up.client * self.dim..(up.client + 1) * self.dim]
-                            .copy_from_slice(&up.weights);
+                    }
+                    // Pack the pass rows in ascending client order — the
+                    // order the seed's fleet-sized scan visited them, so
+                    // the f32 accumulation is bit-identical with
+                    // pass-sized buffers.
+                    let mut idx: Vec<usize> = (0..pass.members.len()).collect();
+                    idx.sort_unstable_by_key(|&i| uploads[pass.members[i]].client);
+                    self.coef.clear();
+                    self.stack.clear();
+                    for &i in &idx {
+                        self.coef.push(pass.coefs[i]);
+                        self.stack
+                            .extend_from_slice(&uploads[pass.members[i]].weights);
                     }
                     let noise_ref: &[f32] = if pass.noise.is_empty() {
                         &self.zero_noise
                     } else {
                         &pass.noise
                     };
-                    let y = self.ctx.rt.aggregate(&self.stack, &self.coef, noise_ref)?;
+                    let y = self.ctx.rt.aggregate_rows(&self.stack, &self.coef, noise_ref)?;
                     vecmath::axpy(pass.mix as f32, &y, &mut blended);
                     total_mix += pass.mix;
                     power_sum += pass.mean_power * pass.members.len() as f64;
@@ -889,6 +994,7 @@ impl<'a> Coordinator<'a> {
                 self.scratch.copy_from_slice(&self.w_g);
                 vecmath::scale(&mut self.w_g, (1.0 - total_mix) as f32);
                 vecmath::axpy(1.0, &blended, &mut self.w_g);
+                self.touch_global();
                 // `blended` is free now — reuse it for the movement report.
                 vecmath::sub(&self.w_g, &self.scratch, &mut blended);
                 policy.on_global_delta(&blended);
@@ -901,16 +1007,22 @@ impl<'a> Coordinator<'a> {
             } => {
                 ensure!(coefs.len() == uploads.len(), "one coefficient per upload");
                 stats.mean_power = mean_power;
-                self.coef.iter_mut().for_each(|c| *c = 0.0);
-                self.stack.iter_mut().for_each(|v| *v = 0.0);
-                for (up, &c) in uploads.iter().zip(&coefs) {
-                    self.coef[up.client] = c;
+                // Pack participant rows in ascending client order — the
+                // order the seed's fleet-sized scan visited them, so the
+                // f32 accumulation is bit-identical while the buffers
+                // stay cohort-sized.
+                let mut order: Vec<usize> = (0..uploads.len()).collect();
+                order.sort_unstable_by_key(|&j| uploads[j].client);
+                self.coef.clear();
+                self.stack.clear();
+                for &j in &order {
+                    self.coef.push(coefs[j]);
+                    let up = &uploads[j];
                     let row = if deltas { &up.delta } else { &up.weights };
-                    self.stack[up.client * self.dim..(up.client + 1) * self.dim]
-                        .copy_from_slice(row);
+                    self.stack.extend_from_slice(row);
                 }
                 let noise_ref: &[f32] = if noise.is_empty() { &self.zero_noise } else { &noise };
-                let out = self.ctx.rt.aggregate(&self.stack, &self.coef, noise_ref)?;
+                let out = self.ctx.rt.aggregate_rows(&self.stack, &self.coef, noise_ref)?;
                 if deltas {
                     // The kernel's weighted mean of update rows IS the
                     // global step.
@@ -921,6 +1033,7 @@ impl<'a> Coordinator<'a> {
                     vecmath::sub(&self.w_g, &prev, &mut self.scratch);
                     policy.on_global_delta(&self.scratch);
                 }
+                self.touch_global();
             }
         }
         Ok(stats)

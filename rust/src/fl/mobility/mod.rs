@@ -150,9 +150,12 @@ pub trait MobilityModel: Send {
 }
 
 /// Derive client `c`'s private trajectory RNG from the master seed.
+/// Stateless derivation ([`Rng::for_entity`]): client `c`'s stream is a
+/// pure function of `(seed, c)`, which is what lets the models below
+/// materialize chains lazily — a chain built on first touch is bitwise
+/// the chain an eager constructor would have built.
 fn client_rng(seed: u64, client: usize) -> Rng {
-    let mix = (client as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-    Rng::with_stream(seed ^ mix, streams::MOBILITY)
+    Rng::for_entity(seed, streams::MOBILITY, client as u64)
 }
 
 /// The degenerate model: the initial assignment, forever.
@@ -187,7 +190,12 @@ impl MobilityModel for StaticMobility {
 pub struct MarkovMobility {
     cells: usize,
     dwell_mean: f64,
+    seed: u64,
     assignment: Vec<usize>,
+    /// Lazily materialized per-client chains (see [`client_rng`]):
+    /// construction is chain-free; the first advance grows them in
+    /// client order, drawing bitwise what the seed's eager constructor
+    /// drew.
     dwell_left: Vec<usize>,
     rngs: Vec<Rng>,
     slot: usize,
@@ -196,20 +204,31 @@ pub struct MarkovMobility {
 impl MarkovMobility {
     pub fn new(initial: &GroupMap, cells: usize, dwell_mean: f64, seed: u64) -> Self {
         let k = initial.num_clients();
-        let mut rngs: Vec<Rng> = (0..k).map(|c| client_rng(seed, c)).collect();
-        let dwell_left = rngs.iter_mut().map(|r| Self::draw_dwell(r, dwell_mean)).collect();
         Self {
             cells,
             dwell_mean,
+            seed,
             assignment: (0..k).map(|c| initial.group_of(c)).collect(),
-            dwell_left,
-            rngs,
+            dwell_left: Vec::new(),
+            rngs: Vec::new(),
             slot: 0,
         }
     }
 
     fn draw_dwell(rng: &mut Rng, mean: f64) -> usize {
         (rng.exponential(1.0 / mean).ceil() as usize).max(1)
+    }
+
+    /// Grow the per-client chains to the fleet size. Each client's
+    /// stream is private, so creating chain `c` and drawing its first
+    /// dwell on touch yields exactly the values eager construction
+    /// would have.
+    fn ensure_chains(&mut self) {
+        while self.rngs.len() < self.assignment.len() {
+            let mut r = client_rng(self.seed, self.rngs.len());
+            self.dwell_left.push(Self::draw_dwell(&mut r, self.dwell_mean));
+            self.rngs.push(r);
+        }
     }
 }
 
@@ -219,6 +238,10 @@ impl MobilityModel for MarkovMobility {
     }
 
     fn advance_to(&mut self, slot: usize) {
+        if self.slot >= slot {
+            return;
+        }
+        self.ensure_chains();
         while self.slot < slot {
             self.slot += 1;
             for c in 0..self.assignment.len() {
@@ -247,9 +270,13 @@ impl MobilityModel for MarkovMobility {
 /// to the lowest index), so churn emerges from geometry.
 pub struct WaypointMobility {
     centers: Vec<(f64, f64)>,
+    /// Lazily materialized motion state (see [`client_rng`]): empty
+    /// until the first advance, then grown in client order from each
+    /// client's private stream — bitwise what eager construction drew.
     pos: Vec<(f64, f64)>,
     target: Vec<(f64, f64)>,
     speed: f64,
+    seed: u64,
     assignment: Vec<usize>,
     rngs: Vec<Rng>,
     slot: usize,
@@ -259,18 +286,30 @@ impl WaypointMobility {
     pub fn new(initial: &GroupMap, cells: usize, dwell_mean: f64, seed: u64) -> Self {
         let centers = Self::grid_centers(cells);
         let k = initial.num_clients();
-        let mut rngs: Vec<Rng> = (0..k).map(|c| client_rng(seed, c)).collect();
-        let pos: Vec<(f64, f64)> = (0..k).map(|c| centers[initial.group_of(c)]).collect();
-        let target: Vec<(f64, f64)> = rngs.iter_mut().map(|r| (r.f64(), r.f64())).collect();
         let (cols, _) = Self::grid_dims(cells);
         Self {
             centers,
-            pos,
-            target,
+            pos: Vec::new(),
+            target: Vec::new(),
             speed: (1.0 / cols as f64) / dwell_mean,
+            seed,
             assignment: (0..k).map(|c| initial.group_of(c)).collect(),
-            rngs,
+            rngs: Vec::new(),
             slot: 0,
+        }
+    }
+
+    /// Grow the per-client motion state to the fleet size. Only called
+    /// before the first assignment mutation, so `assignment[c]` is still
+    /// the initial cell — the anchor eager construction used for
+    /// `pos[c]`.
+    fn ensure_chains(&mut self) {
+        while self.rngs.len() < self.assignment.len() {
+            let c = self.rngs.len();
+            let mut r = client_rng(self.seed, c);
+            self.pos.push(self.centers[self.assignment[c]]);
+            self.target.push((r.f64(), r.f64()));
+            self.rngs.push(r);
         }
     }
 
@@ -317,6 +356,10 @@ impl MobilityModel for WaypointMobility {
     }
 
     fn advance_to(&mut self, slot: usize) {
+        if self.slot >= slot {
+            return;
+        }
+        self.ensure_chains();
         while self.slot < slot {
             self.slot += 1;
             for c in 0..self.pos.len() {
@@ -572,6 +615,27 @@ mod tests {
             coarse.advance_to(12);
             assert_eq!(fine.assignment(), coarse.assignment(), "{}", fine.name());
         }
+    }
+
+    #[test]
+    fn chains_materialize_lazily_on_first_advance() {
+        // Construction is chain-free regardless of fleet size; the first
+        // effective advance grows every chain, and a model advanced to a
+        // slot it is already at stays chain-free.
+        let m = map(1000, 3, 7);
+        let mut markov = MarkovMobility::new(&m, 3, 2.0, 7);
+        assert!(markov.rngs.is_empty() && markov.dwell_left.is_empty());
+        markov.advance_to(0);
+        assert!(markov.rngs.is_empty(), "advance_to(current) materialized chains");
+        markov.advance_to(1);
+        assert_eq!(markov.rngs.len(), 1000);
+        assert_eq!(markov.dwell_left.len(), 1000);
+
+        let mut wp = WaypointMobility::new(&m, 3, 2.0, 7);
+        assert!(wp.rngs.is_empty() && wp.pos.is_empty() && wp.target.is_empty());
+        wp.advance_to(1);
+        assert_eq!(wp.rngs.len(), 1000);
+        assert_eq!(wp.pos.len(), 1000);
     }
 
     #[test]

@@ -285,6 +285,40 @@ impl ModelRuntime {
         Ok(w_g)
     }
 
+    /// AirComp aggregation over a **participant-only** row stack:
+    /// `rows` holds `coef.len()` packed rows of `dim` (no fleet-sized
+    /// buffer), the kernel computes `(coefᵀ·rows + noise) / Σ coef`.
+    ///
+    /// This is the fleet-scale entry point: the coordinator packs only
+    /// the round's participants (in ascending client order), so buffer
+    /// memory scales with the cohort instead of K. The native kernel is
+    /// row-count-agnostic and is called directly; the AOT PJRT program
+    /// is compiled for a fixed `[K, dim]` stack, so rows are scattered
+    /// into the leading slots of a zero stack — zero-coefficient rows
+    /// contribute exact `+0.0` terms, leaving the result bitwise equal.
+    pub fn aggregate_rows(&self, rows: &[f32], coef: &[f32], noise: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        self.check_len("aggregate_rows.rows", rows, coef.len() * m.dim)?;
+        self.check_len("aggregate_rows.noise", noise, m.dim)?;
+        if coef.len() > m.clients {
+            bail!(
+                "aggregate_rows: {} rows exceed the compiled fleet size {}",
+                coef.len(),
+                m.clients
+            );
+        }
+        match &self.backend {
+            Backend::Native(nm) => nm.aggregate(rows, coef, noise),
+            Backend::Pjrt(_) => {
+                let mut stack = vec![0.0f32; m.clients * m.dim];
+                let mut full_coef = vec![0.0f32; m.clients];
+                stack[..rows.len()].copy_from_slice(rows);
+                full_coef[..coef.len()].copy_from_slice(coef);
+                self.aggregate(&stack, &full_coef, noise)
+            }
+        }
+    }
+
     /// One full-batch gradient over `[probe_batch, d_in]`.
     pub fn grad_probe(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
         let m = &self.manifest;

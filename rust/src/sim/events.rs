@@ -5,9 +5,20 @@
 //! tie-breaking (stable order for simultaneous events keeps runs
 //! reproducible, and lets the coordinator coalesce same-timestamp
 //! arrivals into one batched `train_many` call).
+//!
+//! Removal (`remove_first` / `remove_all`) is O(log n) per entry via a
+//! payload index plus tombstones: every live entry is tracked in a
+//! `payload -> BTreeSet<(time, seq)>` side map, removal tombstones the
+//! entry's sequence number, and `pop`/`peek_time` lazily skip tombstoned
+//! entries as they surface. The heap is compacted once tombstones
+//! outnumber live entries, so memory stays proportional to the live set.
+//! The seed implementation rebuilt the entire heap per removal — O(n log n)
+//! per handover, which the mobility sweep hits every `handover_every`
+//! slots (see `benches/fleet_scale.rs` for the trajectory).
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap, HashMap, HashSet};
+use std::hash::Hash;
 
 /// A timestamped event.
 #[derive(Debug, Clone)]
@@ -42,10 +53,36 @@ impl<T> PartialOrd for Entry<T> {
     }
 }
 
-/// Min-heap event queue keyed by virtual time.
+/// Monotone u64 image of a finite, non-`-0.0` f64: preserves `<` so the
+/// index BTreeSet orders entries exactly as the heap's time comparison.
+fn order_bits(t: f64) -> u64 {
+    let b = t.to_bits() as i64;
+    if b < 0 {
+        !(b as u64)
+    } else {
+        (b as u64) | (1 << 63)
+    }
+}
+
+fn time_of_bits(b: u64) -> f64 {
+    if b >> 63 == 1 {
+        f64::from_bits(b & !(1 << 63))
+    } else {
+        f64::from_bits(!b)
+    }
+}
+
+/// Min-heap event queue keyed by virtual time, with an O(log n) payload
+/// index for targeted removal.
 #[derive(Debug)]
 pub struct EventQueue<T> {
     heap: BinaryHeap<Entry<T>>,
+    /// Live entries per payload, ordered by (time, seq) — the earliest
+    /// match for a payload is the set's first element.
+    index: HashMap<T, BTreeSet<(u64, u64)>>,
+    /// Sequence numbers removed through the index but still buried in
+    /// `heap`; skipped lazily by `pop`/`peek_time`.
+    dead: HashSet<u64>,
     seq: u64,
 }
 
@@ -59,13 +96,33 @@ impl<T> EventQueue<T> {
     pub fn new() -> Self {
         Self {
             heap: BinaryHeap::new(),
+            index: HashMap::new(),
+            dead: HashSet::new(),
             seq: 0,
         }
     }
 
+    /// Number of live (non-tombstoned) events.
+    pub fn len(&self) -> usize {
+        self.heap.len() - self.dead.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T: Clone + Eq + Hash> EventQueue<T> {
     /// Schedule `payload` at `time` (must be finite).
     pub fn push(&mut self, time: f64, payload: T) {
         assert!(time.is_finite(), "event time must be finite");
+        // Normalize -0.0 so the index's total order agrees with the
+        // heap's partial_cmp (which ties -0.0 and +0.0 by seq).
+        let time = if time == 0.0 { 0.0 } else { time };
+        self.index
+            .entry(payload.clone())
+            .or_default()
+            .insert((order_bits(time), self.seq));
         self.heap.push(Entry {
             time,
             seq: self.seq,
@@ -76,12 +133,31 @@ impl<T> EventQueue<T> {
 
     /// Pop the earliest event as `(time, payload)`.
     pub fn pop(&mut self) -> Option<(f64, T)> {
-        self.heap.pop().map(|e| (e.time, e.payload))
+        while let Some(e) = self.heap.pop() {
+            if self.dead.remove(&e.seq) {
+                continue;
+            }
+            self.unindex(&e.payload, e.time, e.seq);
+            return Some((e.time, e.payload));
+        }
+        None
     }
 
-    /// Earliest scheduled time without popping.
-    pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+    /// Earliest scheduled time without popping. `&mut` because
+    /// tombstoned entries are discarded as they surface.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        loop {
+            let (time, seq) = match self.heap.peek() {
+                Some(e) => (e.time, e.seq),
+                None => return None,
+            };
+            if self.dead.contains(&seq) {
+                self.heap.pop();
+                self.dead.remove(&seq);
+            } else {
+                return Some(time);
+            }
+        }
     }
 
     /// Pop the earliest event only if it is due at or before `t` — the
@@ -95,48 +171,58 @@ impl<T> EventQueue<T> {
     }
 
     /// Remove and return the earliest-scheduled event whose payload
-    /// matches `pred`, leaving every other entry (and the FIFO order of
+    /// equals `key`, leaving every other entry (and the FIFO order of
     /// simultaneous events) untouched — the detach primitive for client
-    /// handover ([`crate::fl::Coordinator::detach_client`]).
-    pub fn remove_first(&mut self, pred: impl Fn(&T) -> bool) -> Option<(f64, T)> {
-        let entries = std::mem::take(&mut self.heap).into_sorted_vec();
-        let mut removed = None;
-        let mut kept = Vec::with_capacity(entries.len());
-        // `into_sorted_vec` is ascending by `Ord`, i.e. *latest* first
-        // under our reversed ordering — scan from the back for the
-        // earliest match.
-        for entry in entries.into_iter().rev() {
-            if removed.is_none() && pred(&entry.payload) {
-                removed = Some((entry.time, entry.payload));
-            } else {
-                kept.push(entry);
-            }
+    /// handover ([`crate::fl::Coordinator::detach_client`]). O(log n):
+    /// the payload index pinpoints the entry, a tombstone retires it.
+    pub fn remove_first(&mut self, key: &T) -> Option<(f64, T)> {
+        let set = self.index.get_mut(key)?;
+        let &(bits, seq) = set.iter().next()?;
+        set.remove(&(bits, seq));
+        if set.is_empty() {
+            self.index.remove(key);
         }
-        self.heap = BinaryHeap::from(kept);
+        self.dead.insert(seq);
+        self.maybe_compact();
+        Some((time_of_bits(bits), key.clone()))
+    }
+
+    /// Remove every event whose payload equals `key`; returns how many
+    /// were dropped. The purge primitive behind handover admits.
+    pub fn remove_all(&mut self, key: &T) -> usize {
+        let Some(set) = self.index.remove(key) else {
+            return 0;
+        };
+        let removed = set.len();
+        for (_, seq) in set {
+            self.dead.insert(seq);
+        }
+        self.maybe_compact();
         removed
     }
 
-    /// Remove every event whose payload matches `pred` in one pass (one
-    /// heap rebuild, FIFO order of survivors preserved); returns how many
-    /// were dropped. The purge primitive behind handover admits.
-    pub fn remove_all(&mut self, pred: impl Fn(&T) -> bool) -> usize {
-        let before = self.heap.len();
+    fn unindex(&mut self, payload: &T, time: f64, seq: u64) {
+        if let Some(set) = self.index.get_mut(payload) {
+            set.remove(&(order_bits(time), seq));
+            if set.is_empty() {
+                self.index.remove(payload);
+            }
+        }
+    }
+
+    /// Rebuild the heap without tombstoned entries once they outnumber
+    /// the live set, bounding memory at O(live).
+    fn maybe_compact(&mut self) {
+        if self.dead.len() < 64 || self.dead.len() * 2 < self.heap.len() {
+            return;
+        }
+        let dead = std::mem::take(&mut self.dead);
         let kept: Vec<Entry<T>> = std::mem::take(&mut self.heap)
             .into_vec()
             .into_iter()
-            .filter(|e| !pred(&e.payload))
+            .filter(|e| !dead.contains(&e.seq))
             .collect();
-        let removed = before - kept.len();
         self.heap = BinaryHeap::from(kept);
-        removed
-    }
-
-    pub fn len(&self) -> usize {
-        self.heap.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
     }
 }
 
@@ -145,6 +231,84 @@ mod tests {
     use super::*;
     use crate::testing::{check, prop_assert};
     use crate::util::Rng;
+
+    /// Verbatim copy of the seed's rebuild-based queue — the behavioral
+    /// reference the indexed implementation must match bitwise.
+    mod baseline {
+        use super::super::Entry;
+        use std::collections::BinaryHeap;
+
+        pub struct BaselineQueue<T> {
+            heap: BinaryHeap<Entry<T>>,
+            seq: u64,
+        }
+
+        impl<T: Eq> BaselineQueue<T> {
+            pub fn new() -> Self {
+                Self {
+                    heap: BinaryHeap::new(),
+                    seq: 0,
+                }
+            }
+
+            pub fn push(&mut self, time: f64, payload: T) {
+                assert!(time.is_finite(), "event time must be finite");
+                self.heap.push(Entry {
+                    time,
+                    seq: self.seq,
+                    payload,
+                });
+                self.seq += 1;
+            }
+
+            pub fn pop(&mut self) -> Option<(f64, T)> {
+                self.heap.pop().map(|e| (e.time, e.payload))
+            }
+
+            pub fn peek_time(&self) -> Option<f64> {
+                self.heap.peek().map(|e| e.time)
+            }
+
+            pub fn pop_until(&mut self, t: f64) -> Option<(f64, T)> {
+                if self.peek_time()? <= t {
+                    self.pop()
+                } else {
+                    None
+                }
+            }
+
+            pub fn remove_first(&mut self, key: &T) -> Option<(f64, T)> {
+                let entries = std::mem::take(&mut self.heap).into_sorted_vec();
+                let mut removed = None;
+                let mut kept = Vec::with_capacity(entries.len());
+                for entry in entries.into_iter().rev() {
+                    if removed.is_none() && entry.payload == *key {
+                        removed = Some((entry.time, entry.payload));
+                    } else {
+                        kept.push(entry);
+                    }
+                }
+                self.heap = BinaryHeap::from(kept);
+                removed
+            }
+
+            pub fn remove_all(&mut self, key: &T) -> usize {
+                let before = self.heap.len();
+                let kept: Vec<Entry<T>> = std::mem::take(&mut self.heap)
+                    .into_vec()
+                    .into_iter()
+                    .filter(|e| e.payload != *key)
+                    .collect();
+                let removed = before - kept.len();
+                self.heap = BinaryHeap::from(kept);
+                removed
+            }
+
+            pub fn len(&self) -> usize {
+                self.heap.len()
+            }
+        }
+    }
 
     #[test]
     fn pops_in_time_order() {
@@ -197,21 +361,21 @@ mod tests {
     #[test]
     fn remove_first_takes_earliest_match_and_preserves_order() {
         let mut q = EventQueue::new();
-        q.push(3.0, "late-a");
+        q.push(3.0, "a");
         q.push(1.0, "b");
         q.push(2.0, "a");
-        q.push(2.0, "a2");
-        // Earliest "a*" match is at t = 2 (payload "a", pushed before "a2").
-        let got = q.remove_first(|p| p.starts_with('a'));
+        q.push(2.5, "a");
+        // Earliest "a" is at t = 2 (the t = 3 push came first but later).
+        let got = q.remove_first(&"a");
         assert_eq!(got, Some((2.0, "a")));
         // Everything else pops in the original time/FIFO order.
         assert_eq!(q.pop(), Some((1.0, "b")));
-        assert_eq!(q.pop(), Some((2.0, "a2")));
-        assert_eq!(q.pop(), Some((3.0, "late-a")));
+        assert_eq!(q.pop(), Some((2.5, "a")));
+        assert_eq!(q.pop(), Some((3.0, "a")));
         // No match leaves the queue untouched.
         let mut q = EventQueue::new();
         q.push(1.0, 7usize);
-        assert_eq!(q.remove_first(|&p| p == 9), None);
+        assert_eq!(q.remove_first(&9), None);
         assert_eq!(q.len(), 1);
     }
 
@@ -219,12 +383,12 @@ mod tests {
     fn remove_all_drops_every_match_in_one_pass() {
         let mut q = EventQueue::new();
         for i in 0..8 {
-            q.push(i as f64, i);
+            q.push(i as f64, i % 2);
         }
-        assert_eq!(q.remove_all(|&p| p % 2 == 0), 4);
-        assert_eq!(q.remove_all(|&p| p % 2 == 0), 0);
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, vec![1, 3, 5, 7]);
+        assert_eq!(q.remove_all(&0), 4);
+        assert_eq!(q.remove_all(&0), 0);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0, 7.0]);
     }
 
     #[test]
@@ -233,9 +397,23 @@ mod tests {
         for i in 0..6 {
             q.push(5.0, i);
         }
-        assert_eq!(q.remove_first(|&p| p == 3), Some((5.0, 3)));
+        assert_eq!(q.remove_first(&3), Some((5.0, 3)));
         let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
         assert_eq!(order, vec![0, 1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn remove_first_takes_fifo_earliest_among_simultaneous_matches() {
+        // Two entries for the same payload at the same time: removal must
+        // take the earlier-pushed one, exactly as the seed scan did.
+        let mut q = EventQueue::new();
+        q.push(5.0, "x");
+        q.push(5.0, "y");
+        q.push(5.0, "x");
+        assert_eq!(q.remove_first(&"x"), Some((5.0, "x")));
+        assert_eq!(q.pop(), Some((5.0, "y")));
+        assert_eq!(q.pop(), Some((5.0, "x")));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]
@@ -251,5 +429,110 @@ mod tests {
         assert_eq!(q.len(), 1);
         assert_eq!(q.pop_until(10.0), Some((3.0, "c")));
         assert_eq!(q.pop_until(10.0), None);
+    }
+
+    #[test]
+    fn len_and_peek_ignore_tombstones() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 0);
+        q.push(2.0, 1);
+        q.push(3.0, 0);
+        assert_eq!(q.remove_all(&0), 2);
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.pop(), Some((2.0, 1)));
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn compaction_survives_heavy_removal() {
+        // Push/remove far past the compaction threshold; live contents
+        // must stay exact throughout.
+        let mut q = EventQueue::new();
+        for i in 0..500usize {
+            q.push(i as f64, i);
+        }
+        for i in (0..500).step_by(2) {
+            assert_eq!(q.remove_first(&i), Some((i as f64, i)));
+        }
+        assert_eq!(q.len(), 250);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        let want: Vec<usize> = (0..500).filter(|i| i % 2 == 1).collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn indexed_queue_matches_seed_rebuild_queue_bitwise() {
+        // Satellite: random interleavings of push / pop / pop_until /
+        // remove_first / remove_all, with duplicate payloads and
+        // simultaneous timestamps to exercise FIFO tie-breaking. Every
+        // observable (returned times bit-for-bit, payloads, counts,
+        // lengths) must match the frozen seed implementation.
+        check("indexed queue ≡ seed rebuild queue", 60, |g| {
+            let mut new_q = EventQueue::new();
+            let mut old_q = baseline::BaselineQueue::new();
+            let mut rng = Rng::new(g.rng().next_u64());
+            let steps = g.usize_in(20..200);
+            for _ in 0..steps {
+                match rng.index(6) {
+                    0 | 1 => {
+                        // Coarse time grid forces plenty of exact ties.
+                        let t = (rng.index(16) as f64) * 0.5;
+                        let p = rng.index(8);
+                        new_q.push(t, p);
+                        old_q.push(t, p);
+                    }
+                    2 => {
+                        let a = new_q.pop();
+                        let b = old_q.pop();
+                        prop_assert(
+                            a.map(|(t, p)| (t.to_bits(), p)) == b.map(|(t, p)| (t.to_bits(), p)),
+                            "pop mismatch",
+                        )?;
+                    }
+                    3 => {
+                        let t = (rng.index(16) as f64) * 0.5;
+                        let a = new_q.pop_until(t);
+                        let b = old_q.pop_until(t);
+                        prop_assert(
+                            a.map(|(t, p)| (t.to_bits(), p)) == b.map(|(t, p)| (t.to_bits(), p)),
+                            "pop_until mismatch",
+                        )?;
+                    }
+                    4 => {
+                        let p = rng.index(8);
+                        let a = new_q.remove_first(&p);
+                        let b = old_q.remove_first(&p);
+                        prop_assert(
+                            a.map(|(t, p)| (t.to_bits(), p)) == b.map(|(t, p)| (t.to_bits(), p)),
+                            "remove_first mismatch",
+                        )?;
+                    }
+                    _ => {
+                        let p = rng.index(8);
+                        prop_assert(
+                            new_q.remove_all(&p) == old_q.remove_all(&p),
+                            "remove_all count mismatch",
+                        )?;
+                    }
+                }
+                prop_assert(new_q.len() == old_q.len(), "length mismatch")?;
+            }
+            // Drain both: the full residual schedule must agree.
+            loop {
+                let a = new_q.pop();
+                let b = old_q.pop();
+                prop_assert(
+                    a.map(|(t, p)| (t.to_bits(), p)) == b.map(|(t, p)| (t.to_bits(), p)),
+                    "drain mismatch",
+                )?;
+                if a.is_none() {
+                    break;
+                }
+            }
+            Ok(())
+        });
     }
 }

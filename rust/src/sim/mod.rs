@@ -119,18 +119,30 @@ fn stationary_slow(p_enter: f64, p_exit: f64) -> f64 {
 /// For the stateless variants this delegates to [`LatencyModel::draw`]
 /// with an identical RNG-consumption pattern, so swapping the sampler in
 /// for a bare model is bit-transparent.
+///
+/// Chain state is lazily grown on first touch: construction allocates
+/// nothing regardless of fleet size, untouched clients are implicitly in
+/// the fast state, and only Gilbert–Elliott draws materialize the flag
+/// vector (up to the highest client actually drawn). Since the default
+/// state is `false` everywhere, lazy growth is semantically identical to
+/// the eager `vec![false; clients]` the seed allocated.
 #[derive(Debug, Clone)]
 pub struct LatencySampler {
     model: LatencyModel,
-    /// Per-client "currently slow" flag (Gilbert–Elliott only).
+    /// Per-client "currently slow" flag (Gilbert–Elliott only),
+    /// grow-on-touch.
     slow_state: Vec<bool>,
 }
 
 impl LatencySampler {
+    /// `clients` is the fleet size the sampler serves; per-client state
+    /// is not allocated here (lazy), so this is O(1) for every latency
+    /// kind.
     pub fn new(model: LatencyModel, clients: usize) -> Self {
+        let _ = clients;
         Self {
             model,
-            slow_state: vec![false; clients],
+            slow_state: Vec::new(),
         }
     }
 
@@ -145,13 +157,20 @@ impl LatencySampler {
     /// it hands over — the chain is a property of the device, not of the
     /// serving cell.
     pub fn slow_state(&self, client: usize) -> bool {
-        self.slow_state[client]
+        self.slow_state.get(client).copied().unwrap_or(false)
     }
 
     /// Rebind the client's Gilbert–Elliott chain state (handover admit).
     /// A no-op in effect for the stateless models, whose draws ignore the
     /// flag.
     pub fn set_slow_state(&mut self, client: usize, slow: bool) {
+        if client >= self.slow_state.len() {
+            if !slow {
+                // Untouched clients are already implicitly fast.
+                return;
+            }
+            self.slow_state.resize(client + 1, false);
+        }
         self.slow_state[client] = slow;
     }
 
@@ -164,6 +183,9 @@ impl LatencySampler {
                 p_enter,
                 p_exit,
             } => {
+                if client >= self.slow_state.len() {
+                    self.slow_state.resize(client + 1, false);
+                }
                 let u = rng.f64();
                 let state = &mut self.slow_state[client];
                 *state = if *state { u >= p_exit } else { u < p_enter };
@@ -175,6 +197,12 @@ impl LatencySampler {
             }
             ref m => m.draw(rng),
         }
+    }
+
+    /// Bytes of per-client chain state currently materialized (test
+    /// hook for the lazy-allocation contract).
+    pub fn state_footprint(&self) -> usize {
+        self.slow_state.capacity()
     }
 }
 
@@ -358,6 +386,55 @@ mod tests {
                 assert_eq!(s.draw(client, &mut a), model.draw(&mut b));
             }
         }
+    }
+
+    #[test]
+    fn sampler_construction_is_allocation_free() {
+        // Fleet-scale contract: building a sampler for 10⁶ clients must
+        // not materialize per-client chains — for any latency kind.
+        for model in [
+            LatencyModel::Uniform { lo: 5.0, hi: 15.0 },
+            LatencyModel::Homogeneous { value: 7.0 },
+            LatencyModel::Lognormal { mu: 2.0, sigma: 0.5 },
+            LatencyModel::GilbertElliott {
+                fast: 5.0,
+                slow: 30.0,
+                p_enter: 0.1,
+                p_exit: 0.3,
+            },
+        ] {
+            let s = LatencySampler::new(model, 1_000_000);
+            assert_eq!(s.state_footprint(), 0, "eager chain alloc for {model:?}");
+        }
+
+        // Stateless kinds stay allocation-free even after draws…
+        let mut s = LatencySampler::new(LatencyModel::Uniform { lo: 5.0, hi: 15.0 }, 1_000_000);
+        let mut rng = Rng::new(5);
+        for client in [0usize, 999_999, 17] {
+            s.draw(client, &mut rng);
+        }
+        assert_eq!(s.state_footprint(), 0);
+        assert!(!s.slow_state(999_999));
+
+        // …while Gilbert–Elliott grows only to the highest touched
+        // client, not the declared fleet.
+        let model = LatencyModel::GilbertElliott {
+            fast: 5.0,
+            slow: 30.0,
+            p_enter: 0.1,
+            p_exit: 0.3,
+        };
+        let mut s = LatencySampler::new(model, 1_000_000);
+        s.draw(7, &mut rng);
+        assert!(s.state_footprint() >= 8);
+        assert!(s.state_footprint() < 1024);
+        // Installing the default fast state for an untouched client is
+        // also free; a slow install materializes it.
+        s.set_slow_state(500, false);
+        assert!(s.state_footprint() < 1024);
+        assert!(!s.slow_state(500));
+        s.set_slow_state(500, true);
+        assert!(s.slow_state(500));
     }
 
     #[test]

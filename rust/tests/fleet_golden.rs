@@ -1,0 +1,160 @@
+//! Fleet-scale golden pinning for the scale-out refactor (indexed event
+//! queue, refcounted round models, SoA client state, cohort sampling).
+//!
+//! The contract has three legs, all bitwise and all artifact-free (the
+//! pure-Rust native kernel), so CI exercises them on every push:
+//!
+//! 1. **Worker invariance** — every builtin policy, grouped AirComp and a
+//!    roaming multi-cell run produce bit-identical telemetry and final
+//!    weights at `workers = 1` and `workers = 2`. Per-run RNG streams
+//!    derive only from the seed, so the pool is a pure wall-clock lever;
+//!    any fleet-refactor regression that lets scheduling order leak into
+//!    numerics fails here.
+//! 2. **Full-cohort degeneracy** — `[fleet]` left at its defaults, or set
+//!    to explicitly cover the fleet (`cohort_frac = 1.0`,
+//!    `cohort_size = K`), is bitwise the pre-fleet run: cohort sampling
+//!    consumes zero RNG draws when nobody is excluded.
+//! 3. **Sampled cohorts** — a strict sub-fleet cohort is seed-
+//!    deterministic (two identical configs agree bitwise) and never
+//!    reports more participants than the cohort admits.
+//!
+//! Together with `golden_seed` (whose reference loops are independent
+//! ports of the seed trainers and were untouched by the refactor), leg 2
+//! proves the K=100 paper runs unchanged end to end.
+
+use paota::config::{Algorithm, Config};
+use paota::fl::topology::multi_cell;
+use paota::fl::{self, RunResult, TrainContext};
+use paota::runtime::Engine;
+
+/// K = 100 fleet on the native kernel at a geometry small enough for
+/// debug-mode CI (d_in = 64, 20–40 samples per client).
+fn fleet_cfg(algo: &str) -> Config {
+    let mut c = Config::default();
+    c.algorithm = Algorithm::parse(algo).unwrap();
+    c.rounds = 4;
+    c.eval_every = 2;
+    c.artifacts_dir = "native".into();
+    c.synth.side = 8;
+    c.partition.clients = 100;
+    c.partition.sizes = vec![20, 40];
+    c.partition.test_size = 32;
+    c
+}
+
+fn run(cfg: &Config) -> RunResult {
+    let engine = Engine::cpu().unwrap();
+    let ctx = TrainContext::build(&engine, cfg).unwrap();
+    fl::run_with_context(&ctx, cfg).unwrap()
+}
+
+fn assert_run_bitwise(tag: &str, got: &RunResult, want: &RunResult) {
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        let t = format!("{tag} round {}", b.round);
+        assert_eq!(a.round, b.round, "{t}");
+        assert_eq!(a.participants, b.participants, "{t}: participants");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{t}: sim_time");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{t}: train_loss");
+        assert_eq!(
+            a.mean_staleness.to_bits(),
+            b.mean_staleness.to_bits(),
+            "{t}: staleness"
+        );
+        assert_eq!(a.mean_power.to_bits(), b.mean_power.to_bits(), "{t}: power");
+    }
+    assert_eq!(got.final_weights.len(), want.final_weights.len(), "{tag}");
+    let same = got
+        .final_weights
+        .iter()
+        .zip(&want.final_weights)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "{tag}: final weights drifted");
+}
+
+#[test]
+fn builtin_policies_are_bitwise_invariant_to_worker_count() {
+    for algo in ["paota", "local_sgd", "cotaf", "centralized", "fedasync"] {
+        let mut one = fleet_cfg(algo);
+        one.perf.workers = 1;
+        let mut two = fleet_cfg(algo);
+        two.perf.workers = 2;
+        assert_run_bitwise(algo, &run(&two), &run(&one));
+    }
+}
+
+#[test]
+fn grouped_aircomp_is_bitwise_invariant_to_worker_count() {
+    let mut one = fleet_cfg("air_fedga");
+    one.topology.groups = 4;
+    one.perf.workers = 1;
+    let mut two = one.clone();
+    two.perf.workers = 2;
+    assert_run_bitwise("air_fedga", &run(&two), &run(&one));
+}
+
+#[test]
+fn roaming_multi_cell_run_is_bitwise_invariant_to_worker_count() {
+    let mut one = fleet_cfg("paota");
+    one.partition.clients = 24; // multi-cell trains every cell: keep small
+    one.topology.cells = 3;
+    one.topology.mixing_every = 2;
+    one.mobility.kind = paota::fl::mobility::MobilityKind::Markov;
+    one.mobility.dwell_mean = 1.5;
+    one.perf.workers = 1;
+    let mut two = one.clone();
+    two.perf.workers = 2;
+
+    let engine = Engine::cpu().unwrap();
+    let ctx1 = TrainContext::build(&engine, &one).unwrap();
+    let want = multi_cell::run(&ctx1, &one).unwrap();
+    let ctx2 = TrainContext::build(&engine, &two).unwrap();
+    let got = multi_cell::run(&ctx2, &two).unwrap();
+
+    assert_run_bitwise("markov merged", &got.merged, &want.merged);
+    for (i, (a, b)) in got.cells.iter().zip(&want.cells).enumerate() {
+        assert_run_bitwise(&format!("markov cell {i}"), a, b);
+    }
+}
+
+#[test]
+fn explicit_full_cohort_is_bitwise_the_default_run() {
+    let base = fleet_cfg("paota");
+    let want = run(&base);
+
+    let mut frac = base.clone();
+    frac.fleet.cohort_frac = 1.0; // the default, stated explicitly
+    assert_run_bitwise("cohort_frac=1.0", &run(&frac), &want);
+
+    let mut size = base.clone();
+    size.fleet.cohort_size = size.partition.clients; // covers the fleet
+    assert_run_bitwise("cohort_size=K", &run(&size), &want);
+}
+
+#[test]
+fn sampled_cohort_is_deterministic_and_bounds_participants() {
+    let mut cfg = fleet_cfg("paota");
+    cfg.fleet.cohort_size = 25;
+    cfg.validate().unwrap();
+
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_run_bitwise("cohort_size=25 replay", &b, &a);
+
+    let total: usize = a.records.iter().map(|r| r.participants).sum();
+    assert!(total > 0, "a 25-client cohort never uploaded in 4 rounds");
+    for r in &a.records {
+        assert!(
+            r.participants <= 25,
+            "round {}: {} participants from a 25-client cohort",
+            r.round,
+            r.participants
+        );
+    }
+
+    // A different cohort knob spelling the same size picks the same
+    // cohort (the FLEET stream depends only on seed and cohort size).
+    let mut frac = fleet_cfg("paota");
+    frac.fleet.cohort_frac = 0.25;
+    assert_run_bitwise("cohort_frac=0.25", &run(&frac), &a);
+}

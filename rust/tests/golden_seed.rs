@@ -443,7 +443,9 @@ fn ref_centralized(ctx: &TrainContext, cfg: &Config) -> RefRun {
 }
 
 fn ref_fedasync(ctx: &TrainContext, cfg: &Config) -> RefRun {
-    #[derive(Clone, Copy)]
+    // EventQueue keys its removal index by payload, so the payload needs
+    // Eq + Hash even though this reference port never removes.
+    #[derive(Clone, Copy, PartialEq, Eq, Hash)]
     struct Finished {
         client: usize,
         base_window: usize,
