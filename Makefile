@@ -2,7 +2,7 @@
 
 RUST_DIR := rust
 
-.PHONY: verify build test fmt clippy artifacts bench bench-fleet
+.PHONY: verify build test fmt clippy artifacts bench bench-fleet bench-serve
 
 # Everything CI runs: release build, tests, formatting, lints.
 verify: build test fmt clippy
@@ -38,3 +38,11 @@ bench:
 bench-fleet:
 	cd $(RUST_DIR) && PAOTA_BENCH_OUT=$(CURDIR)/BENCH_fleet.json \
 		cargo bench --bench fleet_scale
+
+# Wire-service trajectory: loopback serve + loadgen at increasing session
+# concurrency (requests/sec, submit-latency percentiles, busy/reject
+# counters), recorded to BENCH_serve.json at the repo root.
+# PAOTA_BENCH_FAST=1 shrinks rounds/fleet/sweep for CI smoke runs.
+bench-serve:
+	cd $(RUST_DIR) && PAOTA_BENCH_OUT=$(CURDIR)/BENCH_serve.json \
+		cargo bench --bench serve_load

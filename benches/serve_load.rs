@@ -1,0 +1,158 @@
+//! Wire-service benchmark (`make bench-serve` → `BENCH_serve.json`).
+//!
+//! Brings up the real `fl::serve` server on a loopback ephemeral port
+//! and drives it with the real `repro loadgen` session fleet at
+//! increasing concurrency, recording requests/sec, submit-latency
+//! percentiles, and the reject/duplicate/busy counters per setting —
+//! methodology and acceptance gates in EXPERIMENTS.md §serve.
+//!
+//! The schedule is lockstep (`serve_period_ms = 0`), so every run
+//! executes the identical deterministic round sequence regardless of
+//! session count — concurrency changes only who carries each job, which
+//! is exactly what makes the throughput numbers comparable across the
+//! sweep. Every setting asserts `lost == 0` (each dispatched job reached
+//! a terminal ack/reject).
+//!
+//! `PAOTA_BENCH_FAST=1` shrinks rounds/fleet/sweep for CI smoke runs;
+//! `PAOTA_BENCH_OUT` overrides the JSON output path.
+
+use std::time::Instant;
+
+use paota::benchlib::section;
+use paota::config::{Algorithm, Config};
+use paota::fl::serve::{run_loadgen, LoadgenReport, Server};
+use paota::fl::TrainContext;
+
+/// Process peak resident set in MiB (Linux `VmHWM`; null elsewhere).
+fn peak_rss_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb / 1024.0);
+        }
+    }
+    None
+}
+
+/// JSON number that tolerates NaN/inf/unavailable (emitted as null).
+fn jnum(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.6}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Native-kernel PAOTA fleet behind the wire, lockstep schedule.
+fn serve_cfg(fast: bool, sessions: usize) -> Config {
+    let mut c = Config::default();
+    c.algorithm = Algorithm::parse("paota").unwrap();
+    c.artifacts_dir = "native".into();
+    c.synth.side = 6;
+    c.partition.clients = if fast { 10 } else { 30 };
+    c.partition.sizes = vec![12, 20];
+    c.partition.test_size = 16;
+    c.rounds = if fast { 3 } else { 8 };
+    c.eval_every = c.rounds; // eval once — the wire is the subject here
+    c.serve.bind = "127.0.0.1:0".into();
+    c.serve.period_ms = 0; // lockstep: identical schedule at every concurrency
+    c.serve.sessions = sessions;
+    c.serve.max_sessions = sessions.max(4);
+    c.validate().unwrap();
+    c
+}
+
+struct Setting {
+    sessions: usize,
+    rounds: usize,
+    wall_s: f64,
+    report: LoadgenReport,
+    accepted: usize,
+    busy_server: usize,
+}
+
+fn run_setting(fast: bool, sessions: usize) -> Setting {
+    let cfg = serve_cfg(fast, sessions);
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let t0 = Instant::now();
+    let (outcome, report) = std::thread::scope(|s| {
+        let lg_cfg = &cfg;
+        let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
+        let outcome = server.run().unwrap();
+        (outcome, lg.join().unwrap().unwrap())
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(report.lost, 0, "lost updates at {sessions} sessions");
+    assert_eq!(outcome.result.records.len(), cfg.rounds);
+    println!(
+        "sessions={sessions:<3} wall {wall_s:.3}s  {:.0} req/s  jobs {}  \
+         submit_ms p50 {:.2} p90 {:.2} p99 {:.2}  busy {}",
+        report.requests_per_sec,
+        report.jobs,
+        report.submit_p50_ms,
+        report.submit_p90_ms,
+        report.submit_p99_ms,
+        report.busy,
+    );
+    Setting {
+        sessions,
+        rounds: cfg.rounds,
+        wall_s,
+        accepted: outcome.stats.accepted,
+        busy_server: outcome.stats.busy,
+        report,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("PAOTA_BENCH_FAST").is_ok();
+    let sweep: &[usize] = if fast { &[1, 4] } else { &[1, 4, 8] };
+
+    section(&format!(
+        "serve: loopback serve+loadgen, lockstep schedule, sessions ∈ {sweep:?}"
+    ));
+    let settings: Vec<Setting> = sweep.iter().map(|&n| run_setting(fast, n)).collect();
+    let rss = peak_rss_mib();
+
+    let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    let rows = settings
+        .iter()
+        .map(|s| {
+            let r = &s.report;
+            format!(
+                "{{\"sessions\": {}, \"rounds\": {}, \"wall_s\": {}, \
+                 \"requests_per_sec\": {}, \"jobs\": {}, \"acks\": {}, \
+                 \"accepted\": {}, \"duplicates\": {}, \"out_of_round\": {}, \
+                 \"busy_client\": {}, \"busy_server\": {}, \"lost\": {}, \
+                 \"submit_p50_ms\": {}, \"submit_p90_ms\": {}, \"submit_p99_ms\": {}}}",
+                s.sessions,
+                s.rounds,
+                jnum(Some(s.wall_s)),
+                jnum(Some(r.requests_per_sec)),
+                r.jobs,
+                r.acks,
+                s.accepted,
+                r.duplicates,
+                r.out_of_round,
+                r.busy,
+                s.busy_server,
+                r.lost,
+                jnum(Some(r.submit_p50_ms)),
+                jnum(Some(r.submit_p90_ms)),
+                jnum(Some(r.submit_p99_ms)),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let json = format!(
+        "{{\n  \"schema\": \"paota-bench-serve/1\",\n  \"fast_mode\": {fast},\n  \
+         \"peak_rss_mib\": {},\n  \"settings\": [\n    {rows}\n  ]\n}}\n",
+        jnum(rss),
+    );
+    std::fs::write(&out_path, json).unwrap();
+    println!("\nwrote {out_path}");
+}

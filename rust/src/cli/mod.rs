@@ -38,6 +38,10 @@ pub enum Command {
     /// Ablations: `beta`, `dt`, `omega`, `latency`, `solver`,
     /// `scheduling`, `topology`, `mobility`, `replicates`.
     Ablation(String),
+    /// Serve the coordinator over TCP (`fl::serve`).
+    Serve,
+    /// Replay a deterministic client fleet against a running server.
+    Loadgen,
     /// Print the effective config and exit.
     ShowConfig,
     /// Print help.
@@ -74,6 +78,11 @@ COMMANDS:
                       | topology (cells × groups vs flat, fl::topology)
                       | mobility (roaming × handover policies, fl::mobility)
                       | replicates (seed grid → mean ± std curves)
+    serve         serve the coordinator over TCP at serve_bind (fl::serve);
+                      periodic algorithms only (paota | ca_paota | air_fedga)
+    loadgen       replay serve_sessions concurrent client sessions against a
+                      running server and report wire metrics (needs
+                      artifacts_dir=native)
     show-config   print the effective configuration (re-parseable `key = value`)
     help          this text
 
@@ -99,6 +108,8 @@ CONFIG KEYS (defaults = paper §IV-A):
     group_ready_frac group_mix group_power workers campaign_jobs
     mobility dwell_mean handover handover_every cell_noise_spread_db
     cohort_frac cohort_size
+    serve_bind serve_max_sessions serve_queue_depth serve_period_ms
+    serve_sessions serve_pace_ms
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
@@ -112,6 +123,9 @@ CONFIG KEYS (defaults = paper §IV-A):
     (fleet: cohort_frac/cohort_size sample the active cohort from a large
      fleet — memory & scheduling scale with the cohort, not clients;
      defaults = full participation, bitwise-identical to pre-fleet runs)
+    (serve: serve_period_ms=0 closes rounds in lockstep — bitwise equal to
+     the library loop; >0 holds each round open for that wall-clock period,
+     surfacing Busy backpressure when serve_queue_depth is contended)
 ",
         names.join("|")
     )
@@ -144,6 +158,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             };
             Command::Ablation(which.clone())
         }
+        "serve" => Command::Serve,
+        "loadgen" => Command::Loadgen,
         "show-config" => Command::ShowConfig,
         "help" | "--help" | "-h" => Command::Help,
         other => bail!("unknown command {other:?} (try `repro help`)"),
@@ -291,6 +307,52 @@ mod tests {
         let h = help_text();
         assert!(h.contains("cohort_frac"), "{h}");
         assert!(h.contains("cohort_size"), "{h}");
+    }
+
+    #[test]
+    fn serve_commands_and_keys_parse_from_the_cli() {
+        let cli = parse(&args(&[
+            "serve",
+            "--serve_bind",
+            "127.0.0.1:0",
+            "--serve_max_sessions",
+            "8",
+            "--serve_queue_depth",
+            "4",
+            "--serve_period_ms",
+            "250",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, Command::Serve);
+        assert_eq!(cli.config.serve.bind, "127.0.0.1:0");
+        assert_eq!(cli.config.serve.max_sessions, 8);
+        assert_eq!(cli.config.serve.queue_depth, 4);
+        assert_eq!(cli.config.serve.period_ms, 250);
+
+        let cli = parse(&args(&["loadgen", "--serve_sessions", "3", "--serve_pace_ms", "2"]))
+            .unwrap();
+        assert_eq!(cli.command, Command::Loadgen);
+        assert_eq!(cli.config.serve.sessions, 3);
+        assert_eq!(cli.config.serve.pace_ms, 2);
+
+        // Validation runs at parse time.
+        assert!(parse(&args(&["serve", "--serve_queue_depth", "0"])).is_err());
+        assert!(parse(&args(&["serve", "--serve_bind", "nonsense"])).is_err());
+
+        // Help advertises the commands and every [serve] key.
+        let h = help_text();
+        for needle in [
+            "serve",
+            "loadgen",
+            "serve_bind",
+            "serve_max_sessions",
+            "serve_queue_depth",
+            "serve_period_ms",
+            "serve_sessions",
+            "serve_pace_ms",
+        ] {
+            assert!(h.contains(needle), "help text missing {needle}");
+        }
     }
 
     #[test]

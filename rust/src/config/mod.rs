@@ -300,6 +300,47 @@ impl FleetConfig {
     }
 }
 
+/// Wire-service knobs (`[serve]`): how `repro serve` exposes the
+/// coordinator over TCP and how `repro loadgen` drives it. All keys are
+/// `serve_`-prefixed on the flat `key = value` surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address for `repro serve` (`addr:port`; port 0 = ephemeral,
+    /// the bound address is printed at startup).
+    pub bind: String,
+    /// Concurrent client sessions admitted; further connects get an
+    /// explicit `Busy` and should back off and retry.
+    pub max_sessions: usize,
+    /// Aggregation-buffer depth: submissions accepted but not yet folded
+    /// into a round close. A full buffer answers `Busy` (backpressure)
+    /// instead of dropping the update.
+    pub queue_depth: usize,
+    /// Wall-clock aggregation period per round in milliseconds.
+    /// 0 = lockstep: a round closes when every dispatched job has been
+    /// submitted — the serial-deterministic mode whose result is bitwise
+    /// identical to the in-process `fl::run` loop.
+    pub period_ms: u64,
+    /// Concurrent sessions `repro loadgen` replays.
+    pub sessions: usize,
+    /// Loadgen think-time scale: each session sleeps a seed-deterministic
+    /// draw from the `[latency]` model × `pace_ms` between jobs.
+    /// 0 = no pacing (max pressure).
+    pub pace_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:7447".into(),
+            max_sessions: 64,
+            queue_depth: 256,
+            period_ms: 0,
+            sessions: 4,
+            pace_ms: 0,
+        }
+    }
+}
+
 /// Full experiment configuration. Field defaults reproduce the paper.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -375,6 +416,8 @@ pub struct Config {
     pub perf: PerfConfig,
     /// Fleet-scale cohort sampling (active participants vs fleet size).
     pub fleet: FleetConfig,
+    /// Wire service (`repro serve` / `repro loadgen`).
+    pub serve: ServeConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -418,6 +461,7 @@ impl Default for Config {
             mobility: MobilityConfig::default(),
             perf: PerfConfig::default(),
             fleet: FleetConfig::default(),
+            serve: ServeConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -473,6 +517,12 @@ impl Config {
             "campaign_jobs" | "jobs" => self.perf.campaign_jobs = p(key, value)?,
             "cohort_frac" => self.fleet.cohort_frac = p(key, value)?,
             "cohort_size" => self.fleet.cohort_size = p(key, value)?,
+            "serve_bind" => self.serve.bind = value.to_string(),
+            "serve_max_sessions" => self.serve.max_sessions = p(key, value)?,
+            "serve_queue_depth" => self.serve.queue_depth = p(key, value)?,
+            "serve_period_ms" => self.serve.period_ms = p(key, value)?,
+            "serve_sessions" => self.serve.sessions = p(key, value)?,
+            "serve_pace_ms" => self.serve.pace_ms = p(key, value)?,
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -641,6 +691,29 @@ impl Config {
                  is only supported on the flat single-cell topology (cells = 1)"
             );
         }
+        let serve = &self.serve;
+        if serve.bind.parse::<std::net::SocketAddr>().is_err() {
+            bail!(
+                "serve_bind {:?} is not an addr:port (e.g. 127.0.0.1:7447; \
+                 port 0 requests an ephemeral port)",
+                serve.bind
+            );
+        }
+        if serve.max_sessions == 0 || serve.max_sessions > 4096 {
+            bail!("serve_max_sessions must be in 1..=4096");
+        }
+        if serve.queue_depth == 0 {
+            bail!("serve_queue_depth must be ≥ 1");
+        }
+        if serve.period_ms > 600_000 {
+            bail!("serve_period_ms must be ≤ 600000 (10 min); 0 = lockstep");
+        }
+        if serve.sessions == 0 || serve.sessions > 4096 {
+            bail!("serve_sessions must be in 1..=4096");
+        }
+        if serve.pace_ms > 60_000 {
+            bail!("serve_pace_ms must be ≤ 60000");
+        }
         Ok(())
     }
 
@@ -761,6 +834,12 @@ impl Config {
         kv("campaign_jobs", self.perf.campaign_jobs.to_string());
         kv("cohort_frac", self.fleet.cohort_frac.to_string());
         kv("cohort_size", self.fleet.cohort_size.to_string());
+        kv("serve_bind", self.serve.bind.clone());
+        kv("serve_max_sessions", self.serve.max_sessions.to_string());
+        kv("serve_queue_depth", self.serve.queue_depth.to_string());
+        kv("serve_period_ms", self.serve.period_ms.to_string());
+        kv("serve_sessions", self.serve.sessions.to_string());
+        kv("serve_pace_ms", self.serve.pace_ms.to_string());
         kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
@@ -989,6 +1068,39 @@ mod tests {
     }
 
     #[test]
+    fn serve_keys_parse_and_validate() {
+        let mut c = Config::default();
+        c.set("serve_bind", "0.0.0.0:0").unwrap();
+        c.set("serve_max_sessions", "128").unwrap();
+        c.set("serve_queue_depth", "32").unwrap();
+        c.set("serve_period_ms", "500").unwrap();
+        c.set("serve_sessions", "16").unwrap();
+        c.set("serve_pace_ms", "100").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.serve.max_sessions, 128);
+        assert_eq!(c.serve.queue_depth, 32);
+
+        // Degenerate values rejected.
+        let mut c = Config::default();
+        c.set("serve_bind", "not-an-address").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("serve_max_sessions", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("serve_queue_depth", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("serve_sessions", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("serve_period_ms", "600001").unwrap();
+        assert!(c.validate().is_err());
+        // Non-numeric values rejected at set time.
+        assert!(Config::default().set("serve_period_ms", "fast").is_err());
+    }
+
+    #[test]
     fn latency_kind_roundtrip_and_models() {
         for kind in ["uniform", "homogeneous", "bimodal", "lognormal", "gilbert_elliott"] {
             assert_eq!(LatencyKind::parse(kind).unwrap().name(), kind);
@@ -1064,6 +1176,12 @@ mod tests {
         c.set("latency_ge_exit", "0.4").unwrap();
         c.set("cohort_frac", "0.5").unwrap();
         c.set("cohort_size", "0").unwrap();
+        c.set("serve_bind", "127.0.0.1:9000").unwrap();
+        c.set("serve_max_sessions", "8").unwrap();
+        c.set("serve_queue_depth", "16").unwrap();
+        c.set("serve_period_ms", "250").unwrap();
+        c.set("serve_sessions", "2").unwrap();
+        c.set("serve_pace_ms", "5").unwrap();
 
         std::fs::write(&path, c.to_kv_string()).unwrap();
         let mut back = Config::default();
@@ -1083,6 +1201,8 @@ mod tests {
         assert_eq!(back.synth.side, 12);
         assert_eq!(back.fleet.cohort_frac, 0.5);
         assert_eq!(back.fleet.cohort_size, 0);
+        assert_eq!(back.serve.bind, "127.0.0.1:9000");
+        assert_eq!(back.serve.period_ms, 250);
 
         // The default config round-trips too.
         let d = Config::default();

@@ -2,10 +2,42 @@
 //! most `max_classes` (5) of the 10 classes, with a sample count drawn
 //! uniformly from `sizes` ({300, 600, 900, 1200, 1500}); a balanced global
 //! test set is held out at the PS for the accuracy curves.
+//!
+//! ## Lazy materialization
+//!
+//! Shard *synthesis* is the expensive part of setup (each sample renders
+//! side² stroke pixels through blur passes), and at fleet scale
+//! (K = 10⁶, `[fleet]` cohort sampling) only a sliver of clients is ever
+//! trained. [`Partition::generate`] therefore draws one partition seed
+//! and derives every client's pixels from its **own stateless RNG stream**
+//! ([`Rng::for_entity`]): generation records only the cheap per-client
+//! metadata (size, class assignment) eagerly, and the pixel data
+//! materializes behind a `OnceLock` on first [`Partition::client`] touch.
+//! Because each shard's stream is independent of every other shard's,
+//! the contents are bit-identical no matter which clients are touched in
+//! which order — eager synthesis (touch all, in order) and lazy synthesis
+//! agree byte for byte (asserted by `lazy_touch_order_is_bit_invariant`).
+
+use std::sync::OnceLock;
 
 use crate::util::Rng;
 
 use super::synth::{Dataset, Prototypes, SynthConfig};
+
+/// RNG stream tags for the partition's independent draw families. All
+/// derive from the single partition seed drawn from the caller's stream,
+/// so `Partition::generate` still consumes exactly one value from the
+/// caller's RNG.
+mod pstreams {
+    /// Class prototype rendering.
+    pub const PROTO: u64 = 0x9807_0;
+    /// Per-client metadata (shard size, class assignment).
+    pub const META: u64 = 0x3e7a;
+    /// Per-client pixel synthesis (one independent stream per client).
+    pub const DATA: u64 = 0xda7a_c11e;
+    /// The balanced held-out test set.
+    pub const TEST: u64 = 0x7e57;
+}
 
 /// Partition parameters (defaults = the paper's setting).
 #[derive(Debug, Clone, PartialEq)]
@@ -56,38 +88,62 @@ impl ClientData {
     }
 }
 
+/// Cheap per-client facts known without synthesizing a single pixel.
+#[derive(Debug, Clone)]
+struct ClientMeta {
+    size: usize,
+    classes: Vec<usize>,
+}
+
 /// The full federated data layout: K client shards + a global test set.
+///
+/// Shards materialize lazily on first [`Partition::client`] touch; the
+/// size/class metadata ([`Partition::client_len`],
+/// [`Partition::client_classes`], [`Partition::total_samples`]) is always
+/// available for free.
 pub struct Partition {
-    pub clients: Vec<ClientData>,
+    protos: Prototypes,
+    n_classes: usize,
+    /// Partition seed every per-client stream derives from.
+    seed: u64,
+    meta: Vec<ClientMeta>,
+    /// Cumulative shard-size end offsets (global-row → client lookup).
+    cum: Vec<usize>,
+    shards: Vec<OnceLock<ClientData>>,
     pub test: Dataset,
 }
 
 impl Partition {
     /// Generate synthetic data and split it per the paper's recipe.
+    /// Consumes exactly one draw from `rng` (the partition seed); the
+    /// expensive per-client pixel synthesis is deferred to first touch.
     pub fn generate(synth: SynthConfig, cfg: &PartitionConfig, rng: &mut Rng) -> Self {
-        let protos = Prototypes::generate(synth, rng);
+        let seed = rng.next_u64();
         let n_classes = synth.classes;
         assert!(cfg.max_classes >= 1 && cfg.max_classes <= n_classes);
 
-        let mut clients = Vec::with_capacity(cfg.clients);
-        for _ in 0..cfg.clients {
-            let n = cfg.sizes[rng.index(cfg.sizes.len())];
-            let k = 1 + rng.index(cfg.max_classes); // 1..=max_classes
-            let classes = rng.choose_indices(n_classes, k);
-            let mut weights = vec![0.0f64; n_classes];
-            for &c in &classes {
-                weights[c] = 1.0;
-            }
-            let data = protos.dataset(n, Some(&weights), rng);
-            clients.push(ClientData { data, classes });
+        let protos = Prototypes::generate(synth, &mut Rng::with_stream(seed, pstreams::PROTO));
+
+        let mut meta = Vec::with_capacity(cfg.clients);
+        let mut cum = Vec::with_capacity(cfg.clients);
+        let mut total = 0usize;
+        for i in 0..cfg.clients {
+            let mut r = Rng::for_entity(seed, pstreams::META, i as u64);
+            let size = cfg.sizes[r.index(cfg.sizes.len())];
+            let k = 1 + r.index(cfg.max_classes); // 1..=max_classes
+            let classes = r.choose_indices(n_classes, k);
+            total += size;
+            cum.push(total);
+            meta.push(ClientMeta { size, classes });
         }
 
         // Balanced test set with no label noise (ground-truth metric).
+        let mut trng = Rng::with_stream(seed, pstreams::TEST);
         let mut test_x = Vec::with_capacity(cfg.test_size * synth.dim());
         let mut test_y = Vec::with_capacity(cfg.test_size);
         for i in 0..cfg.test_size {
             let c = i % n_classes;
-            test_x.extend_from_slice(&protos.sample(c, rng));
+            test_x.extend_from_slice(&protos.sample(c, &mut trng));
             test_y.push(c as u8);
         }
         let test = Dataset {
@@ -97,22 +153,83 @@ impl Partition {
             classes: n_classes,
         };
 
-        Self { clients, test }
+        Self {
+            protos,
+            n_classes,
+            seed,
+            meta,
+            cum,
+            shards: (0..cfg.clients).map(|_| OnceLock::new()).collect(),
+            test,
+        }
     }
 
-    /// Total training samples across clients (the paper's `D`).
+    /// Number of clients K.
+    pub fn num_clients(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Client `i`'s shard, synthesizing it on first touch. The shard's
+    /// pixels come from an RNG stream keyed only by (partition seed, `i`),
+    /// so the result is independent of which other shards exist yet.
+    pub fn client(&self, i: usize) -> &ClientData {
+        self.shards[i].get_or_init(|| self.build_shard(i))
+    }
+
+    fn build_shard(&self, i: usize) -> ClientData {
+        let m = &self.meta[i];
+        let mut weights = vec![0.0f64; self.n_classes];
+        for &c in &m.classes {
+            weights[c] = 1.0;
+        }
+        let mut rng = Rng::for_entity(self.seed, pstreams::DATA, i as u64);
+        let data = self.protos.dataset(m.size, Some(&weights), &mut rng);
+        ClientData {
+            data,
+            classes: m.classes.clone(),
+        }
+    }
+
+    /// Client `i`'s shard size `D_k` — free, no materialization.
+    pub fn client_len(&self, i: usize) -> usize {
+        self.meta[i].size
+    }
+
+    /// The classes assigned to client `i` — free, no materialization.
+    pub fn client_classes(&self, i: usize) -> &[usize] {
+        &self.meta[i].classes
+    }
+
+    /// How many shards have been materialized so far (lazy-contract test
+    /// hook).
+    pub fn materialized(&self) -> usize {
+        self.shards.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// Map a global pooled-row index to `(client, local_row)` — the
+    /// pooled dataset is the client shards concatenated in client order.
+    pub fn locate(&self, row: usize) -> (usize, usize) {
+        debug_assert!(row < self.total_samples());
+        let c = self.cum.partition_point(|&end| end <= row);
+        let start = if c == 0 { 0 } else { self.cum[c - 1] };
+        (c, row - start)
+    }
+
+    /// Total training samples across clients (the paper's `D`) — free,
+    /// no materialization.
     pub fn total_samples(&self) -> usize {
-        self.clients.iter().map(|c| c.data.len()).sum()
+        self.cum.last().copied().unwrap_or(0)
     }
 
     /// Pool all client shards into one centralized dataset (for the
-    /// `F(w*)` estimator).
+    /// `F(w*)` estimator). Materializes every shard.
     pub fn pooled(&self) -> Dataset {
         let dim = self.test.dim;
         let classes = self.test.classes;
-        let mut x = Vec::new();
-        let mut y = Vec::new();
-        for c in &self.clients {
+        let mut x = Vec::with_capacity(self.total_samples() * dim);
+        let mut y = Vec::with_capacity(self.total_samples());
+        for i in 0..self.num_clients() {
+            let c = self.client(i);
             x.extend_from_slice(&c.data.x);
             y.extend_from_slice(&c.data.y);
         }
@@ -150,11 +267,14 @@ mod tests {
     fn partition_shapes() {
         let mut rng = Rng::new(1);
         let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
-        assert_eq!(p.clients.len(), 12);
+        assert_eq!(p.num_clients(), 12);
         assert_eq!(p.test.len(), 60);
-        for c in &p.clients {
+        for i in 0..p.num_clients() {
+            let c = p.client(i);
             assert!([30, 60, 90].contains(&c.data.len()));
+            assert_eq!(c.data.len(), p.client_len(i));
             assert!(!c.classes.is_empty() && c.classes.len() <= 3);
+            assert_eq!(c.classes, p.client_classes(i));
         }
     }
 
@@ -163,7 +283,8 @@ mod tests {
         check("clients only hold assigned classes", 10, |g| {
             let mut rng = Rng::new(g.rng().next_u64());
             let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
-            for c in &p.clients {
+            for i in 0..p.num_clients() {
+                let c = p.client(i);
                 for &label in &c.data.y {
                     prop_assert(
                         c.classes.contains(&(label as usize)),
@@ -199,8 +320,8 @@ mod tests {
         let mut rng = Rng::new(4);
         let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
         let (m, b) = (3, 8);
-        let (xs, ys) = p.clients[0].sample_batches(m, b, &mut rng);
-        let d = &p.clients[0].data;
+        let (xs, ys) = p.client(0).sample_batches(m, b, &mut rng);
+        let d = &p.client(0).data;
         assert_eq!(xs.len(), m * b * d.dim);
         assert_eq!(ys.len(), m * b * d.classes);
         for row in 0..(m * b) {
@@ -213,7 +334,72 @@ mod tests {
     fn deterministic_given_seed() {
         let p1 = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(7));
         let p2 = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(7));
-        assert_eq!(p1.clients[3].data.y, p2.clients[3].data.y);
+        assert_eq!(p1.client(3).data.y, p2.client(3).data.y);
         assert_eq!(p1.test.x, p2.test.x);
+    }
+
+    #[test]
+    fn generation_is_lazy() {
+        let mut rng = Rng::new(9);
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut rng);
+        // Generation + the metadata surface synthesize zero shards.
+        assert_eq!(p.materialized(), 0);
+        let _ = p.total_samples();
+        let _ = p.client_len(5);
+        let _ = p.client_classes(5);
+        let _ = p.locate(p.total_samples() - 1);
+        assert_eq!(p.materialized(), 0);
+        // First touch materializes exactly the touched shard.
+        let _ = p.client(5);
+        assert_eq!(p.materialized(), 1);
+        let _ = p.client(5);
+        assert_eq!(p.materialized(), 1);
+    }
+
+    #[test]
+    fn lazy_touch_order_is_bit_invariant() {
+        // Eager synthesis ≡ lazy synthesis, bit for bit: the same seed
+        // touched forward, backward, and via pooled() yields identical
+        // shard contents, because each shard has its own entity stream.
+        let fwd = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(21));
+        let bwd = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(21));
+        let via_pool = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(21));
+
+        for i in 0..fwd.num_clients() {
+            let _ = fwd.client(i); // eager order: 0, 1, 2, ...
+        }
+        for i in (0..bwd.num_clients()).rev() {
+            let _ = bwd.client(i); // reverse order
+        }
+        let pooled = via_pool.pooled(); // materialize-all path
+
+        let mut off = 0usize;
+        for i in 0..fwd.num_clients() {
+            let a = fwd.client(i);
+            let b = bwd.client(i);
+            assert_eq!(a.data.x, b.data.x, "client {i} pixels diverge");
+            assert_eq!(a.data.y, b.data.y, "client {i} labels diverge");
+            assert_eq!(a.classes, b.classes, "client {i} classes diverge");
+            // And the pooled concatenation is those same bytes in order.
+            let n = a.data.len();
+            assert_eq!(
+                &pooled.x[off * pooled.dim..(off + n) * pooled.dim],
+                &a.data.x[..],
+                "pooled pixels diverge at client {i}"
+            );
+            assert_eq!(&pooled.y[off..off + n], &a.data.y[..]);
+            off += n;
+        }
+    }
+
+    #[test]
+    fn locate_maps_pooled_rows() {
+        let p = Partition::generate(tiny_synth(), &tiny_cfg(), &mut Rng::new(13));
+        let pooled = p.pooled();
+        for row in [0, 1, 29, 30, p.total_samples() - 1] {
+            let (c, local) = p.locate(row);
+            assert_eq!(pooled.row(row), p.client(c).data.row(local));
+            assert_eq!(pooled.y[row], p.client(c).data.y[local]);
+        }
     }
 }

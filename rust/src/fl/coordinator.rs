@@ -41,7 +41,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{Algorithm, Config};
-use crate::runtime::EvalOut;
+use crate::runtime::{EvalOut, TrainOut};
 use crate::sim::events::EventQueue;
 use crate::sim::{LatencySampler, VirtualClock};
 use crate::util::{vecmath, Rng};
@@ -126,6 +126,19 @@ pub struct Upload {
     /// `w_k − base` — filled only when the policy asked via
     /// [`AggregationPolicy::needs_deltas`], else empty.
     pub delta: Vec<f32>,
+}
+
+/// An opened periodic slot ([`Coordinator::open_periodic_slot`]): the
+/// chosen uploaders and their ready-to-run training jobs, awaiting
+/// trained submissions via [`Coordinator::complete_periodic_slot`].
+pub struct OpenSlot {
+    /// The slot's round index.
+    pub round: usize,
+    /// Chosen client ids in **dispatch order** — the order submissions
+    /// must be reassembled into before completing the slot.
+    pub chosen: Vec<usize>,
+    /// One `(w0, xs, ys)` training job per chosen client, same order.
+    pub jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
 }
 
 /// One group's AirComp pass inside a [`RoundAction::GroupAggregate`]:
@@ -425,8 +438,10 @@ pub trait AggregationPolicy: Send {
         batch_rng: &mut Rng,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let m = ctx.rt.manifest();
-        let (xs, ys) =
-            ctx.partition.clients[client].sample_batches(m.local_steps, m.batch, batch_rng);
+        let (xs, ys) = ctx
+            .partition
+            .client(client)
+            .sample_batches(m.local_steps, m.batch, batch_rng);
         (base.to_vec(), xs, ys)
     }
 
@@ -720,11 +735,35 @@ impl<'a> Coordinator<'a> {
     /// One ΔT slot of the periodic schedule: collect arrivals, let the
     /// policy pick and aggregate, restart uploaders, close the round.
     /// Rounds must be stepped contiguously from 0 (telemetry asserts).
+    ///
+    /// Implemented as [`Coordinator::open_periodic_slot`] → local
+    /// training → [`Coordinator::complete_periodic_slot`], so a wire
+    /// server (`fl::serve`) that farms the training jobs out to remote
+    /// sessions and reassembles the submissions in dispatch order is
+    /// bitwise identical to this in-process loop by construction.
     pub fn step_periodic(
         &mut self,
         policy: &mut dyn AggregationPolicy,
         round: usize,
     ) -> Result<()> {
+        let OpenSlot { chosen, jobs, .. } = self.open_periodic_slot(policy, round);
+        let outs = self.ctx.train_many(jobs, self.cfg.lr)?;
+        let submissions = chosen.into_iter().zip(outs).collect();
+        self.complete_periodic_slot(policy, round, submissions)
+    }
+
+    /// Open slot `round` of the periodic schedule: pop the arrivals that
+    /// land inside it, let the policy choose the uploaders, and build
+    /// their training jobs from their recorded base snapshots. The caller
+    /// runs the jobs (locally, or across wire sessions) and hands the
+    /// trained outputs to [`Coordinator::complete_periodic_slot`] —
+    /// **in the dispatch order of [`OpenSlot::chosen`]**, which the
+    /// aggregation draws are aligned to.
+    pub fn open_periodic_slot(
+        &mut self,
+        policy: &mut dyn AggregationPolicy,
+        round: usize,
+    ) -> OpenSlot {
         let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
         while let Some((_, client)) = self.queue.pop_until(slot_end) {
             self.pending.push(client);
@@ -736,7 +775,57 @@ impl<'a> Coordinator<'a> {
         let chosen = policy.select_participants(&offered, &mut self.rngs);
         self.pending = offered.into_iter().filter(|c| !chosen.contains(c)).collect();
 
-        let mut uploads = self.train_uploads(round, &chosen, policy, true)?;
+        let mut jobs = Vec::with_capacity(chosen.len());
+        for &client in &chosen {
+            jobs.push(policy.make_job(
+                client,
+                &self.states.base[client],
+                self.ctx,
+                &mut self.rngs.batch,
+            ));
+        }
+        OpenSlot {
+            round,
+            chosen,
+            jobs,
+        }
+    }
+
+    /// Complete slot `round`: fold the trained submissions (pairs of
+    /// client id and [`TrainOut`]) into uploads with staleness from the
+    /// clients' recorded base rounds, run the policy's aggregation,
+    /// restart the uploaders at the slot boundary, and close the round.
+    ///
+    /// Submissions must arrive in dispatch order (see
+    /// [`Coordinator::open_periodic_slot`]); clients dispatched in an
+    /// *earlier* slot may appear too — their staleness is computed from
+    /// their unchanged base round, which is exactly the paper's staleness
+    /// path for late arrivals.
+    pub fn complete_periodic_slot(
+        &mut self,
+        policy: &mut dyn AggregationPolicy,
+        round: usize,
+        submissions: Vec<(usize, TrainOut)>,
+    ) -> Result<()> {
+        let slot_end = (round as f64 + 1.0) * self.cfg.delta_t;
+        let want_deltas = policy.needs_deltas();
+        let mut uploads = Vec::with_capacity(submissions.len());
+        for (client, out) in submissions {
+            let staleness = round.saturating_sub(self.states.base_round[client]);
+            let mut delta = Vec::new();
+            if want_deltas {
+                delta = vec![0.0f32; self.dim];
+                vecmath::sub(&out.weights, &self.states.base[client], &mut delta);
+            }
+            uploads.push(Upload {
+                client,
+                staleness,
+                loss: out.loss,
+                weights: out.weights,
+                delta,
+            });
+        }
+
         let action = if uploads.is_empty() {
             RoundAction::Skip { mean_power: 0.0 }
         } else {

@@ -28,11 +28,10 @@ impl LocalSgd {
     pub fn new(ctx: &TrainContext, cfg: &Config) -> Self {
         Self {
             participants: ctx.sync_participants(cfg),
-            sizes: ctx
-                .partition
-                .clients
-                .iter()
-                .map(|c| c.data.len() as f32)
+            // D_k comes from the partition metadata — no shard pixels
+            // are materialized to build the weights.
+            sizes: (0..ctx.partition.num_clients())
+                .map(|i| ctx.partition.client_len(i) as f32)
                 .collect(),
         }
     }

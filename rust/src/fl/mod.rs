@@ -60,11 +60,12 @@ pub mod local_sgd;
 pub mod mobility;
 pub mod paota;
 pub mod registry;
+pub mod serve;
 pub mod topology;
 
 pub use coordinator::{
-    AggregationPolicy, Coordinator, GroupPass, RngStreams, RoundAction, RoundTiming, Telemetry,
-    Upload, WindowStats,
+    AggregationPolicy, Coordinator, GroupPass, OpenSlot, RngStreams, RoundAction, RoundTiming,
+    Telemetry, Upload, WindowStats,
 };
 
 use anyhow::{bail, Context as _, Result};
@@ -222,16 +223,21 @@ impl TrainContext {
         let test_y = partition.test.one_hot();
 
         // Train probe: deterministic subsample of the pooled shards.
-        let pooled = partition.pooled();
+        // Drawn by global pooled-row index exactly as if the shards were
+        // concatenated, but only the shards a draw lands in are
+        // materialized — the partition stays lazy at fleet scale.
         let mut probe_rng = Rng::with_stream(cfg.seed, 0x9806e);
-        let dim = pooled.dim;
-        let classes = pooled.classes;
+        let dim = partition.test.dim;
+        let classes = partition.test.classes;
+        let total = partition.total_samples();
         let mut probe_x = Vec::with_capacity(m.eval_size * dim);
         let mut probe_y = vec![0.0f32; m.eval_size * classes];
         for row in 0..m.eval_size {
-            let i = probe_rng.index(pooled.len());
-            probe_x.extend_from_slice(pooled.row(i));
-            probe_y[row * classes + pooled.y[i] as usize] = 1.0;
+            let i = probe_rng.index(total);
+            let (c, local) = partition.locate(i);
+            let shard = &partition.client(c).data;
+            probe_x.extend_from_slice(shard.row(local));
+            probe_y[row * classes + shard.y[local] as usize] = 1.0;
         }
 
         // Backend-agnostic fan-out: both model backends ride the same
@@ -275,7 +281,7 @@ impl TrainContext {
 
     /// Client count K.
     pub fn clients(&self) -> usize {
-        self.partition.clients.len()
+        self.partition.num_clients()
     }
 
     /// He-initialized global model, deterministic in the config seed.

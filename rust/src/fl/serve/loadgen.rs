@@ -1,0 +1,275 @@
+//! `serve::loadgen` — the wire-level load generator behind
+//! `repro loadgen`: replays a seed-deterministic fleet as concurrent
+//! client sessions against a running [`super::server`] and reports
+//! throughput, submit-latency percentiles, and reject/duplicate/busy
+//! counts (`make bench-serve` writes them to `BENCH_serve.json`).
+//!
+//! The *schedule* being replayed lives server-side — the coordinator's
+//! virtual mobility/latency model decides which client trains when; a
+//! loadgen session is a dumb worker that pulls whatever job is next,
+//! trains it on its own native runtime, and submits. What the loadgen
+//! adds client-side is seed-deterministic *think time*: with
+//! `serve.pace_ms > 0`, each session sleeps a draw from the configured
+//! `[latency]` model (its own [`Rng::for_entity`] stream, so the pattern
+//! is reproducible across runs) scaled by `pace_ms` between jobs —
+//! turning the configured fleet-latency distribution into wall-clock
+//! arrival jitter.
+//!
+//! Every submit is retried through [`Msg::Busy`] backpressure until a
+//! terminal reply (ack or reject) lands, so `lost` — jobs with no
+//! terminal outcome — must come out 0 on a healthy server.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context as _, Result};
+
+use crate::config::Config;
+use crate::runtime::ModelRuntime;
+use crate::util::Rng;
+
+use super::proto::{self, FrameRead, Msg, RejectCode};
+
+/// Loadgen RNG stream tag (per-session think-time draws).
+const STREAM_LOADGEN: u64 = 0x10ad;
+
+/// Backoff after a `Busy` reply (submit retry / session-cap reconnect).
+const BUSY_BACKOFF: Duration = Duration::from_millis(10);
+
+/// Aggregated wire metrics for one loadgen run.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Concurrent sessions replayed.
+    pub sessions: usize,
+    /// Training jobs pulled and executed.
+    pub jobs: usize,
+    /// Submits accepted into an aggregation buffer.
+    pub acks: usize,
+    pub duplicates: usize,
+    pub out_of_round: usize,
+    /// `Busy` replies absorbed (submit retries + session-cap rejects).
+    pub busy: usize,
+    /// Jobs that never reached a terminal ack/reject — 0 on a healthy run.
+    pub lost: usize,
+    pub wall_secs: f64,
+    /// All request frames sent (hello + fetch + submit attempts) per second.
+    pub requests_per_sec: f64,
+    /// Submit latency: first submit frame sent → terminal reply read,
+    /// including any Busy retry cycles in between.
+    pub submit_p50_ms: f64,
+    pub submit_p90_ms: f64,
+    pub submit_p99_ms: f64,
+}
+
+#[derive(Default)]
+struct Tally {
+    jobs: usize,
+    acks: usize,
+    duplicates: usize,
+    out_of_round: usize,
+    busy: usize,
+    requests: usize,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run `cfg.serve.sessions` concurrent client sessions against the
+/// server at `addr` until it reports the run done, then aggregate the
+/// wire metrics. Requires the native backend (every session owns a
+/// runtime on its own thread; PJRT executables are thread-bound).
+pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
+    ensure!(
+        crate::runtime::is_native_dir(&cfg.artifacts_dir),
+        "loadgen requires artifacts_dir = native (each session thread owns \
+         its own runtime)"
+    );
+    let sessions = cfg.serve.sessions.max(1);
+    let start = Instant::now();
+    let mut tallies: Vec<Tally> = Vec::with_capacity(sessions);
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(sessions);
+        for idx in 0..sessions {
+            handles.push(s.spawn(move || client_session(cfg, addr, idx)));
+        }
+        for h in handles {
+            tallies.push(
+                h.join()
+                    .map_err(|_| anyhow!("loadgen session panicked"))??,
+            );
+        }
+        Ok(())
+    })?;
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    let mut total = Tally::default();
+    for t in tallies {
+        total.jobs += t.jobs;
+        total.acks += t.acks;
+        total.duplicates += t.duplicates;
+        total.out_of_round += t.out_of_round;
+        total.busy += t.busy;
+        total.requests += t.requests;
+        total.latencies_ms.extend(t.latencies_ms);
+    }
+    total
+        .latencies_ms
+        .sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lost = total
+        .jobs
+        .saturating_sub(total.acks + total.duplicates + total.out_of_round);
+    Ok(LoadgenReport {
+        sessions,
+        jobs: total.jobs,
+        acks: total.acks,
+        duplicates: total.duplicates,
+        out_of_round: total.out_of_round,
+        busy: total.busy,
+        lost,
+        wall_secs,
+        requests_per_sec: total.requests as f64 / wall_secs.max(1e-9),
+        submit_p50_ms: percentile(&total.latencies_ms, 50.0),
+        submit_p90_ms: percentile(&total.latencies_ms, 90.0),
+        submit_p99_ms: percentile(&total.latencies_ms, 99.0),
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0 when empty).
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Read one message on a blocking client stream.
+fn read_reply(stream: &mut TcpStream) -> Result<Msg> {
+    loop {
+        match proto::read_msg(stream)? {
+            FrameRead::Msg(m) => return Ok(m),
+            FrameRead::Eof => bail!("server closed the session"),
+            // No read timeout is set client-side, but tolerate one anyway.
+            FrameRead::IdleTimeout => continue,
+        }
+    }
+}
+
+/// Connect + handshake, backing off through session-cap `Busy` replies
+/// and startup connection refusals.
+fn connect(addr: &str, idx: usize, tally: &mut Tally) -> Result<(TcpStream, f32)> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connecting to {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        proto::write_msg(&mut stream, &Msg::Hello { token: idx as u64 })?;
+        tally.requests += 1;
+        match read_reply(&mut stream)? {
+            Msg::Assign { lr, .. } => return Ok((stream, lr)),
+            Msg::Busy => {
+                // Session table full — back off and re-dial.
+                tally.busy += 1;
+                ensure!(
+                    Instant::now() < deadline,
+                    "session {idx}: server stayed at its session cap for 30 s"
+                );
+                std::thread::sleep(BUSY_BACKOFF);
+            }
+            other => bail!("expected Assign, got {other:?}"),
+        }
+    }
+}
+
+/// One session: pull jobs, train them on an own native runtime, submit
+/// through backpressure until the server reports the run done.
+fn client_session(cfg: &Config, addr: &str, idx: usize) -> Result<Tally> {
+    let rt = ModelRuntime::native_for(cfg)?;
+    let latency = cfg.latency();
+    let mut pace_rng = Rng::for_entity(cfg.seed, STREAM_LOADGEN, idx as u64);
+    let mut tally = Tally::default();
+    let (mut stream, lr) = connect(addr, idx, &mut tally)?;
+
+    loop {
+        proto::write_msg(&mut stream, &Msg::FetchJob)?;
+        tally.requests += 1;
+        match read_reply(&mut stream)? {
+            Msg::Job {
+                client,
+                round,
+                staleness,
+                w,
+                xs,
+                ys,
+            } => {
+                tally.jobs += 1;
+                let out = rt.local_train(&w, &xs, &ys, lr)?;
+                if cfg.serve.pace_ms > 0 {
+                    // Think time: the configured fleet-latency model,
+                    // scaled to wall-clock by pace_ms.
+                    let think = latency.draw(&mut pace_rng) * cfg.serve.pace_ms as f64;
+                    std::thread::sleep(Duration::from_millis(think.max(0.0) as u64));
+                }
+                let t0 = Instant::now();
+                loop {
+                    proto::write_msg(
+                        &mut stream,
+                        &Msg::Submit {
+                            client,
+                            round,
+                            staleness,
+                            loss: out.loss,
+                            weights: out.weights.clone(),
+                        },
+                    )?;
+                    tally.requests += 1;
+                    match read_reply(&mut stream)? {
+                        Msg::Ack { .. } => {
+                            tally.acks += 1;
+                            break;
+                        }
+                        Msg::Reject {
+                            code: RejectCode::Duplicate,
+                            ..
+                        } => {
+                            tally.duplicates += 1;
+                            break;
+                        }
+                        Msg::Reject {
+                            code: RejectCode::OutOfRound,
+                            ..
+                        } => {
+                            tally.out_of_round += 1;
+                            break;
+                        }
+                        Msg::Busy => {
+                            // Aggregation buffer contended: keep the job
+                            // and retry after a pause.
+                            tally.busy += 1;
+                            std::thread::sleep(BUSY_BACKOFF);
+                        }
+                        other => bail!("unexpected submit reply: {other:?}"),
+                    }
+                }
+                tally
+                    .latencies_ms
+                    .push(t0.elapsed().as_secs_f64() * 1000.0);
+            }
+            Msg::NoJob { done: true } => {
+                let _ = proto::write_msg(&mut stream, &Msg::Bye);
+                return Ok(tally);
+            }
+            Msg::NoJob { done: false } => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            other => bail!("unexpected fetch reply: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! `fl::serve` — the wire-level federation service: real client
+//! sessions over TCP, driving the *same* [`Coordinator`]/
+//! [`AggregationPolicy`] stack as the in-process library loop.
+//!
+//! Layers (each its own submodule, each independently testable):
+//!
+//! - [`proto`] — the compact length-prefixed frame format and message
+//!   vocabulary (hello/assign, fetch-job, submit-update with round id +
+//!   staleness metadata, ack/reject/busy), version byte + FNV-1a
+//!   checksum on every frame;
+//! - [`round`] — the transport-free [`RoundManager`](round::RoundManager)
+//!   (XAIN `Round` idiom) classifying submissions: duplicate-update
+//!   rejection, out-of-round rejection, late routing into the staleness
+//!   path, bounded-buffer `Busy` backpressure;
+//! - [`server`] — `repro serve`: the threaded TCP server mapping round
+//!   manager traffic onto
+//!   [`open_periodic_slot`](Coordinator::open_periodic_slot) /
+//!   [`complete_periodic_slot`](Coordinator::complete_periodic_slot),
+//!   so paota/ca_paota/air_fedga run unmodified behind the wire;
+//! - [`loadgen`] — `repro loadgen`: a seed-deterministic concurrent
+//!   session fleet reporting requests/sec, submit-latency percentiles
+//!   and reject/busy counts (`make bench-serve` → `BENCH_serve.json`).
+//!
+//! **Golden tie-down** (`tests/serve.rs`): with `serve.period_ms = 0`
+//! the server closes each round only when every dispatched job has been
+//! submitted, and the run is bitwise identical — final weights and
+//! record stream — to [`fl::run`](crate::fl::run) on the same config.
+//! The wire moves raw LE f32 bits, the round manager reassembles
+//! submissions into dispatch order, and local training is a pure
+//! function of `(w, xs, ys, lr)`, so determinism survives arbitrary
+//! session interleaving.
+//!
+//! [`Coordinator`]: super::Coordinator
+//! [`AggregationPolicy`]: super::AggregationPolicy
+
+pub mod loadgen;
+pub mod proto;
+pub mod round;
+pub mod server;
+
+pub use loadgen::{run_loadgen, LoadgenReport};
+pub use proto::{Msg, RejectCode};
+pub use round::{RoundManager, RoundStats, SubmitOutcome};
+pub use server::{serve, Server, ServeOutcome};

@@ -1,0 +1,551 @@
+//! `serve::proto` — the compact length-prefixed wire protocol for client
+//! sessions.
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//! u32 LE payload_len | payload | u32 LE checksum
+//! payload := u8 version | u8 msg_type | body
+//! ```
+//!
+//! with an FNV-1a checksum over the payload bytes, so a corrupted or
+//! version-skewed peer is rejected at the frame boundary instead of
+//! desynchronizing the session. All integers are little-endian;
+//! `Vec<f32>` fields are a `u32` element count followed by raw LE f32
+//! bits (bit-exact round-trip — the loopback golden test depends on it).
+//!
+//! The session vocabulary (client ⇄ server):
+//!
+//! | message | direction | meaning |
+//! |---|---|---|
+//! | [`Msg::Hello`] / [`Msg::Assign`] | C→S / S→C | session setup: version handshake, session id, run geometry |
+//! | [`Msg::FetchJob`] / [`Msg::Job`] / [`Msg::NoJob`] | C→S / S→C | pull one training job (base model + minibatches) |
+//! | [`Msg::Submit`] | C→S | submit-update: round id + staleness metadata + trained payload |
+//! | [`Msg::Ack`] / [`Msg::Reject`] / [`Msg::Busy`] | S→C | accept, refuse (duplicate / out-of-round), or backpressure |
+//! | [`Msg::Bye`] | C→S | orderly session end |
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+/// Protocol version byte — bump on any incompatible layout change.
+pub const VERSION: u8 = 1;
+
+/// Upper bound on a single frame's payload (defends the length prefix).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Why a [`Msg::Submit`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectCode {
+    /// Same client already had an accepted update for this round.
+    Duplicate,
+    /// Round id is not an open (dispatched) unit of work for this client
+    /// — a future round, or a job this client was never handed.
+    OutOfRound,
+}
+
+impl RejectCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            RejectCode::Duplicate => 1,
+            RejectCode::OutOfRound => 2,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        Ok(match b {
+            1 => RejectCode::Duplicate,
+            2 => RejectCode::OutOfRound,
+            other => bail!("unknown reject code {other}"),
+        })
+    }
+}
+
+/// One protocol message (see the module table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Session open; `token` is a caller-chosen tag echoed in logs.
+    Hello { token: u64 },
+    /// Session accepted: id, run horizon and model geometry.
+    Assign {
+        session: u64,
+        rounds: u64,
+        dim: u64,
+        lr: f32,
+    },
+    /// Ask for the next unit of work.
+    FetchJob,
+    /// A training job: act as `client` for `round`, train `w` on the
+    /// pre-sampled minibatches `(xs, ys)`.
+    Job {
+        client: u64,
+        round: u64,
+        staleness: u64,
+        w: Vec<f32>,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+    },
+    /// No work right now; `done` means the run is over — disconnect.
+    NoJob { done: bool },
+    /// Submit-update: round id + staleness metadata + trained payload.
+    Submit {
+        client: u64,
+        round: u64,
+        staleness: u64,
+        loss: f32,
+        weights: Vec<f32>,
+    },
+    /// Update accepted into round `round`'s aggregation buffer.
+    Ack { round: u64 },
+    /// Update refused (duplicate / out-of-round).
+    Reject { code: RejectCode, round: u64 },
+    /// Backpressure: the aggregation buffer (or session table) is full —
+    /// retry after a short pause.
+    Busy,
+    /// Orderly session end.
+    Bye,
+}
+
+const T_HELLO: u8 = 1;
+const T_ASSIGN: u8 = 2;
+const T_FETCH_JOB: u8 = 3;
+const T_JOB: u8 = 4;
+const T_NO_JOB: u8 = 5;
+const T_SUBMIT: u8 = 6;
+const T_ACK: u8 = 7;
+const T_REJECT: u8 = 8;
+const T_BUSY: u8 = 9;
+const T_BYE: u8 = 10;
+
+/// FNV-1a over the payload bytes.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_vec_f32(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated message body");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn finished(&self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "trailing bytes in message");
+        Ok(())
+    }
+}
+
+/// Serialize `msg` into a complete frame (length prefix + payload +
+/// checksum).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64);
+    p.push(VERSION);
+    match msg {
+        Msg::Hello { token } => {
+            p.push(T_HELLO);
+            put_u64(&mut p, *token);
+        }
+        Msg::Assign {
+            session,
+            rounds,
+            dim,
+            lr,
+        } => {
+            p.push(T_ASSIGN);
+            put_u64(&mut p, *session);
+            put_u64(&mut p, *rounds);
+            put_u64(&mut p, *dim);
+            put_f32(&mut p, *lr);
+        }
+        Msg::FetchJob => p.push(T_FETCH_JOB),
+        Msg::Job {
+            client,
+            round,
+            staleness,
+            w,
+            xs,
+            ys,
+        } => {
+            p.push(T_JOB);
+            put_u64(&mut p, *client);
+            put_u64(&mut p, *round);
+            put_u64(&mut p, *staleness);
+            put_vec_f32(&mut p, w);
+            put_vec_f32(&mut p, xs);
+            put_vec_f32(&mut p, ys);
+        }
+        Msg::NoJob { done } => {
+            p.push(T_NO_JOB);
+            p.push(u8::from(*done));
+        }
+        Msg::Submit {
+            client,
+            round,
+            staleness,
+            loss,
+            weights,
+        } => {
+            p.push(T_SUBMIT);
+            put_u64(&mut p, *client);
+            put_u64(&mut p, *round);
+            put_u64(&mut p, *staleness);
+            put_f32(&mut p, *loss);
+            put_vec_f32(&mut p, weights);
+        }
+        Msg::Ack { round } => {
+            p.push(T_ACK);
+            put_u64(&mut p, *round);
+        }
+        Msg::Reject { code, round } => {
+            p.push(T_REJECT);
+            p.push(code.to_u8());
+            put_u64(&mut p, *round);
+        }
+        Msg::Busy => p.push(T_BUSY),
+        Msg::Bye => p.push(T_BYE),
+    }
+    let mut frame = Vec::with_capacity(p.len() + 8);
+    frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&p);
+    frame.extend_from_slice(&checksum(&p).to_le_bytes());
+    frame
+}
+
+/// Parse one payload (frame minus length prefix and checksum, both
+/// already validated) into a [`Msg`].
+pub fn decode(payload: &[u8]) -> Result<Msg> {
+    let mut c = Cursor {
+        buf: payload,
+        pos: 0,
+    };
+    let version = c.u8()?;
+    ensure!(
+        version == VERSION,
+        "protocol version mismatch: peer speaks v{version}, this build v{VERSION}"
+    );
+    let t = c.u8()?;
+    let msg = match t {
+        T_HELLO => Msg::Hello { token: c.u64()? },
+        T_ASSIGN => Msg::Assign {
+            session: c.u64()?,
+            rounds: c.u64()?,
+            dim: c.u64()?,
+            lr: c.f32()?,
+        },
+        T_FETCH_JOB => Msg::FetchJob,
+        T_JOB => Msg::Job {
+            client: c.u64()?,
+            round: c.u64()?,
+            staleness: c.u64()?,
+            w: c.vec_f32()?,
+            xs: c.vec_f32()?,
+            ys: c.vec_f32()?,
+        },
+        T_NO_JOB => Msg::NoJob {
+            done: c.u8()? != 0,
+        },
+        T_SUBMIT => Msg::Submit {
+            client: c.u64()?,
+            round: c.u64()?,
+            staleness: c.u64()?,
+            loss: c.f32()?,
+            weights: c.vec_f32()?,
+        },
+        T_ACK => Msg::Ack { round: c.u64()? },
+        T_REJECT => Msg::Reject {
+            code: RejectCode::from_u8(c.u8()?)?,
+            round: c.u64()?,
+        },
+        T_BUSY => Msg::Busy,
+        T_BYE => Msg::Bye,
+        other => bail!("unknown message type {other}"),
+    };
+    c.finished()?;
+    Ok(msg)
+}
+
+/// Write one message as a frame (single `write_all` — frames never
+/// interleave on a stream written from one thread).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+    w.write_all(&encode(msg))
+}
+
+/// Outcome of a frame read on a stream that may carry a read timeout.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete, checksum-verified message.
+    Msg(Msg),
+    /// Clean EOF at a frame boundary (peer closed the session).
+    Eof,
+    /// The read timed out before the first byte of a frame — no data was
+    /// consumed; the caller may poll its shutdown flag and retry.
+    IdleTimeout,
+}
+
+/// Read one frame. Timeouts *between* frames surface as
+/// [`FrameRead::IdleTimeout`]; a timeout in the middle of a frame is
+/// retried a bounded number of times before becoming an error (a peer
+/// that stalls mid-frame is broken, not idle).
+pub fn read_msg<R: Read>(r: &mut R) -> Result<FrameRead> {
+    const MID_FRAME_RETRIES: usize = 40;
+
+    let mut header = [0u8; 4];
+    match read_exact_retry(r, &mut header, true, MID_FRAME_RETRIES)? {
+        ReadState::Eof => return Ok(FrameRead::Eof),
+        ReadState::Idle => return Ok(FrameRead::IdleTimeout),
+        ReadState::Done => {}
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    ensure!(len >= 2 && len <= MAX_FRAME, "bad frame length {len}");
+
+    let mut payload = vec![0u8; len];
+    match read_exact_retry(r, &mut payload, false, MID_FRAME_RETRIES)? {
+        ReadState::Done => {}
+        _ => bail!("peer closed mid-frame"),
+    }
+    let mut csum = [0u8; 4];
+    match read_exact_retry(r, &mut csum, false, MID_FRAME_RETRIES)? {
+        ReadState::Done => {}
+        _ => bail!("peer closed before checksum"),
+    }
+    let expect = u32::from_le_bytes(csum);
+    let got = checksum(&payload);
+    ensure!(
+        got == expect,
+        "frame checksum mismatch (got {got:#010x}, expect {expect:#010x})"
+    );
+    Ok(FrameRead::Msg(decode(&payload)?))
+}
+
+enum ReadState {
+    Done,
+    Eof,
+    Idle,
+}
+
+/// `read_exact` that survives `WouldBlock`/`TimedOut` (SO_RCVTIMEO):
+/// with `allow_idle`, a timeout before the first byte returns
+/// [`ReadState::Idle`] without consuming anything; mid-buffer timeouts
+/// retry up to `retries` times.
+fn read_exact_retry<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    allow_idle: bool,
+    retries: usize,
+) -> Result<ReadState> {
+    let mut got = 0usize;
+    let mut stalls = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && allow_idle {
+                    return Ok(ReadState::Eof);
+                }
+                if got == 0 {
+                    return Ok(ReadState::Eof);
+                }
+                bail!("peer closed mid-read ({got}/{} bytes)", buf.len());
+            }
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if got == 0 && allow_idle {
+                    return Ok(ReadState::Idle);
+                }
+                stalls += 1;
+                ensure!(stalls <= retries, "peer stalled mid-frame");
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadState::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let frame = encode(&msg);
+        let mut slice = frame.as_slice();
+        match read_msg(&mut slice).unwrap() {
+            FrameRead::Msg(got) => assert_eq!(got, msg),
+            other => panic!("expected message, got {other:?}"),
+        }
+        assert!(slice.is_empty(), "frame not fully consumed");
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { token: 42 });
+        roundtrip(Msg::Assign {
+            session: 7,
+            rounds: 30,
+            dim: 8070,
+            lr: 0.05,
+        });
+        roundtrip(Msg::FetchJob);
+        roundtrip(Msg::Job {
+            client: 3,
+            round: 9,
+            staleness: 2,
+            w: vec![0.5, -1.25, f32::MIN_POSITIVE],
+            xs: vec![1.0; 7],
+            ys: vec![0.0, 1.0],
+        });
+        roundtrip(Msg::NoJob { done: true });
+        roundtrip(Msg::NoJob { done: false });
+        roundtrip(Msg::Submit {
+            client: 3,
+            round: 9,
+            staleness: 2,
+            loss: 1.5,
+            weights: vec![2.0, -0.0, f32::NAN.copysign(1.0).min(1.0)],
+        });
+        roundtrip(Msg::Ack { round: 9 });
+        roundtrip(Msg::Reject {
+            code: RejectCode::Duplicate,
+            round: 9,
+        });
+        roundtrip(Msg::Reject {
+            code: RejectCode::OutOfRound,
+            round: 10,
+        });
+        roundtrip(Msg::Busy);
+        roundtrip(Msg::Bye);
+    }
+
+    #[test]
+    fn f32_payloads_are_bit_exact() {
+        // -0.0 and denormals must survive the wire untouched — the
+        // loopback golden run compares final weights bit for bit.
+        let weird = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, 1.0e-42, -3.5];
+        let frame = encode(&Msg::Submit {
+            client: 0,
+            round: 0,
+            staleness: 0,
+            loss: -0.0,
+            weights: weird.clone(),
+        });
+        let mut slice = frame.as_slice();
+        let FrameRead::Msg(Msg::Submit { weights, loss, .. }) = read_msg(&mut slice).unwrap()
+        else {
+            panic!("wrong message");
+        };
+        assert_eq!(loss.to_bits(), (-0.0f32).to_bits());
+        for (a, b) in weird.iter().zip(&weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupted_checksum_is_rejected() {
+        let mut frame = encode(&Msg::Ack { round: 1 });
+        let last = frame.len() - 1;
+        frame[last] ^= 0xff;
+        let err = match read_msg(&mut frame.as_slice()) {
+            Err(e) => e,
+            Ok(m) => panic!("corrupted frame accepted: {m:?}"),
+        };
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_body_is_rejected() {
+        let mut frame = encode(&Msg::Ack { round: 1 });
+        frame[6] ^= 0x01; // flip a payload bit: checksum must catch it
+        assert!(read_msg(&mut frame.as_slice()).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut frame = encode(&Msg::Bye);
+        frame[4] = VERSION + 1; // version byte is first payload byte
+        // Checksum still matches the tampered payload if we recompute it,
+        // so recompute — version rejection must be its own check.
+        let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        let csum = checksum(&frame[4..4 + len]);
+        let n = frame.len();
+        frame[n - 4..].copy_from_slice(&csum.to_le_bytes());
+        let err = read_msg(&mut frame.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn clean_eof_and_truncation_are_distinguished() {
+        let empty: &[u8] = &[];
+        assert!(matches!(
+            read_msg(&mut { empty }).unwrap(),
+            FrameRead::Eof
+        ));
+
+        let frame = encode(&Msg::Hello { token: 1 });
+        let mut cut = &frame[..frame.len() - 2];
+        assert!(read_msg(&mut cut).is_err(), "truncated frame accepted");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut frame = vec![0xff, 0xff, 0xff, 0x7f]; // ~2 GiB claim
+        frame.extend_from_slice(&[0u8; 16]);
+        assert!(read_msg(&mut frame.as_slice()).is_err());
+    }
+}

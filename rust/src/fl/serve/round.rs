@@ -1,0 +1,315 @@
+//! `serve::round` — per-cell round bookkeeping in the XAIN `Round`
+//! idiom: one [`RoundManager`] tracks the open aggregation period — who
+//! has been handed work, who has submitted, what is buffered for
+//! aggregation — and classifies every incoming submission as accepted
+//! (possibly *late*), duplicate, out-of-round, or `Busy` backpressure.
+//!
+//! The manager is transport-free and generic over the dispatched job
+//! payload `J` and the submitted result payload `S`, so its semantics
+//! are unit-testable without sockets:
+//!
+//! - **duplicate-update rejection** — a `(client, round)` pair that
+//!   already has an accepted update is refused ([`SubmitOutcome::Duplicate`]);
+//! - **out-of-round rejection** — a round id that was never dispatched
+//!   to that client (future rounds included) is refused
+//!   ([`SubmitOutcome::OutOfRound`]);
+//! - **late routing** — a valid submission for an *earlier* round than
+//!   the currently open one is accepted and flagged `late: true`; the
+//!   server folds it into the next aggregation close, where the
+//!   coordinator's existing staleness path weights it down (PAOTA's
+//!   Eq. 11) instead of dropping it;
+//! - **bounded-queue backpressure** — when the aggregation buffer
+//!   already holds `queue_depth` undrained updates, the submission is
+//!   refused with [`SubmitOutcome::Busy`] and the job stays
+//!   outstanding, so the client can retry after a pause.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Classification of one submit-update attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Buffered for aggregation; `late` means the round had already
+    /// moved on when the update arrived.
+    Accepted { late: bool },
+    /// This `(client, round)` already has an accepted update.
+    Duplicate,
+    /// Round id not open for this client (never dispatched, or future).
+    OutOfRound,
+    /// Aggregation buffer full — retry later; the job stays open.
+    Busy,
+}
+
+/// One update sitting in the aggregation buffer.
+#[derive(Debug)]
+pub struct Accepted<S> {
+    pub client: usize,
+    /// Round the job was dispatched for (not the round it lands in).
+    pub round: usize,
+    /// Dispatch position within that round — lets the server rebuild
+    /// the coordinator's deterministic participant order.
+    pub pos: usize,
+    pub payload: S,
+}
+
+/// Monotonic counters over the manager's lifetime.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RoundStats {
+    pub dispatched: usize,
+    pub accepted: usize,
+    pub duplicates: usize,
+    pub out_of_round: usize,
+    pub busy: usize,
+    /// Subset of `accepted` that arrived after their round closed.
+    pub late: usize,
+}
+
+struct QueuedJob<J> {
+    client: usize,
+    round: usize,
+    pos: usize,
+    job: J,
+}
+
+/// Tracks the open aggregation period for one cell (see module docs).
+pub struct RoundManager<J, S> {
+    queue_depth: usize,
+    current: usize,
+    /// Jobs not yet handed to a session, FIFO across rounds — leftover
+    /// work from earlier rounds dispatches first and simply lands late.
+    fifo: VecDeque<QueuedJob<J>>,
+    /// Dispatched-but-not-accepted `(client, round) → pos`.
+    outstanding: HashMap<(usize, usize), usize>,
+    /// `(client, round)` pairs with an accepted update.
+    submitted: HashSet<(usize, usize)>,
+    /// Unaccepted job count per round (queued + outstanding).
+    open: HashMap<usize, usize>,
+    accepted: Vec<Accepted<S>>,
+    stats: RoundStats,
+}
+
+impl<J, S> RoundManager<J, S> {
+    pub fn new(queue_depth: usize) -> Self {
+        assert!(queue_depth >= 1, "queue_depth must be at least 1");
+        Self {
+            queue_depth,
+            current: 0,
+            fifo: VecDeque::new(),
+            outstanding: HashMap::new(),
+            submitted: HashSet::new(),
+            open: HashMap::new(),
+            accepted: Vec::new(),
+            stats: RoundStats::default(),
+        }
+    }
+
+    /// Open aggregation period `round`, queueing its jobs in the
+    /// coordinator's participant order.
+    pub fn open_round(&mut self, round: usize, jobs: Vec<(usize, J)>) {
+        debug_assert!(round >= self.current, "rounds must open in order");
+        self.current = round;
+        *self.open.entry(round).or_insert(0) += jobs.len();
+        for (pos, (client, job)) in jobs.into_iter().enumerate() {
+            debug_assert!(
+                !self.outstanding.contains_key(&(client, round))
+                    && !self.submitted.contains(&(client, round)),
+                "client {client} dispatched twice for round {round}"
+            );
+            self.fifo.push_back(QueuedJob {
+                client,
+                round,
+                pos,
+                job,
+            });
+        }
+    }
+
+    /// Currently open round id.
+    pub fn current_round(&self) -> usize {
+        self.current
+    }
+
+    /// Hand out the next queued job, marking it outstanding.
+    pub fn fetch(&mut self) -> Option<(usize, usize, J)> {
+        let q = self.fifo.pop_front()?;
+        self.outstanding.insert((q.client, q.round), q.pos);
+        self.stats.dispatched += 1;
+        Some((q.client, q.round, q.job))
+    }
+
+    /// Classify and (when valid and there is room) buffer one update.
+    pub fn submit(&mut self, client: usize, round: usize, payload: S) -> SubmitOutcome {
+        let key = (client, round);
+        if self.submitted.contains(&key) {
+            self.stats.duplicates += 1;
+            return SubmitOutcome::Duplicate;
+        }
+        if round > self.current || !self.outstanding.contains_key(&key) {
+            self.stats.out_of_round += 1;
+            return SubmitOutcome::OutOfRound;
+        }
+        if self.accepted.len() >= self.queue_depth {
+            // Buffer contended: refuse *without* consuming the job so a
+            // retry after the next drain can succeed.
+            self.stats.busy += 1;
+            return SubmitOutcome::Busy;
+        }
+        let pos = self.outstanding.remove(&key).expect("checked above");
+        self.submitted.insert(key);
+        if let Some(n) = self.open.get_mut(&round) {
+            *n -= 1;
+            if *n == 0 {
+                self.open.remove(&round);
+            }
+        }
+        let late = round < self.current;
+        if late {
+            self.stats.late += 1;
+        }
+        self.stats.accepted += 1;
+        self.accepted.push(Accepted {
+            client,
+            round,
+            pos,
+            payload,
+        });
+        SubmitOutcome::Accepted { late }
+    }
+
+    /// True once every job dispatched for `round` has been accepted.
+    pub fn round_done(&self, round: usize) -> bool {
+        !self.open.contains_key(&round)
+    }
+
+    /// Jobs still queued for pickup.
+    pub fn queued(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// Updates currently sitting in the aggregation buffer.
+    pub fn buffered(&self) -> usize {
+        self.accepted.len()
+    }
+
+    /// Drain the aggregation buffer (caller sorts by `(round, pos)` to
+    /// rebuild the deterministic participant order).
+    pub fn take_accepted(&mut self) -> Vec<Accepted<S>> {
+        std::mem::take(&mut self.accepted)
+    }
+
+    pub fn stats(&self) -> RoundStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manager(depth: usize) -> RoundManager<&'static str, f32> {
+        RoundManager::new(depth)
+    }
+
+    /// Fetch every queued job so clients may submit.
+    fn drain_fifo(rm: &mut RoundManager<&'static str, f32>) {
+        while rm.fetch().is_some() {}
+    }
+
+    #[test]
+    fn duplicate_update_is_rejected() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(3, "job")]);
+        drain_fifo(&mut rm);
+        assert_eq!(rm.submit(3, 0, 1.0), SubmitOutcome::Accepted { late: false });
+        assert_eq!(rm.submit(3, 0, 2.0), SubmitOutcome::Duplicate);
+        assert_eq!(rm.stats().duplicates, 1);
+        // The buffer holds exactly the first copy.
+        let got = rm.take_accepted();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload, 1.0);
+    }
+
+    #[test]
+    fn out_of_round_covers_future_and_undispatched() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(1, "job")]);
+        drain_fifo(&mut rm);
+        // Future round.
+        assert_eq!(rm.submit(1, 5, 1.0), SubmitOutcome::OutOfRound);
+        // Client that was never handed this round's job.
+        assert_eq!(rm.submit(2, 0, 1.0), SubmitOutcome::OutOfRound);
+        assert_eq!(rm.stats().out_of_round, 2);
+        assert_eq!(rm.submit(1, 0, 1.0), SubmitOutcome::Accepted { late: false });
+    }
+
+    #[test]
+    fn busy_under_full_queue_then_retry_succeeds() {
+        let mut rm = manager(1);
+        rm.open_round(0, vec![(0, "a"), (1, "b")]);
+        drain_fifo(&mut rm);
+        assert_eq!(rm.submit(0, 0, 1.0), SubmitOutcome::Accepted { late: false });
+        // Buffer (depth 1) is full → explicit backpressure, job stays open.
+        assert_eq!(rm.submit(1, 0, 2.0), SubmitOutcome::Busy);
+        assert_eq!(rm.stats().busy, 1);
+        assert!(!rm.round_done(0));
+        // After a drain the retry lands.
+        assert_eq!(rm.take_accepted().len(), 1);
+        assert_eq!(rm.submit(1, 0, 2.0), SubmitOutcome::Accepted { late: false });
+        assert!(rm.round_done(0));
+    }
+
+    #[test]
+    fn late_submission_is_accepted_and_flagged() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(0, "a"), (1, "b")]);
+        drain_fifo(&mut rm);
+        assert_eq!(rm.submit(0, 0, 1.0), SubmitOutcome::Accepted { late: false });
+        // Round moves on while client 1 is still training.
+        rm.open_round(1, vec![(2, "c")]);
+        assert_eq!(rm.submit(1, 0, 2.0), SubmitOutcome::Accepted { late: true });
+        assert_eq!(rm.stats().late, 1);
+        assert!(rm.round_done(0));
+    }
+
+    #[test]
+    fn round_done_tracks_queued_and_outstanding() {
+        let mut rm = manager(8);
+        assert!(rm.round_done(0)); // nothing dispatched yet
+        rm.open_round(0, vec![(0, "a"), (1, "b")]);
+        assert!(!rm.round_done(0)); // still queued
+        drain_fifo(&mut rm);
+        assert!(!rm.round_done(0)); // outstanding
+        rm.submit(0, 0, 1.0);
+        assert!(!rm.round_done(0));
+        rm.submit(1, 0, 2.0);
+        assert!(rm.round_done(0));
+    }
+
+    #[test]
+    fn dispatch_positions_rebuild_participant_order() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(7, "a"), (3, "b"), (9, "c")]);
+        drain_fifo(&mut rm);
+        // Submissions arrive out of order…
+        rm.submit(9, 0, 3.0);
+        rm.submit(7, 0, 1.0);
+        rm.submit(3, 0, 2.0);
+        let mut got = rm.take_accepted();
+        got.sort_by_key(|a| (a.round, a.pos));
+        // …but (round, pos) restores dispatch order 7, 3, 9.
+        let clients: Vec<usize> = got.iter().map(|a| a.client).collect();
+        assert_eq!(clients, vec![7, 3, 9]);
+    }
+
+    #[test]
+    fn fifo_hands_out_older_rounds_first() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(0, "old")]);
+        rm.open_round(1, vec![(1, "new")]);
+        let (c, r, j) = rm.fetch().unwrap();
+        assert_eq!((c, r, j), (0, 0, "old"));
+        let (c, r, j) = rm.fetch().unwrap();
+        assert_eq!((c, r, j), (1, 1, "new"));
+        assert!(rm.fetch().is_none());
+        assert_eq!(rm.stats().dispatched, 2);
+    }
+}

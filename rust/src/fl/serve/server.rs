@@ -1,0 +1,506 @@
+//! `serve::server` — the threaded federation server: TCP sessions speak
+//! [`super::proto`], a [`RoundManager`](super::round::RoundManager)
+//! tracks the open aggregation period, and the *real*
+//! [`Coordinator`]/[`AggregationPolicy`](super::super::AggregationPolicy)
+//! stack drives the rounds — paota / air_fedga / every registered
+//! periodic policy runs unmodified behind the wire.
+//!
+//! Division of labor per round:
+//!
+//! 1. the coordinator [`open_periodic_slot`](Coordinator::open_periodic_slot)s
+//!    the slot exactly as the library loop would — same arrivals, same
+//!    participant selection, same batch draws;
+//! 2. the chosen clients' jobs are queued on the round manager and
+//!    pulled by whatever wire sessions are connected (a session is a
+//!    *transport*, not a scheduling identity — the virtual schedule
+//!    stays the coordinator's);
+//! 3. submissions come back over the wire, are classified
+//!    (accept / duplicate / out-of-round / `Busy`), and at the close the
+//!    accepted updates are re-sorted into dispatch order and folded in
+//!    via [`complete_periodic_slot`](Coordinator::complete_periodic_slot).
+//!
+//! Two closing disciplines, selected by `serve.period_ms`:
+//!
+//! - **`0` — lockstep** (default): a round closes when every dispatched
+//!   job has been accepted; the accepted buffer is drained eagerly so
+//!   `queue_depth` never deadlocks the round. With a serial
+//!   deterministic schedule this is *bitwise identical* to the library
+//!   loop [`fl::run`](crate::fl::run) — the golden tie-down in
+//!   `tests/serve.rs`.
+//! - **`> 0` — wall-clock period**: the round closes at the deadline (or
+//!   early once every job of the current round is in); the buffer is
+//!   drained only at the close, so a contended buffer pushes explicit
+//!   [`Busy`](super::proto::Msg::Busy) backpressure to the wire, and
+//!   retried/slow submissions fold into a later round through the
+//!   coordinator's existing staleness path.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context as _, Result};
+
+use crate::config::{Algorithm, Config};
+use crate::runtime::TrainOut;
+
+use super::super::coordinator::{Coordinator, OpenSlot, RoundTiming};
+use super::super::{build_policy, RunResult, TrainContext};
+use super::proto::{self, FrameRead, Msg, RejectCode};
+use super::round::{Accepted, RoundManager, RoundStats, SubmitOutcome};
+
+/// Poll interval for condvar waits and session read timeouts.
+const TICK: Duration = Duration::from_millis(100);
+/// Lockstep bails when no submission lands for this long.
+const STALL_LIMIT: Duration = Duration::from_secs(60);
+
+/// What a training job looks like on the dispatch queue: the staleness
+/// metadata stamped at dispatch time plus the `(w0, xs, ys)` payload.
+struct JobWire {
+    staleness: u64,
+    w: Vec<f32>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+}
+
+struct State {
+    rm: RoundManager<JobWire, TrainOut>,
+    /// Run over — sessions answer `FetchJob` with `NoJob { done: true }`.
+    done: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signaled on new queued jobs, accepted submissions, and shutdown.
+    changed: Condvar,
+}
+
+/// Session-constant facts echoed in the `Assign` reply.
+#[derive(Clone, Copy)]
+struct SessionInfo {
+    rounds: u64,
+    dim: usize,
+    lr: f32,
+}
+
+/// Result of a completed serve run.
+pub struct ServeOutcome {
+    /// The same record stream + final model `fl::run` would return.
+    pub result: RunResult,
+    /// Wire-side counters (dispatched/accepted/duplicate/out-of-round/busy/late).
+    pub stats: RoundStats,
+    /// Client sessions admitted over the run.
+    pub sessions: usize,
+}
+
+/// A bound (but not yet running) federation server.
+pub struct Server<'a> {
+    ctx: &'a TrainContext,
+    cfg: &'a Config,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl<'a> Server<'a> {
+    /// Bind the listener and validate that the configured algorithm can
+    /// be served: serving drives the periodic (ΔT-slotted) schedule, so
+    /// the policy must be [`RoundTiming::Periodic`] and the topology a
+    /// single cell.
+    pub fn bind(ctx: &'a TrainContext, cfg: &'a Config) -> Result<Server<'a>> {
+        ensure!(
+            cfg.topology.cells == 1,
+            "serve drives a single cell; topology.cells = {} (run one server per cell)",
+            cfg.topology.cells
+        );
+        // Probe the policy's timing up front so `repro serve` fails at
+        // startup, not at round 0.
+        let probe = build_policy(ctx, cfg)?;
+        if probe.timing() != RoundTiming::Periodic {
+            bail!(
+                "--algo {} uses {:?} timing; serve supports the periodic \
+                 (time-slotted) schedule — paota, ca_paota, air_fedga",
+                cfg.algorithm.name(),
+                probe.timing()
+            );
+        }
+        let listener = TcpListener::bind(&cfg.serve.bind)
+            .with_context(|| format!("binding serve.bind = {}", cfg.serve.bind))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            ctx,
+            cfg,
+            listener,
+            addr,
+        })
+    }
+
+    /// The bound address (resolves `:0` port requests — tests bind
+    /// `127.0.0.1:0` and hand the real address to their clients).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve the full run: accept sessions, dispatch jobs, close rounds,
+    /// and return the run result once all `cfg.rounds` slots completed.
+    ///
+    /// With PJRT artifacts this must run on the thread that built `ctx`
+    /// (the executables are thread-bound); the native backend runs
+    /// anywhere. Session threads never touch `ctx` — they only move
+    /// bytes.
+    pub fn run(self) -> Result<ServeOutcome> {
+        let Server {
+            ctx,
+            cfg,
+            listener,
+            addr,
+        } = self;
+        let mut policy = build_policy(ctx, cfg)?;
+        let mut coord = Coordinator::new(ctx, cfg, policy.batch_stream());
+        coord.begin_periodic();
+
+        let shared = Shared {
+            state: Mutex::new(State {
+                rm: RoundManager::new(cfg.serve.queue_depth),
+                done: false,
+            }),
+            changed: Condvar::new(),
+        };
+        let stop = AtomicBool::new(false);
+        let active = AtomicUsize::new(0);
+        let admitted = AtomicUsize::new(0);
+        let info = SessionInfo {
+            rounds: cfg.rounds as u64,
+            dim: ctx.dim(),
+            lr: cfg.lr,
+        };
+        let max_sessions = cfg.serve.max_sessions;
+        let period = Duration::from_millis(cfg.serve.period_ms);
+
+        let mut outcome: Result<()> = Ok(());
+        std::thread::scope(|s| {
+            let shared = &shared;
+            let stop = &stop;
+            let active = &active;
+            let admitted = &admitted;
+            s.spawn(move || {
+                accept_loop(s, listener, shared, stop, active, admitted, info, max_sessions);
+            });
+
+            outcome = drive_rounds(&mut coord, policy.as_mut(), cfg, shared, period);
+
+            // Shutdown: flag the run done (sessions answer NoJob{done}),
+            // wake everyone, and poke the accept loop with a throwaway
+            // connection so it observes the stop flag.
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.done = true;
+            }
+            stop.store(true, Ordering::SeqCst);
+            shared.changed.notify_all();
+            let _ = TcpStream::connect(addr);
+        });
+        outcome?;
+
+        let stats = shared.state.into_inner().unwrap().rm.stats();
+        Ok(ServeOutcome {
+            result: coord.into_result(Algorithm::raw(policy.name())),
+            stats,
+            sessions: admitted.load(Ordering::SeqCst),
+        })
+    }
+}
+
+/// Build the context and serve at `cfg.serve.bind` — the `repro serve`
+/// entry point.
+pub fn serve(cfg: &Config) -> Result<ServeOutcome> {
+    let ctx = TrainContext::new(cfg)?;
+    Server::bind(&ctx, cfg)?.run()
+}
+
+/// The per-round open → collect → complete loop (see module docs).
+fn drive_rounds(
+    coord: &mut Coordinator,
+    policy: &mut dyn super::super::AggregationPolicy,
+    cfg: &Config,
+    shared: &Shared,
+    period: Duration,
+) -> Result<()> {
+    for round in 0..cfg.rounds {
+        let OpenSlot { chosen, jobs, .. } = coord.open_periodic_slot(policy, round);
+        let wire_jobs: Vec<(usize, JobWire)> = chosen
+            .iter()
+            .zip(jobs)
+            .map(|(&client, (w, xs, ys))| {
+                // Dispatch-time staleness metadata: rounds since this
+                // client last took a base model. The authoritative value
+                // for aggregation is recomputed at the close.
+                let staleness = round.saturating_sub(coord.client_base_round(client)) as u64;
+                (
+                    client,
+                    JobWire {
+                        staleness,
+                        w,
+                        xs,
+                        ys,
+                    },
+                )
+            })
+            .collect();
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.rm.open_round(round, wire_jobs);
+        }
+        shared.changed.notify_all();
+
+        let mut collected: Vec<Accepted<TrainOut>> = Vec::new();
+        if period.is_zero() {
+            collect_lockstep(shared, round, &mut collected)?;
+        } else {
+            collect_period(shared, round, period, &mut collected);
+        }
+
+        // Rebuild the coordinator's dispatch order: earlier-round
+        // (late) submissions first, then this round's participants in
+        // the order they were chosen.
+        collected.sort_by_key(|a| (a.round, a.pos));
+        let submissions: Vec<(usize, TrainOut)> = collected
+            .into_iter()
+            .map(|a| (a.client, a.payload))
+            .collect();
+        coord.complete_periodic_slot(policy, round, submissions)?;
+    }
+    Ok(())
+}
+
+/// Lockstep close: wait until every job dispatched for `round` is
+/// accepted, draining the buffer eagerly so `queue_depth` can never
+/// wedge the round.
+fn collect_lockstep(
+    shared: &Shared,
+    round: usize,
+    collected: &mut Vec<Accepted<TrainOut>>,
+) -> Result<()> {
+    let mut last_progress = Instant::now();
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let drained = st.rm.take_accepted();
+        if !drained.is_empty() {
+            last_progress = Instant::now();
+            collected.extend(drained);
+        }
+        if st.rm.round_done(round) {
+            return Ok(());
+        }
+        ensure!(
+            last_progress.elapsed() < STALL_LIMIT,
+            "serve stalled: lockstep round {round} saw no submission for \
+             {}s — are any client sessions connected?",
+            STALL_LIMIT.as_secs()
+        );
+        let (guard, _) = shared.changed.wait_timeout(st, TICK).unwrap();
+        st = guard;
+    }
+}
+
+/// Wall-clock close: hold the round open until the deadline (or until
+/// every job of the current round is in), draining the buffer only at
+/// the close — a full buffer meanwhile surfaces as `Busy` on the wire.
+fn collect_period(
+    shared: &Shared,
+    round: usize,
+    period: Duration,
+    collected: &mut Vec<Accepted<TrainOut>>,
+) {
+    let deadline = Instant::now() + period;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.rm.round_done(round) {
+            break;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let wait = (deadline - now).min(TICK);
+        let (guard, _) = shared.changed.wait_timeout(st, wait).unwrap();
+        st = guard;
+    }
+    collected.extend(st.rm.take_accepted());
+}
+
+/// Accept sessions until the stop flag is raised; each admitted session
+/// gets its own thread inside the same scope.
+#[allow(clippy::too_many_arguments)]
+fn accept_loop<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    listener: TcpListener,
+    shared: &'scope Shared,
+    stop: &'scope AtomicBool,
+    active: &'scope AtomicUsize,
+    admitted: &'scope AtomicUsize,
+    info: SessionInfo,
+    max_sessions: usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if active.load(Ordering::SeqCst) >= max_sessions {
+            // Session-table backpressure: same explicit Busy the
+            // aggregation buffer uses — the client backs off and retries.
+            let mut stream = stream;
+            let _ = proto::write_msg(&mut stream, &Msg::Busy);
+            continue;
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        admitted.fetch_add(1, Ordering::SeqCst);
+        scope.spawn(move || {
+            // A misbehaving peer only kills its own session.
+            let _ = session(stream, shared, stop, info);
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+}
+
+/// One client session: handshake, then serve FetchJob/Submit until the
+/// peer leaves or the server stops.
+fn session(
+    mut stream: TcpStream,
+    shared: &Shared,
+    stop: &AtomicBool,
+    info: SessionInfo,
+) -> Result<()> {
+    stream
+        .set_read_timeout(Some(TICK))
+        .context("set_read_timeout")?;
+    stream.set_nodelay(true).ok();
+
+    // Handshake: Hello → Assign. Idle ticks before the Hello just poll
+    // the stop flag.
+    let session_id = loop {
+        match proto::read_msg(&mut stream)? {
+            FrameRead::Msg(Msg::Hello { token }) => break token,
+            FrameRead::Msg(other) => bail!("expected Hello, got {other:?}"),
+            FrameRead::Eof => return Ok(()),
+            FrameRead::IdleTimeout => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+        }
+    };
+    proto::write_msg(
+        &mut stream,
+        &Msg::Assign {
+            session: session_id,
+            rounds: info.rounds,
+            dim: info.dim as u64,
+            lr: info.lr,
+        },
+    )?;
+
+    loop {
+        let msg = match proto::read_msg(&mut stream)? {
+            FrameRead::Msg(m) => m,
+            FrameRead::Eof => return Ok(()),
+            FrameRead::IdleTimeout => {
+                if stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+        };
+        match msg {
+            Msg::FetchJob => {
+                let reply = fetch_reply(shared);
+                proto::write_msg(&mut stream, &reply)?;
+            }
+            Msg::Submit {
+                client,
+                round,
+                loss,
+                weights,
+                ..
+            } => {
+                ensure!(
+                    weights.len() == info.dim,
+                    "submit payload has {} weights, model dim is {}",
+                    weights.len(),
+                    info.dim
+                );
+                let outcome = {
+                    let mut st = shared.state.lock().unwrap();
+                    st.rm
+                        .submit(client as usize, round as usize, TrainOut { weights, loss })
+                };
+                if matches!(outcome, SubmitOutcome::Accepted { .. }) {
+                    // Wake the round loop (and fetchers waiting on the
+                    // next round's jobs).
+                    shared.changed.notify_all();
+                }
+                let reply = match outcome {
+                    SubmitOutcome::Accepted { .. } => Msg::Ack { round },
+                    SubmitOutcome::Duplicate => Msg::Reject {
+                        code: RejectCode::Duplicate,
+                        round,
+                    },
+                    SubmitOutcome::OutOfRound => Msg::Reject {
+                        code: RejectCode::OutOfRound,
+                        round,
+                    },
+                    SubmitOutcome::Busy => Msg::Busy,
+                };
+                proto::write_msg(&mut stream, &reply)?;
+            }
+            Msg::Bye => return Ok(()),
+            other => bail!("unexpected message in session: {other:?}"),
+        }
+    }
+}
+
+/// Answer one `FetchJob`: hand out a queued job if there is (or shortly
+/// arrives) one, else report whether the run is over.
+fn fetch_reply(shared: &Shared) -> Msg {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if let Some((client, round, job)) = st.rm.fetch() {
+            return Msg::Job {
+                client: client as u64,
+                round: round as u64,
+                staleness: job.staleness,
+                w: job.w,
+                xs: job.xs,
+                ys: job.ys,
+            };
+        }
+        if st.done {
+            return Msg::NoJob { done: true };
+        }
+        let (guard, timeout) = shared.changed.wait_timeout(st, TICK).unwrap();
+        st = guard;
+        if timeout.timed_out() {
+            // One more look under the reacquired lock, then let the
+            // client re-poll so the session stays responsive.
+            if let Some((client, round, job)) = st.rm.fetch() {
+                return Msg::Job {
+                    client: client as u64,
+                    round: round as u64,
+                    staleness: job.staleness,
+                    w: job.w,
+                    xs: job.xs,
+                    ys: job.ys,
+                };
+            }
+            return Msg::NoJob { done: st.done };
+        }
+    }
+}

@@ -46,6 +46,56 @@ fn main() -> Result<()> {
                 println!("# final test accuracy: {:.2}%", acc * 100.0);
             }
         }
+        Command::Serve => {
+            let ctx = fl::TrainContext::new(&cli.config)?;
+            let server = fl::serve::Server::bind(&ctx, &cli.config)?;
+            println!("# serving on {}", server.local_addr());
+            println!(
+                "# algo={} rounds={} period_ms={} max_sessions={} queue_depth={}",
+                cli.config.algorithm.name(),
+                cli.config.rounds,
+                cli.config.serve.period_ms,
+                cli.config.serve.max_sessions,
+                cli.config.serve.queue_depth,
+            );
+            let out = server.run()?;
+            let s = out.stats;
+            println!(
+                "# served {} rounds over {} sessions: dispatched={} accepted={} \
+                 late={} duplicates={} out_of_round={} busy={}",
+                out.result.records.len(),
+                out.sessions,
+                s.dispatched,
+                s.accepted,
+                s.late,
+                s.duplicates,
+                s.out_of_round,
+                s.busy,
+            );
+            if let Some(acc) = out.result.final_accuracy() {
+                println!("# final test accuracy: {:.2}%", acc * 100.0);
+            }
+        }
+        Command::Loadgen => {
+            let addr = cli.config.serve.bind.clone();
+            println!(
+                "# loadgen → {} ({} sessions, pace_ms={})",
+                addr, cli.config.serve.sessions, cli.config.serve.pace_ms
+            );
+            let r = fl::serve::run_loadgen(&cli.config, &addr)?;
+            println!(
+                "# jobs={} acks={} duplicates={} out_of_round={} busy={} lost={}",
+                r.jobs, r.acks, r.duplicates, r.out_of_round, r.busy, r.lost
+            );
+            println!(
+                "# wall={:.2}s requests/s={:.1} submit_ms p50={:.2} p90={:.2} p99={:.2}",
+                r.wall_secs,
+                r.requests_per_sec,
+                r.submit_p50_ms,
+                r.submit_p90_ms,
+                r.submit_p99_ms
+            );
+        }
         Command::Fig3 => experiments::fig3(&cli.config, &cli.out_dir, cli.f_star_rounds)?,
         Command::Fig4 => experiments::fig4(&cli.config, &cli.out_dir)?,
         Command::Table1 => {

@@ -186,7 +186,7 @@ fn ref_paota(ctx: &TrainContext, cfg: &Config) -> RefRun {
         let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = ready
             .iter()
             .map(|&i| {
-                let (xs, ys) = ctx.partition.clients[i].sample_batches(
+                let (xs, ys) = ctx.partition.client(i).sample_batches(
                     ctx.rt.manifest().local_steps,
                     ctx.rt.manifest().batch,
                     &mut batch_rng,
@@ -301,14 +301,14 @@ fn ref_local_sgd(ctx: &TrainContext, cfg: &Config) -> RefRun {
             .map(|&i| {
                 round_time = round_time.max(latency.draw(&mut lat_rng));
                 let (xs, ys) =
-                    ctx.partition.clients[i].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+                    ctx.partition.client(i).sample_batches(m.local_steps, m.batch, &mut batch_rng);
                 (w_g.clone(), xs, ys)
             })
             .collect();
         for (&i, out) in chosen.iter().zip(ctx.train_many(jobs, cfg.lr).unwrap()) {
             train_loss_sum += out.loss as f64;
             stack[i * dim..(i + 1) * dim].copy_from_slice(&out.weights);
-            coef[i] = ctx.partition.clients[i].data.len() as f32;
+            coef[i] = ctx.partition.client(i).data.len() as f32;
         }
         clock.advance(round_time);
         w_g = ctx.rt.aggregate(&stack, &coef, &noise).unwrap();
@@ -361,7 +361,7 @@ fn ref_cotaf(ctx: &TrainContext, cfg: &Config) -> RefRun {
             .map(|&i| {
                 round_time = round_time.max(latency.draw(&mut lat_rng));
                 let (xs, ys) =
-                    ctx.partition.clients[i].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+                    ctx.partition.client(i).sample_batches(m.local_steps, m.batch, &mut batch_rng);
                 (w_g.clone(), xs, ys)
             })
             .collect();
@@ -504,8 +504,10 @@ fn ref_fedasync(ctx: &TrainContext, cfg: &Config) -> RefRun {
             win_stale = 0.0;
         }
 
-        let (xs, ys) =
-            ctx.partition.clients[ev.client].sample_batches(m.local_steps, m.batch, &mut batch_rng);
+        let (xs, ys) = ctx
+            .partition
+            .client(ev.client)
+            .sample_batches(m.local_steps, m.batch, &mut batch_rng);
         let out = ctx
             .rt
             .local_train(&bases[ev.client], &xs, &ys, cfg.lr)
@@ -696,7 +698,7 @@ fn parallel_native_train_many_is_bitwise_serial() {
     let w0 = ctx1.init_weights();
     let jobs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..9)
         .map(|i| {
-            let (xs, ys) = ctx1.partition.clients[i % ctx1.clients()].sample_batches(
+            let (xs, ys) = ctx1.partition.client(i % ctx1.clients()).sample_batches(
                 m.local_steps,
                 m.batch,
                 &mut rng,

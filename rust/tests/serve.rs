@@ -1,0 +1,242 @@
+//! Wire-service integration tests (`fl::serve`), all on the native
+//! kernel so they run artifact-free in CI:
+//!
+//! 1. **Loopback golden** — a lockstep (`serve_period_ms = 0`) serve run
+//!    driven by the real loadgen over 127.0.0.1 is *bitwise identical* —
+//!    record stream and final weights — to the in-process `fl::run` on
+//!    the same config. The wire moves raw LE f32 bits, the round manager
+//!    reassembles submissions into dispatch order, and local training is
+//!    a pure function of `(w, xs, ys, lr)`, so the equality holds under
+//!    arbitrary session interleaving.
+//! 2. **Protocol semantics on the wire** — a hand-rolled client session
+//!    exercises duplicate rejection, out-of-round rejection and `Busy`
+//!    backpressure under a full (`serve_queue_depth = 1`) aggregation
+//!    buffer in wall-clock period mode.
+//! 3. **Startup validation** — non-periodic algorithms are refused at
+//!    bind time.
+
+use std::net::TcpStream;
+
+use paota::config::{Algorithm, Config};
+use paota::fl::serve::proto::{self, FrameRead, Msg, RejectCode};
+use paota::fl::serve::{run_loadgen, Server};
+use paota::fl::{self, RunResult, TrainContext};
+
+/// Small native-kernel fleet (debug-mode CI friendly).
+fn serve_cfg() -> Config {
+    let mut c = Config::default();
+    c.algorithm = Algorithm::parse("paota").unwrap();
+    c.rounds = 3;
+    c.eval_every = 2;
+    c.artifacts_dir = "native".into();
+    c.synth.side = 6;
+    c.partition.clients = 10;
+    c.partition.sizes = vec![12, 20];
+    c.partition.test_size = 16;
+    c.serve.bind = "127.0.0.1:0".into();
+    c
+}
+
+fn assert_run_bitwise(tag: &str, got: &RunResult, want: &RunResult) {
+    assert_eq!(got.records.len(), want.records.len(), "{tag}: record count");
+    for (a, b) in got.records.iter().zip(&want.records) {
+        let t = format!("{tag} round {}", b.round);
+        assert_eq!(a.round, b.round, "{t}");
+        assert_eq!(a.participants, b.participants, "{t}: participants");
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{t}: sim_time");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{t}: train_loss");
+        assert_eq!(
+            a.mean_staleness.to_bits(),
+            b.mean_staleness.to_bits(),
+            "{t}: staleness"
+        );
+        assert_eq!(a.mean_power.to_bits(), b.mean_power.to_bits(), "{t}: power");
+        assert_eq!(
+            a.probe_loss.map(f32::to_bits),
+            b.probe_loss.map(f32::to_bits),
+            "{t}: probe_loss"
+        );
+        assert_eq!(
+            a.eval.map(|e| (e.loss.to_bits(), e.accuracy.to_bits())),
+            b.eval.map(|e| (e.loss.to_bits(), e.accuracy.to_bits())),
+            "{t}: eval"
+        );
+    }
+    assert_eq!(got.final_weights.len(), want.final_weights.len(), "{tag}: dim");
+    let same = got
+        .final_weights
+        .iter()
+        .zip(&want.final_weights)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "{tag}: final weights drifted");
+}
+
+/// The golden tie-down: loopback serve + loadgen, lockstep schedule,
+/// bitwise equal to the library loop.
+#[test]
+fn loopback_serve_is_bitwise_identical_to_library_run() {
+    let mut cfg = serve_cfg();
+    cfg.serve.period_ms = 0; // lockstep: deterministic serial schedule
+    cfg.serve.sessions = 3;
+
+    let library = fl::run(&cfg).unwrap();
+
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (outcome, report) = std::thread::scope(|s| {
+        let lg_cfg = &cfg;
+        let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
+        let outcome = server.run().unwrap();
+        (outcome, lg.join().unwrap().unwrap())
+    });
+
+    assert_run_bitwise("loopback", &outcome.result, &library);
+
+    // Wire accounting: every dispatched job came back exactly once.
+    assert_eq!(report.lost, 0, "loadgen lost updates: {report:?}");
+    assert_eq!(report.acks, outcome.stats.accepted, "{report:?}");
+    assert_eq!(outcome.stats.dispatched, outcome.stats.accepted, "{report:?}");
+    assert_eq!(outcome.stats.duplicates, 0);
+    assert_eq!(outcome.stats.out_of_round, 0);
+    assert!(outcome.sessions >= 1 && outcome.sessions <= 3, "{}", outcome.sessions);
+}
+
+fn send(stream: &mut TcpStream, msg: &Msg) {
+    proto::write_msg(stream, msg).unwrap();
+}
+
+fn recv(stream: &mut TcpStream) -> Msg {
+    match proto::read_msg(stream).unwrap() {
+        FrameRead::Msg(m) => m,
+        other => panic!("expected a message, got {other:?}"),
+    }
+}
+
+/// Fetch until a job arrives (the server answers `NoJob {done: false}`
+/// between rounds).
+fn fetch_job(stream: &mut TcpStream) -> (u64, u64, u64, Vec<f32>) {
+    loop {
+        send(stream, &Msg::FetchJob);
+        match recv(stream) {
+            Msg::Job {
+                client,
+                round,
+                staleness,
+                w,
+                ..
+            } => return (client, round, staleness, w),
+            Msg::NoJob { done: false } => std::thread::sleep(std::time::Duration::from_millis(2)),
+            other => panic!("unexpected fetch reply {other:?}"),
+        }
+    }
+}
+
+/// Duplicate / out-of-round / Busy semantics observed on the wire, in
+/// wall-clock period mode with a depth-1 aggregation buffer.
+#[test]
+fn wire_rejects_duplicates_out_of_round_and_backpressures_when_full() {
+    let mut cfg = serve_cfg();
+    cfg.rounds = 2;
+    // ΔT above latency_hi (15 s): every client arrives inside round 0, so
+    // PAOTA (which schedules every ready client and weights via β)
+    // deterministically dispatches all 6 jobs at the round-0 open.
+    cfg.delta_t = 20.0;
+    cfg.partition.clients = 6;
+    // Period mode: the buffer drains only at the round close, so a
+    // depth-1 buffer must answer Busy to the second accept attempt.
+    cfg.serve.period_ms = 3000;
+    cfg.serve.queue_depth = 1;
+
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr();
+
+    let outcome = std::thread::scope(|s| {
+        let client = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            send(&mut stream, &Msg::Hello { token: 7 });
+            let Msg::Assign { session, dim, .. } = recv(&mut stream) else {
+                panic!("expected Assign");
+            };
+            assert_eq!(session, 7);
+
+            // Pull the whole round-0 dispatch.
+            let mut jobs = Vec::new();
+            for _ in 0..6 {
+                jobs.push(fetch_job(&mut stream));
+            }
+            assert!(jobs.iter().all(|j| j.1 == 0), "{jobs:?}");
+            assert!(jobs.iter().all(|j| j.3.len() == dim as usize));
+
+            let submit = |stream: &mut TcpStream, j: &(u64, u64, u64, Vec<f32>), round: u64| {
+                send(
+                    stream,
+                    &Msg::Submit {
+                        client: j.0,
+                        round,
+                        staleness: j.2,
+                        loss: 1.0,
+                        // Echoing the base model back is a valid (if
+                        // useless) local-training result — the test is
+                        // about wire semantics, not learning.
+                        weights: j.3.clone(),
+                    },
+                );
+                recv(stream)
+            };
+
+            // First submission fills the depth-1 buffer.
+            assert!(matches!(submit(&mut stream, &jobs[0], 0), Msg::Ack { .. }));
+            // Second: buffer full → explicit backpressure.
+            assert!(matches!(submit(&mut stream, &jobs[1], 0), Msg::Busy));
+            // Same client, same round again → duplicate rejection.
+            assert!(matches!(
+                submit(&mut stream, &jobs[0], 0),
+                Msg::Reject {
+                    code: RejectCode::Duplicate,
+                    ..
+                }
+            ));
+            // A round never dispatched → out-of-round rejection.
+            assert!(matches!(
+                submit(&mut stream, &jobs[1], 99),
+                Msg::Reject {
+                    code: RejectCode::OutOfRound,
+                    ..
+                }
+            ));
+            send(&mut stream, &Msg::Bye);
+            // Remaining jobs are deliberately abandoned: period mode
+            // closes rounds on the wall clock, so the server finishes
+            // without them.
+        });
+        let outcome = server.run().unwrap();
+        client.join().unwrap();
+        outcome
+    });
+
+    let s = outcome.stats;
+    assert_eq!(s.dispatched, 6, "{s:?}");
+    assert!(s.accepted >= 1, "{s:?}");
+    assert!(s.busy >= 1, "{s:?}");
+    assert!(s.duplicates >= 1, "{s:?}");
+    assert!(s.out_of_round >= 1, "{s:?}");
+    // Both rounds closed despite the abandoned jobs.
+    assert_eq!(outcome.result.records.len(), 2);
+}
+
+/// Synchronous/continuous policies cannot sit behind the ΔT-slotted
+/// wire loop; the server refuses them at bind time.
+#[test]
+fn serve_refuses_non_periodic_algorithms() {
+    let mut cfg = serve_cfg();
+    cfg.algorithm = Algorithm::parse("local_sgd").unwrap();
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let err = match Server::bind(&ctx, &cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("local_sgd should not be servable"),
+    };
+    assert!(err.to_string().contains("periodic"), "{err}");
+}
