@@ -13,15 +13,22 @@
 //! sweep. Every setting asserts `lost == 0` (each dispatched job reached
 //! a terminal ack/reject).
 //!
+//! A final **scrape overhead** probe re-runs one setting with the
+//! `obs` admin listener bound and a client polling `/metrics` at 1 Hz,
+//! recording `rps_plain` vs `rps_scraped` and their `overhead_frac`
+//! (gate: < 3% on full runs — EXPERIMENTS.md §obs).
+//!
 //! `PAOTA_BENCH_FAST=1` shrinks rounds/fleet/sweep for CI smoke runs;
 //! `PAOTA_BENCH_OUT` overrides the JSON output path.
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use paota::benchlib::section;
 use paota::config::{Algorithm, Config};
 use paota::fl::serve::{run_loadgen, LoadgenReport, Server};
 use paota::fl::TrainContext;
+use paota::obs::admin::http_get;
 
 /// Process peak resident set in MiB (Linux `VmHWM`; null elsewhere).
 fn peak_rss_mib() -> Option<f64> {
@@ -69,20 +76,49 @@ struct Setting {
     report: LoadgenReport,
     accepted: usize,
     busy_server: usize,
+    /// `/metrics` scrapes answered during the run (0 without a scraper).
+    scrapes: usize,
 }
 
-fn run_setting(fast: bool, sessions: usize) -> Setting {
-    let cfg = serve_cfg(fast, sessions);
+fn run_setting(fast: bool, sessions: usize, scrape_hz: Option<u64>) -> Setting {
+    let mut cfg = serve_cfg(fast, sessions);
+    if scrape_hz.is_some() {
+        cfg.obs.admin_bind = "127.0.0.1:0".into();
+    }
     let ctx = TrainContext::new(&cfg).unwrap();
     let server = Server::bind(&ctx, &cfg).unwrap();
     let addr = server.local_addr().to_string();
+    let admin = server.admin_addr();
 
     let t0 = Instant::now();
-    let (outcome, report) = std::thread::scope(|s| {
+    let stop = AtomicBool::new(false);
+    let (outcome, report, scrapes) = std::thread::scope(|s| {
+        let scraper = scrape_hz.zip(admin).map(|(hz, admin_addr)| {
+            let stop = &stop;
+            s.spawn(move || {
+                // Poll /metrics at `hz` while the run is live; sleep in
+                // short slices so the join after stop is prompt.
+                let period = Duration::from_millis(1000 / hz.max(1));
+                let mut n = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if http_get(admin_addr, "/metrics").is_ok() {
+                        n += 1;
+                    }
+                    let deadline = Instant::now() + period;
+                    while !stop.load(Ordering::Relaxed) && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+                n
+            })
+        });
         let lg_cfg = &cfg;
         let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
         let outcome = server.run().unwrap();
-        (outcome, lg.join().unwrap().unwrap())
+        let report = lg.join().unwrap().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        let scrapes = scraper.map_or(0, |h| h.join().unwrap());
+        (outcome, report, scrapes)
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -105,6 +141,7 @@ fn run_setting(fast: bool, sessions: usize) -> Setting {
         accepted: outcome.stats.accepted,
         busy_server: outcome.stats.busy,
         report,
+        scrapes,
     }
 }
 
@@ -115,8 +152,39 @@ fn main() {
     section(&format!(
         "serve: loopback serve+loadgen, lockstep schedule, sessions ∈ {sweep:?}"
     ));
-    let settings: Vec<Setting> = sweep.iter().map(|&n| run_setting(fast, n)).collect();
+    let settings: Vec<Setting> = sweep.iter().map(|&n| run_setting(fast, n, None)).collect();
     let rss = peak_rss_mib();
+
+    // Scrape overhead: the same setting with the admin listener bound
+    // and /metrics polled at 1 Hz. Best-of-2 interleaved trials damp
+    // scheduler noise; the identical lockstep schedule makes the two
+    // throughputs directly comparable.
+    section("serve: scrape overhead — 1 Hz /metrics polling vs obs disabled");
+    let probe_sessions = if fast { 4 } else { 8 };
+    let (mut rps_plain, mut rps_scraped) = (0.0f64, 0.0f64);
+    let mut scrapes = 0usize;
+    for _ in 0..2 {
+        let p = run_setting(fast, probe_sessions, None);
+        rps_plain = rps_plain.max(p.report.requests_per_sec);
+        let o = run_setting(fast, probe_sessions, Some(1));
+        rps_scraped = rps_scraped.max(o.report.requests_per_sec);
+        scrapes += o.scrapes;
+    }
+    let overhead_frac = (rps_plain - rps_scraped).max(0.0) / rps_plain.max(1e-9);
+    println!(
+        "scrape overhead: {rps_plain:.0} req/s plain vs {rps_scraped:.0} req/s \
+         scraped ({scrapes} scrapes) → {:.2}%",
+        overhead_frac * 100.0
+    );
+    if !fast {
+        // The tracked gate (EXPERIMENTS.md §obs); fast CI smoke runs are
+        // too short/noisy to hold a percent-level bound.
+        assert!(
+            overhead_frac < 0.03,
+            "1 Hz scraping cost {:.2}% throughput (gate 3%)",
+            overhead_frac * 100.0
+        );
+    }
 
     let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     let rows = settings
@@ -148,9 +216,18 @@ fn main() {
         })
         .collect::<Vec<_>>()
         .join(",\n    ");
+    let scrape = format!(
+        "{{\"sessions\": {probe_sessions}, \"scrape_hz\": 1, \"scrapes\": {scrapes}, \
+         \"rps_plain\": {}, \"rps_scraped\": {}, \"overhead_frac\": {}, \
+         \"gate_frac\": 0.03}}",
+        jnum(Some(rps_plain)),
+        jnum(Some(rps_scraped)),
+        jnum(Some(overhead_frac)),
+    );
     let json = format!(
-        "{{\n  \"schema\": \"paota-bench-serve/1\",\n  \"fast_mode\": {fast},\n  \
-         \"peak_rss_mib\": {},\n  \"settings\": [\n    {rows}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"paota-bench-serve/2\",\n  \"fast_mode\": {fast},\n  \
+         \"peak_rss_mib\": {},\n  \"settings\": [\n    {rows}\n  ],\n  \
+         \"scrape_overhead\": {scrape}\n}}\n",
         jnum(rss),
     );
     std::fs::write(&out_path, json).unwrap();

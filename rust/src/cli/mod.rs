@@ -42,6 +42,9 @@ pub enum Command {
     Serve,
     /// Replay a deterministic client fleet against a running server.
     Loadgen,
+    /// Trace-journal tools (`summarize`): replay an `obs_trace_path`
+    /// JSONL journal into latency/staleness tables.
+    Trace(String),
     /// Print the effective config and exit.
     ShowConfig,
     /// Print help.
@@ -83,6 +86,9 @@ COMMANDS:
     loadgen       replay serve_sessions concurrent client sessions against a
                       running server and report wire metrics (needs
                       artifacts_dir=native)
+    trace summarize
+                  replay the obs_trace_path JSONL journal into per-phase
+                      latency + staleness tables (obs; schema paota-trace/1)
     show-config   print the effective configuration (re-parseable `key = value`)
     help          this text
 
@@ -110,6 +116,7 @@ CONFIG KEYS (defaults = paper §IV-A):
     cohort_frac cohort_size
     serve_bind serve_max_sessions serve_queue_depth serve_period_ms
     serve_sessions serve_pace_ms
+    obs_trace_path obs_sample_every obs_admin_bind
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
@@ -126,6 +133,11 @@ CONFIG KEYS (defaults = paper §IV-A):
     (serve: serve_period_ms=0 closes rounds in lockstep — bitwise equal to
      the library loop; >0 holds each round open for that wall-clock period,
      surfacing Busy backpressure when serve_queue_depth is contended)
+    (obs: obs_trace_path appends a sim-time-stamped JSONL event journal,
+     obs_sample_every thins it per event kind, obs_admin_bind serves live
+     /metrics + /healthz from `repro serve` — all off by default and
+     bitwise-neutral when on; `trace summarize --obs_trace_path F` replays
+     a journal)
 ",
         names.join("|")
     )
@@ -160,6 +172,15 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         }
         "serve" => Command::Serve,
         "loadgen" => Command::Loadgen,
+        "trace" => {
+            let Some(action) = it.next() else {
+                bail!("trace requires an action (summarize)");
+            };
+            if action != "summarize" {
+                bail!("unknown trace action {action:?} (try `trace summarize`)");
+            }
+            Command::Trace(action.clone())
+        }
         "show-config" => Command::ShowConfig,
         "help" | "--help" | "-h" => Command::Help,
         other => bail!("unknown command {other:?} (try `repro help`)"),
@@ -350,6 +371,47 @@ mod tests {
             "serve_period_ms",
             "serve_sessions",
             "serve_pace_ms",
+        ] {
+            assert!(h.contains(needle), "help text missing {needle}");
+        }
+    }
+
+    #[test]
+    fn trace_command_and_obs_keys_parse_from_the_cli() {
+        let cli = parse(&args(&[
+            "trace",
+            "summarize",
+            "--obs_trace_path",
+            "/tmp/t.jsonl",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, Command::Trace("summarize".into()));
+        assert_eq!(cli.config.obs.trace_path, "/tmp/t.jsonl");
+
+        let cli = parse(&args(&[
+            "serve",
+            "--obs_admin_bind",
+            "127.0.0.1:0",
+            "--obs_sample_every",
+            "5",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.obs.admin_bind, "127.0.0.1:0");
+        assert_eq!(cli.config.obs.sample_every, 5);
+
+        // Missing/unknown action and invalid knobs are parse errors.
+        assert!(parse(&args(&["trace"])).is_err());
+        assert!(parse(&args(&["trace", "replay"])).is_err());
+        assert!(parse(&args(&["serve", "--obs_sample_every", "0"])).is_err());
+        assert!(parse(&args(&["serve", "--obs_admin_bind", "nonsense"])).is_err());
+
+        // Help advertises the command and every [obs] key.
+        let h = help_text();
+        for needle in [
+            "trace summarize",
+            "obs_trace_path",
+            "obs_sample_every",
+            "obs_admin_bind",
         ] {
             assert!(h.contains(needle), "help text missing {needle}");
         }

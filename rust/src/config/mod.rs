@@ -341,6 +341,37 @@ impl Default for ServeConfig {
     }
 }
 
+/// Observability knobs (`[obs]`): the structured trace journal and the
+/// live scrape endpoint (`crate::obs`). Everything defaults to **off**
+/// — with this section unset no file is opened, no socket is bound, and
+/// every run is bitwise identical to a pre-obs build; with it set,
+/// observation stays strictly read-only on simulation state (the
+/// neutrality tests in `tests/golden_seed.rs` / `tests/serve.rs` pin
+/// bit-identical records + weights either way).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// JSONL trace journal path (schema `paota-trace/1`; appended, so
+    /// several emitters may share it). Empty = tracing off.
+    pub trace_path: String,
+    /// Keep every n-th trace event **per kind** (1 = everything; the
+    /// first event of each kind is always kept).
+    pub sample_every: usize,
+    /// Admin scrape listener (`/metrics`, `/metrics.json`, `/healthz`)
+    /// bind address for `repro serve` (`addr:port`; port 0 =
+    /// ephemeral). Empty = no listener.
+    pub admin_bind: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            trace_path: String::new(),
+            sample_every: 1,
+            admin_bind: String::new(),
+        }
+    }
+}
+
 /// Full experiment configuration. Field defaults reproduce the paper.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -418,6 +449,8 @@ pub struct Config {
     pub fleet: FleetConfig,
     /// Wire service (`repro serve` / `repro loadgen`).
     pub serve: ServeConfig,
+    /// Observability (trace journal / scrape endpoint).
+    pub obs: ObsConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -462,6 +495,7 @@ impl Default for Config {
             perf: PerfConfig::default(),
             fleet: FleetConfig::default(),
             serve: ServeConfig::default(),
+            obs: ObsConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -523,6 +557,9 @@ impl Config {
             "serve_period_ms" => self.serve.period_ms = p(key, value)?,
             "serve_sessions" => self.serve.sessions = p(key, value)?,
             "serve_pace_ms" => self.serve.pace_ms = p(key, value)?,
+            "obs_trace_path" => self.obs.trace_path = value.to_string(),
+            "obs_sample_every" => self.obs.sample_every = p(key, value)?,
+            "obs_admin_bind" => self.obs.admin_bind = value.to_string(),
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -714,6 +751,17 @@ impl Config {
         if serve.pace_ms > 60_000 {
             bail!("serve_pace_ms must be ≤ 60000");
         }
+        let obs = &self.obs;
+        if obs.sample_every == 0 {
+            bail!("obs_sample_every must be ≥ 1 (1 = keep every event)");
+        }
+        if !obs.admin_bind.is_empty() && obs.admin_bind.parse::<std::net::SocketAddr>().is_err() {
+            bail!(
+                "obs_admin_bind {:?} is not an addr:port (e.g. 127.0.0.1:7448; \
+                 port 0 requests an ephemeral port; empty = no admin listener)",
+                obs.admin_bind
+            );
+        }
         Ok(())
     }
 
@@ -840,6 +888,9 @@ impl Config {
         kv("serve_period_ms", self.serve.period_ms.to_string());
         kv("serve_sessions", self.serve.sessions.to_string());
         kv("serve_pace_ms", self.serve.pace_ms.to_string());
+        kv("obs_trace_path", self.obs.trace_path.clone());
+        kv("obs_sample_every", self.obs.sample_every.to_string());
+        kv("obs_admin_bind", self.obs.admin_bind.clone());
         kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
@@ -1101,6 +1152,33 @@ mod tests {
     }
 
     #[test]
+    fn obs_keys_parse_and_validate() {
+        let mut c = Config::default();
+        // Defaults: everything off, every-event sampling.
+        assert!(c.obs.trace_path.is_empty());
+        assert!(c.obs.admin_bind.is_empty());
+        assert_eq!(c.obs.sample_every, 1);
+        c.validate().unwrap();
+
+        c.set("obs_trace_path", "/tmp/run_trace.jsonl").unwrap();
+        c.set("obs_sample_every", "10").unwrap();
+        c.set("obs_admin_bind", "127.0.0.1:0").unwrap();
+        assert_eq!(c.obs.trace_path, "/tmp/run_trace.jsonl");
+        assert_eq!(c.obs.sample_every, 10);
+        assert_eq!(c.obs.admin_bind, "127.0.0.1:0");
+        c.validate().unwrap();
+
+        // Degenerate values rejected.
+        let mut c = Config::default();
+        c.set("obs_sample_every", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("obs_admin_bind", "not-an-address").unwrap();
+        assert!(c.validate().is_err());
+        assert!(Config::default().set("obs_sample_every", "often").is_err());
+    }
+
+    #[test]
     fn latency_kind_roundtrip_and_models() {
         for kind in ["uniform", "homogeneous", "bimodal", "lognormal", "gilbert_elliott"] {
             assert_eq!(LatencyKind::parse(kind).unwrap().name(), kind);
@@ -1182,6 +1260,9 @@ mod tests {
         c.set("serve_period_ms", "250").unwrap();
         c.set("serve_sessions", "2").unwrap();
         c.set("serve_pace_ms", "5").unwrap();
+        c.set("obs_trace_path", "/tmp/t.jsonl").unwrap();
+        c.set("obs_sample_every", "4").unwrap();
+        c.set("obs_admin_bind", "127.0.0.1:7448").unwrap();
 
         std::fs::write(&path, c.to_kv_string()).unwrap();
         let mut back = Config::default();
@@ -1203,6 +1284,9 @@ mod tests {
         assert_eq!(back.fleet.cohort_size, 0);
         assert_eq!(back.serve.bind, "127.0.0.1:9000");
         assert_eq!(back.serve.period_ms, 250);
+        assert_eq!(back.obs.trace_path, "/tmp/t.jsonl");
+        assert_eq!(back.obs.sample_every, 4);
+        assert_eq!(back.obs.admin_bind, "127.0.0.1:7448");
 
         // The default config round-trips too.
         let d = Config::default();

@@ -41,6 +41,8 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{Algorithm, Config};
+use crate::obs::metrics::{self, Counter, Histogram};
+use crate::obs::trace::{TraceSink, V};
 use crate::runtime::{EvalOut, TrainOut};
 use crate::sim::events::EventQueue;
 use crate::sim::{LatencySampler, VirtualClock};
@@ -473,6 +475,45 @@ pub trait AggregationPolicy: Send {
     }
 }
 
+/// Coordinator observability: metric handles on the global registry plus
+/// an optional trace journal. Strictly read-only with respect to the
+/// simulation — no RNG draw, no clock advance, pure atomics and I/O —
+/// so enabling it never perturbs a run (`tests/golden_seed.rs` proves
+/// this bitwise).
+struct CoordObs {
+    rounds: Counter,
+    uploads: Counter,
+    participants: Histogram,
+    staleness: Histogram,
+    trace: Option<TraceSink>,
+}
+
+impl CoordObs {
+    fn new(cfg: &Config) -> Self {
+        let r = metrics::global();
+        let trace = match TraceSink::from_cfg(&cfg.obs) {
+            Ok(t) => t,
+            Err(e) => {
+                crate::debug!("obs: trace journal disabled: {e:#}");
+                None
+            }
+        };
+        Self {
+            rounds: r.counter("paota_rounds_total"),
+            uploads: r.counter("paota_uploads_total"),
+            participants: r.histogram(
+                "paota_round_participants",
+                &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+            ),
+            staleness: r.histogram(
+                "paota_round_mean_staleness",
+                &[0.0, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0],
+            ),
+            trace,
+        }
+    }
+}
+
 /// Drive `policy` over the configured horizon against a prepared context.
 pub fn run(
     ctx: &TrainContext,
@@ -511,6 +552,7 @@ pub struct Coordinator<'a> {
     coef: Vec<f32>,
     zero_noise: Vec<f32>,
     scratch: Vec<f32>,
+    obs: CoordObs,
     dim: usize,
     k: usize,
 }
@@ -547,6 +589,7 @@ impl<'a> Coordinator<'a> {
             coef: Vec::new(),
             zero_noise: vec![0.0; dim],
             scratch: vec![0.0; dim],
+            obs: CoordObs::new(cfg),
             dim,
             k,
         }
@@ -784,6 +827,17 @@ impl<'a> Coordinator<'a> {
                 &mut self.rngs.batch,
             ));
         }
+        if let Some(tr) = &self.obs.trace {
+            tr.emit(
+                "slot_open",
+                Some(round as f64 * self.cfg.delta_t),
+                &[
+                    ("round", V::U(round as u64)),
+                    ("offered", V::U((chosen.len() + self.pending.len()) as u64)),
+                    ("chosen", V::U(chosen.len() as u64)),
+                ],
+            );
+        }
         OpenSlot {
             round,
             chosen,
@@ -812,6 +866,17 @@ impl<'a> Coordinator<'a> {
         let mut uploads = Vec::with_capacity(submissions.len());
         for (client, out) in submissions {
             let staleness = round.saturating_sub(self.states.base_round[client]);
+            if let Some(tr) = &self.obs.trace {
+                tr.emit(
+                    "arrival",
+                    Some(slot_end),
+                    &[
+                        ("round", V::U(round as u64)),
+                        ("client", V::U(client as u64)),
+                        ("staleness", V::U(staleness as u64)),
+                    ],
+                );
+            }
             let mut delta = Vec::new();
             if want_deltas {
                 delta = vec![0.0f32; self.dim];
@@ -1079,6 +1144,17 @@ impl<'a> Coordinator<'a> {
                     "group mix weights sum to {total_mix} > 1"
                 );
                 stats.mean_power = power_sum / uploads.len() as f64;
+                if let Some(tr) = &self.obs.trace {
+                    tr.emit(
+                        "ota_aggregate",
+                        None,
+                        &[
+                            ("participants", V::U(uploads.len() as u64)),
+                            ("passes", V::U(passes.len() as u64)),
+                            ("mean_power", V::F(stats.mean_power)),
+                        ],
+                    );
+                }
                 // w ← (1 − Σμ)·w + Σ_g μ_g·y_g.
                 self.scratch.copy_from_slice(&self.w_g);
                 vecmath::scale(&mut self.w_g, (1.0 - total_mix) as f32);
@@ -1096,6 +1172,17 @@ impl<'a> Coordinator<'a> {
             } => {
                 ensure!(coefs.len() == uploads.len(), "one coefficient per upload");
                 stats.mean_power = mean_power;
+                if let Some(tr) = &self.obs.trace {
+                    tr.emit(
+                        "ota_aggregate",
+                        None,
+                        &[
+                            ("participants", V::U(uploads.len() as u64)),
+                            ("mean_power", V::F(mean_power)),
+                            ("noisy", V::U(u64::from(!noise.is_empty()))),
+                        ],
+                    );
+                }
                 // Pack participant rows in ascending client order — the
                 // order the seed's fleet-sized scan visited them, so the
                 // f32 accumulation is bit-identical while the buffers
@@ -1145,6 +1232,24 @@ impl<'a> Coordinator<'a> {
             Some(_) => Some(self.ctx.probe_loss(&self.w_g)?),
             None => None,
         };
+        self.obs.rounds.inc();
+        self.obs.uploads.add(stats.uploads as u64);
+        self.obs.participants.observe(stats.uploads as f64);
+        self.obs.staleness.observe(stats.mean_staleness());
+        if let Some(tr) = &self.obs.trace {
+            let mut fields = vec![
+                ("round", V::U(round as u64)),
+                ("uploads", V::U(stats.uploads as u64)),
+                ("mean_staleness", V::F(stats.mean_staleness())),
+                ("mean_power", V::F(stats.mean_power)),
+            ];
+            let loss = stats.train_loss();
+            if loss.is_finite() {
+                // NaN (empty window) would not be valid JSON — omit it.
+                fields.push(("train_loss", V::F(loss as f64)));
+            }
+            tr.emit("round_close", Some(sim_time), &fields);
+        }
         let rec = self.telemetry.record(round, sim_time, stats, eval, probe_loss);
         crate::debug!(
             "{} r={round} t={sim_time:.0}s up={} stale={:.2} loss={:.4} acc={:?}",

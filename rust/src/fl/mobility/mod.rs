@@ -476,6 +476,11 @@ impl MobilityStats {
         if let Some(last) = self.per_round_moves.last_mut() {
             *last += 1;
         }
+        // Scrape-visible mirror of the applied-churn tally (global
+        // registry; tests assert deltas, never absolutes).
+        crate::obs::metrics::global()
+            .counter("paota_handovers_total")
+            .inc();
     }
 }
 

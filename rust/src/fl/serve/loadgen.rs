@@ -25,6 +25,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context as _, Result};
 
 use crate::config::Config;
+use crate::obs::hist;
+use crate::obs::trace::{TraceSink, V};
 use crate::runtime::ModelRuntime;
 use crate::util::Rng;
 
@@ -83,12 +85,24 @@ pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
          its own runtime)"
     );
     let sessions = cfg.serve.sessions.max(1);
+    // Optional journal: every job's terminal submit latency goes out as
+    // a `wire_submit` event carrying the *same* f64 the percentile
+    // report uses, so (at `obs_sample_every = 1`) `repro trace
+    // summarize` reproduces the report's percentiles exactly.
+    let trace = match TraceSink::from_cfg(&cfg.obs) {
+        Ok(t) => t,
+        Err(e) => {
+            crate::debug!("obs: trace journal disabled: {e:#}");
+            None
+        }
+    };
     let start = Instant::now();
     let mut tallies: Vec<Tally> = Vec::with_capacity(sessions);
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::with_capacity(sessions);
         for idx in 0..sessions {
-            handles.push(s.spawn(move || client_session(cfg, addr, idx)));
+            let trace = trace.as_ref();
+            handles.push(s.spawn(move || client_session(cfg, addr, idx, trace)));
         }
         for h in handles {
             tallies.push(
@@ -126,19 +140,12 @@ pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
         lost,
         wall_secs,
         requests_per_sec: total.requests as f64 / wall_secs.max(1e-9),
-        submit_p50_ms: percentile(&total.latencies_ms, 50.0),
-        submit_p90_ms: percentile(&total.latencies_ms, 90.0),
-        submit_p99_ms: percentile(&total.latencies_ms, 99.0),
+        // Shared nearest-rank helpers (`obs::hist`) — the same math
+        // `repro trace summarize` replays a journal through.
+        submit_p50_ms: hist::percentile(&total.latencies_ms, 50.0),
+        submit_p90_ms: hist::percentile(&total.latencies_ms, 90.0),
+        submit_p99_ms: hist::percentile(&total.latencies_ms, 99.0),
     })
-}
-
-/// Nearest-rank percentile over an ascending-sorted slice (0 when empty).
-fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
-    if sorted_ms.is_empty() {
-        return 0.0;
-    }
-    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
-    sorted_ms[idx.min(sorted_ms.len() - 1)]
 }
 
 /// Read one message on a blocking client stream.
@@ -190,7 +197,12 @@ fn connect(addr: &str, idx: usize, tally: &mut Tally) -> Result<(TcpStream, f32)
 
 /// One session: pull jobs, train them on an own native runtime, submit
 /// through backpressure until the server reports the run done.
-fn client_session(cfg: &Config, addr: &str, idx: usize) -> Result<Tally> {
+fn client_session(
+    cfg: &Config,
+    addr: &str,
+    idx: usize,
+    trace: Option<&TraceSink>,
+) -> Result<Tally> {
     let rt = ModelRuntime::native_for(cfg)?;
     let latency = cfg.latency();
     let mut pace_rng = Rng::for_entity(cfg.seed, STREAM_LOADGEN, idx as u64);
@@ -258,9 +270,23 @@ fn client_session(cfg: &Config, addr: &str, idx: usize) -> Result<Tally> {
                         other => bail!("unexpected submit reply: {other:?}"),
                     }
                 }
-                tally
-                    .latencies_ms
-                    .push(t0.elapsed().as_secs_f64() * 1000.0);
+                let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                tally.latencies_ms.push(ms);
+                if let Some(tr) = trace {
+                    // Same f64 as the percentile sample above — shortest
+                    // round-trip formatting makes the journal replay
+                    // bitwise exact.
+                    tr.emit(
+                        "wire_submit",
+                        None,
+                        &[
+                            ("session", V::U(idx as u64)),
+                            ("client", V::U(client)),
+                            ("round", V::U(round)),
+                            ("ms", V::F(ms)),
+                        ],
+                    );
+                }
             }
             Msg::NoJob { done: true } => {
                 let _ = proto::write_msg(&mut stream, &Msg::Bye);

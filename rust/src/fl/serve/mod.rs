@@ -21,6 +21,16 @@
 //!   session fleet reporting requests/sec, submit-latency percentiles
 //!   and reject/busy counts (`make bench-serve` → `BENCH_serve.json`).
 //!
+//! **Observability** ([`crate::obs`]): the server owns a *private*
+//! metrics registry — session/ack/reject/busy counters, queue-depth
+//! gauges, frame bytes — merged with the process-global registry on the
+//! `obs_admin_bind` scrape listener (`/metrics`, `/metrics.json`,
+//! `/healthz`). Counters are bumped exactly where reply frames are
+//! written, so a scrape agrees with the loadgen's own tallies; with
+//! `obs_trace_path` set, server and loadgen append wire events to the
+//! shared JSONL journal. All of it is read-only: the golden tie-down
+//! below holds bitwise with observability enabled (`tests/serve.rs`).
+//!
 //! **Golden tie-down** (`tests/serve.rs`): with `serve.period_ms = 0`
 //! the server closes each round only when every dispatched job has been
 //! submitted, and the run is bitwise identical — final weights and

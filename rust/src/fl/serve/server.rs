@@ -34,14 +34,18 @@
 //!   retried/slow submissions fold into a later round through the
 //!   coordinator's existing staleness path.
 
+use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::config::{Algorithm, Config};
+use crate::obs::admin::AdminServer;
+use crate::obs::metrics::{Counter, Gauge, Registry};
+use crate::obs::trace::{TraceSink, V};
 use crate::runtime::TrainOut;
 
 use super::super::coordinator::{Coordinator, OpenSlot, RoundTiming};
@@ -83,6 +87,64 @@ struct SessionInfo {
     lr: f32,
 }
 
+/// Wire-side observability handles on the server's **private** registry
+/// — never the process-global one, so a scrape of this server matches
+/// its own loadgen's tallies exactly even with concurrent serve runs in
+/// one test process. Counters are bumped exactly where the matching
+/// reply frame is written (both `Busy` sources — the aggregation buffer
+/// and the session cap — land on the same counter, mirroring how the
+/// loadgen tallies them).
+struct WireObs {
+    sessions_total: Counter,
+    sessions_active: Gauge,
+    rounds: Counter,
+    dispatched: Counter,
+    acks: Counter,
+    duplicates: Counter,
+    out_of_round: Counter,
+    busy: Counter,
+    late: Counter,
+    queued: Gauge,
+    buffered: Gauge,
+    tx_bytes: Counter,
+    trace: Option<TraceSink>,
+}
+
+impl WireObs {
+    fn new(reg: &Registry, cfg: &Config) -> Self {
+        let trace = match TraceSink::from_cfg(&cfg.obs) {
+            Ok(t) => t,
+            Err(e) => {
+                crate::debug!("obs: trace journal disabled: {e:#}");
+                None
+            }
+        };
+        Self {
+            sessions_total: reg.counter("paota_serve_sessions_total"),
+            sessions_active: reg.gauge("paota_serve_sessions_active"),
+            rounds: reg.counter("paota_serve_rounds_total"),
+            dispatched: reg.counter("paota_serve_dispatched_total"),
+            acks: reg.counter("paota_serve_acks_total"),
+            duplicates: reg.counter("paota_serve_duplicates_total"),
+            out_of_round: reg.counter("paota_serve_out_of_round_total"),
+            busy: reg.counter("paota_serve_busy_total"),
+            late: reg.counter("paota_serve_late_total"),
+            queued: reg.gauge("paota_serve_queue_jobs"),
+            buffered: reg.gauge("paota_serve_buffered_updates"),
+            tx_bytes: reg.counter("paota_serve_tx_frame_bytes_total"),
+            trace,
+        }
+    }
+}
+
+/// Write one frame, counting its bytes on the wire registry.
+fn send(stream: &mut TcpStream, msg: &Msg, obs: &WireObs) -> Result<()> {
+    let frame = proto::encode(msg);
+    obs.tx_bytes.add(frame.len() as u64);
+    stream.write_all(&frame).context("writing frame")?;
+    Ok(())
+}
+
 /// Result of a completed serve run.
 pub struct ServeOutcome {
     /// The same record stream + final model `fl::run` would return.
@@ -91,6 +153,13 @@ pub struct ServeOutcome {
     pub stats: RoundStats,
     /// Client sessions admitted over the run.
     pub sessions: usize,
+    /// The server's private metrics registry: the wire counters a
+    /// `/metrics` scrape exposes, still readable after the run.
+    pub metrics: Arc<Registry>,
+    /// The admin listener (when `obs_admin_bind` asked for one), kept
+    /// alive with the outcome so post-run scrapes still answer; dropped
+    /// with it.
+    pub admin: Option<AdminServer>,
 }
 
 /// A bound (but not yet running) federation server.
@@ -99,6 +168,8 @@ pub struct Server<'a> {
     cfg: &'a Config,
     listener: TcpListener,
     addr: SocketAddr,
+    metrics: Arc<Registry>,
+    admin: Option<AdminServer>,
 }
 
 impl<'a> Server<'a> {
@@ -126,11 +197,22 @@ impl<'a> Server<'a> {
         let listener = TcpListener::bind(&cfg.serve.bind)
             .with_context(|| format!("binding serve.bind = {}", cfg.serve.bind))?;
         let addr = listener.local_addr()?;
+        // Wire metrics live on a private registry so this server's
+        // scrape is exactly attributable to it; the admin listener
+        // merges it with the process-global registry.
+        let metrics = Arc::new(Registry::new());
+        let admin = if cfg.obs.admin_bind.is_empty() {
+            None
+        } else {
+            Some(AdminServer::start(&cfg.obs.admin_bind, vec![metrics.clone()])?)
+        };
         Ok(Server {
             ctx,
             cfg,
             listener,
             addr,
+            metrics,
+            admin,
         })
     }
 
@@ -138,6 +220,12 @@ impl<'a> Server<'a> {
     /// `127.0.0.1:0` and hand the real address to their clients).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The admin (scrape) listener's address, when `obs_admin_bind`
+    /// requested one.
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.admin.as_ref().map(|a| a.local_addr())
     }
 
     /// Serve the full run: accept sessions, dispatch jobs, close rounds,
@@ -153,7 +241,10 @@ impl<'a> Server<'a> {
             cfg,
             listener,
             addr,
+            metrics,
+            admin,
         } = self;
+        let obs = WireObs::new(&metrics, cfg);
         let mut policy = build_policy(ctx, cfg)?;
         let mut coord = Coordinator::new(ctx, cfg, policy.batch_stream());
         coord.begin_periodic();
@@ -182,11 +273,22 @@ impl<'a> Server<'a> {
             let stop = &stop;
             let active = &active;
             let admitted = &admitted;
+            let obs = &obs;
             s.spawn(move || {
-                accept_loop(s, listener, shared, stop, active, admitted, info, max_sessions);
+                accept_loop(
+                    s,
+                    listener,
+                    shared,
+                    stop,
+                    active,
+                    admitted,
+                    info,
+                    max_sessions,
+                    obs,
+                );
             });
 
-            outcome = drive_rounds(&mut coord, policy.as_mut(), cfg, shared, period);
+            outcome = drive_rounds(&mut coord, policy.as_mut(), cfg, shared, period, obs);
 
             // Shutdown: flag the run done (sessions answer NoJob{done}),
             // wake everyone, and poke the accept loop with a throwaway
@@ -206,6 +308,8 @@ impl<'a> Server<'a> {
             result: coord.into_result(Algorithm::raw(policy.name())),
             stats,
             sessions: admitted.load(Ordering::SeqCst),
+            metrics,
+            admin,
         })
     }
 }
@@ -224,6 +328,7 @@ fn drive_rounds(
     cfg: &Config,
     shared: &Shared,
     period: Duration,
+    obs: &WireObs,
 ) -> Result<()> {
     for round in 0..cfg.rounds {
         let OpenSlot { chosen, jobs, .. } = coord.open_periodic_slot(policy, round);
@@ -249,6 +354,8 @@ fn drive_rounds(
         {
             let mut st = shared.state.lock().unwrap();
             st.rm.open_round(round, wire_jobs);
+            obs.queued.set(st.rm.queued() as i64);
+            obs.buffered.set(st.rm.buffered() as i64);
         }
         shared.changed.notify_all();
 
@@ -268,6 +375,7 @@ fn drive_rounds(
             .map(|a| (a.client, a.payload))
             .collect();
         coord.complete_periodic_slot(policy, round, submissions)?;
+        obs.rounds.inc();
     }
     Ok(())
 }
@@ -340,6 +448,7 @@ fn accept_loop<'scope, 'env>(
     admitted: &'scope AtomicUsize,
     info: SessionInfo,
     max_sessions: usize,
+    obs: &'scope WireObs,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -356,17 +465,26 @@ fn accept_loop<'scope, 'env>(
         }
         if active.load(Ordering::SeqCst) >= max_sessions {
             // Session-table backpressure: same explicit Busy the
-            // aggregation buffer uses — the client backs off and retries.
+            // aggregation buffer uses — the client backs off and
+            // retries. Counted on the same busy counter, so the scrape
+            // matches the loadgen's tally of absorbed Busy replies.
+            obs.busy.inc();
+            if let Some(tr) = &obs.trace {
+                tr.emit("wire_busy", None, &[("reason", V::S("session_cap".into()))]);
+            }
             let mut stream = stream;
-            let _ = proto::write_msg(&mut stream, &Msg::Busy);
+            let _ = send(&mut stream, &Msg::Busy, obs);
             continue;
         }
         active.fetch_add(1, Ordering::SeqCst);
         admitted.fetch_add(1, Ordering::SeqCst);
+        obs.sessions_total.inc();
+        obs.sessions_active.add(1);
         scope.spawn(move || {
             // A misbehaving peer only kills its own session.
-            let _ = session(stream, shared, stop, info);
+            let _ = session(stream, shared, stop, info, obs);
             active.fetch_sub(1, Ordering::SeqCst);
+            obs.sessions_active.add(-1);
         });
     }
 }
@@ -378,6 +496,7 @@ fn session(
     shared: &Shared,
     stop: &AtomicBool,
     info: SessionInfo,
+    obs: &WireObs,
 ) -> Result<()> {
     stream
         .set_read_timeout(Some(TICK))
@@ -398,7 +517,7 @@ fn session(
             }
         }
     };
-    proto::write_msg(
+    send(
         &mut stream,
         &Msg::Assign {
             session: session_id,
@@ -406,6 +525,7 @@ fn session(
             dim: info.dim as u64,
             lr: info.lr,
         },
+        obs,
     )?;
 
     loop {
@@ -421,8 +541,8 @@ fn session(
         };
         match msg {
             Msg::FetchJob => {
-                let reply = fetch_reply(shared);
-                proto::write_msg(&mut stream, &reply)?;
+                let reply = fetch_reply(shared, obs);
+                send(&mut stream, &reply, obs)?;
             }
             Msg::Submit {
                 client,
@@ -439,27 +559,91 @@ fn session(
                 );
                 let outcome = {
                     let mut st = shared.state.lock().unwrap();
-                    st.rm
-                        .submit(client as usize, round as usize, TrainOut { weights, loss })
+                    let o = st
+                        .rm
+                        .submit(client as usize, round as usize, TrainOut { weights, loss });
+                    obs.buffered.set(st.rm.buffered() as i64);
+                    o
                 };
                 if matches!(outcome, SubmitOutcome::Accepted { .. }) {
                     // Wake the round loop (and fetchers waiting on the
                     // next round's jobs).
                     shared.changed.notify_all();
                 }
+                // Counters track the reply actually written, so a
+                // scrape equals the peer's view of the conversation.
                 let reply = match outcome {
-                    SubmitOutcome::Accepted { .. } => Msg::Ack { round },
-                    SubmitOutcome::Duplicate => Msg::Reject {
-                        code: RejectCode::Duplicate,
-                        round,
-                    },
-                    SubmitOutcome::OutOfRound => Msg::Reject {
-                        code: RejectCode::OutOfRound,
-                        round,
-                    },
-                    SubmitOutcome::Busy => Msg::Busy,
+                    SubmitOutcome::Accepted { late } => {
+                        obs.acks.inc();
+                        if late {
+                            obs.late.inc();
+                        }
+                        if let Some(tr) = &obs.trace {
+                            tr.emit(
+                                "wire_accept",
+                                None,
+                                &[
+                                    ("client", V::U(client)),
+                                    ("round", V::U(round)),
+                                    ("late", V::U(u64::from(late))),
+                                ],
+                            );
+                        }
+                        Msg::Ack { round }
+                    }
+                    SubmitOutcome::Duplicate => {
+                        obs.duplicates.inc();
+                        if let Some(tr) = &obs.trace {
+                            tr.emit(
+                                "wire_reject",
+                                None,
+                                &[
+                                    ("client", V::U(client)),
+                                    ("round", V::U(round)),
+                                    ("code", V::S("duplicate".into())),
+                                ],
+                            );
+                        }
+                        Msg::Reject {
+                            code: RejectCode::Duplicate,
+                            round,
+                        }
+                    }
+                    SubmitOutcome::OutOfRound => {
+                        obs.out_of_round.inc();
+                        if let Some(tr) = &obs.trace {
+                            tr.emit(
+                                "wire_reject",
+                                None,
+                                &[
+                                    ("client", V::U(client)),
+                                    ("round", V::U(round)),
+                                    ("code", V::S("out_of_round".into())),
+                                ],
+                            );
+                        }
+                        Msg::Reject {
+                            code: RejectCode::OutOfRound,
+                            round,
+                        }
+                    }
+                    SubmitOutcome::Busy => {
+                        obs.busy.inc();
+                        if let Some(tr) = &obs.trace {
+                            tr.emit(
+                                "wire_busy",
+                                None,
+                                &[
+                                    ("client", V::U(client)),
+                                    ("round", V::U(round)),
+                                    ("reason", V::S("buffer".into())),
+                                ],
+                            );
+                        }
+                        Msg::Busy
+                    }
                 };
-                proto::write_msg(&mut stream, &reply)?;
+                send(&mut stream, &reply, obs)?;
             }
             Msg::Bye => return Ok(()),
             other => bail!("unexpected message in session: {other:?}"),
@@ -469,10 +653,12 @@ fn session(
 
 /// Answer one `FetchJob`: hand out a queued job if there is (or shortly
 /// arrives) one, else report whether the run is over.
-fn fetch_reply(shared: &Shared) -> Msg {
+fn fetch_reply(shared: &Shared, obs: &WireObs) -> Msg {
     let mut st = shared.state.lock().unwrap();
     loop {
         if let Some((client, round, job)) = st.rm.fetch() {
+            obs.dispatched.inc();
+            obs.queued.set(st.rm.queued() as i64);
             return Msg::Job {
                 client: client as u64,
                 round: round as u64,
@@ -491,6 +677,8 @@ fn fetch_reply(shared: &Shared) -> Msg {
             // One more look under the reacquired lock, then let the
             // client re-poll so the session stays responsive.
             if let Some((client, round, job)) = st.rm.fetch() {
+                obs.dispatched.inc();
+                obs.queued.set(st.rm.queued() as i64);
                 return Msg::Job {
                     client: client as u64,
                     round: round as u64,

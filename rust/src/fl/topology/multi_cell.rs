@@ -46,6 +46,8 @@ use crate::fl::coordinator::{
 };
 use crate::fl::mobility::{self, HandoverPolicy, MobilityStats};
 use crate::fl::{registry, RunResult, TrainContext};
+use crate::obs::metrics::{self, Gauge};
+use crate::obs::trace::{TraceSink, V};
 use crate::util::Rng;
 
 use super::group::GroupMap;
@@ -401,6 +403,21 @@ pub fn run_with_mixing(
     let mut deferred: Vec<Option<(usize, usize)>> = vec![None; k];
     let mut mob_stats = MobilityStats::new(n, k);
 
+    // Runner-level observability: handover trace events (the runner —
+    // not any one cell — owns the hop) and per-cell member gauges.
+    // Read-only with respect to the sweep; cells share the journal path
+    // safely (O_APPEND, one write per line).
+    let trace = match TraceSink::from_cfg(&cfg.obs) {
+        Ok(t) => t,
+        Err(e) => {
+            crate::debug!("obs: trace journal disabled: {e:#}");
+            None
+        }
+    };
+    let member_gauges: Vec<Gauge> = (0..n)
+        .map(|c| metrics::global().gauge(&format!("paota_cell_members{{cell=\"{c}\"}}")))
+        .collect();
+
     // The merged (cloud-level) stream only exists for true hierarchies;
     // a 1-cell run's merged stream IS its cell stream.
     let mut merged_tel = (n > 1).then(|| Telemetry::new(cfg.rounds, cfg.eval_every));
@@ -437,7 +454,13 @@ pub fn run_with_mixing(
             &mut assignment,
             &mut deferred,
             &mut mob_stats,
+            trace.as_ref(),
         )?;
+        if let Some(row) = mob_stats.per_round_members.last() {
+            for (gauge, &count) in member_gauges.iter().zip(row) {
+                gauge.set(count as i64);
+            }
+        }
         if n > 1 && mixing.mixes_at(round) {
             let mut models: Vec<Vec<f32>> =
                 coords.iter().map(|c| c.global_weights().to_vec()).collect();
@@ -518,17 +541,22 @@ fn handover_sweep(
     assignment: &mut [usize],
     deferred: &mut [Option<(usize, usize)>],
     stats: &mut MobilityStats,
+    trace: Option<&TraceSink>,
 ) -> Result<()> {
     // Apply one membership flip to the masks, the authoritative
     // assignment, the churn markers and the stats.
+    #[allow(clippy::too_many_arguments)]
     fn flip(
         c: usize,
         from: usize,
         to: usize,
+        round: usize,
+        slot_end: f64,
         assignment: &mut [usize],
         policies: &mut [CellPolicy],
         churned: &mut [bool],
         stats: &mut MobilityStats,
+        trace: Option<&TraceSink>,
     ) {
         policies[from].set_member(c, false);
         policies[to].set_member(c, true);
@@ -536,7 +564,20 @@ fn handover_sweep(
         churned[from] = true;
         churned[to] = true;
         stats.record_move(c, from, to);
+        if let Some(tr) = trace {
+            tr.emit(
+                "handover",
+                Some(slot_end),
+                &[
+                    ("round", V::U(round as u64)),
+                    ("client", V::U(c as u64)),
+                    ("from", V::U(from as u64)),
+                    ("to", V::U(to as u64)),
+                ],
+            );
+        }
     }
+    let slot_end = (round as f64 + 1.0) * cfg.delta_t;
 
     let k = assignment.len();
     let n = coords.len();
@@ -552,7 +593,10 @@ fn handover_sweep(
             if coords[from].client_base_round(c) > base_at_defer {
                 let slow = coords[from].detach_client_discarding(c);
                 coords[to].admit_fresh(c, round, slow);
-                flip(c, from, to, assignment, policies, &mut churned, stats);
+                flip(
+                    c, from, to, round, slot_end, assignment, policies, &mut churned, stats,
+                    trace,
+                );
                 stats.delivered += 1;
                 deferred[c] = None;
             }
@@ -582,12 +626,18 @@ fn handover_sweep(
                 HandoverPolicy::Forward => {
                     let d = coords[from].detach_client(c);
                     coords[to].admit_client(c, d);
-                    flip(c, from, to, assignment, policies, &mut churned, stats);
+                    flip(
+                        c, from, to, round, slot_end, assignment, policies, &mut churned,
+                        stats, trace,
+                    );
                 }
                 HandoverPolicy::Drop => {
                     let slow = coords[from].detach_client_discarding(c);
                     coords[to].admit_fresh(c, round, slow);
-                    flip(c, from, to, assignment, policies, &mut churned, stats);
+                    flip(
+                        c, from, to, round, slot_end, assignment, policies, &mut churned,
+                        stats, trace,
+                    );
                 }
             }
         }

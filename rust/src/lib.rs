@@ -38,6 +38,7 @@ pub mod power;
 pub mod sim;
 pub mod fl;
 pub mod metrics;
+pub mod obs;
 pub mod cli;
 pub mod experiments;
 pub mod benchlib;

@@ -50,6 +50,9 @@ fn main() -> Result<()> {
             let ctx = fl::TrainContext::new(&cli.config)?;
             let server = fl::serve::Server::bind(&ctx, &cli.config)?;
             println!("# serving on {}", server.local_addr());
+            if let Some(addr) = server.admin_addr() {
+                println!("# obs admin on http://{addr} (/metrics /metrics.json /healthz)");
+            }
             println!(
                 "# algo={} rounds={} period_ms={} max_sessions={} queue_depth={}",
                 cli.config.algorithm.name(),
@@ -95,6 +98,15 @@ fn main() -> Result<()> {
                 r.submit_p90_ms,
                 r.submit_p99_ms
             );
+        }
+        Command::Trace(_) => {
+            // Only `summarize` parses today; the journal path rides the
+            // `obs_trace_path` config key (`--obs_trace_path FILE`).
+            let path = &cli.config.obs.trace_path;
+            if path.is_empty() {
+                anyhow::bail!("trace summarize needs --obs_trace_path <journal.jsonl>");
+            }
+            print!("{}", paota::obs::trace::summarize(path)?);
         }
         Command::Fig3 => experiments::fig3(&cli.config, &cli.out_dir, cli.f_star_rounds)?,
         Command::Fig4 => experiments::fig4(&cli.config, &cli.out_dir)?,

@@ -1,0 +1,200 @@
+//! `obs::admin` — the scrape surface: a minimal HTTP listener serving
+//! live metrics snapshots and a health probe.
+//!
+//! Deliberately tiny (no HTTP library in the tree): one accept thread,
+//! one request per connection, `GET` only.
+//!
+//! | path | response |
+//! |---|---|
+//! | `/metrics` | Prometheus text exposition (merged snapshot) |
+//! | `/metrics.json` | the same snapshot as one JSON object |
+//! | `/healthz` | `200 ok` while the listener is up |
+//!
+//! The served snapshot merges the process-wide
+//! [`global`](crate::obs::metrics::global) registry with any extra
+//! registries handed to [`AdminServer::start`] (the wire server's
+//! private registry). The listener polls a stop flag with a
+//! non-blocking accept loop, so dropping the handle shuts it down
+//! without a poke connection.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use crate::obs::metrics::{self, Registry, Snapshot};
+
+/// How often the accept loop polls the stop flag while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Per-connection read/write budget — a stalled scraper cannot wedge
+/// the listener for longer than this.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A running admin listener. Dropping it stops the thread and closes
+/// the socket.
+pub struct AdminServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `bind` (e.g. `127.0.0.1:0`) and start serving. `extra`
+    /// registries are merged into every snapshot after the global one.
+    pub fn start(bind: &str, extra: Vec<Arc<Registry>>) -> Result<Self> {
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding obs admin listener on {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("paota-obs-admin".into())
+            .spawn(move || accept_loop(listener, &stop2, &extra))
+            .context("spawning obs admin thread")?;
+        Ok(Self {
+            addr,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: &AtomicBool, extra: &[Arc<Registry>]) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = handle_conn(stream, extra);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn merged_snapshot(extra: &[Arc<Registry>]) -> Snapshot {
+    let mut parts = vec![metrics::global().snapshot()];
+    for r in extra {
+        parts.push(r.snapshot());
+    }
+    Snapshot::merge(parts)
+}
+
+fn handle_conn(mut stream: TcpStream, extra: &[Arc<Registry>]) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    // Read until the end of the request head (we ignore the body; GETs
+    // have none) or a small cap.
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            "/metrics" => (
+                "200 OK",
+                "text/plain; version=0.0.4",
+                merged_snapshot(extra).to_prometheus(),
+            ),
+            "/metrics.json" => (
+                "200 OK",
+                "application/json",
+                merged_snapshot(extra).to_json(),
+            ),
+            _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        }
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Client-side helper for tests/benches: issue one GET and return the
+/// response body (headers stripped).
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).context("connecting to admin listener")?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: paota\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or(raw);
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_metrics_health_and_404() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("admin_test_total").add(3);
+        let admin = AdminServer::start("127.0.0.1:0", vec![Arc::clone(&reg)]).unwrap();
+        let addr = admin.local_addr();
+
+        assert_eq!(http_get(addr, "/healthz").unwrap(), "ok\n");
+
+        let text = http_get(addr, "/metrics").unwrap();
+        assert!(text.contains("# TYPE admin_test_total counter"), "{text}");
+        assert!(text.contains("admin_test_total 3"), "{text}");
+
+        let js = http_get(addr, "/metrics.json").unwrap();
+        assert!(js.contains("\"admin_test_total\":3"), "{js}");
+
+        let missing = http_get(addr, "/nope").unwrap();
+        assert_eq!(missing, "not found\n");
+    }
+
+    #[test]
+    fn drop_stops_the_listener() {
+        let admin = AdminServer::start("127.0.0.1:0", Vec::new()).unwrap();
+        let addr = admin.local_addr();
+        drop(admin);
+        // The port is released once the thread exits; a fresh bind on
+        // the same address must succeed.
+        let rebound = TcpListener::bind(addr);
+        assert!(rebound.is_ok(), "listener still holding {addr}");
+    }
+}

@@ -1,0 +1,92 @@
+//! `obs::hist` — shared nearest-rank percentile helpers.
+//!
+//! One definition of "p99" for the whole tree: `repro loadgen` reports
+//! submit-latency percentiles with these functions and
+//! `repro trace summarize` recomputes them from the trace journal, so
+//! the two agree bit for bit on the same samples (the loopback suite
+//! asserts exactly that).
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+///
+/// `p` is in percent (e.g. `99.0`). The rank is
+/// `round(p/100 · (n−1))` — the historical `loadgen` definition — and
+/// an empty slice yields `0.0` so callers can report "no samples"
+/// without branching.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Sort `samples` ascending (NaN-free input expected) and return
+/// `(p50, p90, p99)` — the tuple every latency report in the tree
+/// prints.
+pub fn p50_p90_p99(samples: &mut [f64]) -> (f64, f64, f64) {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(samples, 50.0),
+        percentile(samples, 90.0),
+        percentile(samples, 99.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let (a, b, c) = p50_p90_p99(&mut []);
+        assert_eq!((a, b, c), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let s = [7.25];
+        assert_eq!(percentile(&s, 0.0), 7.25);
+        assert_eq!(percentile(&s, 50.0), 7.25);
+        assert_eq!(percentile(&s, 99.0), 7.25);
+        assert_eq!(percentile(&s, 100.0), 7.25);
+    }
+
+    #[test]
+    fn tie_heavy_distribution_returns_the_tied_value() {
+        // 97 copies of 1.0 with a couple of outliers: p50/p90 must land
+        // on the tie, p99 on the tail.
+        let mut s = vec![1.0; 97];
+        s.push(50.0);
+        s.push(80.0);
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(percentile(&s, 50.0), 1.0);
+        assert_eq!(percentile(&s, 90.0), 1.0);
+        assert_eq!(percentile(&s, 99.0), 80.0);
+    }
+
+    #[test]
+    fn nearest_rank_matches_the_loadgen_formula() {
+        let s: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        // round(0.5 · 99) = 50, round(0.9 · 99) = 89, round(0.99 · 99) = 98.
+        assert_eq!(percentile(&s, 50.0), 50.0);
+        assert_eq!(percentile(&s, 90.0), 89.0);
+        assert_eq!(percentile(&s, 99.0), 98.0);
+    }
+
+    #[test]
+    fn p_above_100_clamps_to_max() {
+        let s = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&s, 400.0), 3.0);
+    }
+
+    #[test]
+    fn tuple_helper_sorts_first() {
+        let mut s = [3.0, 1.0, 2.0];
+        let (p50, p90, p99) = p50_p90_p99(&mut s);
+        assert_eq!(p50, 2.0);
+        assert_eq!(p90, 3.0);
+        assert_eq!(p99, 3.0);
+    }
+}

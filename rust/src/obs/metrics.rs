@@ -1,0 +1,390 @@
+//! `obs::metrics` — a lock-light registry of named counters, gauges and
+//! fixed-bucket histograms.
+//!
+//! Registration (`counter`/`gauge`/`histogram`) takes a short mutex to
+//! insert into a name-keyed map and hands back a cheap cloneable handle
+//! (an `Arc` around atomics). Instrumentation sites register **once**
+//! (at construction) and then update through the handle — the hot path
+//! is a single relaxed atomic op, no lock, no allocation. Histograms
+//! have fixed bucket bounds chosen at registration; `observe` is a
+//! short linear scan over those bounds plus two atomic adds.
+//!
+//! [`Registry::snapshot`] reads everything at one instant (per-metric
+//! atomic loads; counters may move between loads — fine for scraping)
+//! and renders as Prometheus text exposition ([`Snapshot::to_prometheus`])
+//! or JSON ([`Snapshot::to_json`]). Names may carry Prometheus-style
+//! labels inline (`paota_cell_members{cell="0"}`): the renderer splits
+//! the base name off for `# TYPE` lines.
+//!
+//! A process-wide registry is available as [`global`] (coordinator,
+//! pool and mobility instrumentation lands there); components that
+//! need isolated, exactly-attributable counts — the wire server, whose
+//! scrape must match its loadgen's tallies even with concurrent runs
+//! in one process — own a private `Arc<Registry>` instead.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter handle (clone freely; clones share the cell).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistCore {
+    /// Ascending upper bounds; an implicit +Inf bucket follows.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` non-cumulative buckets.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in fixed-point microunits (values are clamped at 0 — every
+    /// histogram in the tree measures a non-negative quantity).
+    sum_micros: AtomicU64,
+}
+
+/// Fixed-bucket histogram handle.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let mut slot = c.bounds.len();
+        for (i, b) in c.bounds.iter().enumerate() {
+            if v <= *b {
+                slot = i;
+                break;
+            }
+        }
+        c.buckets[slot].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum_micros
+            .fetch_add((v.max(0.0) * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// A registry of named metrics. See the module docs for the
+/// registration-vs-update cost split.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or fetch) the counter `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.inner.lock().unwrap();
+        g.counters
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Register (or fetch) the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicI64::new(0))))
+            .clone()
+    }
+
+    /// Register (or fetch) the histogram `name` with the given ascending
+    /// upper bounds (an implicit +Inf bucket is appended). If `name`
+    /// already exists its original bounds win.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        let mut g = self.inner.lock().unwrap();
+        g.hists
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                let mut buckets = Vec::with_capacity(bounds.len() + 1);
+                for _ in 0..=bounds.len() {
+                    buckets.push(AtomicU64::new(0));
+                }
+                Histogram(Arc::new(HistCore {
+                    bounds: bounds.to_vec(),
+                    buckets,
+                    count: AtomicU64::new(0),
+                    sum_micros: AtomicU64::new(0),
+                }))
+            })
+            .clone()
+    }
+
+    /// Read every metric at one instant.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            counters: g.counters.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            gauges: g.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            hists: g
+                .hists
+                .iter()
+                .map(|(k, h)| {
+                    let c = &h.0;
+                    HistSnapshot {
+                        name: k.clone(),
+                        bounds: c.bounds.clone(),
+                        buckets: c.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                        count: c.count.load(Ordering::Relaxed),
+                        sum: c.sum_micros.load(Ordering::Relaxed) as f64 / 1e6,
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One histogram, frozen.
+pub struct HistSnapshot {
+    pub name: String,
+    pub bounds: Vec<f64>,
+    /// Non-cumulative per-bucket counts, `bounds.len() + 1` long.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+/// A frozen, renderable view of a registry (name-sorted — scrapes are
+/// byte-stable for a fixed set of values).
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+/// `name{label="x"}` → `name` for `# TYPE` lines.
+fn base_name(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Snapshot {
+    /// Merge several snapshots into one exposition (admin listener:
+    /// global registry + the server's private registry).
+    pub fn merge(parts: Vec<Snapshot>) -> Snapshot {
+        let mut out = Snapshot {
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            hists: Vec::new(),
+        };
+        for p in parts {
+            out.counters.extend(p.counters);
+            out.gauges.extend(p.gauges);
+            out.hists.extend(p.hists);
+        }
+        out.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        out.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        out.hists.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# TYPE` line per
+    /// base name, cumulative `_bucket{le=...}` series for histograms.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("# TYPE {} counter\n{name} {v}\n", base_name(name)));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("# TYPE {} gauge\n{name} {v}\n", base_name(name)));
+        }
+        for h in &self.hists {
+            let base = base_name(&h.name);
+            out.push_str(&format!("# TYPE {base} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.buckets[i];
+                out.push_str(&format!("{base}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            cum += h.buckets.last().copied().unwrap_or(0);
+            out.push_str(&format!("{base}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("{base}_sum {}\n", h.sum));
+            out.push_str(&format!("{base}_count {}\n", h.count));
+        }
+        out
+    }
+
+    /// The same snapshot as one JSON object.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", json_escape(name)));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (name, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", json_escape(name)));
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, h) in self.hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum\":{},\"buckets\":[",
+                json_escape(&h.name),
+                h.count,
+                h.sum
+            ));
+            let mut cum = 0u64;
+            for (j, b) in h.bounds.iter().enumerate() {
+                cum += h.buckets[j];
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("[{b},{cum}]"));
+            }
+            if !h.bounds.is_empty() {
+                out.push(',');
+            }
+            cum += h.buckets.last().copied().unwrap_or(0);
+            out.push_str(&format!("[null,{cum}]"));
+            out.push_str("]}");
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// The process-wide registry. Library-path instrumentation (coordinator,
+/// pool, mobility) registers here; counts aggregate across every run in
+/// the process, so tests assert deltas/monotonicity, never absolutes.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_the_cell_and_names_are_stable() {
+        let r = Registry::new();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(r.gauge("depth").get(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_the_exposition() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", &[0.1, 1.0]);
+        h.observe(0.05); // bucket le=0.1
+        h.observe(0.5); // bucket le=1.0
+        h.observe(0.7); // bucket le=1.0
+        h.observe(3.0); // +Inf
+        let snap = r.snapshot();
+        let text = snap.to_prometheus();
+        assert!(text.contains("lat_seconds_bucket{le=\"0.1\"} 1\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"1\"} 3\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 4\n"), "{text}");
+        assert!(text.contains("lat_seconds_count 4\n"), "{text}");
+        // Fixed-point sum: 0.05 + 0.5 + 0.7 + 3.0 = 4.25 exactly.
+        assert!(text.contains("lat_seconds_sum 4.25\n"), "{text}");
+    }
+
+    #[test]
+    fn labeled_names_keep_their_base_for_type_lines() {
+        let r = Registry::new();
+        r.gauge("cell_members{cell=\"0\"}").set(4);
+        r.gauge("cell_members{cell=\"1\"}").set(8);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE cell_members gauge\n"), "{text}");
+        assert!(text.contains("cell_members{cell=\"0\"} 4\n"), "{text}");
+        assert!(text.contains("cell_members{cell=\"1\"} 8\n"), "{text}");
+    }
+
+    #[test]
+    fn json_rendering_is_well_formed_enough_to_grep() {
+        let r = Registry::new();
+        r.counter("acks_total").add(7);
+        let h = r.histogram("ms", &[1.0]);
+        h.observe(0.5);
+        let js = r.snapshot().to_json();
+        assert!(js.contains("\"acks_total\":7"), "{js}");
+        assert!(js.contains("\"ms\":{\"count\":1"), "{js}");
+        assert!(js.starts_with('{') && js.ends_with('}'), "{js}");
+    }
+
+    #[test]
+    fn merge_combines_and_sorts() {
+        let a = Registry::new();
+        a.counter("b_total").inc();
+        let b = Registry::new();
+        b.counter("a_total").inc();
+        let merged = Snapshot::merge(vec![a.snapshot(), b.snapshot()]);
+        assert_eq!(merged.counters[0].0, "a_total");
+        assert_eq!(merged.counters[1].0, "b_total");
+    }
+}

@@ -1,0 +1,41 @@
+//! `obs` — observability for live runs: a lock-light metrics registry,
+//! a structured sim-time-stamped trace journal, and a scrape endpoint.
+//!
+//! The post-hoc [`RoundRecord`](crate::fl::RoundRecord) stream answers
+//! "what happened" after a run; `obs` answers "what is happening" while
+//! a campaign or a `repro serve` soak is in flight:
+//!
+//! * [`metrics`] — named counters, gauges and fixed-bucket histograms
+//!   backed by atomics. Registration takes a short lock once per
+//!   (name, process); updates through the returned handles are
+//!   wait-free and allocation-free. Snapshots render as Prometheus
+//!   text exposition or JSON.
+//! * [`trace`] — an append-only JSONL event journal (schema
+//!   `paota-trace/1`): round open/close, slot dispatch, OTA aggregate
+//!   with power, handover, wire accept/reject/busy, submit latency.
+//!   Every simulation event carries the **virtual** clock; wire events
+//!   carry wall time. A sampling knob (`obs_sample_every`) thins
+//!   high-frequency kinds. `repro trace summarize` replays a journal
+//!   into per-phase latency and staleness distribution tables.
+//! * [`admin`] — a minimal HTTP listener (`/metrics`, `/metrics.json`,
+//!   `/healthz`) so a loadgen soak can be watched live with `curl`.
+//! * [`hist`] — the shared nearest-rank percentile helpers used by
+//!   both `repro loadgen` and `trace summarize`.
+//!
+//! ## The neutrality contract
+//!
+//! Observation is strictly **read-only on simulation state**: no obs
+//! call ever draws from an RNG stream, advances the virtual clock, or
+//! reorders work. With the `[obs]` config section unset (the default)
+//! no file is opened and no socket is bound; with it set, runs must
+//! stay bitwise identical to unobserved runs — `tests/golden_seed.rs`
+//! and `tests/serve.rs` pin this (the `obs_*_neutral` tests).
+
+pub mod admin;
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+
+pub use admin::AdminServer;
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::TraceSink;

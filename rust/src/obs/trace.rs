@@ -1,0 +1,379 @@
+//! `obs::trace` — a structured, sim-time-stamped JSONL event journal.
+//!
+//! Schema `paota-trace/1`: one JSON object per line,
+//!
+//! ```text
+//! {"v":1,"kind":"round_close","t":12.5,"round":4,"uploads":7,...}
+//! ```
+//!
+//! `v` is the schema version, `kind` the event name, `t` the **virtual**
+//! clock (seconds) for simulation events — wire events carry wall-clock
+//! fields (`ms`) instead. Numeric fields use Rust's shortest
+//! round-trip `f64` formatting, so a parsed journal reproduces the
+//! emitter's values bit for bit (the loadgen-percentile tie-down in
+//! `tests/serve.rs` depends on this). The event vocabulary is
+//! documented in EXPERIMENTS.md §obs.
+//!
+//! A [`TraceSink`] appends to its path (`O_APPEND`, one `write` per
+//! line) so several emitters — per-cell coordinators, a server and its
+//! in-process loadgen — can share one journal without interleaving
+//! partial lines. `sample_every = n` keeps every n-th event **per
+//! kind** (the first is always kept), thinning high-frequency kinds
+//! without silencing rare ones.
+//!
+//! [`summarize`] replays a journal into per-kind counts, per-phase
+//! latency percentiles (every kind carrying an `ms` field) and the
+//! staleness distribution (every event carrying `staleness`), using the
+//! same nearest-rank helpers ([`crate::obs::hist`]) as `repro loadgen`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::sync::Mutex;
+
+use anyhow::{Context as _, Result};
+
+use crate::config::ObsConfig;
+use crate::obs::hist;
+
+/// Trace JSONL schema version (the `"v"` field).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One field value in a trace event.
+pub enum V {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+struct Inner {
+    file: std::fs::File,
+    sample_every: u64,
+    /// Per-kind emit counters (sampling is per kind so rare events are
+    /// never starved by frequent ones).
+    seen: BTreeMap<String, u64>,
+}
+
+/// An append-only JSONL journal. Cheap to share by reference; `emit`
+/// serializes under a private mutex and issues one `write` per line.
+pub struct TraceSink {
+    inner: Mutex<Inner>,
+}
+
+impl TraceSink {
+    /// Open (append-create) the journal at `path`.
+    pub fn open(path: &str, sample_every: u64) -> Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening trace journal {path}"))?;
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                file,
+                sample_every: sample_every.max(1),
+                seen: BTreeMap::new(),
+            }),
+        })
+    }
+
+    /// Open a sink if the `[obs]` section asks for one (`obs_trace_path`
+    /// non-empty), `None` otherwise.
+    pub fn from_cfg(obs: &ObsConfig) -> Result<Option<Self>> {
+        if obs.trace_path.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Self::open(&obs.trace_path, obs.sample_every as u64)?))
+    }
+
+    /// Append one event. `sim_time` becomes the `"t"` field when
+    /// present. Never touches simulation state — pure I/O.
+    pub fn emit(&self, kind: &str, sim_time: Option<f64>, fields: &[(&str, V)]) {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.seen.entry(kind.to_string()).or_insert(0);
+        *n += 1;
+        if (*n - 1) % g.sample_every != 0 {
+            return;
+        }
+        let mut line = format!("{{\"v\":{SCHEMA_VERSION},\"kind\":\"{kind}\"");
+        if let Some(t) = sim_time {
+            let _ = write!(line, ",\"t\":{t}");
+        }
+        for (k, v) in fields {
+            match v {
+                V::U(x) => {
+                    let _ = write!(line, ",\"{k}\":{x}");
+                }
+                V::F(x) => {
+                    let _ = write!(line, ",\"{k}\":{x}");
+                }
+                V::S(x) => {
+                    let esc = x.replace('\\', "\\\\").replace('"', "\\\"");
+                    let _ = write!(line, ",\"{k}\":\"{esc}\"");
+                }
+            }
+        }
+        line.push_str("}\n");
+        // One write per line + O_APPEND: concurrent sinks on the same
+        // path never interleave partial lines.
+        let _ = g.file.write_all(line.as_bytes());
+    }
+}
+
+/// A parsed flat JSON value (trace events are flat objects).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    Num(f64),
+    Str(String),
+}
+
+impl Val {
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Val::Num(n) => Some(*n),
+            Val::Str(_) => None,
+        }
+    }
+}
+
+/// Parse one flat JSONL trace line into key → value. Returns `None` on
+/// anything that is not a flat object of strings/numbers (summaries
+/// skip unparseable lines instead of failing the whole replay).
+pub fn parse_line(line: &str) -> Option<BTreeMap<String, Val>> {
+    let s = line.trim();
+    let body = s.strip_prefix('{')?.strip_suffix('}')?;
+    let mut out = BTreeMap::new();
+    let bytes = body.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        // Key: "..."
+        if bytes[i] != b'"' {
+            return None;
+        }
+        i += 1;
+        let kstart = i;
+        while i < bytes.len() && bytes[i] != b'"' {
+            if bytes[i] == b'\\' {
+                i += 1;
+            }
+            i += 1;
+        }
+        if i >= bytes.len() {
+            return None;
+        }
+        let key = body[kstart..i].to_string();
+        i += 1;
+        if i >= bytes.len() || bytes[i] != b':' {
+            return None;
+        }
+        i += 1;
+        // Value: string or number.
+        if i < bytes.len() && bytes[i] == b'"' {
+            i += 1;
+            let vstart = i;
+            while i < bytes.len() && bytes[i] != b'"' {
+                if bytes[i] == b'\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            if i >= bytes.len() {
+                return None;
+            }
+            let raw = &body[vstart..i];
+            out.insert(key, Val::Str(raw.replace("\\\"", "\"").replace("\\\\", "\\")));
+            i += 1;
+        } else {
+            let vstart = i;
+            while i < bytes.len() && bytes[i] != b',' {
+                i += 1;
+            }
+            let num: f64 = body[vstart..i].trim().parse().ok()?;
+            out.insert(key, Val::Num(num));
+        }
+        if i < bytes.len() {
+            if bytes[i] != b',' {
+                return None;
+            }
+            i += 1;
+        }
+    }
+    Some(out)
+}
+
+/// Replay a journal into per-phase latency and staleness distribution
+/// tables (returned as printable text; `repro trace summarize` prints
+/// it verbatim).
+pub fn summarize(path: &str) -> Result<String> {
+    let raw = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace journal {path}"))?;
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    let mut latency: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut staleness: Vec<f64> = Vec::new();
+    let mut total = 0u64;
+    let mut skipped = 0u64;
+    for line in raw.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some(ev) = parse_line(line) else {
+            skipped += 1;
+            continue;
+        };
+        let Some(Val::Str(kind)) = ev.get("kind").cloned() else {
+            skipped += 1;
+            continue;
+        };
+        total += 1;
+        *counts.entry(kind.clone()).or_insert(0) += 1;
+        if let Some(ms) = ev.get("ms").and_then(Val::as_f64) {
+            latency.entry(kind.clone()).or_default().push(ms);
+        }
+        if let Some(s) = ev.get("staleness").and_then(Val::as_f64) {
+            staleness.push(s);
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# trace summary — {total} events, {} kinds (schema paota-trace/{SCHEMA_VERSION}{})",
+        counts.len(),
+        if skipped > 0 {
+            format!("; {skipped} unparseable lines skipped")
+        } else {
+            String::new()
+        }
+    );
+    let _ = writeln!(out, "# events");
+    for (kind, n) in &counts {
+        let _ = writeln!(out, "{kind} {n}");
+    }
+    if !latency.is_empty() {
+        let _ = writeln!(out, "# latency_ms (nearest-rank)");
+        let _ = writeln!(out, "kind count p50 p90 p99");
+        for (kind, samples) in latency.iter_mut() {
+            let (p50, p90, p99) = hist::p50_p90_p99(samples);
+            let _ = writeln!(
+                out,
+                "{kind} {} {p50:.3} {p90:.3} {p99:.3}",
+                samples.len()
+            );
+            if kind == "wire_submit" {
+                // The loadgen's own summary line, reproduced from the
+                // journal — same samples, same nearest-rank helpers,
+                // same `{:.2}` formatting, so the two lines agree
+                // byte for byte.
+                let _ = writeln!(
+                    out,
+                    "# submit_ms p50={p50:.2} p90={p90:.2} p99={p99:.2}"
+                );
+            }
+        }
+    }
+    if !staleness.is_empty() {
+        staleness.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let max = staleness.last().copied().unwrap_or(0.0);
+        let mean = staleness.iter().sum::<f64>() / staleness.len() as f64;
+        let _ = writeln!(out, "# staleness (rounds)");
+        let _ = writeln!(out, "count mean p50 p90 p99 max");
+        let _ = writeln!(
+            out,
+            "{} {mean:.3} {:.3} {:.3} {:.3} {max:.3}",
+            staleness.len(),
+            hist::percentile(&staleness, 50.0),
+            hist::percentile(&staleness, 90.0),
+            hist::percentile(&staleness, 99.0),
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_path(tag: &str) -> String {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("paota_trace_{tag}_{}_{n}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_is_exact() {
+        let path = tmp_path("roundtrip");
+        let sink = TraceSink::open(&path, 1).unwrap();
+        let ms = 1.0 / 3.0 * 100.0; // not representable in short decimal
+        sink.emit(
+            "wire_submit",
+            None,
+            &[("ms", V::F(ms)), ("round", V::U(4)), ("who", V::S("s\"1".into()))],
+        );
+        sink.emit("round_close", Some(2.5), &[("staleness", V::F(1.0))]);
+        drop(sink);
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let ev = parse_line(raw.lines().next().unwrap()).unwrap();
+        assert_eq!(ev.get("kind"), Some(&Val::Str("wire_submit".into())));
+        // Shortest round-trip f64 formatting: parsed == emitted, bitwise.
+        let got = ev.get("ms").unwrap().as_f64().unwrap();
+        assert_eq!(got.to_bits(), ms.to_bits());
+        assert_eq!(ev.get("who"), Some(&Val::Str("s\"1".into())));
+        let ev2 = parse_line(raw.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(ev2.get("t").unwrap().as_f64().unwrap(), 2.5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_per_kind() {
+        let path = tmp_path("sample");
+        let sink = TraceSink::open(&path, 3).unwrap();
+        for i in 0..7 {
+            sink.emit("frequent", None, &[("i", V::U(i))]);
+        }
+        sink.emit("rare", None, &[]);
+        drop(sink);
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let frequent = raw.lines().filter(|l| l.contains("frequent")).count();
+        let rare = raw.lines().filter(|l| l.contains("rare")).count();
+        assert_eq!(frequent, 3, "kept 0,3,6 of 0..7:\n{raw}");
+        assert_eq!(rare, 1, "first event of a kind always kept:\n{raw}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn summarize_builds_latency_and_staleness_tables() {
+        let path = tmp_path("summary");
+        let sink = TraceSink::open(&path, 1).unwrap();
+        for ms in [5.0, 1.0, 9.0] {
+            sink.emit("wire_submit", None, &[("ms", V::F(ms))]);
+        }
+        sink.emit("arrival", Some(1.0), &[("staleness", V::F(2.0))]);
+        sink.emit("arrival", Some(2.0), &[("staleness", V::F(0.0))]);
+        drop(sink);
+        let text = summarize(&path).unwrap();
+        assert!(text.contains("wire_submit 3"), "{text}");
+        assert!(text.contains("# submit_ms p50=5.00 p90=9.00 p99=9.00"), "{text}");
+        assert!(text.contains("# staleness (rounds)"), "{text}");
+        assert!(text.contains("2 1.000 "), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn summarize_skips_garbage_lines() {
+        let path = tmp_path("garbage");
+        std::fs::write(
+            &path,
+            "{\"v\":1,\"kind\":\"x\"}\nnot json at all\n{\"v\":1,\"kind\":\"x\"}\n",
+        )
+        .unwrap();
+        let text = summarize(&path).unwrap();
+        assert!(text.contains("x 2"), "{text}");
+        assert!(text.contains("1 unparseable"), "{text}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -33,12 +33,14 @@
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::{Manifest, TrainOut};
 use super::native::NativeModel;
 use super::pjrt::{Engine, Exec, Input};
+use crate::obs::metrics::{self, Counter, Gauge, Histogram};
 
 /// One local-training job, with the reply channel of the batch it
 /// belongs to.
@@ -49,6 +51,32 @@ struct Job {
     ys: Vec<f32>,
     lr: f32,
     reply: Sender<JobResult>,
+    /// Submission wall-clock stamp — queue-wait observability only,
+    /// never feeds back into results or simulation time.
+    enqueued: Instant,
+}
+
+/// Pool observability handles (global registry; wall-clock only, so the
+/// numerics and the job schedule are untouched).
+#[derive(Clone)]
+struct PoolMetrics {
+    jobs: Counter,
+    queue_wait_ms: Histogram,
+    exec_ms: Histogram,
+    busy_workers: Gauge,
+}
+
+impl PoolMetrics {
+    fn new() -> Self {
+        let r = metrics::global();
+        let bounds = [0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0];
+        Self {
+            jobs: r.counter("paota_pool_jobs_total"),
+            queue_wait_ms: r.histogram("paota_pool_queue_wait_ms", &bounds),
+            exec_ms: r.histogram("paota_pool_exec_ms", &bounds),
+            busy_workers: r.gauge("paota_pool_busy_workers"),
+        }
+    }
 }
 
 /// Worker → batch-owner result.
@@ -173,12 +201,14 @@ impl TrainPool {
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let mut threads = Vec::with_capacity(workers);
+        let obs = PoolMetrics::new();
         for worker_id in 0..workers {
             let job_rx = Arc::clone(&job_rx);
             let backend = backend.clone();
+            let obs = obs.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("paota-train-{worker_id}"))
-                .spawn(move || worker_loop(backend, &job_rx))
+                .spawn(move || worker_loop(backend, &job_rx, &obs))
                 .context("spawning pool worker")?;
             threads.push(handle);
         }
@@ -215,6 +245,7 @@ impl TrainPool {
                     ys,
                     lr,
                     reply: reply_tx.clone(),
+                    enqueued: Instant::now(),
                 })
                 .map_err(|_| anyhow!("pool submit (workers died?)"))?;
             }
@@ -232,7 +263,7 @@ impl TrainPool {
 /// Worker body: build the backend model once, then serve jobs until the
 /// pool (the job sender) is dropped. A failed build surfaces the error on
 /// every subsequently received job instead of dying silently.
-fn worker_loop(backend: Backend, jobs: &Mutex<Receiver<Job>>) {
+fn worker_loop(backend: Backend, jobs: &Mutex<Receiver<Job>>, obs: &PoolMetrics) {
     let recv = || -> Option<Job> {
         jobs.lock().unwrap_or_else(|e| e.into_inner()).recv().ok()
     };
@@ -250,7 +281,14 @@ fn worker_loop(backend: Backend, jobs: &Mutex<Receiver<Job>>) {
         }
     };
     while let Some(job) = recv() {
+        obs.jobs.inc();
+        obs.queue_wait_ms
+            .observe(job.enqueued.elapsed().as_secs_f64() * 1e3);
+        obs.busy_workers.add(1);
+        let started = Instant::now();
         let out = model.train(&job);
+        obs.exec_ms.observe(started.elapsed().as_secs_f64() * 1e3);
+        obs.busy_workers.add(-1);
         // A dropped reply receiver means that batch's owner bailed early
         // (e.g. on another job's error) — keep serving other batches.
         let _ = job.reply.send(JobResult { idx: job.idx, out });
@@ -419,5 +457,41 @@ mod tests {
     fn train_pool_is_sync() {
         fn assert_sync<T: Sync + Send>() {}
         assert_sync::<TrainPool>();
+    }
+
+    #[test]
+    fn pool_metrics_count_jobs_without_changing_results() {
+        // Global-registry metrics: other tests bump the same counters
+        // concurrently, so assert deltas, never absolutes.
+        let m = tiny_manifest();
+        let nm = NativeModel::new(m.clone());
+        let pool = TrainPool::native(m.clone(), 2).unwrap();
+        let jobs_before = crate::obs::metrics::global()
+            .counter("paota_pool_jobs_total")
+            .get();
+        let waits_before = crate::obs::metrics::global()
+            .histogram("paota_pool_queue_wait_ms", &[1.0])
+            .count();
+        let mut rng = Rng::new(21);
+        let jobs: Vec<_> = (0..4).map(|_| job(&m, &mut rng)).collect();
+        let want: Vec<f32> = jobs
+            .iter()
+            .map(|(w, xs, ys)| nm.local_train(w, xs, ys, 0.1).unwrap().loss)
+            .collect();
+        let got: Vec<f32> = pool
+            .run_batch(jobs, 0.1)
+            .unwrap()
+            .into_iter()
+            .map(|t| t.loss)
+            .collect();
+        assert_eq!(want, got, "instrumentation must not perturb results");
+        let jobs_after = crate::obs::metrics::global()
+            .counter("paota_pool_jobs_total")
+            .get();
+        let waits_after = crate::obs::metrics::global()
+            .histogram("paota_pool_queue_wait_ms", &[1.0])
+            .count();
+        assert!(jobs_after >= jobs_before + 4, "{jobs_before} -> {jobs_after}");
+        assert!(waits_after >= waits_before + 4, "{waits_before} -> {waits_after}");
     }
 }

@@ -793,6 +793,80 @@ fn parallel_multi_cell_cells_match_serial_stepping() {
     assert_records_bitwise("merged", &b.merged, &a.merged);
 }
 
+// ---------------------------------------------------------------------
+// Observation neutrality: the obs layer (metrics registry + trace
+// journal) reads simulation state but never touches an RNG stream or
+// the virtual clock, so enabling it must not move a record by a bit.
+// ---------------------------------------------------------------------
+
+/// Per-test journal path (parallel `cargo test` safe).
+fn obs_tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("paota_obs_neutral_{tag}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn observed_run_is_bitwise_identical_to_unobserved() {
+    for algo in ["paota", "fedasync", "local_sgd"] {
+        let plain = native_cfg(algo);
+        let mut observed = plain.clone();
+        observed.obs.trace_path = obs_tmp(algo);
+        observed.obs.sample_every = 1;
+        std::fs::remove_file(&observed.obs.trace_path).ok();
+
+        let a = fl::run(&plain).unwrap();
+        let b = fl::run(&observed).unwrap();
+        assert_records_bitwise(&format!("{algo}: observed vs plain"), &b, &a);
+
+        // The journal really recorded the run: every record stream entry
+        // went through `close_round`, which emits one `round_close`.
+        let raw = std::fs::read_to_string(&observed.obs.trace_path).unwrap();
+        let closes = raw
+            .lines()
+            .filter(|l| l.contains("\"kind\":\"round_close\""))
+            .count();
+        assert_eq!(closes, a.records.len(), "{algo}: journal round_close count\n{raw}");
+        std::fs::remove_file(&observed.obs.trace_path).ok();
+    }
+}
+
+#[test]
+fn observed_mobile_multi_cell_is_bitwise_identical() {
+    let mut plain = native_cfg("paota");
+    plain.rounds = 5;
+    plain.topology.cells = 3;
+    plain.topology.mixing_every = 2;
+    plain.mobility.kind = paota::fl::mobility::MobilityKind::Markov;
+    plain.mobility.dwell_mean = 1.5;
+    let mut observed = plain.clone();
+    observed.obs.trace_path = obs_tmp("multi_cell");
+    observed.obs.sample_every = 1;
+    std::fs::remove_file(&observed.obs.trace_path).ok();
+
+    let ctx_a = TrainContext::new(&plain).unwrap();
+    let ctx_b = TrainContext::new(&observed).unwrap();
+    let a = fl::topology::multi_cell::run(&ctx_a, &plain).unwrap();
+    let b = fl::topology::multi_cell::run(&ctx_b, &observed).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (i, (x, y)) in b.cells.iter().zip(&a.cells).enumerate() {
+        assert_records_bitwise(&format!("observed cell {i}"), x, y);
+    }
+    assert_records_bitwise("observed merged", &b.merged, &a.merged);
+
+    // `handover` journal events mirror the mobility tally one-for-one
+    // (each `record_move` emits exactly one event at sample_every = 1).
+    let raw = std::fs::read_to_string(&observed.obs.trace_path).unwrap();
+    let hand = raw
+        .lines()
+        .filter(|l| l.contains("\"kind\":\"handover\""))
+        .count();
+    assert_eq!(hand, b.mobility.handovers, "journal handover count\n{raw}");
+    assert!(hand > 0, "dwell_mean 1.5 over 5 slots moved nobody");
+    std::fs::remove_file(&observed.obs.trace_path).ok();
+}
+
 #[test]
 fn parallel_campaign_replays_observers_in_declaration_order() {
     use paota::experiments::{Campaign, RunObserver, RunResult, Scenario, ScenarioResult};

@@ -21,6 +21,7 @@ use paota::config::{Algorithm, Config};
 use paota::fl::serve::proto::{self, FrameRead, Msg, RejectCode};
 use paota::fl::serve::{run_loadgen, Server};
 use paota::fl::{self, RunResult, TrainContext};
+use paota::obs::admin::http_get;
 
 /// Small native-kernel fleet (debug-mode CI friendly).
 fn serve_cfg() -> Config {
@@ -101,6 +102,90 @@ fn loopback_serve_is_bitwise_identical_to_library_run() {
     assert_eq!(outcome.stats.duplicates, 0);
     assert_eq!(outcome.stats.out_of_round, 0);
     assert!(outcome.sessions >= 1 && outcome.sessions <= 3, "{}", outcome.sessions);
+}
+
+/// Observation neutrality + scrape consistency: the loopback run with
+/// the obs layer fully on (admin listener, private registry, shared
+/// trace journal) stays bitwise identical to the library loop, the
+/// scraped counters agree *exactly* with the loadgen's own tallies, and
+/// `repro trace summarize` reproduces the loadgen's submit percentiles
+/// byte for byte.
+#[test]
+fn observed_loopback_matches_library_and_scrape_matches_loadgen() {
+    let mut cfg = serve_cfg();
+    cfg.serve.period_ms = 0;
+    cfg.serve.sessions = 2;
+
+    // Reference run *before* obs is switched on, so the journal holds
+    // only the observed run's events.
+    let library = fl::run(&cfg).unwrap();
+
+    let trace_path = std::env::temp_dir()
+        .join(format!("paota_serve_obs_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    std::fs::remove_file(&trace_path).ok();
+    cfg.obs.trace_path = trace_path.clone();
+    cfg.obs.sample_every = 1;
+    cfg.obs.admin_bind = "127.0.0.1:0".into();
+
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let admin = server.admin_addr().expect("admin listener requested");
+
+    // The admin listener is live from bind time.
+    assert_eq!(http_get(admin, "/healthz").unwrap(), "ok\n");
+
+    let (outcome, report) = std::thread::scope(|s| {
+        let lg_cfg = &cfg;
+        let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
+        let outcome = server.run().unwrap();
+        (outcome, lg.join().unwrap().unwrap())
+    });
+
+    assert_run_bitwise("observed loopback", &outcome.result, &library);
+    assert_eq!(report.lost, 0, "{report:?}");
+
+    // Exact-match accounting: every counter is bumped where its reply
+    // frame is written, and every frame lands at exactly one session, so
+    // the server's private registry and the loadgen tallies agree.
+    let get = |name: &str| outcome.metrics.counter(name).get();
+    assert_eq!(get("paota_serve_acks_total"), report.acks as u64, "{report:?}");
+    assert_eq!(get("paota_serve_duplicates_total"), report.duplicates as u64);
+    assert_eq!(get("paota_serve_out_of_round_total"), report.out_of_round as u64);
+    assert_eq!(get("paota_serve_busy_total"), report.busy as u64, "{report:?}");
+    assert_eq!(get("paota_serve_dispatched_total"), report.jobs as u64, "{report:?}");
+
+    // The scrape endpoints (still alive in the outcome) serve the same
+    // numbers over HTTP.
+    let text = http_get(admin, "/metrics").unwrap();
+    assert!(text.contains("# TYPE paota_serve_acks_total counter"), "{text}");
+    assert!(
+        text.contains(&format!("paota_serve_acks_total {}", report.acks)),
+        "{text}"
+    );
+    assert!(
+        text.contains(&format!("paota_serve_dispatched_total {}", report.jobs)),
+        "{text}"
+    );
+    let json = http_get(admin, "/metrics.json").unwrap();
+    assert!(json.contains("\"paota_serve_acks_total\""), "{json}");
+
+    // The journal replays into the loadgen's own percentile line: same
+    // samples (shortest round-trip f64 formatting), same nearest-rank
+    // helpers, same `{:.2}` formatting.
+    let summary = paota::obs::trace::summarize(&trace_path).unwrap();
+    assert!(
+        summary.contains(&format!("wire_submit {}", report.jobs)),
+        "{summary}"
+    );
+    let want = format!(
+        "# submit_ms p50={:.2} p90={:.2} p99={:.2}",
+        report.submit_p50_ms, report.submit_p90_ms, report.submit_p99_ms
+    );
+    assert!(summary.contains(&want), "summary missing {want:?}\n{summary}");
+    std::fs::remove_file(&trace_path).ok();
 }
 
 fn send(stream: &mut TcpStream, msg: &Msg) {
