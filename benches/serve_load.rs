@@ -18,6 +18,13 @@
 //! recording `rps_plain` vs `rps_scraped` and their `overhead_frac`
 //! (gate: < 3% on full runs — EXPERIMENTS.md §obs).
 //!
+//! A **fault-rate sweep** (PR 9) then re-runs one concurrency with
+//! chaos frame-drop rates ∈ {0%, 1%, 5%} and recovery on, recording
+//! throughput, reconnects, retries, and server-side recovered
+//! (reclaimed) jobs per rate — the price of the recovery machinery
+//! under increasing loss. Every fault setting still asserts `lost == 0`
+//! and a full round close (EXPERIMENTS.md §chaos).
+//!
 //! `PAOTA_BENCH_FAST=1` shrinks rounds/fleet/sweep for CI smoke runs;
 //! `PAOTA_BENCH_OUT` overrides the JSON output path.
 
@@ -76,14 +83,27 @@ struct Setting {
     report: LoadgenReport,
     accepted: usize,
     busy_server: usize,
+    /// Jobs the server reclaimed from dead/stalled sessions and
+    /// re-dispatched (0 with chaos off).
+    recovered: usize,
     /// `/metrics` scrapes answered during the run (0 without a scraper).
     scrapes: usize,
 }
 
-fn run_setting(fast: bool, sessions: usize, scrape_hz: Option<u64>) -> Setting {
+fn run_setting(fast: bool, sessions: usize, scrape_hz: Option<u64>, drop_rate: f64) -> Setting {
     let mut cfg = serve_cfg(fast, sessions);
     if scrape_hz.is_some() {
         cfg.obs.admin_bind = "127.0.0.1:0".into();
+    }
+    if drop_rate > 0.0 {
+        // Chaos leg: drop frames at `drop_rate` on both ends, recovery
+        // on, deadlines tightened so reclaim/retry cycles stay fast.
+        cfg.chaos.drop = drop_rate;
+        cfg.chaos.recovery = true;
+        cfg.chaos.session_deadline_ms = 300;
+        cfg.chaos.retry_base_ms = 5;
+        cfg.chaos.retry_max_ms = 100;
+        cfg.validate().unwrap();
     }
     let ctx = TrainContext::new(&cfg).unwrap();
     let server = Server::bind(&ctx, &cfg).unwrap();
@@ -140,6 +160,7 @@ fn run_setting(fast: bool, sessions: usize, scrape_hz: Option<u64>) -> Setting {
         wall_s,
         accepted: outcome.stats.accepted,
         busy_server: outcome.stats.busy,
+        recovered: outcome.stats.reclaimed,
         report,
         scrapes,
     }
@@ -152,7 +173,10 @@ fn main() {
     section(&format!(
         "serve: loopback serve+loadgen, lockstep schedule, sessions ∈ {sweep:?}"
     ));
-    let settings: Vec<Setting> = sweep.iter().map(|&n| run_setting(fast, n, None)).collect();
+    let settings: Vec<Setting> = sweep
+        .iter()
+        .map(|&n| run_setting(fast, n, None, 0.0))
+        .collect();
     let rss = peak_rss_mib();
 
     // Scrape overhead: the same setting with the admin listener bound
@@ -164,9 +188,9 @@ fn main() {
     let (mut rps_plain, mut rps_scraped) = (0.0f64, 0.0f64);
     let mut scrapes = 0usize;
     for _ in 0..2 {
-        let p = run_setting(fast, probe_sessions, None);
+        let p = run_setting(fast, probe_sessions, None, 0.0);
         rps_plain = rps_plain.max(p.report.requests_per_sec);
-        let o = run_setting(fast, probe_sessions, Some(1));
+        let o = run_setting(fast, probe_sessions, Some(1), 0.0);
         rps_scraped = rps_scraped.max(o.report.requests_per_sec);
         scrapes += o.scrapes;
     }
@@ -185,6 +209,31 @@ fn main() {
             overhead_frac * 100.0
         );
     }
+
+    // Fault-rate sweep: the cost of losing (and recovering) frames.
+    // Every leg still holds the hard gates — `lost == 0`, all rounds
+    // closed — inside run_setting.
+    section("serve: fault-rate sweep — chaos drop ∈ {0%, 1%, 5%}, recovery on");
+    let fault_rates = [0.0, 0.01, 0.05];
+    let fault_sessions = 4;
+    let fault_settings: Vec<(f64, Setting)> = fault_rates
+        .iter()
+        .map(|&d| {
+            let s = run_setting(fast, fault_sessions, None, d);
+            println!(
+                "drop={:>4.1}%  {:.0} req/s  jobs {}  reconnects {}  retries {}  \
+                 faults {}  recovered {}",
+                d * 100.0,
+                s.report.requests_per_sec,
+                s.report.jobs,
+                s.report.reconnects,
+                s.report.retries,
+                s.report.faults,
+                s.recovered,
+            );
+            (d, s)
+        })
+        .collect();
 
     let out_path = std::env::var("PAOTA_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     let rows = settings
@@ -224,10 +273,41 @@ fn main() {
         jnum(Some(rps_scraped)),
         jnum(Some(overhead_frac)),
     );
+    let fault_rows = fault_settings
+        .iter()
+        .map(|(d, s)| {
+            let r = &s.report;
+            format!(
+                "{{\"drop_rate\": {}, \"sessions\": {}, \"rounds\": {}, \
+                 \"requests_per_sec\": {}, \"jobs\": {}, \"acks\": {}, \
+                 \"duplicates\": {}, \"out_of_round\": {}, \"lost\": {}, \
+                 \"reconnects\": {}, \"retries\": {}, \"faults\": {}, \
+                 \"gave_up\": {}, \"recovered\": {}, \"submit_p50_ms\": {}, \
+                 \"submit_p99_ms\": {}}}",
+                jnum(Some(*d)),
+                s.sessions,
+                s.rounds,
+                jnum(Some(r.requests_per_sec)),
+                r.jobs,
+                r.acks,
+                r.duplicates,
+                r.out_of_round,
+                r.lost,
+                r.reconnects,
+                r.retries,
+                r.faults,
+                r.gave_up,
+                s.recovered,
+                jnum(Some(r.submit_p50_ms)),
+                jnum(Some(r.submit_p99_ms)),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
     let json = format!(
-        "{{\n  \"schema\": \"paota-bench-serve/2\",\n  \"fast_mode\": {fast},\n  \
+        "{{\n  \"schema\": \"paota-bench-serve/3\",\n  \"fast_mode\": {fast},\n  \
          \"peak_rss_mib\": {},\n  \"settings\": [\n    {rows}\n  ],\n  \
-         \"scrape_overhead\": {scrape}\n}}\n",
+         \"scrape_overhead\": {scrape},\n  \"fault_sweep\": [\n    {fault_rows}\n  ]\n}}\n",
         jnum(rss),
     );
     std::fs::write(&out_path, json).unwrap();

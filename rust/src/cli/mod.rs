@@ -117,6 +117,9 @@ CONFIG KEYS (defaults = paper §IV-A):
     serve_bind serve_max_sessions serve_queue_depth serve_period_ms
     serve_sessions serve_pace_ms
     obs_trace_path obs_sample_every obs_admin_bind
+    chaos_drop chaos_delay chaos_delay_ms chaos_truncate chaos_corrupt
+    chaos_disconnect chaos_recovery chaos_session_deadline_ms
+    chaos_retry_base_ms chaos_retry_max_ms chaos_max_retries
     side pixel_noise label_noise jitter eval_every artifacts_dir
     (--algo accepts any of: {})
     (latency_kind: uniform|homogeneous|bimodal|lognormal|gilbert_elliott)
@@ -138,6 +141,13 @@ CONFIG KEYS (defaults = paper §IV-A):
      /metrics + /healthz from `repro serve` — all off by default and
      bitwise-neutral when on; `trace summarize --obs_trace_path F` replays
      a journal)
+    (chaos: per-frame fault rates on the serve/loadgen wire — drop, delay
+     [delay_ms], truncate, corrupt, disconnect; deterministic per seed.
+     chaos_recovery reconnects-and-resumes with jittered backoff
+     [chaos_retry_base_ms..chaos_retry_max_ms, chaos_max_retries] and the
+     server reclaims jobs idle past chaos_session_deadline_ms — with it,
+     lockstep serve stays bitwise equal to the library loop; without it,
+     period-mode rounds still close with whoever arrived)
 ",
         names.join("|")
     )
@@ -412,6 +422,52 @@ mod tests {
             "obs_trace_path",
             "obs_sample_every",
             "obs_admin_bind",
+        ] {
+            assert!(h.contains(needle), "help text missing {needle}");
+        }
+    }
+
+    #[test]
+    fn chaos_keys_parse_from_the_cli() {
+        let cli = parse(&args(&[
+            "serve",
+            "--chaos_drop",
+            "0.05",
+            "--chaos_disconnect",
+            "0.01",
+            "--chaos_recovery",
+            "false",
+            "--chaos_session_deadline_ms",
+            "750",
+            "--chaos_max_retries",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.chaos.drop, 0.05);
+        assert_eq!(cli.config.chaos.disconnect, 0.01);
+        assert!(!cli.config.chaos.recovery);
+        assert_eq!(cli.config.chaos.session_deadline_ms, 750);
+        assert_eq!(cli.config.chaos.max_retries, 3);
+
+        // Out-of-range rates and degenerate knobs are parse errors.
+        assert!(parse(&args(&["serve", "--chaos_drop", "1.5"])).is_err());
+        assert!(parse(&args(&["loadgen", "--chaos_max_retries", "0"])).is_err());
+        assert!(parse(&args(&["serve", "--chaos_delay", "lots"])).is_err());
+
+        // Help advertises every [chaos] key.
+        let h = help_text();
+        for needle in [
+            "chaos_drop",
+            "chaos_delay",
+            "chaos_delay_ms",
+            "chaos_truncate",
+            "chaos_corrupt",
+            "chaos_disconnect",
+            "chaos_recovery",
+            "chaos_session_deadline_ms",
+            "chaos_retry_base_ms",
+            "chaos_retry_max_ms",
+            "chaos_max_retries",
         ] {
             assert!(h.contains(needle), "help text missing {needle}");
         }

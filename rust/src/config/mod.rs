@@ -372,6 +372,83 @@ impl Default for ObsConfig {
     }
 }
 
+/// Chaos-engineering knobs (`[chaos]`): seed-deterministic wire-fault
+/// injection for `repro serve` / `repro loadgen` plus the recovery
+/// machinery that absorbs the faults (`fl::serve::{chaos, retry}`).
+/// All rates are per-outgoing-frame probabilities and default to 0 —
+/// with this section unset the wire is a transparent passthrough and
+/// every serve/loadgen run is bitwise identical to a pre-chaos build.
+/// At most one fault fires per frame (a single uniform draw against
+/// the cumulative rates), so `validate` caps the rate sum at 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// P(frame silently swallowed — writer sees success, peer nothing).
+    pub drop: f64,
+    /// P(frame delivered intact after `delay_ms` extra latency).
+    pub delay: f64,
+    /// Extra latency injected by a `delay` fault, in milliseconds.
+    pub delay_ms: u64,
+    /// P(a strict prefix of the frame is delivered, then the
+    /// connection dies — the peer sees a prompt mid-frame EOF).
+    pub truncate: f64,
+    /// P(one bit flipped past the length prefix — the peer reads a
+    /// full frame and fails the checksum cleanly).
+    pub corrupt: f64,
+    /// P(connection killed before the frame leaves).
+    pub disconnect: f64,
+    /// Loadgen recovery switch. `true` (default): sessions reconnect
+    /// with a resume token under jittered exponential backoff and
+    /// resubmit the pending update, so every injected loss is
+    /// recovered (`lost == 0`, lockstep stays bitwise). `false`:
+    /// a failed session ends quietly and its losses surface in the
+    /// report / obs counters — rounds still close via the period
+    /// deadline (liveness, no wedge).
+    pub recovery: bool,
+    /// Both sides' patience, in milliseconds: the server reclaims and
+    /// re-queues jobs held by a session idle this long, and a chaos-on
+    /// loadgen session abandons an exchange (and reconnects) after
+    /// waiting this long for a reply.
+    pub session_deadline_ms: u64,
+    /// Backoff base delay (first retry ≈ `retry_base_ms`, then ×2 per
+    /// consecutive failure, jittered to [0.5, 1.0)× — `serve::retry`).
+    pub retry_base_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub retry_max_ms: u64,
+    /// Consecutive no-progress reconnect attempts before a loadgen
+    /// session gives up (progress resets the count).
+    pub max_retries: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            drop: 0.0,
+            delay: 0.0,
+            delay_ms: 20,
+            truncate: 0.0,
+            corrupt: 0.0,
+            disconnect: 0.0,
+            recovery: true,
+            session_deadline_ms: 2000,
+            retry_base_ms: 10,
+            retry_max_ms: 500,
+            max_retries: 8,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// True when any fault can fire (loadgen uses this to decide
+    /// whether to arm read timeouts / reply deadlines).
+    pub fn any_faults(&self) -> bool {
+        self.drop > 0.0
+            || self.delay > 0.0
+            || self.truncate > 0.0
+            || self.corrupt > 0.0
+            || self.disconnect > 0.0
+    }
+}
+
 /// Full experiment configuration. Field defaults reproduce the paper.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -451,6 +528,8 @@ pub struct Config {
     pub serve: ServeConfig,
     /// Observability (trace journal / scrape endpoint).
     pub obs: ObsConfig,
+    /// Wire-fault injection & recovery (`repro serve` / `repro loadgen`).
+    pub chaos: ChaosConfig,
     /// Evaluate every `eval_every` rounds (1 = every round).
     pub eval_every: usize,
     /// Where AOT artifacts live.
@@ -496,6 +575,7 @@ impl Default for Config {
             fleet: FleetConfig::default(),
             serve: ServeConfig::default(),
             obs: ObsConfig::default(),
+            chaos: ChaosConfig::default(),
             eval_every: 1,
             artifacts_dir: crate::runtime::ModelRuntime::default_dir(),
         }
@@ -560,6 +640,17 @@ impl Config {
             "obs_trace_path" => self.obs.trace_path = value.to_string(),
             "obs_sample_every" => self.obs.sample_every = p(key, value)?,
             "obs_admin_bind" => self.obs.admin_bind = value.to_string(),
+            "chaos_drop" => self.chaos.drop = p(key, value)?,
+            "chaos_delay" => self.chaos.delay = p(key, value)?,
+            "chaos_delay_ms" => self.chaos.delay_ms = p(key, value)?,
+            "chaos_truncate" => self.chaos.truncate = p(key, value)?,
+            "chaos_corrupt" => self.chaos.corrupt = p(key, value)?,
+            "chaos_disconnect" => self.chaos.disconnect = p(key, value)?,
+            "chaos_recovery" => self.chaos.recovery = p(key, value)?,
+            "chaos_session_deadline_ms" => self.chaos.session_deadline_ms = p(key, value)?,
+            "chaos_retry_base_ms" => self.chaos.retry_base_ms = p(key, value)?,
+            "chaos_retry_max_ms" => self.chaos.retry_max_ms = p(key, value)?,
+            "chaos_max_retries" => self.chaos.max_retries = p(key, value)?,
             "force_beta" => {
                 self.force_beta = if value.eq_ignore_ascii_case("none") {
                     None
@@ -762,6 +853,36 @@ impl Config {
                 obs.admin_bind
             );
         }
+        let chaos = &self.chaos;
+        for (key, rate) in [
+            ("chaos_drop", chaos.drop),
+            ("chaos_delay", chaos.delay),
+            ("chaos_truncate", chaos.truncate),
+            ("chaos_corrupt", chaos.corrupt),
+            ("chaos_disconnect", chaos.disconnect),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("{key} must be a probability in [0,1]");
+            }
+        }
+        if chaos.drop + chaos.delay + chaos.truncate + chaos.corrupt + chaos.disconnect > 1.0 {
+            bail!("chaos fault rates must sum to ≤ 1 (at most one fault fires per frame)");
+        }
+        if chaos.delay_ms > 10_000 {
+            bail!("chaos_delay_ms must be ≤ 10000");
+        }
+        if !(100..=600_000).contains(&chaos.session_deadline_ms) {
+            bail!("chaos_session_deadline_ms must be in 100..=600000");
+        }
+        if chaos.retry_base_ms == 0 || chaos.retry_base_ms > chaos.retry_max_ms {
+            bail!("chaos_retry_base_ms must be in 1..=chaos_retry_max_ms");
+        }
+        if chaos.retry_max_ms > 60_000 {
+            bail!("chaos_retry_max_ms must be ≤ 60000");
+        }
+        if chaos.max_retries == 0 || chaos.max_retries > 1000 {
+            bail!("chaos_max_retries must be in 1..=1000");
+        }
         Ok(())
     }
 
@@ -891,6 +1012,20 @@ impl Config {
         kv("obs_trace_path", self.obs.trace_path.clone());
         kv("obs_sample_every", self.obs.sample_every.to_string());
         kv("obs_admin_bind", self.obs.admin_bind.clone());
+        kv("chaos_drop", self.chaos.drop.to_string());
+        kv("chaos_delay", self.chaos.delay.to_string());
+        kv("chaos_delay_ms", self.chaos.delay_ms.to_string());
+        kv("chaos_truncate", self.chaos.truncate.to_string());
+        kv("chaos_corrupt", self.chaos.corrupt.to_string());
+        kv("chaos_disconnect", self.chaos.disconnect.to_string());
+        kv("chaos_recovery", self.chaos.recovery.to_string());
+        kv(
+            "chaos_session_deadline_ms",
+            self.chaos.session_deadline_ms.to_string(),
+        );
+        kv("chaos_retry_base_ms", self.chaos.retry_base_ms.to_string());
+        kv("chaos_retry_max_ms", self.chaos.retry_max_ms.to_string());
+        kv("chaos_max_retries", self.chaos.max_retries.to_string());
         kv("side", self.synth.side.to_string());
         kv("pixel_noise", self.synth.pixel_noise.to_string());
         kv("label_noise", self.synth.label_noise.to_string());
@@ -1179,6 +1314,60 @@ mod tests {
     }
 
     #[test]
+    fn chaos_keys_parse_and_validate() {
+        let mut c = Config::default();
+        // Defaults: every rate zero, recovery on.
+        assert!(!c.chaos.any_faults());
+        assert!(c.chaos.recovery);
+        c.validate().unwrap();
+
+        c.set("chaos_drop", "0.05").unwrap();
+        c.set("chaos_delay", "0.1").unwrap();
+        c.set("chaos_delay_ms", "15").unwrap();
+        c.set("chaos_truncate", "0.02").unwrap();
+        c.set("chaos_corrupt", "0.03").unwrap();
+        c.set("chaos_disconnect", "0.02").unwrap();
+        c.set("chaos_recovery", "false").unwrap();
+        c.set("chaos_session_deadline_ms", "400").unwrap();
+        c.set("chaos_retry_base_ms", "5").unwrap();
+        c.set("chaos_retry_max_ms", "100").unwrap();
+        c.set("chaos_max_retries", "12").unwrap();
+        c.validate().unwrap();
+        assert!(c.chaos.any_faults());
+        assert!(!c.chaos.recovery);
+        assert_eq!(c.chaos.session_deadline_ms, 400);
+        assert_eq!(c.chaos.max_retries, 12);
+
+        // Degenerate values rejected.
+        let mut c = Config::default();
+        c.set("chaos_drop", "1.5").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("chaos_corrupt", "-0.1").unwrap();
+        assert!(c.validate().is_err());
+        // Rates summing past 1 rejected (one draw per frame).
+        let mut c = Config::default();
+        c.set("chaos_drop", "0.6").unwrap();
+        c.set("chaos_disconnect", "0.6").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("chaos_session_deadline_ms", "50").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("chaos_retry_base_ms", "0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.set("chaos_retry_base_ms", "600").unwrap();
+        assert!(c.validate().is_err(), "base above max rejected");
+        let mut c = Config::default();
+        c.set("chaos_max_retries", "0").unwrap();
+        assert!(c.validate().is_err());
+        // Non-parseable values rejected at set time.
+        assert!(Config::default().set("chaos_recovery", "maybe").is_err());
+        assert!(Config::default().set("chaos_drop", "lots").is_err());
+    }
+
+    #[test]
     fn latency_kind_roundtrip_and_models() {
         for kind in ["uniform", "homogeneous", "bimodal", "lognormal", "gilbert_elliott"] {
             assert_eq!(LatencyKind::parse(kind).unwrap().name(), kind);
@@ -1263,6 +1452,17 @@ mod tests {
         c.set("obs_trace_path", "/tmp/t.jsonl").unwrap();
         c.set("obs_sample_every", "4").unwrap();
         c.set("obs_admin_bind", "127.0.0.1:7448").unwrap();
+        c.set("chaos_drop", "0.05").unwrap();
+        c.set("chaos_delay", "0.1").unwrap();
+        c.set("chaos_delay_ms", "15").unwrap();
+        c.set("chaos_truncate", "0.01").unwrap();
+        c.set("chaos_corrupt", "0.02").unwrap();
+        c.set("chaos_disconnect", "0.03").unwrap();
+        c.set("chaos_recovery", "false").unwrap();
+        c.set("chaos_session_deadline_ms", "750").unwrap();
+        c.set("chaos_retry_base_ms", "7").unwrap();
+        c.set("chaos_retry_max_ms", "300").unwrap();
+        c.set("chaos_max_retries", "11").unwrap();
 
         std::fs::write(&path, c.to_kv_string()).unwrap();
         let mut back = Config::default();
@@ -1287,6 +1487,10 @@ mod tests {
         assert_eq!(back.obs.trace_path, "/tmp/t.jsonl");
         assert_eq!(back.obs.sample_every, 4);
         assert_eq!(back.obs.admin_bind, "127.0.0.1:7448");
+        assert_eq!(back.chaos.drop, 0.05);
+        assert!(!back.chaos.recovery);
+        assert_eq!(back.chaos.session_deadline_ms, 750);
+        assert_eq!(back.chaos.max_retries, 11);
 
         // The default config round-trips too.
         let d = Config::default();

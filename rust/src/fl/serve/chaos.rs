@@ -1,0 +1,402 @@
+//! `serve::chaos` — seed-deterministic wire-fault injection.
+//!
+//! A [`ChaosStream`] wraps a stream and plays adversary on the **write**
+//! side: every outgoing frame (the serve stack writes each frame with a
+//! single `write_all` of the fully-encoded buffer, so one `write` call
+//! equals one frame) draws once from a dedicated [`crate::util::Rng`]
+//! stream and suffers at most one fault per the [`FaultPlan`] rates:
+//!
+//! | kind       | effect on the frame                                      |
+//! |------------|----------------------------------------------------------|
+//! | drop       | swallowed — the writer sees success, the peer sees nothing |
+//! | delay      | delivered intact after `delay_ms` of extra latency        |
+//! | truncate   | a prefix is delivered, then the connection dies           |
+//! | corrupt    | delivered with one bit flipped past the length prefix     |
+//! | disconnect | nothing delivered, the connection dies                    |
+//!
+//! Corruption deliberately spares the 4-byte length prefix so the peer
+//! reads a complete frame and fails the checksum (a clean `Corrupt`
+//! classification) instead of desynchronizing the framing. Truncate and
+//! disconnect mark the stream dead and return an error immediately, so
+//! the faulted side tears down fast and the peer observes a prompt EOF
+//! rather than a mid-frame stall.
+//!
+//! Reads pass through untouched: each direction of the wire is faulted
+//! by its writer, so wrapping both the server's and loadgen's streams
+//! makes both directions face the same adversary. Determinism comes
+//! from `Rng::for_entity(seed, stream_tag, entity)` — the server keys
+//! entities off a per-accept counter and loadgen off
+//! `(session_idx, connection_seq)`, so a reconnect draws a *fresh*
+//! fault schedule instead of replaying the one that just killed it.
+//!
+//! An inert plan (all rates zero) short-circuits: no RNG draws, no
+//! overhead, byte-identical passthrough — which is what keeps the
+//! chaos-off golden tests untouched by this layer.
+
+use std::io::{self, Read, Write};
+
+use crate::config::ChaosConfig;
+use crate::util::Rng;
+
+/// RNG stream tag for server-side fault draws.
+pub const STREAM_CHAOS_SERVER: u64 = 0xc405;
+/// RNG stream tag for client-side (loadgen) fault draws.
+pub const STREAM_CHAOS_CLIENT: u64 = 0xc40c;
+
+/// The injectable wire fault kinds. See the module docs for semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop,
+    Delay,
+    Truncate,
+    Corrupt,
+    Disconnect,
+}
+
+impl FaultKind {
+    /// All kinds, in metric/report order.
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::Drop,
+        FaultKind::Delay,
+        FaultKind::Truncate,
+        FaultKind::Corrupt,
+        FaultKind::Disconnect,
+    ];
+
+    /// Stable lowercase name (metric suffixes, trace fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Disconnect => "disconnect",
+        }
+    }
+
+    /// Index into [`FaultKind::ALL`]-ordered tables.
+    pub fn index(self) -> usize {
+        match self {
+            FaultKind::Drop => 0,
+            FaultKind::Delay => 1,
+            FaultKind::Truncate => 2,
+            FaultKind::Corrupt => 3,
+            FaultKind::Disconnect => 4,
+        }
+    }
+}
+
+/// Per-frame fault rates plus the delay magnitude. Rates are
+/// per-outgoing-frame probabilities; at most one fault fires per frame
+/// (a single uniform draw against the cumulative rates), so
+/// `Config::validate` caps their sum at 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub drop: f64,
+    pub delay: f64,
+    pub truncate: f64,
+    pub corrupt: f64,
+    pub disconnect: f64,
+    pub delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// The all-zero plan: a transparent wire.
+    pub fn inert() -> Self {
+        Self {
+            drop: 0.0,
+            delay: 0.0,
+            truncate: 0.0,
+            corrupt: 0.0,
+            disconnect: 0.0,
+            delay_ms: 0,
+        }
+    }
+
+    /// Build the plan from the `[chaos]` config section.
+    pub fn from_cfg(c: &ChaosConfig) -> Self {
+        Self {
+            drop: c.drop,
+            delay: c.delay,
+            truncate: c.truncate,
+            corrupt: c.corrupt,
+            disconnect: c.disconnect,
+            delay_ms: c.delay_ms,
+        }
+    }
+
+    /// True when no fault can ever fire. Inert streams never touch
+    /// their RNG, so wrapping a healthy wire is free and byte-exact.
+    pub fn is_inert(&self) -> bool {
+        self.drop <= 0.0
+            && self.delay <= 0.0
+            && self.truncate <= 0.0
+            && self.corrupt <= 0.0
+            && self.disconnect <= 0.0
+    }
+}
+
+fn killed() -> io::Error {
+    io::Error::new(
+        io::ErrorKind::ConnectionAborted,
+        "chaos: connection killed by injected fault",
+    )
+}
+
+/// A fault-injecting wrapper around a frame-oriented stream. Writes are
+/// faulted per the plan; reads pass through until an injected
+/// truncate/disconnect marks the stream dead.
+pub struct ChaosStream<S> {
+    inner: S,
+    plan: FaultPlan,
+    rng: Rng,
+    dead: bool,
+    counts: [u64; 5],
+    events: Vec<FaultKind>,
+}
+
+impl<S> ChaosStream<S> {
+    /// Wrap `inner` with a fault plan and a dedicated RNG (use
+    /// `Rng::for_entity` with [`STREAM_CHAOS_SERVER`] /
+    /// [`STREAM_CHAOS_CLIENT`] and a never-reused entity id).
+    pub fn new(inner: S, plan: FaultPlan, rng: Rng) -> Self {
+        Self {
+            inner,
+            plan,
+            rng,
+            dead: false,
+            counts: [0; 5],
+            events: Vec::new(),
+        }
+    }
+
+    /// Borrow the wrapped stream (e.g. to set socket timeouts).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Per-kind injected-fault counts, [`FaultKind::ALL`]-ordered.
+    pub fn counts(&self) -> [u64; 5] {
+        self.counts
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Drain the faults injected since the last call, in order. Callers
+    /// fold these into metrics/trace after each send.
+    pub fn take_events(&mut self) -> Vec<FaultKind> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// One uniform draw against the cumulative rates: at most one fault
+    /// per frame. Inert plans never touch the RNG.
+    fn decide(&mut self) -> Option<FaultKind> {
+        if self.plan.is_inert() {
+            return None;
+        }
+        let u = self.rng.f64();
+        let p = self.plan;
+        let mut acc = 0.0;
+        for (kind, rate) in [
+            (FaultKind::Drop, p.drop),
+            (FaultKind::Delay, p.delay),
+            (FaultKind::Truncate, p.truncate),
+            (FaultKind::Corrupt, p.corrupt),
+            (FaultKind::Disconnect, p.disconnect),
+        ] {
+            acc += rate;
+            if rate > 0.0 && u < acc {
+                return Some(kind);
+            }
+        }
+        None
+    }
+
+    fn note(&mut self, kind: FaultKind) {
+        self.counts[kind.index()] += 1;
+        self.events.push(kind);
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(killed());
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    /// Consumes the whole `buf` (one frame) and applies at most one
+    /// fault. Always returns `Ok(buf.len())` on the non-fatal paths so
+    /// the caller's `write_all` never re-enters with a partial frame.
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(killed());
+        }
+        match self.decide() {
+            None => {
+                self.inner.write_all(buf)?;
+                Ok(buf.len())
+            }
+            Some(FaultKind::Drop) => {
+                self.note(FaultKind::Drop);
+                Ok(buf.len())
+            }
+            Some(FaultKind::Delay) => {
+                self.note(FaultKind::Delay);
+                std::thread::sleep(std::time::Duration::from_millis(self.plan.delay_ms));
+                self.inner.write_all(buf)?;
+                Ok(buf.len())
+            }
+            Some(FaultKind::Truncate) => {
+                self.note(FaultKind::Truncate);
+                let cut = if buf.is_empty() {
+                    0
+                } else {
+                    self.rng.index(buf.len())
+                };
+                let _ = self.inner.write_all(&buf[..cut]);
+                let _ = self.inner.flush();
+                self.dead = true;
+                Err(killed())
+            }
+            Some(FaultKind::Corrupt) => {
+                self.note(FaultKind::Corrupt);
+                let mut tampered = buf.to_vec();
+                if tampered.len() > 4 {
+                    // Flip one bit past the length prefix: the peer reads
+                    // a full frame and fails the checksum cleanly.
+                    let at = 4 + self.rng.index(tampered.len() - 4);
+                    let bit = self.rng.index(8) as u8;
+                    tampered[at] ^= 1 << bit;
+                } else if let Some(last) = tampered.last_mut() {
+                    *last ^= 1;
+                }
+                self.inner.write_all(&tampered)?;
+                Ok(buf.len())
+            }
+            Some(FaultKind::Disconnect) => {
+                self.note(FaultKind::Disconnect);
+                self.dead = true;
+                Err(killed())
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.dead {
+            return Err(killed());
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn rng() -> Rng {
+        Rng::for_entity(7, STREAM_CHAOS_SERVER, 0)
+    }
+
+    fn plan_one(kind: FaultKind) -> FaultPlan {
+        let mut p = FaultPlan::inert();
+        match kind {
+            FaultKind::Drop => p.drop = 1.0,
+            FaultKind::Delay => p.delay = 1.0,
+            FaultKind::Truncate => p.truncate = 1.0,
+            FaultKind::Corrupt => p.corrupt = 1.0,
+            FaultKind::Disconnect => p.disconnect = 1.0,
+        }
+        p
+    }
+
+    #[test]
+    fn inert_plan_is_a_transparent_wire() {
+        let mut s = ChaosStream::new(Vec::new(), FaultPlan::inert(), rng());
+        s.write_all(&[1, 2, 3, 4, 5, 6]).unwrap();
+        s.write_all(&[7, 8]).unwrap();
+        assert_eq!(s.get_ref().as_slice(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(s.injected(), 0);
+        assert!(s.take_events().is_empty());
+    }
+
+    #[test]
+    fn drop_swallows_the_frame_but_reports_success() {
+        let mut s = ChaosStream::new(Vec::new(), plan_one(FaultKind::Drop), rng());
+        s.write_all(&[9; 16]).unwrap();
+        assert!(s.get_ref().is_empty());
+        assert_eq!(s.counts()[FaultKind::Drop.index()], 1);
+        assert_eq!(s.take_events(), vec![FaultKind::Drop]);
+    }
+
+    #[test]
+    fn disconnect_kills_the_stream_for_good() {
+        let inner = std::io::Cursor::new(Vec::new());
+        let mut s = ChaosStream::new(inner, plan_one(FaultKind::Disconnect), rng());
+        assert!(s.write_all(&[1, 2, 3]).is_err());
+        assert!(s.write_all(&[4]).is_err());
+        let mut buf = [0u8; 4];
+        assert!(s.read(&mut buf).is_err());
+        assert_eq!(s.counts()[FaultKind::Disconnect.index()], 1);
+    }
+
+    #[test]
+    fn truncate_delivers_a_strict_prefix_then_dies() {
+        let frame = [0xabu8; 32];
+        let mut s = ChaosStream::new(Vec::new(), plan_one(FaultKind::Truncate), rng());
+        assert!(s.write_all(&frame).is_err());
+        assert!(s.get_ref().len() < frame.len());
+        assert_eq!(s.get_ref().as_slice(), &frame[..s.get_ref().len()]);
+        assert!(s.write_all(&frame).is_err());
+    }
+
+    #[test]
+    fn corrupt_flips_exactly_one_bit_past_the_prefix() {
+        let frame: Vec<u8> = (0..64).collect();
+        let mut s = ChaosStream::new(Vec::new(), plan_one(FaultKind::Corrupt), rng());
+        s.write_all(&frame).unwrap();
+        let out = s.get_ref().clone();
+        assert_eq!(out.len(), frame.len());
+        assert_eq!(&out[..4], &frame[..4], "length prefix must stay intact");
+        let flipped: u32 = frame
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_entity() {
+        let plan = FaultPlan {
+            drop: 0.2,
+            delay: 0.0,
+            truncate: 0.1,
+            corrupt: 0.2,
+            disconnect: 0.1,
+            delay_ms: 0,
+        };
+        let run = |entity: u64| {
+            let rng = Rng::for_entity(42, STREAM_CHAOS_CLIENT, entity);
+            let mut s = ChaosStream::new(Vec::new(), plan, rng);
+            let mut kinds = Vec::new();
+            for _ in 0..50 {
+                if s.write_all(&[0u8; 8]).is_err() {
+                    break;
+                }
+                kinds.extend(s.take_events());
+            }
+            kinds.extend(s.take_events());
+            kinds
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "distinct entities draw distinct schedules");
+    }
+}

@@ -18,6 +18,19 @@
 //! Every submit is retried through [`Msg::Busy`] backpressure until a
 //! terminal reply (ack or reject) lands, so `lost` — jobs with no
 //! terminal outcome — must come out 0 on a healthy server.
+//!
+//! **Failure handling** (`[chaos]`, PR 9): each connection is wrapped
+//! in a [`ChaosStream`] so the client faces the same injected adversary
+//! as the server. With fault rates configured, a session arms a read
+//! timeout and abandons any exchange that sees no reply within
+//! `chaos_session_deadline_ms`. A trained-but-unacknowledged update is
+//! kept as the session's *pending* job across connection failures; with
+//! `chaos_recovery = true` the session reconnects under the shared
+//! jittered backoff ([`super::retry::Backoff`]), announces its prior
+//! session id in `Hello.resume`, and resubmits — so every injected loss
+//! is recovered and `lost` stays 0. With recovery off a failed session
+//! ends quietly (`gave_up`), its losses surface in the report, and the
+//! server's deadline-reclaim keeps the rounds closing without it.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -30,13 +43,16 @@ use crate::obs::trace::{TraceSink, V};
 use crate::runtime::ModelRuntime;
 use crate::util::Rng;
 
+use super::chaos::{ChaosStream, FaultPlan, STREAM_CHAOS_CLIENT};
 use super::proto::{self, FrameRead, Msg, RejectCode};
+use super::retry::Backoff;
 
 /// Loadgen RNG stream tag (per-session think-time draws).
 const STREAM_LOADGEN: u64 = 0x10ad;
 
-/// Backoff after a `Busy` reply (submit retry / session-cap reconnect).
-const BUSY_BACKOFF: Duration = Duration::from_millis(10);
+/// Read-poll interval when chaos arms a client-side read timeout
+/// (matches the server's tick).
+const TICK: Duration = Duration::from_millis(100);
 
 /// Aggregated wire metrics for one loadgen run.
 #[derive(Debug, Clone)]
@@ -51,13 +67,22 @@ pub struct LoadgenReport {
     pub out_of_round: usize,
     /// `Busy` replies absorbed (submit retries + session-cap rejects).
     pub busy: usize,
-    /// Jobs that never reached a terminal ack/reject — 0 on a healthy run.
+    /// Jobs that never reached a terminal ack/reject — 0 on a healthy
+    /// run, and still 0 under chaos when recovery is on.
     pub lost: usize,
+    /// Reconnect-and-resume cycles across all sessions.
+    pub reconnects: usize,
+    /// Backoff pauses taken (Busy retries + session-cap redials).
+    pub retries: usize,
+    /// Faults the client-side chaos wrapper injected.
+    pub faults: usize,
+    /// Sessions that exhausted recovery (or had it off) and ended early.
+    pub gave_up: usize,
     pub wall_secs: f64,
     /// All request frames sent (hello + fetch + submit attempts) per second.
     pub requests_per_sec: f64,
     /// Submit latency: first submit frame sent → terminal reply read,
-    /// including any Busy retry cycles in between.
+    /// including any Busy retry and reconnect cycles in between.
     pub submit_p50_ms: f64,
     pub submit_p90_ms: f64,
     pub submit_p99_ms: f64,
@@ -71,7 +96,18 @@ struct Tally {
     out_of_round: usize,
     busy: usize,
     requests: usize,
+    reconnects: usize,
+    retries: usize,
+    faults: usize,
+    gave_up: usize,
     latencies_ms: Vec<f64>,
+}
+
+impl Tally {
+    /// Jobs with a terminal outcome (ack or reject).
+    fn resolved(&self) -> usize {
+        self.acks + self.duplicates + self.out_of_round
+    }
 }
 
 /// Run `cfg.serve.sessions` concurrent client sessions against the
@@ -122,14 +158,16 @@ pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
         total.out_of_round += t.out_of_round;
         total.busy += t.busy;
         total.requests += t.requests;
+        total.reconnects += t.reconnects;
+        total.retries += t.retries;
+        total.faults += t.faults;
+        total.gave_up += t.gave_up;
         total.latencies_ms.extend(t.latencies_ms);
     }
     total
         .latencies_ms
         .sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let lost = total
-        .jobs
-        .saturating_sub(total.acks + total.duplicates + total.out_of_round);
+    let lost = total.jobs.saturating_sub(total.resolved());
     Ok(LoadgenReport {
         sessions,
         jobs: total.jobs,
@@ -138,6 +176,10 @@ pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
         out_of_round: total.out_of_round,
         busy: total.busy,
         lost,
+        reconnects: total.reconnects,
+        retries: total.retries,
+        faults: total.faults,
+        gave_up: total.gave_up,
         wall_secs,
         requests_per_sec: total.requests as f64 / wall_secs.max(1e-9),
         // Shared nearest-rank helpers (`obs::hist`) — the same math
@@ -148,154 +190,365 @@ pub fn run_loadgen(cfg: &Config, addr: &str) -> Result<LoadgenReport> {
     })
 }
 
-/// Read one message on a blocking client stream.
-fn read_reply(stream: &mut TcpStream) -> Result<Msg> {
-    loop {
-        match proto::read_msg(stream)? {
-            FrameRead::Msg(m) => return Ok(m),
-            FrameRead::Eof => bail!("server closed the session"),
-            // No read timeout is set client-side, but tolerate one anyway.
-            FrameRead::IdleTimeout => continue,
-        }
-    }
+/// A trained update awaiting its terminal reply. Survives connection
+/// failures: the session resubmits it first on every reconnect, so an
+/// injected loss between train and ack never loses the work.
+struct Pending {
+    client: u64,
+    round: u64,
+    staleness: u64,
+    loss: f32,
+    weights: Vec<f32>,
+    t0: Instant,
 }
 
-/// Connect + handshake, backing off through session-cap `Busy` replies
-/// and startup connection refusals.
-fn connect(addr: &str, idx: usize, tally: &mut Tally) -> Result<(TcpStream, f32)> {
-    let deadline = Instant::now() + Duration::from_secs(30);
-    loop {
-        let mut stream = loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => break s,
-                Err(e) => {
-                    if Instant::now() >= deadline {
-                        return Err(e).with_context(|| format!("connecting to {addr}"));
+/// One loadgen session's full state across connect/reconnect cycles.
+struct Session<'a> {
+    cfg: &'a Config,
+    addr: &'a str,
+    idx: usize,
+    rt: ModelRuntime,
+    latency: crate::sim::LatencyModel,
+    pace_rng: Rng,
+    trace: Option<&'a TraceSink>,
+    plan: FaultPlan,
+    /// Armed only when chaos is active: how long to wait on a reply
+    /// before abandoning the exchange (and the connection).
+    reply_deadline: Option<Duration>,
+    backoff: Backoff,
+    /// Connections dialed so far; combined with `idx` into the chaos
+    /// entity id so each reconnect draws a fresh fault schedule.
+    conn_seq: u64,
+    /// Prior established session id (0 = fresh), sent in `Hello.resume`.
+    resume: u64,
+    lr: f32,
+    pending: Option<Pending>,
+    tally: Tally,
+}
+
+impl Session<'_> {
+    /// Write one frame through the chaos wrapper, folding injected
+    /// faults (including on the error path) into the tally/trace.
+    fn send(&mut self, stream: &mut ChaosStream<TcpStream>, msg: &Msg) -> Result<()> {
+        let r = proto::write_msg(stream, msg);
+        for kind in stream.take_events() {
+            self.tally.faults += 1;
+            if let Some(tr) = self.trace {
+                tr.emit(
+                    "fault_injected",
+                    None,
+                    &[
+                        ("kind", V::S(kind.name().into())),
+                        ("side", V::S("client".into())),
+                        ("session", V::U(self.idx as u64)),
+                    ],
+                );
+            }
+        }
+        r.context("writing frame")?;
+        Ok(())
+    }
+
+    /// Read one message; with chaos active, gives up after
+    /// `reply_deadline` of silence so a dropped reply can't hang the
+    /// session (the caller reconnects).
+    fn read_reply(&mut self, stream: &mut ChaosStream<TcpStream>) -> Result<Msg> {
+        let start = Instant::now();
+        loop {
+            match proto::read_msg(stream)? {
+                FrameRead::Msg(m) => return Ok(m),
+                FrameRead::Eof => bail!("server closed the session"),
+                FrameRead::IdleTimeout => {
+                    if let Some(deadline) = self.reply_deadline {
+                        ensure!(
+                            start.elapsed() < deadline,
+                            "no reply within {} ms — abandoning the connection",
+                            deadline.as_millis()
+                        );
                     }
-                    std::thread::sleep(Duration::from_millis(20));
                 }
             }
+        }
+    }
+
+    /// Record one backoff pause (`Busy` retries, session-cap redials)
+    /// and sleep it.
+    fn retry_pause(&mut self, reason: &str) {
+        self.tally.retries += 1;
+        let delay = self.backoff.next_delay();
+        if let Some(tr) = self.trace {
+            tr.emit(
+                "wire_retry",
+                None,
+                &[
+                    ("session", V::U(self.idx as u64)),
+                    ("reason", V::S(reason.into())),
+                    ("attempt", V::U(u64::from(self.backoff.attempt()))),
+                    ("backoff_ms", V::U(delay.as_millis() as u64)),
+                ],
+            );
+        }
+        std::thread::sleep(delay);
+    }
+
+    /// Connect + handshake, backing off through session-cap `Busy`
+    /// replies and startup connection refusals. Each dial gets a unique
+    /// session id (`idx`/`conn_seq`-derived) and announces the prior
+    /// one in `Hello.resume` when this is a reconnect.
+    fn connect(&mut self) -> Result<ChaosStream<TcpStream>> {
+        // Chaos shortens the dial patience: a reconnect race against a
+        // finished server should fail fast into the give-up path, not
+        // pin the fleet for the healthy-path 30 s.
+        let patience = match self.reply_deadline {
+            Some(d) => (d * 2).max(Duration::from_millis(500)),
+            None => Duration::from_secs(30),
         };
-        stream.set_nodelay(true).ok();
-        proto::write_msg(&mut stream, &Msg::Hello { token: idx as u64 })?;
-        tally.requests += 1;
-        match read_reply(&mut stream)? {
-            Msg::Assign { lr, .. } => return Ok((stream, lr)),
-            Msg::Busy => {
-                // Session table full — back off and re-dial.
-                tally.busy += 1;
-                ensure!(
-                    Instant::now() < deadline,
-                    "session {idx}: server stayed at its session cap for 30 s"
-                );
-                std::thread::sleep(BUSY_BACKOFF);
+        let deadline = Instant::now() + patience;
+        loop {
+            let raw = loop {
+                match TcpStream::connect(self.addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            return Err(e)
+                                .with_context(|| format!("connecting to {}", self.addr));
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            };
+            raw.set_nodelay(true).ok();
+            if self.reply_deadline.is_some() {
+                raw.set_read_timeout(Some(TICK)).context("set_read_timeout")?;
             }
-            other => bail!("expected Assign, got {other:?}"),
+            self.conn_seq += 1;
+            let session_id = ((self.idx as u64) << 24) | self.conn_seq;
+            let rng = Rng::for_entity(self.cfg.seed, STREAM_CHAOS_CLIENT, session_id);
+            let mut stream = ChaosStream::new(raw, self.plan, rng);
+            self.tally.requests += 1;
+            self.send(
+                &mut stream,
+                &Msg::Hello {
+                    token: session_id,
+                    resume: self.resume,
+                },
+            )?;
+            match self.read_reply(&mut stream)? {
+                Msg::Assign { lr, .. } => {
+                    self.lr = lr;
+                    // A future reconnect resumes from this session.
+                    self.resume = session_id;
+                    return Ok(stream);
+                }
+                Msg::Busy => {
+                    // Session table full — back off and re-dial.
+                    self.tally.busy += 1;
+                    ensure!(
+                        Instant::now() < deadline,
+                        "session {}: server stayed at its session cap for {:?}",
+                        self.idx,
+                        patience
+                    );
+                    self.retry_pause("session_cap");
+                }
+                other => bail!("expected Assign, got {other:?}"),
+            }
+        }
+    }
+
+    /// Drive one connection until the run is done (`Ok`) or the
+    /// connection fails (`Err` — the caller decides whether to
+    /// reconnect). The pending update, if any, is resubmitted first.
+    fn run_connection(&mut self) -> Result<()> {
+        let mut stream = self.connect()?;
+        loop {
+            if self.pending.is_some() {
+                self.submit_pending(&mut stream)?;
+                continue;
+            }
+            self.tally.requests += 1;
+            self.send(&mut stream, &Msg::FetchJob)?;
+            match self.read_reply(&mut stream)? {
+                Msg::Job {
+                    client,
+                    round,
+                    staleness,
+                    w,
+                    xs,
+                    ys,
+                } => {
+                    self.tally.jobs += 1;
+                    let out = self.rt.local_train(&w, &xs, &ys, self.lr)?;
+                    if self.cfg.serve.pace_ms > 0 {
+                        // Think time: the configured fleet-latency model,
+                        // scaled to wall-clock by pace_ms.
+                        let think =
+                            self.latency.draw(&mut self.pace_rng) * self.cfg.serve.pace_ms as f64;
+                        std::thread::sleep(Duration::from_millis(think.max(0.0) as u64));
+                    }
+                    self.pending = Some(Pending {
+                        client,
+                        round,
+                        staleness,
+                        loss: out.loss,
+                        weights: out.weights,
+                        t0: Instant::now(),
+                    });
+                }
+                Msg::NoJob { done: true } => {
+                    let _ = self.send(&mut stream, &Msg::Bye);
+                    return Ok(());
+                }
+                Msg::NoJob { done: false } => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                other => bail!("unexpected fetch reply: {other:?}"),
+            }
+        }
+    }
+
+    /// Push the pending update to a terminal reply, retrying through
+    /// `Busy`. On success the pending slot is cleared; on a connection
+    /// error it is kept for the next connection to resubmit.
+    fn submit_pending(&mut self, stream: &mut ChaosStream<TcpStream>) -> Result<()> {
+        loop {
+            let msg = {
+                let p = self.pending.as_ref().expect("submit_pending without a job");
+                Msg::Submit {
+                    client: p.client,
+                    round: p.round,
+                    staleness: p.staleness,
+                    loss: p.loss,
+                    weights: p.weights.clone(),
+                }
+            };
+            self.tally.requests += 1;
+            self.send(stream, &msg)?;
+            match self.read_reply(stream)? {
+                Msg::Ack { .. } => {
+                    self.tally.acks += 1;
+                    self.backoff.reset();
+                }
+                Msg::Reject {
+                    code: RejectCode::Duplicate,
+                    ..
+                } => {
+                    // A resubmit racing its own recovered copy — the
+                    // update is in; terminal.
+                    self.tally.duplicates += 1;
+                }
+                Msg::Reject {
+                    code: RejectCode::OutOfRound,
+                    ..
+                } => {
+                    // The server reclaimed this job past our deadline
+                    // and will re-dispatch it; terminal for us.
+                    self.tally.out_of_round += 1;
+                }
+                Msg::Busy => {
+                    // Aggregation buffer contended: keep the job and
+                    // retry after a jittered pause.
+                    self.tally.busy += 1;
+                    self.retry_pause("busy");
+                    continue;
+                }
+                other => bail!("unexpected submit reply: {other:?}"),
+            }
+            let p = self.pending.take().expect("pending vanished");
+            let ms = p.t0.elapsed().as_secs_f64() * 1000.0;
+            self.tally.latencies_ms.push(ms);
+            if let Some(tr) = self.trace {
+                // Same f64 as the percentile sample above — shortest
+                // round-trip formatting makes the journal replay
+                // bitwise exact.
+                tr.emit(
+                    "wire_submit",
+                    None,
+                    &[
+                        ("session", V::U(self.idx as u64)),
+                        ("client", V::U(p.client)),
+                        ("round", V::U(p.round)),
+                        ("ms", V::F(ms)),
+                    ],
+                );
+            }
+            return Ok(());
         }
     }
 }
 
 /// One session: pull jobs, train them on an own native runtime, submit
-/// through backpressure until the server reports the run done.
+/// through backpressure until the server reports the run done —
+/// reconnecting and resuming through connection failures when recovery
+/// is on.
 fn client_session(
     cfg: &Config,
     addr: &str,
     idx: usize,
     trace: Option<&TraceSink>,
 ) -> Result<Tally> {
-    let rt = ModelRuntime::native_for(cfg)?;
-    let latency = cfg.latency();
-    let mut pace_rng = Rng::for_entity(cfg.seed, STREAM_LOADGEN, idx as u64);
-    let mut tally = Tally::default();
-    let (mut stream, lr) = connect(addr, idx, &mut tally)?;
-
+    let plan = FaultPlan::from_cfg(&cfg.chaos);
+    let mut s = Session {
+        cfg,
+        addr,
+        idx,
+        rt: ModelRuntime::native_for(cfg)?,
+        latency: cfg.latency(),
+        pace_rng: Rng::for_entity(cfg.seed, STREAM_LOADGEN, idx as u64),
+        trace,
+        plan,
+        reply_deadline: (!plan.is_inert())
+            .then(|| Duration::from_millis(cfg.chaos.session_deadline_ms)),
+        backoff: Backoff::from_cfg(&cfg.chaos, cfg.seed, idx as u64),
+        conn_seq: 0,
+        resume: 0,
+        lr: cfg.lr,
+        pending: None,
+        tally: Tally::default(),
+    };
+    // Consecutive no-progress connection failures; any terminal outcome
+    // in between resets the count (and the backoff escalation).
+    let mut failures = 0usize;
     loop {
-        proto::write_msg(&mut stream, &Msg::FetchJob)?;
-        tally.requests += 1;
-        match read_reply(&mut stream)? {
-            Msg::Job {
-                client,
-                round,
-                staleness,
-                w,
-                xs,
-                ys,
-            } => {
-                tally.jobs += 1;
-                let out = rt.local_train(&w, &xs, &ys, lr)?;
-                if cfg.serve.pace_ms > 0 {
-                    // Think time: the configured fleet-latency model,
-                    // scaled to wall-clock by pace_ms.
-                    let think = latency.draw(&mut pace_rng) * cfg.serve.pace_ms as f64;
-                    std::thread::sleep(Duration::from_millis(think.max(0.0) as u64));
+        let resolved_before = s.tally.resolved();
+        match s.run_connection() {
+            Ok(()) => return Ok(s.tally),
+            Err(e) => {
+                if s.tally.resolved() > resolved_before {
+                    failures = 0;
+                    s.backoff.reset();
                 }
-                let t0 = Instant::now();
-                loop {
-                    proto::write_msg(
-                        &mut stream,
-                        &Msg::Submit {
-                            client,
-                            round,
-                            staleness,
-                            loss: out.loss,
-                            weights: out.weights.clone(),
-                        },
-                    )?;
-                    tally.requests += 1;
-                    match read_reply(&mut stream)? {
-                        Msg::Ack { .. } => {
-                            tally.acks += 1;
-                            break;
-                        }
-                        Msg::Reject {
-                            code: RejectCode::Duplicate,
-                            ..
-                        } => {
-                            tally.duplicates += 1;
-                            break;
-                        }
-                        Msg::Reject {
-                            code: RejectCode::OutOfRound,
-                            ..
-                        } => {
-                            tally.out_of_round += 1;
-                            break;
-                        }
-                        Msg::Busy => {
-                            // Aggregation buffer contended: keep the job
-                            // and retry after a pause.
-                            tally.busy += 1;
-                            std::thread::sleep(BUSY_BACKOFF);
-                        }
-                        other => bail!("unexpected submit reply: {other:?}"),
-                    }
+                failures += 1;
+                if !s.cfg.chaos.recovery {
+                    crate::debug!(
+                        "loadgen session {idx}: {e:#} (recovery off — ending the \
+                         session; losses surface in the report)"
+                    );
+                    s.tally.gave_up += 1;
+                    return Ok(s.tally);
                 }
-                let ms = t0.elapsed().as_secs_f64() * 1000.0;
-                tally.latencies_ms.push(ms);
-                if let Some(tr) = trace {
-                    // Same f64 as the percentile sample above — shortest
-                    // round-trip formatting makes the journal replay
-                    // bitwise exact.
+                if failures > s.cfg.chaos.max_retries {
+                    crate::debug!(
+                        "loadgen session {idx}: giving up after {failures} \
+                         consecutive failures: {e:#}"
+                    );
+                    s.tally.gave_up += 1;
+                    return Ok(s.tally);
+                }
+                s.tally.reconnects += 1;
+                if let Some(tr) = s.trace {
                     tr.emit(
-                        "wire_submit",
+                        "wire_reconnect",
                         None,
                         &[
                             ("session", V::U(idx as u64)),
-                            ("client", V::U(client)),
-                            ("round", V::U(round)),
-                            ("ms", V::F(ms)),
+                            ("attempt", V::U(failures as u64)),
                         ],
                     );
                 }
+                let delay = s.backoff.next_delay();
+                std::thread::sleep(delay);
             }
-            Msg::NoJob { done: true } => {
-                let _ = proto::write_msg(&mut stream, &Msg::Bye);
-                return Ok(tally);
-            }
-            Msg::NoJob { done: false } => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            other => bail!("unexpected fetch reply: {other:?}"),
         }
     }
 }

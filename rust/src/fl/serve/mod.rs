@@ -19,7 +19,15 @@
 //!   so paota/ca_paota/air_fedga run unmodified behind the wire;
 //! - [`loadgen`] — `repro loadgen`: a seed-deterministic concurrent
 //!   session fleet reporting requests/sec, submit-latency percentiles
-//!   and reject/busy counts (`make bench-serve` → `BENCH_serve.json`).
+//!   and reject/busy counts (`make bench-serve` → `BENCH_serve.json`);
+//! - [`chaos`] — deterministic fault injection: a
+//!   [`ChaosStream`](chaos::ChaosStream) wraps both ends' TCP streams
+//!   and, driven by its own [`Rng::for_entity`](crate::util::Rng)
+//!   stream, drops/delays/truncates/corrupts frames and kills
+//!   connections at the `[chaos]`-configured rates;
+//! - [`retry`] — the shared jittered-exponential
+//!   [`Backoff`](retry::Backoff) schedule behind every client retry
+//!   path (Busy backpressure, session-cap redials, reconnects).
 //!
 //! **Observability** ([`crate::obs`]): the server owns a *private*
 //! metrics registry — session/ack/reject/busy counters, queue-depth
@@ -40,15 +48,28 @@
 //! function of `(w, xs, ys, lr)`, so determinism survives arbitrary
 //! session interleaving.
 //!
+//! **Chaos tie-down** (PR 9, `tests/serve.rs`): the same bitwise
+//! identity holds with fault injection *and* recovery on — faults live
+//! only on the wire, reclaimed jobs re-dispatch with their original
+//! `(pos, staleness, payload)`, and retraining is pure, so every
+//! recovered loss reproduces the identical update. And when losses are
+//! unrecoverable (recovery off), period-mode rounds still close on the
+//! deadline with whoever arrived: chaos degrades throughput, never
+//! liveness.
+//!
 //! [`Coordinator`]: super::Coordinator
 //! [`AggregationPolicy`]: super::AggregationPolicy
 
+pub mod chaos;
 pub mod loadgen;
 pub mod proto;
+pub mod retry;
 pub mod round;
 pub mod server;
 
+pub use chaos::{ChaosStream, FaultKind, FaultPlan};
 pub use loadgen::{run_loadgen, LoadgenReport};
 pub use proto::{Msg, RejectCode};
+pub use retry::Backoff;
 pub use round::{RoundManager, RoundStats, SubmitOutcome};
 pub use server::{serve, Server, ServeOutcome};

@@ -18,7 +18,7 @@
 //!
 //! | message | direction | meaning |
 //! |---|---|---|
-//! | [`Msg::Hello`] / [`Msg::Assign`] | C→S / S→C | session setup: version handshake, session id, run geometry |
+//! | [`Msg::Hello`] / [`Msg::Assign`] | C→S / S→C | session setup: version handshake, session id + optional resume token, run geometry |
 //! | [`Msg::FetchJob`] / [`Msg::Job`] / [`Msg::NoJob`] | C→S / S→C | pull one training job (base model + minibatches) |
 //! | [`Msg::Submit`] | C→S | submit-update: round id + staleness metadata + trained payload |
 //! | [`Msg::Ack`] / [`Msg::Reject`] / [`Msg::Busy`] | S→C | accept, refuse (duplicate / out-of-round), or backpressure |
@@ -29,10 +29,14 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Result};
 
 /// Protocol version byte — bump on any incompatible layout change.
-pub const VERSION: u8 = 1;
+/// v2: [`Msg::Hello`] carries a resume token (reconnect-and-resume).
+pub const VERSION: u8 = 2;
 
-/// Upper bound on a single frame's payload (defends the length prefix).
-pub const MAX_FRAME: usize = 1 << 30;
+/// Upper bound on a single frame's payload (defends the length prefix:
+/// a corrupted u32 claiming more is rejected before any allocation, and
+/// accepted lengths are read in small chunks so a hostile claim under
+/// the cap costs only the bytes actually received).
+pub const MAX_FRAME: usize = 1 << 28;
 
 /// Why a [`Msg::Submit`] was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,7 +69,10 @@ impl RejectCode {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     /// Session open; `token` is a caller-chosen tag echoed in logs.
-    Hello { token: u64 },
+    /// `resume` is 0 for a fresh session, or the prior session id when
+    /// reconnecting — the server then re-issues any half-done job it
+    /// reclaimed from the dead connection.
+    Hello { token: u64, resume: u64 },
     /// Session accepted: id, run horizon and model geometry.
     Assign {
         session: u64,
@@ -193,9 +200,10 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut p = Vec::with_capacity(64);
     p.push(VERSION);
     match msg {
-        Msg::Hello { token } => {
+        Msg::Hello { token, resume } => {
             p.push(T_HELLO);
             put_u64(&mut p, *token);
+            put_u64(&mut p, *resume);
         }
         Msg::Assign {
             session,
@@ -277,7 +285,10 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
     );
     let t = c.u8()?;
     let msg = match t {
-        T_HELLO => Msg::Hello { token: c.u64()? },
+        T_HELLO => Msg::Hello {
+            token: c.u64()?,
+            resume: c.u64()?,
+        },
         T_ASSIGN => Msg::Assign {
             session: c.u64()?,
             rounds: c.u64()?,
@@ -350,10 +361,20 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<FrameRead> {
     let len = u32::from_le_bytes(header) as usize;
     ensure!(len >= 2 && len <= MAX_FRAME, "bad frame length {len}");
 
-    let mut payload = vec![0u8; len];
-    match read_exact_retry(r, &mut payload, false, MID_FRAME_RETRIES)? {
-        ReadState::Done => {}
-        _ => bail!("peer closed mid-frame"),
+    // Grow the buffer chunk by chunk instead of trusting the prefix
+    // with one up-front allocation: a corrupted length claiming
+    // hundreds of MB costs only the bytes the peer actually sends
+    // before the stream errors out.
+    const CHUNK: usize = 64 << 10;
+    let mut payload = Vec::with_capacity(len.min(CHUNK));
+    while payload.len() < len {
+        let start = payload.len();
+        let take = (len - start).min(CHUNK);
+        payload.resize(start + take, 0);
+        match read_exact_retry(r, &mut payload[start..], false, MID_FRAME_RETRIES)? {
+            ReadState::Done => {}
+            _ => bail!("peer closed mid-frame"),
+        }
     }
     let mut csum = [0u8; 4];
     match read_exact_retry(r, &mut csum, false, MID_FRAME_RETRIES)? {
@@ -435,7 +456,11 @@ mod tests {
 
     #[test]
     fn all_messages_roundtrip() {
-        roundtrip(Msg::Hello { token: 42 });
+        roundtrip(Msg::Hello { token: 42, resume: 0 });
+        roundtrip(Msg::Hello {
+            token: 42,
+            resume: 42,
+        });
         roundtrip(Msg::Assign {
             session: 7,
             rounds: 30,
@@ -537,7 +562,7 @@ mod tests {
             FrameRead::Eof
         ));
 
-        let frame = encode(&Msg::Hello { token: 1 });
+        let frame = encode(&Msg::Hello { token: 1, resume: 0 });
         let mut cut = &frame[..frame.len() - 2];
         assert!(read_msg(&mut cut).is_err(), "truncated frame accepted");
     }
@@ -547,5 +572,23 @@ mod tests {
         let mut frame = vec![0xff, 0xff, 0xff, 0x7f]; // ~2 GiB claim
         frame.extend_from_slice(&[0u8; 16]);
         assert!(read_msg(&mut frame.as_slice()).is_err());
+
+        // Just past the cap: rejected before any allocation.
+        let mut frame = ((MAX_FRAME as u32 + 1).to_le_bytes()).to_vec();
+        frame.extend_from_slice(&[0u8; 16]);
+        let err = read_msg(&mut frame.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("bad frame length"), "{err}");
+    }
+
+    #[test]
+    fn large_claim_under_the_cap_fails_on_the_bytes_not_the_claim() {
+        // A corrupted-but-under-cap length with only a few real bytes
+        // behind it must fail from the stream ending, not wedge or
+        // eagerly allocate the full claim (the reader chunks its
+        // buffer growth — nothing observable here beyond a clean error).
+        let mut frame = ((MAX_FRAME as u32).to_le_bytes()).to_vec();
+        frame.extend_from_slice(&[0u8; 256]);
+        let err = read_msg(&mut frame.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("peer closed mid-"), "{err}");
     }
 }

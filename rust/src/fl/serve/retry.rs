@@ -1,0 +1,121 @@
+//! `serve::retry` — shared jittered-exponential backoff.
+//!
+//! One [`Backoff`] instance serves every retry path a loadgen session
+//! has: `Busy` backpressure, reply-deadline timeouts, and reconnects.
+//! Delays grow as `min(max_ms, base_ms · 2^attempt)` scaled by a
+//! uniform jitter in `[0.5, 1.0)` so a fleet of sessions rejected
+//! together does not re-dial in lockstep. The jitter stream is
+//! seed-deterministic per entity (`Rng::for_entity` with
+//! [`STREAM_RETRY`]), like every other randomness source in the repo.
+//!
+//! `attempt` saturates once the cap is reached: `next_delay` can be
+//! called forever (Busy retries are not bounded — backpressure resolves
+//! when the server drains). Callers that *do* bound retries (loadgen's
+//! reconnect path, capped by `chaos_max_retries`) count attempts
+//! themselves and call [`Backoff::reset`] whenever forward progress is
+//! observed, so only *consecutive* fruitless attempts count against the
+//! cap.
+
+use std::time::Duration;
+
+use crate::config::ChaosConfig;
+use crate::util::Rng;
+
+/// RNG stream tag for backoff jitter.
+pub const STREAM_RETRY: u64 = 0xbac0;
+
+/// Jittered exponential backoff. See the module docs.
+pub struct Backoff {
+    base_ms: u64,
+    max_ms: u64,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Build with explicit bounds; `base_ms` is floored at 1 and
+    /// `max_ms` at `base_ms`.
+    pub fn new(base_ms: u64, max_ms: u64, seed: u64, entity: u64) -> Self {
+        let base_ms = base_ms.max(1);
+        Self {
+            base_ms,
+            max_ms: max_ms.max(base_ms),
+            attempt: 0,
+            rng: Rng::for_entity(seed, STREAM_RETRY, entity),
+        }
+    }
+
+    /// Build from the `[chaos]` retry knobs.
+    pub fn from_cfg(c: &ChaosConfig, seed: u64, entity: u64) -> Self {
+        Self::new(c.retry_base_ms, c.retry_max_ms, seed, entity)
+    }
+
+    /// Delays handed out since the last reset.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Forget the escalation (call on forward progress).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Next delay: `min(max, base · 2^attempt) · U[0.5, 1.0)`, never
+    /// below 1 ms.
+    pub fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(20);
+        let raw = self.base_ms.saturating_mul(1u64 << shift).min(self.max_ms);
+        self.attempt = self.attempt.saturating_add(1);
+        let jitter = 0.5 + 0.5 * self.rng.f64();
+        Duration::from_millis(((raw as f64 * jitter) as u64).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_then_cap_at_max() {
+        let mut b = Backoff::new(10, 80, 1, 0);
+        let mut prev_cap = 0u128;
+        for i in 0..8 {
+            let d = b.next_delay().as_millis();
+            let cap = 10u128.saturating_mul(1 << i).min(80);
+            assert!(d <= cap, "delay {d} above cap {cap} at attempt {i}");
+            assert!(d >= cap / 2, "delay {d} below half-cap {} at {i}", cap / 2);
+            assert!(cap >= prev_cap);
+            prev_cap = cap;
+        }
+        assert_eq!(b.attempt(), 8);
+    }
+
+    #[test]
+    fn reset_restarts_the_escalation() {
+        let mut b = Backoff::new(10, 10_000, 1, 0);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        assert!(b.next_delay().as_millis() <= 10);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_entity() {
+        let seq = |entity: u64| {
+            let mut b = Backoff::new(5, 500, 99, entity);
+            (0..10).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(1), seq(1));
+        assert_ne!(seq(1), seq(2));
+    }
+
+    #[test]
+    fn degenerate_bounds_are_floored() {
+        let mut b = Backoff::new(0, 0, 0, 0);
+        let d = b.next_delay();
+        assert!(d >= Duration::from_millis(1));
+        assert!(d <= Duration::from_millis(1));
+    }
+}

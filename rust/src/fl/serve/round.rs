@@ -21,7 +21,14 @@
 //! - **bounded-queue backpressure** — when the aggregation buffer
 //!   already holds `queue_depth` undrained updates, the submission is
 //!   refused with [`SubmitOutcome::Busy`] and the job stays
-//!   outstanding, so the client can retry after a pause.
+//!   outstanding, so the client can retry after a pause;
+//! - **reclaim on session death** — a job dispatched to a session that
+//!   dies (or stalls past its deadline) before submitting is handed
+//!   back via [`RoundManager::reclaim`]: it returns to the *front* of
+//!   the queue with its original `pos`, so the next fetch re-issues it
+//!   and the `(round, pos)` sort still rebuilds the deterministic
+//!   participant order. Without this, lockstep mode would wait forever
+//!   on work held by a dead connection.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
@@ -61,11 +68,21 @@ pub struct RoundStats {
     pub busy: usize,
     /// Subset of `accepted` that arrived after their round closed.
     pub late: usize,
+    /// Jobs taken back from dead/stalled sessions and re-queued
+    /// (each re-dispatch also counts in `dispatched`).
+    pub reclaimed: usize,
 }
 
 struct QueuedJob<J> {
     client: usize,
     round: usize,
+    pos: usize,
+    job: J,
+}
+
+/// A dispatched-but-not-accepted job. The payload is retained so the
+/// manager can re-queue it if the holding session dies.
+struct OutstandingJob<J> {
     pos: usize,
     job: J,
 }
@@ -77,8 +94,8 @@ pub struct RoundManager<J, S> {
     /// Jobs not yet handed to a session, FIFO across rounds — leftover
     /// work from earlier rounds dispatches first and simply lands late.
     fifo: VecDeque<QueuedJob<J>>,
-    /// Dispatched-but-not-accepted `(client, round) → pos`.
-    outstanding: HashMap<(usize, usize), usize>,
+    /// Dispatched-but-not-accepted `(client, round) →` retained job.
+    outstanding: HashMap<(usize, usize), OutstandingJob<J>>,
     /// `(client, round)` pairs with an accepted update.
     submitted: HashSet<(usize, usize)>,
     /// Unaccepted job count per round (queued + outstanding).
@@ -87,7 +104,7 @@ pub struct RoundManager<J, S> {
     stats: RoundStats,
 }
 
-impl<J, S> RoundManager<J, S> {
+impl<J: Clone, S> RoundManager<J, S> {
     pub fn new(queue_depth: usize) -> Self {
         assert!(queue_depth >= 1, "queue_depth must be at least 1");
         Self {
@@ -128,12 +145,40 @@ impl<J, S> RoundManager<J, S> {
         self.current
     }
 
-    /// Hand out the next queued job, marking it outstanding.
+    /// Hand out the next queued job, marking it outstanding. A clone of
+    /// the payload is retained so [`RoundManager::reclaim`] can re-queue
+    /// it if the session holding it dies.
     pub fn fetch(&mut self) -> Option<(usize, usize, J)> {
         let q = self.fifo.pop_front()?;
-        self.outstanding.insert((q.client, q.round), q.pos);
+        self.outstanding.insert(
+            (q.client, q.round),
+            OutstandingJob {
+                pos: q.pos,
+                job: q.job.clone(),
+            },
+        );
         self.stats.dispatched += 1;
         Some((q.client, q.round, q.job))
+    }
+
+    /// Take back a dispatched job whose session died or stalled before
+    /// submitting. The job returns to the *front* of the queue with its
+    /// original `pos` (resume priority; the `(round, pos)` sort is
+    /// unaffected). Returns `false` if `(client, round)` is not
+    /// outstanding — already submitted, already reclaimed, or never
+    /// dispatched — so callers may reclaim defensively.
+    pub fn reclaim(&mut self, client: usize, round: usize) -> bool {
+        let Some(o) = self.outstanding.remove(&(client, round)) else {
+            return false;
+        };
+        self.stats.reclaimed += 1;
+        self.fifo.push_front(QueuedJob {
+            client,
+            round,
+            pos: o.pos,
+            job: o.job,
+        });
+        true
     }
 
     /// Classify and (when valid and there is room) buffer one update.
@@ -153,7 +198,7 @@ impl<J, S> RoundManager<J, S> {
             self.stats.busy += 1;
             return SubmitOutcome::Busy;
         }
-        let pos = self.outstanding.remove(&key).expect("checked above");
+        let pos = self.outstanding.remove(&key).expect("checked above").pos;
         self.submitted.insert(key);
         if let Some(n) = self.open.get_mut(&round) {
             *n -= 1;
@@ -298,6 +343,61 @@ mod tests {
         // …but (round, pos) restores dispatch order 7, 3, 9.
         let clients: Vec<usize> = got.iter().map(|a| a.client).collect();
         assert_eq!(clients, vec![7, 3, 9]);
+    }
+
+    #[test]
+    fn reclaim_requeues_at_front_with_original_pos() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(7, "a"), (3, "b")]);
+        drain_fifo(&mut rm);
+        assert!(!rm.round_done(0));
+        // Session holding client 7's job dies before submitting.
+        assert!(rm.reclaim(7, 0));
+        assert_eq!(rm.stats().reclaimed, 1);
+        assert_eq!(rm.queued(), 1);
+        assert!(!rm.round_done(0), "reclaimed work keeps the round open");
+        // The re-fetch hands back the same job…
+        let (c, r, j) = rm.fetch().unwrap();
+        assert_eq!((c, r, j), (7, 0, "a"));
+        assert_eq!(rm.stats().dispatched, 3, "re-dispatch counts again");
+        // …and its submission lands at the original dispatch position.
+        rm.submit(3, 0, 2.0);
+        rm.submit(7, 0, 1.0);
+        assert!(rm.round_done(0));
+        let mut got = rm.take_accepted();
+        got.sort_by_key(|a| (a.round, a.pos));
+        let clients: Vec<usize> = got.iter().map(|a| a.client).collect();
+        assert_eq!(clients, vec![7, 3]);
+    }
+
+    #[test]
+    fn reclaim_is_a_noop_for_unknown_or_submitted_jobs() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(0, "a")]);
+        // Never dispatched: nothing outstanding to take back.
+        assert!(!rm.reclaim(0, 0));
+        drain_fifo(&mut rm);
+        rm.submit(0, 0, 1.0);
+        // Already accepted: reclaim after submit must not resurrect it.
+        assert!(!rm.reclaim(0, 0));
+        assert_eq!(rm.stats().reclaimed, 0);
+        assert_eq!(rm.queued(), 0);
+        assert!(rm.round_done(0));
+    }
+
+    #[test]
+    fn reclaimed_job_beats_newer_queued_work() {
+        let mut rm = manager(8);
+        rm.open_round(0, vec![(0, "old")]);
+        drain_fifo(&mut rm);
+        rm.open_round(1, vec![(1, "new")]);
+        assert!(rm.reclaim(0, 0));
+        // Front-of-queue priority: the reclaimed round-0 job re-issues
+        // before round 1's fresh work.
+        let (c, r, _) = rm.fetch().unwrap();
+        assert_eq!((c, r), (0, 0));
+        let (c, r, _) = rm.fetch().unwrap();
+        assert_eq!((c, r), (1, 1));
     }
 
     #[test]

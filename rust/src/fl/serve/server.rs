@@ -33,8 +33,21 @@
 //!   [`Busy`](super::proto::Msg::Busy) backpressure to the wire, and
 //!   retried/slow submissions fold into a later round through the
 //!   coordinator's existing staleness path.
+//!
+//! **Failure handling** (`[chaos]`, PR 9): every admitted session's
+//! stream is wrapped in a [`ChaosStream`] (inert and free unless fault
+//! rates are configured), each session tracks the jobs it has fetched
+//! but not resolved, and those jobs are **reclaimed** — re-queued at
+//! the front of the [`RoundManager`](super::round::RoundManager) with
+//! their original dispatch position — when the session dies (teardown)
+//! or goes silent past `chaos_session_deadline_ms` while chaos is
+//! active. A reconnecting client announces its prior session id in
+//! `Hello.resume`; since reclaimed work sits at the queue front, its
+//! next fetch re-issues the half-done job. Because `local_train` is a
+//! pure function of the job payload, a reclaimed-and-retrained job
+//! yields a bit-identical update, which is why lockstep stays bitwise
+//! equal to `fl::run` under chaos with recovery on.
 
-use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -47,9 +60,11 @@ use crate::obs::admin::AdminServer;
 use crate::obs::metrics::{Counter, Gauge, Registry};
 use crate::obs::trace::{TraceSink, V};
 use crate::runtime::TrainOut;
+use crate::util::Rng;
 
 use super::super::coordinator::{Coordinator, OpenSlot, RoundTiming};
 use super::super::{build_policy, RunResult, TrainContext};
+use super::chaos::{ChaosStream, FaultKind, FaultPlan, STREAM_CHAOS_SERVER};
 use super::proto::{self, FrameRead, Msg, RejectCode};
 use super::round::{Accepted, RoundManager, RoundStats, SubmitOutcome};
 
@@ -60,6 +75,9 @@ const STALL_LIMIT: Duration = Duration::from_secs(60);
 
 /// What a training job looks like on the dispatch queue: the staleness
 /// metadata stamped at dispatch time plus the `(w0, xs, ys)` payload.
+/// Clonable so the round manager can retain dispatched copies for
+/// reclaim-on-session-death.
+#[derive(Clone)]
 struct JobWire {
     staleness: u64,
     w: Vec<f32>,
@@ -107,6 +125,11 @@ struct WireObs {
     queued: Gauge,
     buffered: Gauge,
     tx_bytes: Counter,
+    reconnects: Counter,
+    reclaimed: Counter,
+    /// Injected-fault counters, [`FaultKind::ALL`]-ordered
+    /// (`paota_faults_<kind>_total`).
+    faults: [Counter; 5],
     trace: Option<TraceSink>,
 }
 
@@ -132,17 +155,47 @@ impl WireObs {
             queued: reg.gauge("paota_serve_queue_jobs"),
             buffered: reg.gauge("paota_serve_buffered_updates"),
             tx_bytes: reg.counter("paota_serve_tx_frame_bytes_total"),
+            reconnects: reg.counter("paota_reconnects_total"),
+            reclaimed: reg.counter("paota_jobs_reclaimed_total"),
+            faults: FaultKind::ALL
+                .map(|k| reg.counter(&format!("paota_faults_{}_total", k.name()))),
             trace,
+        }
+    }
+
+    /// Record one injected fault: bump its per-kind counter and emit a
+    /// `fault_injected` trace event.
+    fn fault(&self, kind: FaultKind) {
+        self.faults[kind.index()].inc();
+        if let Some(tr) = &self.trace {
+            tr.emit(
+                "fault_injected",
+                None,
+                &[
+                    ("kind", V::S(kind.name().into())),
+                    ("side", V::S("server".into())),
+                ],
+            );
         }
     }
 }
 
 /// Write one frame, counting its bytes on the wire registry.
-fn send(stream: &mut TcpStream, msg: &Msg, obs: &WireObs) -> Result<()> {
+fn send<W: std::io::Write>(stream: &mut W, msg: &Msg, obs: &WireObs) -> Result<()> {
     let frame = proto::encode(msg);
     obs.tx_bytes.add(frame.len() as u64);
     stream.write_all(&frame).context("writing frame")?;
     Ok(())
+}
+
+/// [`send`] through the session's chaos wrapper, folding any faults the
+/// wrapper injected (including on the error path) into metrics/trace.
+fn send_faulted(stream: &mut ChaosStream<TcpStream>, msg: &Msg, obs: &WireObs) -> Result<()> {
+    let r = send(stream, msg, obs);
+    for kind in stream.take_events() {
+        obs.fault(kind);
+    }
+    r
 }
 
 /// Result of a completed serve run.
@@ -266,6 +319,13 @@ impl<'a> Server<'a> {
         };
         let max_sessions = cfg.serve.max_sessions;
         let period = Duration::from_millis(cfg.serve.period_ms);
+        let plan = FaultPlan::from_cfg(&cfg.chaos);
+        // Silent-session reclaim only arms alongside fault injection —
+        // on a healthy wire, teardown reclaim alone covers dead peers
+        // and a slow-but-alive trainer is never robbed of its job.
+        let reclaim_after = (!plan.is_inert())
+            .then(|| Duration::from_millis(cfg.chaos.session_deadline_ms));
+        let seed = cfg.seed;
 
         let mut outcome: Result<()> = Ok(());
         std::thread::scope(|s| {
@@ -285,6 +345,9 @@ impl<'a> Server<'a> {
                     info,
                     max_sessions,
                     obs,
+                    plan,
+                    seed,
+                    reclaim_after,
                 );
             });
 
@@ -449,6 +512,9 @@ fn accept_loop<'scope, 'env>(
     info: SessionInfo,
     max_sessions: usize,
     obs: &'scope WireObs,
+    plan: FaultPlan,
+    seed: u64,
+    reclaim_after: Option<Duration>,
 ) {
     loop {
         let stream = match listener.accept() {
@@ -477,37 +543,104 @@ fn accept_loop<'scope, 'env>(
             continue;
         }
         active.fetch_add(1, Ordering::SeqCst);
-        admitted.fetch_add(1, Ordering::SeqCst);
+        // The admission counter doubles as the chaos entity id: every
+        // accepted connection — including one session's reconnects —
+        // draws a fresh, deterministic fault schedule.
+        let entity = admitted.fetch_add(1, Ordering::SeqCst) as u64;
         obs.sessions_total.inc();
         obs.sessions_active.add(1);
         scope.spawn(move || {
+            let rng = Rng::for_entity(seed, STREAM_CHAOS_SERVER, entity);
+            let stream = ChaosStream::new(stream, plan, rng);
+            let mut held: Vec<(usize, usize)> = Vec::new();
             // A misbehaving peer only kills its own session.
-            let _ = session(stream, shared, stop, info, obs);
+            let _ = session(stream, shared, stop, info, obs, reclaim_after, &mut held);
+            // Teardown reclaim: whatever this session fetched but never
+            // resolved goes back to the queue for another session.
+            reclaim_held(shared, obs, &mut held, "teardown");
             active.fetch_sub(1, Ordering::SeqCst);
             obs.sessions_active.add(-1);
         });
     }
 }
 
+/// Re-queue every job in `held` (fetched by a session that died or went
+/// silent), bumping the reclaim counter and tracing each job. Wakes the
+/// round loop and fetchers when anything was actually taken back.
+fn reclaim_held(shared: &Shared, obs: &WireObs, held: &mut Vec<(usize, usize)>, why: &str) {
+    if held.is_empty() {
+        return;
+    }
+    let mut taken: Vec<(usize, usize)> = Vec::new();
+    {
+        let mut st = shared.state.lock().unwrap();
+        for (client, round) in held.drain(..) {
+            if st.rm.reclaim(client, round) {
+                taken.push((client, round));
+            }
+        }
+        obs.queued.set(st.rm.queued() as i64);
+    }
+    if taken.is_empty() {
+        return;
+    }
+    obs.reclaimed.add(taken.len() as u64);
+    if let Some(tr) = &obs.trace {
+        for (client, round) in &taken {
+            tr.emit(
+                "wire_reclaim",
+                None,
+                &[
+                    ("client", V::U(*client as u64)),
+                    ("round", V::U(*round as u64)),
+                    ("why", V::S(why.into())),
+                ],
+            );
+        }
+    }
+    shared.changed.notify_all();
+}
+
 /// One client session: handshake, then serve FetchJob/Submit until the
-/// peer leaves or the server stops.
+/// peer leaves or the server stops. `held` tracks the jobs this session
+/// fetched but has not resolved — the caller reclaims whatever is left
+/// when the session ends, and with `reclaim_after` set, a session that
+/// goes silent past the deadline has its jobs taken back in place.
 fn session(
-    mut stream: TcpStream,
+    mut stream: ChaosStream<TcpStream>,
     shared: &Shared,
     stop: &AtomicBool,
     info: SessionInfo,
     obs: &WireObs,
+    reclaim_after: Option<Duration>,
+    held: &mut Vec<(usize, usize)>,
 ) -> Result<()> {
     stream
+        .get_ref()
         .set_read_timeout(Some(TICK))
         .context("set_read_timeout")?;
-    stream.set_nodelay(true).ok();
+    stream.get_ref().set_nodelay(true).ok();
 
     // Handshake: Hello → Assign. Idle ticks before the Hello just poll
     // the stop flag.
     let session_id = loop {
         match proto::read_msg(&mut stream)? {
-            FrameRead::Msg(Msg::Hello { token }) => break token,
+            FrameRead::Msg(Msg::Hello { token, resume }) => {
+                if resume != 0 {
+                    // A returning client: its dead predecessor's jobs
+                    // were reclaimed to the queue front, so this
+                    // session's next fetch resumes the half-done work.
+                    obs.reconnects.inc();
+                    if let Some(tr) = &obs.trace {
+                        tr.emit(
+                            "wire_reconnect",
+                            None,
+                            &[("session", V::U(token)), ("resume", V::U(resume))],
+                        );
+                    }
+                }
+                break token;
+            }
             FrameRead::Msg(other) => bail!("expected Hello, got {other:?}"),
             FrameRead::Eof => return Ok(()),
             FrameRead::IdleTimeout => {
@@ -517,7 +650,7 @@ fn session(
             }
         }
     };
-    send(
+    send_faulted(
         &mut stream,
         &Msg::Assign {
             session: session_id,
@@ -528,21 +661,33 @@ fn session(
         obs,
     )?;
 
+    let mut last_activity = Instant::now();
     loop {
         let msg = match proto::read_msg(&mut stream)? {
-            FrameRead::Msg(m) => m,
+            FrameRead::Msg(m) => {
+                last_activity = Instant::now();
+                m
+            }
             FrameRead::Eof => return Ok(()),
             FrameRead::IdleTimeout => {
                 if stop.load(Ordering::SeqCst) {
                     return Ok(());
+                }
+                // Deadline reclaim: a connected-but-silent session
+                // (e.g. its reply was dropped and it is mid-backoff)
+                // must not pin its jobs past the recovery deadline.
+                if let Some(after) = reclaim_after {
+                    if !held.is_empty() && last_activity.elapsed() >= after {
+                        reclaim_held(shared, obs, held, "deadline");
+                    }
                 }
                 continue;
             }
         };
         match msg {
             Msg::FetchJob => {
-                let reply = fetch_reply(shared, obs);
-                send(&mut stream, &reply, obs)?;
+                let reply = fetch_reply(shared, obs, held);
+                send_faulted(&mut stream, &reply, obs)?;
             }
             Msg::Submit {
                 client,
@@ -569,6 +714,11 @@ fn session(
                     // Wake the round loop (and fetchers waiting on the
                     // next round's jobs).
                     shared.changed.notify_all();
+                }
+                // Terminal outcomes release the held slot; Busy keeps
+                // the job outstanding for the client's retry.
+                if !matches!(outcome, SubmitOutcome::Busy) {
+                    held.retain(|&(c, r)| !(c == client as usize && r == round as usize));
                 }
                 // Counters track the reply actually written, so a
                 // scrape equals the peer's view of the conversation.
@@ -643,7 +793,7 @@ fn session(
                         Msg::Busy
                     }
                 };
-                send(&mut stream, &reply, obs)?;
+                send_faulted(&mut stream, &reply, obs)?;
             }
             Msg::Bye => return Ok(()),
             other => bail!("unexpected message in session: {other:?}"),
@@ -652,13 +802,16 @@ fn session(
 }
 
 /// Answer one `FetchJob`: hand out a queued job if there is (or shortly
-/// arrives) one, else report whether the run is over.
-fn fetch_reply(shared: &Shared, obs: &WireObs) -> Msg {
+/// arrives) one, else report whether the run is over. A dispatched job
+/// is recorded in `held` so the session's unresolved work can be
+/// reclaimed if it dies.
+fn fetch_reply(shared: &Shared, obs: &WireObs, held: &mut Vec<(usize, usize)>) -> Msg {
     let mut st = shared.state.lock().unwrap();
     loop {
         if let Some((client, round, job)) = st.rm.fetch() {
             obs.dispatched.inc();
             obs.queued.set(st.rm.queued() as i64);
+            held.push((client, round));
             return Msg::Job {
                 client: client as u64,
                 round: round as u64,
@@ -679,6 +832,7 @@ fn fetch_reply(shared: &Shared, obs: &WireObs) -> Msg {
             if let Some((client, round, job)) = st.rm.fetch() {
                 obs.dispatched.inc();
                 obs.queued.set(st.rm.queued() as i64);
+                held.push((client, round));
                 return Msg::Job {
                     client: client as u64,
                     round: round as u64,

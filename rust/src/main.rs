@@ -65,7 +65,7 @@ fn main() -> Result<()> {
             let s = out.stats;
             println!(
                 "# served {} rounds over {} sessions: dispatched={} accepted={} \
-                 late={} duplicates={} out_of_round={} busy={}",
+                 late={} duplicates={} out_of_round={} busy={} reclaimed={}",
                 out.result.records.len(),
                 out.sessions,
                 s.dispatched,
@@ -74,6 +74,7 @@ fn main() -> Result<()> {
                 s.duplicates,
                 s.out_of_round,
                 s.busy,
+                s.reclaimed,
             );
             if let Some(acc) = out.result.final_accuracy() {
                 println!("# final test accuracy: {:.2}%", acc * 100.0);
@@ -87,8 +88,18 @@ fn main() -> Result<()> {
             );
             let r = fl::serve::run_loadgen(&cli.config, &addr)?;
             println!(
-                "# jobs={} acks={} duplicates={} out_of_round={} busy={} lost={}",
-                r.jobs, r.acks, r.duplicates, r.out_of_round, r.busy, r.lost
+                "# jobs={} acks={} duplicates={} out_of_round={} busy={} lost={} \
+                 reconnects={} retries={} faults={} gave_up={}",
+                r.jobs,
+                r.acks,
+                r.duplicates,
+                r.out_of_round,
+                r.busy,
+                r.lost,
+                r.reconnects,
+                r.retries,
+                r.faults,
+                r.gave_up
             );
             println!(
                 "# wall={:.2}s requests/s={:.1} submit_ms p50={:.2} p90={:.2} p99={:.2}",

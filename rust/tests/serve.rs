@@ -14,6 +14,19 @@
 //!    buffer in wall-clock period mode.
 //! 3. **Startup validation** — non-periodic algorithms are refused at
 //!    bind time.
+//! 4. **Chaos golden** (PR 9) — the same lockstep loopback run with
+//!    fault injection *and* recovery on is still bitwise identical to
+//!    the library loop: faults live only on the wire, reclaimed jobs
+//!    re-dispatch with their original `(pos, staleness, payload)`, and
+//!    retraining is pure, so every recovered loss reproduces the same
+//!    update.
+//! 5. **Chaos liveness** — with recovery off and heavy unrecoverable
+//!    loss, period-mode rounds still close on the wall clock with
+//!    whoever arrived; losses surface in the stats instead of wedging
+//!    the round manager.
+//! 6. **Protocol fuzz** — truncated, bit-flipped, and hostile-length
+//!    variants of valid frames never panic the frame reader; every
+//!    corruption lands as a clean error or EOF.
 
 use std::net::TcpStream;
 
@@ -241,7 +254,7 @@ fn wire_rejects_duplicates_out_of_round_and_backpressures_when_full() {
     let outcome = std::thread::scope(|s| {
         let client = s.spawn(move || {
             let mut stream = TcpStream::connect(addr).unwrap();
-            send(&mut stream, &Msg::Hello { token: 7 });
+            send(&mut stream, &Msg::Hello { token: 7, resume: 0 });
             let Msg::Assign { session, dim, .. } = recv(&mut stream) else {
                 panic!("expected Assign");
             };
@@ -310,6 +323,154 @@ fn wire_rejects_duplicates_out_of_round_and_backpressures_when_full() {
     assert!(s.out_of_round >= 1, "{s:?}");
     // Both rounds closed despite the abandoned jobs.
     assert_eq!(outcome.result.records.len(), 2);
+}
+
+/// The chaos golden tie-down: lockstep loopback with every fault kind
+/// injected at a nonzero rate *and* recovery on is bitwise identical to
+/// the library loop, and no update is lost — every injected failure is
+/// healed by resubmit, reconnect-and-resume, or server-side reclaim.
+#[test]
+fn chaotic_loopback_with_recovery_matches_the_library_run() {
+    let mut cfg = serve_cfg();
+    cfg.serve.period_ms = 0; // lockstep: deterministic serial schedule
+    cfg.serve.sessions = 3;
+
+    // Reference run before chaos is switched on: the fault plan must
+    // not leak into the training schedule.
+    let library = fl::run(&cfg).unwrap();
+
+    cfg.chaos.drop = 0.03;
+    cfg.chaos.delay = 0.03;
+    cfg.chaos.delay_ms = 5;
+    cfg.chaos.truncate = 0.02;
+    cfg.chaos.corrupt = 0.02;
+    cfg.chaos.disconnect = 0.02;
+    cfg.chaos.recovery = true;
+    cfg.chaos.session_deadline_ms = 400;
+    cfg.chaos.retry_base_ms = 5;
+    cfg.chaos.retry_max_ms = 100;
+    cfg.validate().unwrap();
+
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (outcome, report) = std::thread::scope(|s| {
+        let lg_cfg = &cfg;
+        let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
+        let outcome = server.run().unwrap();
+        (outcome, lg.join().unwrap().unwrap())
+    });
+
+    assert_run_bitwise("chaotic loopback", &outcome.result, &library);
+    assert_eq!(outcome.result.records.len(), cfg.rounds, "rounds must close");
+    // Recovery heals every loss: no job ends without a terminal reply.
+    // (Unlike the healthy-wire golden, dispatched may exceed accepted —
+    // reclaimed jobs are dispatched again — and duplicates are legal
+    // when a resubmit races its own recovered copy.)
+    assert_eq!(report.lost, 0, "chaos with recovery lost updates: {report:?}");
+    // A dropped Ack frame is tallied server-side but times out
+    // client-side (the resubmit lands as Duplicate), so client acks can
+    // only undercount server accepts.
+    assert!(report.acks <= outcome.stats.accepted, "{report:?}");
+}
+
+/// Liveness under unrecoverable loss: with recovery off and heavy drop/
+/// corrupt/disconnect rates, period-mode rounds still close on the wall
+/// clock with whoever arrived — chaos degrades throughput, not
+/// liveness — and the losses are visible in the stats.
+#[test]
+fn unrecoverable_chaos_still_closes_every_period_mode_round() {
+    let mut cfg = serve_cfg();
+    cfg.rounds = 3;
+    cfg.serve.period_ms = 300;
+    cfg.serve.sessions = 2;
+    cfg.chaos.drop = 0.2;
+    cfg.chaos.corrupt = 0.1;
+    cfg.chaos.disconnect = 0.1;
+    cfg.chaos.recovery = false;
+    cfg.chaos.session_deadline_ms = 200;
+    cfg.chaos.retry_base_ms = 5;
+    cfg.chaos.retry_max_ms = 50;
+    cfg.validate().unwrap();
+
+    let ctx = TrainContext::new(&cfg).unwrap();
+    let server = Server::bind(&ctx, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (outcome, report) = std::thread::scope(|s| {
+        let lg_cfg = &cfg;
+        let lg = s.spawn(move || run_loadgen(lg_cfg, &addr));
+        let outcome = server.run().unwrap();
+        (outcome, lg.join().unwrap().unwrap())
+    });
+
+    // The liveness gate: every round closed despite unrecovered losses.
+    assert_eq!(outcome.result.records.len(), 3, "rounds wedged: {report:?}");
+    // The chaos was real and surfaced: faults were injected somewhere
+    // (client tally or server counters).
+    let server_faults: u64 = paota::fl::serve::FaultKind::ALL
+        .iter()
+        .map(|k| {
+            outcome
+                .metrics
+                .counter(&format!("paota_faults_{}_total", k.name()))
+                .get()
+        })
+        .sum();
+    assert!(
+        report.faults as u64 + server_faults > 0,
+        "no faults injected: {report:?}"
+    );
+}
+
+/// Protocol fuzz: truncations, single-bit flips, and hostile length
+/// prefixes applied to valid frames must never panic the reader — and a
+/// corrupt length claim must fail before any allocation its size.
+#[test]
+fn proto_reader_survives_truncation_and_bit_flips() {
+    use paota::util::Rng;
+
+    let mut rng = Rng::for_entity(0xF00D, 0x9, 0);
+    let msgs = vec![
+        Msg::Hello { token: 7, resume: 3 },
+        Msg::FetchJob,
+        Msg::NoJob { done: false },
+        Msg::Busy,
+        Msg::Bye,
+        Msg::Submit {
+            client: 3,
+            round: 1,
+            staleness: 2,
+            loss: 0.5,
+            weights: vec![0.25; 33],
+        },
+    ];
+    for i in 0..200 {
+        let mut frame = Vec::new();
+        proto::write_msg(&mut frame, &msgs[rng.index(msgs.len())]).unwrap();
+        match i % 3 {
+            0 => {
+                // Truncate anywhere, including inside the length prefix.
+                let cut = rng.index(frame.len());
+                frame.truncate(cut);
+            }
+            1 => {
+                // Flip one bit anywhere.
+                let byte = rng.index(frame.len());
+                frame[byte] ^= 1 << rng.index(8);
+            }
+            _ => {
+                // Hostile length claim, from zero to "allocate 4 GiB".
+                let claims = [0u32, 1, 3, 0x0FFF_FFFF, 0x1000_0001, u32::MAX];
+                let claim = claims[rng.index(claims.len())];
+                frame[..4].copy_from_slice(&claim.to_le_bytes());
+            }
+        }
+        // Any of: a (luckily still valid) message, clean EOF, or a
+        // clean error. Panics and oversized allocations are the bugs.
+        let _ = proto::read_msg(&mut &frame[..]);
+    }
 }
 
 /// Synchronous/continuous policies cannot sit behind the ΔT-slotted
